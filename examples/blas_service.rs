@@ -1,0 +1,63 @@
+//! The L3 coordinator as a network service: start the TCP BLAS server,
+//! drive it with concurrent clients, print the metrics report.
+//!
+//!     cargo run --release --example blas_service
+
+use parallella_blas::blis::Trans;
+use parallella_blas::coordinator::server::{BlasClient, BlasServer};
+use parallella_blas::coordinator::{Request, Response, ServerConfig};
+use parallella_blas::linalg::Mat;
+
+fn main() -> anyhow::Result<()> {
+    let srv = BlasServer::start(ServerConfig::default())?;
+    println!("BLAS service listening on {}", srv.addr());
+
+    // Serving-style workload: one shared weight matrix (A), many clients
+    // sending activation batches (B) — the case the batcher coalesces.
+    let (m, k) = (192usize, 256usize);
+    let weights = Mat::<f32>::randn(m, k, 42).as_slice().to_vec();
+
+    let addr = srv.addr();
+    let mut handles = Vec::new();
+    for client_id in 0..4u64 {
+        let weights = weights.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            let mut cli = BlasClient::connect(addr)?;
+            let t0 = std::time::Instant::now();
+            for i in 0..8 {
+                let n = 64;
+                let b = Mat::<f32>::randn(k, n, 1000 + client_id * 100 + i);
+                let resp = cli.call(&Request::Sgemm {
+                    ta: Trans::N,
+                    tb: Trans::N,
+                    m,
+                    n,
+                    k,
+                    alpha: 1.0,
+                    beta: 0.0,
+                    a: weights.clone(),
+                    b: b.as_slice().to_vec(),
+                    c: vec![0.0; m * n],
+                })?;
+                match resp {
+                    Response::OkF32(v) => anyhow::ensure!(v.len() == m * n),
+                    other => anyhow::bail!("unexpected response {other:?}"),
+                }
+            }
+            Ok(t0.elapsed().as_secs_f64())
+        }));
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let secs = h.join().expect("client thread")?;
+        println!("client {i}: 8 requests in {secs:.3}s");
+    }
+
+    // Pull the metrics report through the wire protocol.
+    let mut cli = BlasClient::connect(addr)?;
+    if let Response::OkText(stats) = cli.call(&Request::Stats)? {
+        println!("server stats: {stats}");
+    }
+    println!("p50 latency: {:.4}s  p99: {:.4}s", srv.metrics.latency_quantile(0.5), srv.metrics.latency_quantile(0.99));
+    println!("OK");
+    Ok(())
+}

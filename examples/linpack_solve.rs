@@ -1,0 +1,37 @@
+//! Solve a dense linear system with the HPL driver on the generated BLAS
+//! (paper §4.3) — usage:
+//!
+//!     cargo run --release --example linpack_solve [N] [NB]
+//!
+//! Defaults to a laptop-friendly N=768, NB=96. `N=4608 NB=768` reproduces
+//! the paper's Table 7 configuration (minutes of runtime).
+
+use parallella_blas::hpl::driver::{run_hpl, HplConfig};
+use parallella_blas::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(768);
+    let nb: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(96);
+
+    let plat = Platform::builder().backend(BackendKind::Pjrt).build()?;
+    println!("HPL: N={n} NB={nb} P=1 Q=1 (false-dgemm Epiphany path)");
+    let res = run_hpl(plat.blas(), HplConfig::small(n, nb))?;
+
+    println!("  wall-clock            : {:.2} s", res.wall_s);
+    println!("  projected (Parallella): {:.2} s  ({:.3} GFLOPS)", res.projected_s, res.projected_gflops);
+    println!("  residue (raw)         : {:.2e}  (paper @N=4608: 2.34e-6)", res.residual.raw);
+    println!("  residue (HPL-scaled)  : {:.4e}  (paper: 2.1098e10)", res.residual.hpl_scaled);
+    println!(
+        "  projected time split  : gemm {:.1}% | host panel/trsm {:.1}%",
+        100.0 * res.lu.gemm_projected_s / res.projected_s,
+        100.0 * res.lu.host_projected_s / res.projected_s,
+    );
+    println!(
+        "  (the host share is the paper's §4.3 finding: unaccelerated level-2\n\
+         \u{20}  BLAS caps HPL well below the sgemm kernel's 3.5 GFLOPS)"
+    );
+    anyhow::ensure!(res.residual.raw < 1e-4, "residual too large");
+    println!("OK");
+    Ok(())
+}

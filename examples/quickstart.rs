@@ -1,0 +1,47 @@
+//! Quickstart: boot the stack and run one accelerated sgemm.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Shows the three numbers this library always reports side by side:
+//! wall-clock on this machine, projected-Parallella seconds from the
+//! calibrated model, and the paper's corresponding figure.
+
+use parallella_blas::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // Pjrt = the production path: the AOT-compiled jax+pallas artifact
+    // executed through the PJRT C API; python is not involved.
+    let plat = Platform::builder().backend(BackendKind::Pjrt).build()?;
+    let blas = plat.blas();
+
+    // The paper's kernel-size problem: (192 × 4096) · (4096 × 256).
+    let (m, n, k) = (192usize, 256usize, 4096usize);
+    let a = Mat::<f32>::randn(m, k, 1);
+    let b = Mat::<f32>::randn(k, n, 2);
+    let mut c = Mat::<f32>::zeros(m, n);
+
+    let report = blas.sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c)?;
+
+    println!("sgemm {m}x{n}x{k} through the Epiphany service:");
+    println!("  µ-kernel calls        : {}", report.calls);
+    println!("  wall-clock (this host): {:.4} s  ({:.2} GFLOPS)", report.wall_s, report.wall_gflops());
+    println!("  projected (Parallella): {:.4} s  ({:.3} GFLOPS)", report.projected_s, report.projected_gflops());
+    println!("  paper (Table 2/3)     : ~0.158 s  (~2.5-2.6 GFLOPS)");
+
+    // Sanity: verify against a host-side f64 oracle.
+    let mut want = Mat::<f64>::zeros(m, n);
+    parallella_blas::blis::level3::gemm_host(
+        Trans::N,
+        Trans::N,
+        1.0,
+        a.cast::<f64>().view(),
+        b.cast::<f64>().view(),
+        0.0,
+        &mut want,
+    );
+    let err = parallella_blas::linalg::max_scaled_err(c.view(), want.view());
+    println!("  max scaled error vs f64 oracle: {err:.2e} (paper: ~5.8e-7)");
+    assert!(err < 1e-5);
+    println!("OK");
+    Ok(())
+}

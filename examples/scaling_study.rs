@@ -1,0 +1,66 @@
+//! Scaling study: where does the Parallella's sgemm pay off?
+//!
+//! Sweeps problem size and reports projected GFLOPS of the Epiphany path
+//! vs the host reference — the practical question the paper's
+//! introduction asks ("real and practical possibilities ... for
+//! Scientific Computing"). Also shows the K-dependence of the ir/or
+//! ratios (§3.3's compromise).
+//!
+//!     cargo run --release --example scaling_study
+
+use parallella_blas::epiphany::timing::CalibratedModel;
+use parallella_blas::host::projection::{project_host_ref, project_ukr_call, ProjectionParams};
+use parallella_blas::util::tables::Table;
+
+fn main() {
+    let model = CalibratedModel::default();
+
+    let mut t = Table::new(
+        "Projected sgemm µ-kernel vs host reference (m=192, n=256)",
+        &["K", "host ref (s)", "epiphany (s)", "speedup", "GFLOPS", "ir %", "or %"],
+    );
+    for k in [64usize, 256, 1024, 4096, 16384] {
+        let proj = project_ukr_call(&model, &ProjectionParams::kernel_same_process(k));
+        let href = project_host_ref(&model, 192, 256, k);
+        let flops = 2.0 * 192.0 * 256.0 * k as f64;
+        t.row(&[
+            k.to_string(),
+            format!("{href:.4}"),
+            format!("{:.4}", proj.total_s),
+            format!("{:.1}x", href / proj.total_s),
+            format!("{:.3}", flops / proj.total_s / 1e9),
+            format!("{:.1}", 100.0 * proj.input_s / proj.total_s),
+            format!("{:.1}", 100.0 * proj.post_s / proj.total_s),
+        ]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        "Full BLIS sgemm nn projected GFLOPS by square size",
+        &["m=n=K", "µ-calls", "projected s", "GFLOPS", "% of kernel-only"],
+    );
+    use parallella_blas::epiphany::timing::WalkClass;
+    use parallella_blas::experiments::analytic_blis_gemm_s;
+    let kernel_gf = {
+        let p = project_ukr_call(&model, &ProjectionParams::kernel_same_process(4096));
+        2.0 * 192.0 * 256.0 * 4096.0 / p.total_s / 1e9
+    };
+    for s in [512usize, 1024, 2048, 4096, 8192] {
+        let secs = analytic_blis_gemm_s(&model, s, s, s, WalkClass::Contig, WalkClass::StridedB, false);
+        let gf = 2.0 * (s as f64).powi(3) / secs / 1e9;
+        let calls = s.div_ceil(192) * s.div_ceil(256);
+        t2.row(&[
+            s.to_string(),
+            calls.to_string(),
+            format!("{secs:.2}"),
+            format!("{gf:.3}"),
+            format!("{:.0}%", 100.0 * gf / kernel_gf),
+        ]);
+    }
+    t2.print();
+    println!(
+        "observations: the accumulator makes or→0 with K; the kernel-level speedup vs the\n\
+         Cortex-A9 host is ~33x; BLIS-level efficiency approaches the kernel-only rate as the\n\
+         problem grows (IPC and edge-padding amortize)."
+    );
+}

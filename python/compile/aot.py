@@ -1,0 +1,76 @@
+"""AOT lowering: jax (L2+L1) -> HLO text artifacts for the rust runtime.
+
+HLO *text* is the interchange format, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Run via `make artifacts` (python is build-time only, never on the request
+path):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one `<name>.hlo.txt` per catalogue entry plus `manifest.txt` with
+`name k dtype path` rows the rust ArtifactRegistry consumes.
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)  # the false dgemm needs f64 I/O
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for the rust
+    side's `to_tuple1`)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, spec):
+    def wrapped(*args):
+        return (fn(*args),)
+
+    return jax.jit(wrapped).lower(*spec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    rows = []
+    for name, (fn, spec) in sorted(model.catalogue().items()):
+        if only and name not in only:
+            continue
+        text = to_hlo_text(lower_entry(fn, spec))
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        k = spec[1].shape[0]
+        dtype = "f64" if "dgemm" in name else "f32"
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        rows.append(f"{name} {k} {dtype} {os.path.basename(path)} {digest}")
+        print(f"wrote {path} ({len(text)} chars, K={k}, {dtype})")
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# name K dtype file sha256_12\n")
+        f.write("\n".join(rows) + "\n")
+    print(f"wrote {manifest} ({len(rows)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""L1: the Epiphany sgemm micro-kernel as a Pallas kernel.
+
+The paper's Epiphany kernel streams KSUB-deep panel pairs through the
+chip's 32 KB-per-core scratchpads and accumulates the `m x n` result
+on-chip (the "Accumulator" scheme, command protocol of paper section 3.3).
+Re-thought for a TPU-shaped machine (DESIGN.md "Hardware-Adaptation"):
+
+* the per-core local store becomes a VMEM accumulator scratch holding the
+  full `m x n` micro-tile (192x256 f32 = 192 KiB, comfortably VMEM-sized;
+  on the Epiphany the same tile was sharded 16 ways at 12 KB per core);
+* the SUMMA-like host loop over KSUB panels becomes the Pallas *grid*'s
+  reduction dimension: grid step `t` sees blocks `a[:, t*KSUB:(t+1)*KSUB]`
+  and `b[t*KSUB:(t+1)*KSUB, :]`, and pallas' automatic HBM->VMEM block
+  pipelining replaces the host's double-buffered `selector` uploads;
+* the doMult/subMatmul rank-KSUB update becomes one MXU-shaped `jnp.dot`
+  per grid step accumulated into scratch (the command=1 "accumulate,
+  don't send back" path);
+* the final grid step applies `alpha * acc + beta * c_in` and commits the
+  output block (the command=2 "send results back" path, fused with the
+  alpha/beta epilogue the Parallella host had to run on the slow ARM).
+
+`interpret=True` throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the rust
+runtime's PJRT CPU client runs directly (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# The paper's production geometry (section 3.4, figure 3).
+M_UKR = 192
+N_UKR = 256
+KSUB = 64
+
+
+def _gemm_kernel(alpha_ref, beta_ref, a_ref, b_ref, c_ref, out_ref, acc_ref, *, n_steps):
+    """One grid step = one "Epiphany Task": acc += a_panel @ b_panel."""
+    t = pl.program_id(0)
+
+    # command = 0 / 3: the first task clears the accumulator.
+    @pl.when(t == 0)
+    def _clear():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The Task: rank-KSUB update, fp32 accumulation on the MXU.
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    # command = 2 / 3: the last task applies the alpha/beta epilogue and
+    # sends the result back (commits the output block).
+    @pl.when(t == n_steps - 1)
+    def _send():
+        out_ref[...] = alpha_ref[0] * acc_ref[...] + beta_ref[0] * c_ref[...]
+
+
+def sgemm_inner(alpha, a, b, beta, c_in, *, ksub=KSUB):
+    """The paper's "sgemm inner micro-kernel":
+
+        c_out = alpha * (a @ b) + beta * c_in
+
+    a: (m, K) f32, b: (K, n) f32, c_in: (m, n) f32. K must be a multiple
+    of `ksub`; the rust packing layer zero-pads K exactly as it does for
+    the simulator backend.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert k % ksub == 0, f"K={k} not a multiple of KSUB={ksub}"
+    n_steps = k // ksub
+    alpha = jnp.asarray(alpha, jnp.float32).reshape((1,))
+    beta = jnp.asarray(beta, jnp.float32).reshape((1,))
+
+    kernel = functools.partial(_gemm_kernel, n_steps=n_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_steps,),
+        in_specs=[
+            # alpha/beta scalars, replicated to every step.
+            pl.BlockSpec((1,), lambda t: (0,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+            # a panel: all m rows, the t-th KSUB-column block.
+            pl.BlockSpec((m, ksub), lambda t: (0, t)),
+            # b panel: the t-th KSUB-row block, all n columns.
+            pl.BlockSpec((ksub, n), lambda t: (t, 0)),
+            # c_in: the whole tile (consumed only at the last step).
+            pl.BlockSpec((m, n), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        # The on-chip accumulator (RES2's role, VMEM instead of 16 sharded
+        # 12 KB scratchpads).
+        scratch_shapes=[pltpu.VMEM((m, n), jnp.float32)],
+        interpret=True,
+    )(alpha, beta, a, b, c_in)
+
+
+def sgemm_acc(a, b, c_in, *, ksub=KSUB):
+    """Pure-accumulate variant: c_out = a @ b + c_in (alpha = beta = 1).
+
+    Used by the rust runtime to chain K blocks beyond a single artifact's
+    fixed K (the command=1 path across artifact calls).
+    """
+    return sgemm_inner(1.0, a, b, 1.0, c_in, ksub=ksub)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the L1 kernel — the correctness reference.
+
+Everything the Pallas kernel (and, transitively, the AOT artifacts and the
+rust simulator) computes is checked against these definitions in
+python/tests/, and the rust side re-checks against an f64 port of the same
+formulas.
+"""
+
+import jax.numpy as jnp
+
+
+def sgemm_inner_ref(alpha, a, b, beta, c_in):
+    """c_out = alpha * (a @ b) + beta * c_in in f32."""
+    return (
+        jnp.asarray(alpha, jnp.float32) * jnp.dot(a, b, preferred_element_type=jnp.float32)
+        + jnp.asarray(beta, jnp.float32) * c_in
+    )
+
+
+def sgemm_inner_ref_f64(alpha, a, b, beta, c_in):
+    """The same contraction in f64 — the error-measurement baseline the
+    paper's 'Mean/Maximum Relative Error' rows are computed against."""
+    a64 = a.astype(jnp.float64)
+    b64 = b.astype(jnp.float64)
+    c64 = c_in.astype(jnp.float64)
+    return float(alpha) * jnp.dot(a64, b64) + float(beta) * c64
+
+
+def false_dgemm_ref(alpha, a, b, beta, c_in):
+    """The paper's "false dgemm": f64 API, downcast -> f32 compute -> upcast.
+
+    Precision is 'expected to be close to that of Single Precision'.
+    """
+    out32 = sgemm_inner_ref(
+        jnp.float32(alpha), a.astype(jnp.float32), b.astype(jnp.float32),
+        jnp.float32(beta), c_in.astype(jnp.float32),
+    )
+    return out32.astype(jnp.float64)

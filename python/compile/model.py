@@ -1,0 +1,106 @@
+"""L2: the sgemm inner micro-kernel compute graph (build-time JAX).
+
+This is the function the rust coordinator calls on its request path (as an
+AOT-compiled PJRT executable, never through python). It wraps the L1
+Pallas kernel with the exact contract of the paper's section 3.3:
+
+    given a1 (m x K, column-major), b1 (K x n, row-major),
+    c_in (m x n, column-major):  c_out = alpha * a1 . b1 + beta * c_in
+
+Row/column-major bookkeeping: PJRT executables see logical (row-major)
+arrays; the rust packing layer hands buffers over in the layouts the paper
+prescribes and flags the artifact shapes accordingly (a1 is passed as its
+transpose, K x m, because a column-major m x K buffer *is* a row-major
+K x m buffer — zero-copy on both sides).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import epiphany_gemm
+from .kernels.epiphany_gemm import KSUB, M_UKR, N_UKR
+
+
+def artifact_ksub(k):
+    """Reduction-block size for the AOT artifact at depth k.
+
+    The paper's KSUB=64 is an Epiphany local-store constraint (32 KB/core);
+    the TPU/VMEM analog comfortably holds 192x512 + 512x256 panels
+    (~0.9 MiB), so artifacts tile at KSUB=512 — fewer grid steps, same
+    accumulator semantics. The structural KSUB=64 pipeline is preserved
+    bit-for-bit in the rust simulator (DESIGN.md Hardware-Adaptation).
+    """
+    return min(k, 512)
+
+
+def sgemm_inner_microkernel(alpha, a1_t, b1, beta, c_in_t):
+    """The deployed artifact body.
+
+    a1_t: (K, m) f32 — a column-major (m, K) a1 buffer, reinterpreted.
+    b1:   (K, n) f32 — a row-major (K, n) b1 buffer, as-is.
+    c_in_t: (n, m) f32 — a column-major (m, n) c buffer, reinterpreted.
+    Returns c_out_t: (n, m) f32 — column-major (m, n) c_out.
+
+    The transposes resolve inside XLA as layout assignments, not copies;
+    the Pallas kernel still sees (m, K) @ (K, n).
+    """
+    a1 = a1_t.T
+    c_in = c_in_t.T
+    k = a1.shape[1]
+    c_out = epiphany_gemm.sgemm_inner(alpha, a1, b1, beta, c_in, ksub=artifact_ksub(k))
+    return c_out.T
+
+
+def false_dgemm_microkernel(alpha, a1_t, b1, beta, c_in_t):
+    """The paper's "false dgemm" artifact: f64 in/out, f32 compute.
+
+    Implemented exactly as the paper describes — downcast the inputs, run
+    the sgemm inner kernel, upcast the output — so the artifact reproduces
+    both the precision (~1e-8 residues of Tables 5-6) and the cast cost.
+    """
+    a32 = a1_t.astype(jnp.float32)
+    b32 = b1.astype(jnp.float32)
+    c32 = c_in_t.astype(jnp.float32)
+    out32 = sgemm_inner_microkernel(
+        jnp.asarray(alpha, jnp.float32), a32, b32, jnp.asarray(beta, jnp.float32), c32
+    )
+    return out32.astype(jnp.float64)
+
+
+def make_sgemm_spec(k):
+    """ShapeDtypeStructs for an sgemm artifact with reduction depth k."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((), f32),            # alpha
+        jax.ShapeDtypeStruct((k, M_UKR), f32),    # a1 (col-major m x K)
+        jax.ShapeDtypeStruct((k, N_UKR), f32),    # b1 (row-major K x n)
+        jax.ShapeDtypeStruct((), f32),            # beta
+        jax.ShapeDtypeStruct((N_UKR, M_UKR), f32) # c_in (col-major m x n)
+    )
+
+
+def make_false_dgemm_spec(k):
+    """ShapeDtypeStructs for a false-dgemm artifact (f64 API)."""
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((), f64),
+        jax.ShapeDtypeStruct((k, M_UKR), f64),
+        jax.ShapeDtypeStruct((k, N_UKR), f64),
+        jax.ShapeDtypeStruct((), f64),
+        jax.ShapeDtypeStruct((N_UKR, M_UKR), f64),
+    )
+
+
+# Artifact catalogue: name -> (function, spec builder, K).
+# K variants let the rust runtime pick the largest block that divides the
+# remaining reduction depth and chain with the accumulate path (beta = 1).
+SGEMM_KS = (64, 256, 512, 1024, 2048, 4096)
+
+def catalogue():
+    cat = {}
+    for k in SGEMM_KS:
+        cat[f"sgemm_inner_k{k}"] = (sgemm_inner_microkernel, make_sgemm_spec(k))
+    # The false dgemm is only ever called at the BLIS kernel block size.
+    for k in (512, 4096):
+        cat[f"false_dgemm_k{k}"] = (false_dgemm_microkernel, make_false_dgemm_spec(k))
+    return cat

@@ -1,0 +1,58 @@
+"""AOT pipeline tests: catalogue consistency, artifact_ksub policy, and
+HLO-text emission invariants the rust loader depends on."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def test_artifact_ksub_policy():
+    # VMEM-scale tiling: cap at 512, never exceed k.
+    assert model.artifact_ksub(64) == 64
+    assert model.artifact_ksub(256) == 256
+    assert model.artifact_ksub(512) == 512
+    assert model.artifact_ksub(1024) == 512
+    assert model.artifact_ksub(4096) == 512
+
+
+def test_catalogue_ks_cover_chaining():
+    # The rust plan_k chains greedily descending; the smallest K must
+    # divide the others so padding stays bounded by one small block.
+    ks = sorted(model.SGEMM_KS)
+    smallest = ks[0]
+    for k in ks:
+        assert k % smallest == 0, f"{k} not a multiple of {smallest}"
+
+
+def test_hlo_text_has_expected_interface():
+    fn, spec = model.catalogue()["sgemm_inner_k64"]
+    text = aot.to_hlo_text(aot.lower_entry(fn, spec))
+    # Entry signature the rust GemmExecutor relies on: 5 params, tuple out.
+    assert "HloModule" in text
+    assert "f32[64,192]" in text   # a1 (K, m)
+    assert "f32[64,256]" in text   # b1 (K, n)
+    assert "f32[256,192]" in text  # c (n, m)
+    # 1-tuple result (HLO prints tuple result types in the entry computation)
+    assert "(f32[256,192]" in text or "tuple(" in text
+
+
+def test_false_dgemm_hlo_has_f64_interface_f32_compute():
+    fn, spec = model.catalogue()["false_dgemm_k512"]
+    text = aot.to_hlo_text(aot.lower_entry(fn, spec))
+    assert "f64[512,192]" in text  # f64 API
+    assert "f32[" in text          # downcast interior (the "false" part)
+
+
+def test_all_entries_lower():
+    # Every catalogue entry must lower without error (smoke at trace level
+    # only for the big ones — lowering is the expensive step that matters).
+    cat = model.catalogue()
+    small = [n for n in cat if n.endswith("k64") or n.endswith("k256")]
+    for name in small:
+        fn, spec = cat[name]
+        text = aot.to_hlo_text(aot.lower_entry(fn, spec))
+        assert len(text) > 1000, name

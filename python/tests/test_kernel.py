@@ -1,0 +1,143 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path — everything the
+rust runtime executes was lowered from exactly these functions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import epiphany_gemm, ref
+from compile.kernels.epiphany_gemm import KSUB, M_UKR, N_UKR
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def test_paper_geometry_matches_ref():
+    a = rand((M_UKR, 4 * KSUB), 0)
+    b = rand((4 * KSUB, N_UKR), 1)
+    c = rand((M_UKR, N_UKR), 2)
+    got = epiphany_gemm.sgemm_inner(1.5, a, b, -0.5, c)
+    want = ref.sgemm_inner_ref(1.5, a, b, -0.5, c)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_error_band_vs_f64_matches_paper():
+    # The paper reports mean rel err 8.73e-8, max 5.83e-7 at K=4096.
+    # The same order of magnitude must appear here (f32 accumulation).
+    a = rand((M_UKR, 1024), 3)
+    b = rand((1024, N_UKR), 4)
+    c = np.zeros((M_UKR, N_UKR), np.float32)
+    got = np.asarray(epiphany_gemm.sgemm_inner(1.0, a, b, 0.0, c))
+    want = np.asarray(ref.sgemm_inner_ref_f64(1.0, a, b, 0.0, c))
+    rel = np.abs(got - want) / np.maximum(np.abs(want), 1e-3 * np.abs(want).max())
+    assert 1e-9 < rel.mean() < 1e-6, rel.mean()
+    assert rel.max() < 1e-4, rel.max()
+
+
+def test_single_panel():
+    a = rand((M_UKR, KSUB), 5)
+    b = rand((KSUB, N_UKR), 6)
+    c = rand((M_UKR, N_UKR), 7)
+    got = epiphany_gemm.sgemm_inner(2.0, a, b, 1.0, c)
+    want = ref.sgemm_inner_ref(2.0, a, b, 1.0, c)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_beta_zero_ignores_c():
+    a = rand((M_UKR, KSUB), 8)
+    b = rand((KSUB, N_UKR), 9)
+    c_nan_free = rand((M_UKR, N_UKR), 10) * 1e6  # huge, must vanish
+    got = epiphany_gemm.sgemm_inner(1.0, a, b, 0.0, c_nan_free)
+    want = ref.sgemm_inner_ref(1.0, a, b, 0.0, np.zeros_like(c_nan_free))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_alpha_zero_scales_c_only():
+    a = rand((M_UKR, KSUB), 11)
+    b = rand((KSUB, N_UKR), 12)
+    c = rand((M_UKR, N_UKR), 13)
+    got = epiphany_gemm.sgemm_inner(0.0, a, b, 3.0, c)
+    np.testing.assert_allclose(got, 3.0 * c, rtol=1e-6, atol=1e-6)
+
+
+def test_acc_variant_chains():
+    # Chaining two K-blocks through sgemm_acc == one big contraction.
+    a = rand((M_UKR, 2 * KSUB), 14)
+    b = rand((2 * KSUB, N_UKR), 15)
+    c0 = np.zeros((M_UKR, N_UKR), np.float32)
+    step1 = epiphany_gemm.sgemm_acc(a[:, :KSUB], b[:KSUB], c0)
+    step2 = epiphany_gemm.sgemm_acc(a[:, KSUB:], b[KSUB:], np.asarray(step1))
+    want = ref.sgemm_inner_ref(1.0, a, b, 0.0, c0)
+    np.testing.assert_allclose(step2, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_panels=st.integers(min_value=1, max_value=4),
+    alpha=st.floats(min_value=-2, max_value=2, allow_nan=False, width=32),
+    beta=st.floats(min_value=-2, max_value=2, allow_nan=False, width=32),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_sweep_paper_tile(n_panels, alpha, beta, seed):
+    """Hypothesis sweep over reduction depth and scalars at the paper tile."""
+    k = n_panels * KSUB
+    a = rand((M_UKR, k), seed)
+    b = rand((k, N_UKR), seed + 1)
+    c = rand((M_UKR, N_UKR), seed + 2)
+    got = epiphany_gemm.sgemm_inner(alpha, a, b, beta, c)
+    want = ref.sgemm_inner_ref(alpha, a, b, beta, c)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m_blocks=st.integers(min_value=1, max_value=6),
+    n_mult=st.integers(min_value=1, max_value=4),
+    ksub_pow=st.integers(min_value=4, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_sweep_shapes(m_blocks, n_mult, ksub_pow, seed):
+    """Shape generality: the kernel is not hard-wired to 192x256x64."""
+    m, n, ksub = 32 * m_blocks, 64 * n_mult, 2 ** ksub_pow
+    a = rand((m, 2 * ksub), seed)
+    b = rand((2 * ksub, n), seed + 1)
+    c = rand((m, n), seed + 2)
+    got = epiphany_gemm.sgemm_inner(1.0, a, b, 1.0, c, ksub=ksub)
+    want = ref.sgemm_inner_ref(1.0, a, b, 1.0, c)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_k_not_multiple_of_ksub_rejected():
+    a = rand((M_UKR, KSUB + 1), 20)
+    b = rand((KSUB + 1, N_UKR), 21)
+    c = rand((M_UKR, N_UKR), 22)
+    with pytest.raises(AssertionError, match="KSUB"):
+        epiphany_gemm.sgemm_inner(1.0, a, b, 1.0, c)
+
+
+def test_false_dgemm_precision_is_single():
+    # f64 API but f32 compute: error vs true f64 must be f32-sized, and
+    # the downcast-upcast must round-trip the f32 value exactly.
+    a = rand((M_UKR, 512), 23, np.float64)
+    b = rand((512, N_UKR), 24, np.float64)
+    c = rand((M_UKR, N_UKR), 25, np.float64)
+    got = np.asarray(ref.false_dgemm_ref(1.0, a, b, 1.0, c))
+    true64 = a @ b + c
+    rel = np.abs(got - true64) / np.abs(true64).max()
+    assert 1e-9 < rel.max() < 1e-4, rel.max()
+    got32 = np.asarray(
+        ref.sgemm_inner_ref(
+            np.float32(1.0), a.astype(np.float32), b.astype(np.float32),
+            np.float32(1.0), c.astype(np.float32),
+        )
+    )
+    np.testing.assert_array_equal(got.astype(np.float32), got32)

@@ -1,0 +1,107 @@
+//! Serving-style throughput/latency bench of the L3 coordinator — the
+//! measurement the paper's single-workgroup architecture implies but never
+//! reports: what happens when many BLAS clients share the one chip.
+//!
+//! Workload generator: open-loop clients issuing sgemm requests with a
+//! shared weight matrix (coalescible) or per-request matrices
+//! (uncoalescible), across request-size classes.
+
+use parallella_blas::blis::Trans;
+use parallella_blas::coordinator::server::{BlasClient, BlasServer};
+use parallella_blas::coordinator::{Request, Response, ServerConfig};
+use parallella_blas::linalg::{Mat, XorShiftRng};
+use parallella_blas::util::tables::Table;
+use std::time::Instant;
+
+struct Workload {
+    name: &'static str,
+    clients: usize,
+    reqs_per_client: usize,
+    n_cols: usize,
+    shared_weights: bool,
+}
+
+fn run(w: &Workload) -> (f64, f64, f64, u64) {
+    let srv = BlasServer::start(ServerConfig::default()).expect("make artifacts first");
+    let addr = srv.addr();
+    let (m, k) = (192usize, 256usize);
+    let shared = Mat::<f32>::randn(m, k, 1).as_slice().to_vec();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..w.clients {
+        let shared = shared.clone();
+        let (n_cols, reqs, shared_w) = (w.n_cols, w.reqs_per_client, w.shared_weights);
+        handles.push(std::thread::spawn(move || {
+            let mut cli = BlasClient::connect(addr).unwrap();
+            let mut rng = XorShiftRng::new(c as u64 + 17);
+            for i in 0..reqs {
+                let a = if shared_w {
+                    shared.clone()
+                } else {
+                    Mat::<f32>::randn(m, k, c as u64 * 1000 + i as u64).as_slice().to_vec()
+                };
+                let b: Vec<f32> = (0..k * n_cols).map(|_| rng.next_unit() as f32).collect();
+                match cli
+                    .call(&Request::Sgemm {
+                        ta: Trans::N,
+                        tb: Trans::N,
+                        m,
+                        n: n_cols,
+                        k,
+                        alpha: 1.0,
+                        beta: 0.0,
+                        a,
+                        b,
+                        c: vec![0.0; m * n_cols],
+                    })
+                    .unwrap()
+                {
+                    Response::OkF32(v) => assert_eq!(v.len(), m * n_cols),
+                    other => panic!("{other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let total = (w.clients * w.reqs_per_client) as f64;
+    (
+        total / elapsed,
+        srv.metrics.latency_quantile(0.5),
+        srv.metrics.latency_quantile(0.99),
+        srv.metrics.requests(),
+    )
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let scale = if quick { 1 } else { 2 };
+    let workloads = [
+        Workload { name: "shared-A small", clients: 4, reqs_per_client: 8 * scale, n_cols: 32, shared_weights: true },
+        Workload { name: "shared-A large", clients: 4, reqs_per_client: 4 * scale, n_cols: 256, shared_weights: true },
+        Workload { name: "unique-A small", clients: 4, reqs_per_client: 8 * scale, n_cols: 32, shared_weights: false },
+        Workload { name: "single client ", clients: 1, reqs_per_client: 16 * scale, n_cols: 64, shared_weights: true },
+    ];
+    let mut t = Table::new(
+        "L3 coordinator throughput (m=192, k=256 tile requests)",
+        &["workload", "req/s", "p50 s", "p99 s", "executed gemms"],
+    );
+    for w in &workloads {
+        let (rps, p50, p99, execs) = run(w);
+        t.row(&[
+            w.name.into(),
+            format!("{rps:.1}"),
+            format!("{p50:.4}"),
+            format!("{p99:.4}"),
+            execs.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "shared-A rows execute fewer gemms than requests (batch coalescing across the\n\
+         single Epiphany workgroup); unique-A cannot coalesce and pays per-request IPC."
+    );
+}

@@ -1,0 +1,13 @@
+//! Bench target regenerating the paper's Table 3. Set BENCH_FULL=1 to run
+//! the executed part at the paper's sizes (default: reduced sizes; the
+//! projected columns are always at paper scale).
+use parallella_blas::experiments::{table3, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let t = table3(scale).expect("run `make artifacts` first");
+    println!("{}", t.rendered);
+    for c in &t.checks {
+        println!("check {:<22} paper={:<12.6} ours={:<12.6} ratio={:.3}", c.name, c.paper, c.ours, c.ratio());
+    }
+}

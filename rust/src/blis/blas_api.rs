@@ -1,0 +1,305 @@
+//! The generated classic BLAS API — FORTRAN-BLAS-style names over raw
+//! column-major buffers with leading dimensions, exactly what LAPACK,
+//! ScaLAPACK or HPL link against (paper §3.1: BLIS "also generates the
+//! classic FORTRAN BLAS library").
+//!
+//! Level-3 sgemm/dgemm route through the Epiphany service; everything else
+//! is host compute, as in the paper's instantiation.
+
+use super::gemm::Blas;
+use super::params::Trans;
+use super::{level1, level2, level3};
+use crate::linalg::{Mat, MatMut, MatRef};
+use anyhow::Result;
+
+/// The library handle a "linked application" holds.
+pub struct BlasLibrary {
+    inner: std::sync::Arc<Blas>,
+}
+
+impl BlasLibrary {
+    pub fn new(inner: std::sync::Arc<Blas>) -> Self {
+        BlasLibrary { inner }
+    }
+
+    pub fn inner(&self) -> &Blas {
+        &self.inner
+    }
+
+    // ---------------- level 1 (f32) ----------------
+
+    pub fn saxpy(&self, n: usize, alpha: f32, x: &[f32], incx: usize, y: &mut [f32], incy: usize) {
+        level1::axpy(n, alpha, x, incx, y, incy);
+    }
+    pub fn sscal(&self, n: usize, alpha: f32, x: &mut [f32], incx: usize) {
+        level1::scal(n, alpha, x, incx);
+    }
+    pub fn scopy(&self, n: usize, x: &[f32], incx: usize, y: &mut [f32], incy: usize) {
+        level1::copy(n, x, incx, y, incy);
+    }
+    pub fn sswap(&self, n: usize, x: &mut [f32], incx: usize, y: &mut [f32], incy: usize) {
+        level1::swap(n, x, incx, y, incy);
+    }
+    pub fn sdot(&self, n: usize, x: &[f32], incx: usize, y: &[f32], incy: usize) -> f32 {
+        level1::dot(n, x, incx, y, incy)
+    }
+    pub fn snrm2(&self, n: usize, x: &[f32], incx: usize) -> f32 {
+        level1::nrm2(n, x, incx)
+    }
+    pub fn sasum(&self, n: usize, x: &[f32], incx: usize) -> f32 {
+        level1::asum(n, x, incx)
+    }
+    pub fn isamax(&self, n: usize, x: &[f32], incx: usize) -> Option<usize> {
+        level1::iamax(n, x, incx)
+    }
+    pub fn srot(&self, n: usize, x: &mut [f32], incx: usize, y: &mut [f32], incy: usize, c: f32, s: f32) {
+        level1::rot(n, x, incx, y, incy, c, s);
+    }
+
+    // ---------------- level 1 (f64) ----------------
+
+    pub fn daxpy(&self, n: usize, alpha: f64, x: &[f64], incx: usize, y: &mut [f64], incy: usize) {
+        level1::axpy(n, alpha, x, incx, y, incy);
+    }
+    pub fn dscal(&self, n: usize, alpha: f64, x: &mut [f64], incx: usize) {
+        level1::scal(n, alpha, x, incx);
+    }
+    pub fn dcopy(&self, n: usize, x: &[f64], incx: usize, y: &mut [f64], incy: usize) {
+        level1::copy(n, x, incx, y, incy);
+    }
+    pub fn dswap(&self, n: usize, x: &mut [f64], incx: usize, y: &mut [f64], incy: usize) {
+        level1::swap(n, x, incx, y, incy);
+    }
+    pub fn ddot(&self, n: usize, x: &[f64], incx: usize, y: &[f64], incy: usize) -> f64 {
+        level1::dot(n, x, incx, y, incy)
+    }
+    pub fn dnrm2(&self, n: usize, x: &[f64], incx: usize) -> f64 {
+        level1::nrm2(n, x, incx)
+    }
+    pub fn dasum(&self, n: usize, x: &[f64], incx: usize) -> f64 {
+        level1::asum(n, x, incx)
+    }
+    pub fn idamax(&self, n: usize, x: &[f64], incx: usize) -> Option<usize> {
+        level1::iamax(n, x, incx)
+    }
+
+    // ---------------- level 2 ----------------
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgemv(&self, trans: Trans, m: usize, n: usize, alpha: f32, a: &[f32], lda: usize, x: &[f32], beta: f32, y: &mut [f32]) {
+        let a_v = MatRef::from_col_major(m, n, lda, a);
+        level2::gemv(trans, alpha, a_v, x, beta, y);
+        self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn dgemv(&self, trans: Trans, m: usize, n: usize, alpha: f64, a: &[f64], lda: usize, x: &[f64], beta: f64, y: &mut [f64]) {
+        let a_v = MatRef::from_col_major(m, n, lda, a);
+        level2::gemv(trans, alpha, a_v, x, beta, y);
+        self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
+    }
+
+    pub fn sger(&self, m: usize, n: usize, alpha: f32, x: &[f32], y: &[f32], a: &mut [f32], lda: usize) {
+        let mut a_v = MatMut::from_col_major(m, n, lda, a);
+        level2::ger(alpha, x, y, &mut a_v);
+        self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
+    }
+
+    pub fn dger(&self, m: usize, n: usize, alpha: f64, x: &[f64], y: &[f64], a: &mut [f64], lda: usize) {
+        let mut a_v = MatMut::from_col_major(m, n, lda, a);
+        level2::ger(alpha, x, y, &mut a_v);
+        self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
+    }
+
+    pub fn strsv(&self, lower: bool, trans: Trans, unit: bool, n: usize, a: &[f32], lda: usize, x: &mut [f32]) {
+        let a_v = MatRef::from_col_major(n, n, lda, a);
+        level2::trsv(lower, trans, unit, a_v, x);
+        self.inner.charge_host_op((n * n) as f64, host_rate());
+    }
+
+    pub fn dtrsv(&self, lower: bool, trans: Trans, unit: bool, n: usize, a: &[f64], lda: usize, x: &mut [f64]) {
+        let a_v = MatRef::from_col_major(n, n, lda, a);
+        level2::trsv(lower, trans, unit, a_v, x);
+        self.inner.charge_host_op((n * n) as f64, host_rate());
+    }
+
+    pub fn strmv(&self, lower: bool, trans: Trans, unit: bool, n: usize, a: &[f32], lda: usize, x: &mut [f32]) {
+        let a_v = MatRef::from_col_major(n, n, lda, a);
+        level2::trmv(lower, trans, unit, a_v, x);
+        self.inner.charge_host_op((n * n) as f64, host_rate());
+    }
+
+    // ---------------- level 3 ----------------
+
+    /// The Epiphany-accelerated sgemm (the paper's headline function).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgemm(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        beta: f32,
+        c: &mut [f32],
+        ldc: usize,
+    ) -> Result<()> {
+        let (ar, ac) = if ta.is_trans() { (k, m) } else { (m, k) };
+        let (br, bc) = if tb.is_trans() { (n, k) } else { (k, n) };
+        let a_v = MatRef::from_col_major(ar, ac, lda, a);
+        let b_v = MatRef::from_col_major(br, bc, ldb, b);
+        // Copy-out/copy-in for C (the facade owns layout adaptation).
+        let mut c_m = Mat::from_fn(m, n, |i, j| c[i + j * ldc]);
+        self.inner.sgemm(ta, tb, alpha, a_v, b_v, beta, &mut c_m)?;
+        for j in 0..n {
+            for i in 0..m {
+                c[i + j * ldc] = c_m.get(i, j);
+            }
+        }
+        Ok(())
+    }
+
+    /// dgemm — the paper's "false dgemm": f64 API, Epiphany f32 compute.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dgemm(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        a: &[f64],
+        lda: usize,
+        b: &[f64],
+        ldb: usize,
+        beta: f64,
+        c: &mut [f64],
+        ldc: usize,
+    ) -> Result<()> {
+        let (ar, ac) = if ta.is_trans() { (k, m) } else { (m, k) };
+        let (br, bc) = if tb.is_trans() { (n, k) } else { (k, n) };
+        let a_v = MatRef::from_col_major(ar, ac, lda, a);
+        let b_v = MatRef::from_col_major(br, bc, ldb, b);
+        let mut c_m = Mat::from_fn(m, n, |i, j| c[i + j * ldc]);
+        self.inner.dgemm_false(ta, tb, alpha, a_v, b_v, beta, &mut c_m)?;
+        for j in 0..n {
+            for i in 0..m {
+                c[i + j * ldc] = c_m.get(i, j);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn dtrsm_left(&self, lower: bool, trans: Trans, unit: bool, m: usize, n: usize, alpha: f64, a: &[f64], lda: usize, b: &mut [f64], ldb: usize) {
+        let a_v = MatRef::from_col_major(m, m, lda, a);
+        let mut b_m = Mat::from_fn(m, n, |i, j| b[i + j * ldb]);
+        level3::trsm_left(lower, trans, unit, alpha, a_v, &mut b_m);
+        for j in 0..n {
+            for i in 0..m {
+                b[i + j * ldb] = b_m.get(i, j);
+            }
+        }
+        self.inner.charge_host_op((m * m * n) as f64, host_rate());
+    }
+
+    pub fn dsyrk_lower(&self, trans: Trans, n: usize, k: usize, alpha: f64, a: &[f64], lda: usize, beta: f64, c: &mut [f64], ldc: usize) {
+        let (ar, ac) = if trans.is_trans() { (k, n) } else { (n, k) };
+        let a_v = MatRef::from_col_major(ar, ac, lda, a);
+        let mut c_m = Mat::from_fn(n, n, |i, j| c[i + j * ldc]);
+        level3::syrk_lower(trans, alpha, a_v, beta, &mut c_m);
+        for j in 0..n {
+            for i in 0..n {
+                c[i + j * ldc] = c_m.get(i, j);
+            }
+        }
+        self.inner.charge_host_op((n * n * k) as f64, host_rate());
+    }
+}
+
+fn host_rate() -> f64 {
+    crate::epiphany::timing::CalibratedModel::default().host_level2_f64_gflops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epiphany::kernel::KernelGeometry;
+    use crate::epiphany::timing::CalibratedModel;
+    use crate::host::service::{ServiceBackend, ServiceHandle};
+    use std::sync::Arc;
+
+    fn lib() -> BlasLibrary {
+        let svc = ServiceHandle::spawn(
+            ServiceBackend::Pjrt,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        BlasLibrary::new(Arc::new(Blas::new(svc)))
+    }
+
+    #[test]
+    fn classic_sgemm_signature() {
+        let lib = lib();
+        // C (2x2) = A (2x3) · B (3x2) with lda > m.
+        let (m, n, k) = (2, 2, 3);
+        let lda = 4;
+        let mut a = vec![0.0f32; lda * k];
+        // A = [1 2 3; 4 5 6] col-major with lda 4.
+        for (j, col) in [[1.0f32, 4.0], [2.0, 5.0], [3.0, 6.0]].iter().enumerate() {
+            a[j * lda] = col[0];
+            a[j * lda + 1] = col[1];
+        }
+        let b = vec![1.0f32, 1.0, 1.0, 2.0, 2.0, 2.0]; // [1 2;1 2;1 2]
+        let mut c = vec![0.0f32; m * n];
+        lib.sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, lda, &b, k, 0.0, &mut c, m).unwrap();
+        assert_eq!(c, vec![6.0, 15.0, 12.0, 30.0]);
+    }
+
+    #[test]
+    fn level1_suite() {
+        let lib = lib();
+        let mut y = vec![1.0f32, 1.0, 1.0];
+        lib.saxpy(3, 2.0, &[1.0, 2.0, 3.0], 1, &mut y, 1);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(lib.sdot(3, &y, 1, &y, 1), 9.0 + 25.0 + 49.0);
+        assert_eq!(lib.isamax(3, &y, 1), Some(2));
+        let mut x64 = vec![3.0f64, 4.0];
+        assert!((lib.dnrm2(2, &x64, 1) - 5.0).abs() < 1e-12);
+        lib.dscal(2, 2.0, &mut x64, 1);
+        assert_eq!(x64, vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn gemv_ger_round_trip() {
+        let lib = lib();
+        let (m, n) = (3, 2);
+        let mut a = vec![0.0f64; m * n];
+        lib.dger(m, n, 1.0, &[1.0, 2.0, 3.0], &[10.0, 20.0], &mut a, m);
+        // A = x·yᵀ; A·[1,1] = 30·x
+        let mut y = vec![0.0f64; m];
+        lib.dgemv(Trans::N, m, n, 1.0, &a, m, &[1.0, 1.0], 0.0, &mut y);
+        assert_eq!(y, vec![30.0, 60.0, 90.0]);
+    }
+
+    #[test]
+    fn dgemm_is_false_precision() {
+        let lib = lib();
+        let (m, n, k) = (64, 64, 64);
+        let a = Mat::<f64>::randn(m, k, 1);
+        let b = Mat::<f64>::randn(k, n, 2);
+        let mut c = vec![0.0f64; m * n];
+        lib.dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, &mut c, m).unwrap();
+        let mut want = Mat::<f64>::zeros(m, n);
+        level3::gemm_host(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut want);
+        let got = Mat::from_col_major(m, n, &c);
+        let e = crate::linalg::max_scaled_err(got.view(), want.view());
+        assert!(e > 1e-12 && e < 1e-4, "err {e}: must be f32-class through the f64 API");
+    }
+}

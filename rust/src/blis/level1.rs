@@ -1,0 +1,170 @@
+//! Level-1 BLAS (vector-vector), instantiated for f32 and f64 over strided
+//! vectors — the unaccelerated host ops of the generated library.
+
+use crate::linalg::Real;
+
+/// Strided vector view helper: index `i` ↦ `data[offset + i*inc]`.
+#[inline]
+fn at(i: usize, inc: usize) -> usize {
+    i * inc
+}
+
+/// y ← αx + y
+pub fn axpy<T: Real>(n: usize, alpha: T, x: &[T], incx: usize, y: &mut [T], incy: usize) {
+    for i in 0..n {
+        y[at(i, incy)] += alpha * x[at(i, incx)];
+    }
+}
+
+/// x ← αx
+pub fn scal<T: Real>(n: usize, alpha: T, x: &mut [T], incx: usize) {
+    for i in 0..n {
+        x[at(i, incx)] *= alpha;
+    }
+}
+
+/// y ← x
+pub fn copy<T: Real>(n: usize, x: &[T], incx: usize, y: &mut [T], incy: usize) {
+    for i in 0..n {
+        y[at(i, incy)] = x[at(i, incx)];
+    }
+}
+
+/// x ↔ y
+pub fn swap<T: Real>(n: usize, x: &mut [T], incx: usize, y: &mut [T], incy: usize) {
+    for i in 0..n {
+        std::mem::swap(&mut x[at(i, incx)], &mut y[at(i, incy)]);
+    }
+}
+
+/// xᵀy
+pub fn dot<T: Real>(n: usize, x: &[T], incx: usize, y: &[T], incy: usize) -> T {
+    let mut acc = T::ZERO;
+    for i in 0..n {
+        acc += x[at(i, incx)] * y[at(i, incy)];
+    }
+    acc
+}
+
+/// ‖x‖₂ (with scaling against overflow, LAPACK-style).
+pub fn nrm2<T: Real>(n: usize, x: &[T], incx: usize) -> T {
+    let mut scale = T::ZERO;
+    let mut ssq = T::ONE;
+    for i in 0..n {
+        let v = x[at(i, incx)].abs();
+        if v > T::ZERO {
+            if scale < v {
+                let r = scale / v;
+                ssq = T::ONE + ssq * r * r;
+                scale = v;
+            } else {
+                let r = v / scale;
+                ssq += r * r;
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// Σ|xᵢ|
+pub fn asum<T: Real>(n: usize, x: &[T], incx: usize) -> T {
+    let mut acc = T::ZERO;
+    for i in 0..n {
+        acc += x[at(i, incx)].abs();
+    }
+    acc
+}
+
+/// argmax |xᵢ| (first on ties), None when n = 0.
+pub fn iamax<T: Real>(n: usize, x: &[T], incx: usize) -> Option<usize> {
+    if n == 0 {
+        return None;
+    }
+    let mut best = 0usize;
+    let mut bv = x[0].abs();
+    for i in 1..n {
+        let v = x[at(i, incx)].abs();
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+/// Givens rotation application: (x, y) ← (c·x + s·y, c·y − s·x)
+pub fn rot<T: Real>(n: usize, x: &mut [T], incx: usize, y: &mut [T], incy: usize, c: T, s: T) {
+    for i in 0..n {
+        let xi = x[at(i, incx)];
+        let yi = y[at(i, incy)];
+        x[at(i, incx)] = c * xi + s * yi;
+        y[at(i, incy)] = c * yi - s * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(3, 2.0, &x, 1, &mut y, 1);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn strided_axpy() {
+        let x = [1.0f64, 0.0, 2.0, 0.0];
+        let mut y = [0.0f64; 2];
+        axpy(2, 1.0, &x, 2, &mut y, 1);
+        assert_eq!(y, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn dot_and_nrm2() {
+        let x = [3.0f64, 4.0];
+        assert_eq!(dot(2, &x, 1, &x, 1), 25.0);
+        assert!((nrm2(2, &x, 1) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nrm2_no_overflow() {
+        let x = [1e30f32, 1e30];
+        let r = nrm2(2, &x, 1);
+        assert!(r.is_finite() && (r / (1e30 * 2f32.sqrt()) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn iamax_first_max() {
+        let x = [1.0f32, -5.0, 5.0, 2.0];
+        assert_eq!(iamax(4, &x, 1), Some(1));
+        assert_eq!(iamax(0, &x, 1), None);
+    }
+
+    #[test]
+    fn swap_and_copy() {
+        let mut x = [1.0f32, 2.0];
+        let mut y = [3.0f32, 4.0];
+        swap(2, &mut x, 1, &mut y, 1);
+        assert_eq!((x, y), ([3.0, 4.0], [1.0, 2.0]));
+        let mut z = [0.0f32; 2];
+        copy(2, &x, 1, &mut z, 1);
+        assert_eq!(z, [3.0, 4.0]);
+    }
+
+    #[test]
+    fn rot_rotates() {
+        let mut x = [1.0f64];
+        let mut y = [0.0f64];
+        let (c, s) = (0.0, 1.0);
+        rot(1, &mut x, 1, &mut y, 1, c, s);
+        assert_eq!((x[0], y[0]), (0.0, -1.0));
+    }
+
+    #[test]
+    fn asum_abs() {
+        assert_eq!(asum(3, &[1.0f32, -2.0, 3.0], 1), 6.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Level-2 BLAS (matrix-vector). These run on the host CPU, unaccelerated —
+//! the paper's §4.3/§5 point: their low rate (vs the offloaded gemm) is
+//! what capped the HPL result, and §5.3 proposes NEON/FPGA help.
+//!
+//! Two host paths exist: `*_simple` scalar loops (the faithful baseline)
+//! and the default column-oriented loops that let LLVM auto-vectorize —
+//! our stand-in for the paper's proposed NEON path (ablation-benched).
+
+use super::params::Trans;
+use crate::linalg::{MatMut, MatRef, Real};
+
+/// y ← α·op(A)·x + β·y
+pub fn gemv<T: Real>(
+    trans: Trans,
+    alpha: T,
+    a: MatRef<'_, T>,
+    x: &[T],
+    beta: T,
+    y: &mut [T],
+) {
+    let op_a = if trans.is_trans() { a.t() } else { a };
+    let (m, n) = (op_a.rows(), op_a.cols());
+    assert!(x.len() >= n && y.len() >= m, "gemv dims");
+    for yi in y.iter_mut().take(m) {
+        *yi *= beta;
+    }
+    if op_a.row_stride() == 1 {
+        // Column-sweep: unit-stride inner loop (auto-vectorizable — the
+        // "NEON-like" host path).
+        for j in 0..n {
+            let axj = alpha * x[j];
+            let col = op_a.col_slice(j, 0, m);
+            for i in 0..m {
+                y[i] += axj * col[i];
+            }
+        }
+    } else {
+        for j in 0..n {
+            let axj = alpha * x[j];
+            for i in 0..m {
+                y[i] += axj * op_a.get(i, j);
+            }
+        }
+    }
+}
+
+/// A ← α·x·yᵀ + A (rank-1 update)
+pub fn ger<T: Real>(alpha: T, x: &[T], y: &[T], a: &mut MatMut<'_, T>) {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(x.len() >= m && y.len() >= n, "ger dims");
+    for j in 0..n {
+        let ayj = alpha * y[j];
+        if a.row_stride() == 1 {
+            let col = a.col_slice_mut(j, 0, m);
+            for i in 0..m {
+                col[i] += ayj * x[i];
+            }
+        } else {
+            for i in 0..m {
+                a.update(i, j, |v| v + ayj * x[i]);
+            }
+        }
+    }
+}
+
+/// y ← α·A·x + β·y for symmetric A (lower storage).
+pub fn symv_lower<T: Real>(alpha: T, a: MatRef<'_, T>, x: &[T], beta: T, y: &mut [T]) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "symv needs square A");
+    for yi in y.iter_mut().take(n) {
+        *yi *= beta;
+    }
+    for j in 0..n {
+        // diagonal
+        y[j] += alpha * a.get(j, j) * x[j];
+        for i in j + 1..n {
+            let v = a.get(i, j);
+            y[i] += alpha * v * x[j];
+            y[j] += alpha * v * x[i];
+        }
+    }
+}
+
+/// x ← op(A)·x for triangular A.
+pub fn trmv<T: Real>(lower: bool, trans: Trans, unit: bool, a: MatRef<'_, T>, x: &mut [T]) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let op_a = if trans.is_trans() { a.t() } else { a };
+    // After an op-transpose, "lower" flips.
+    let eff_lower = lower ^ trans.is_trans();
+    let mut out = vec![T::ZERO; n];
+    for i in 0..n {
+        let mut acc = if unit { x[i] } else { op_a.get(i, i) * x[i] };
+        let (lo, hi) = if eff_lower { (0, i) } else { (i + 1, n) };
+        for j in lo..hi {
+            acc += op_a.get(i, j) * x[j];
+        }
+        out[i] = acc;
+    }
+    x[..n].copy_from_slice(&out);
+}
+
+/// Solve op(A)·x = b in place for triangular A.
+pub fn trsv<T: Real>(lower: bool, trans: Trans, unit: bool, a: MatRef<'_, T>, x: &mut [T]) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let op_a = if trans.is_trans() { a.t() } else { a };
+    let eff_lower = lower ^ trans.is_trans();
+    if eff_lower {
+        for i in 0..n {
+            let mut acc = x[i];
+            for j in 0..i {
+                acc -= op_a.get(i, j) * x[j];
+            }
+            x[i] = if unit { acc } else { acc / op_a.get(i, i) };
+        }
+    } else {
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in i + 1..n {
+                acc -= op_a.get(i, j) * x[j];
+            }
+            x[i] = if unit { acc } else { acc / op_a.get(i, i) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn gemv_n_and_t() {
+        let a = Mat::<f64>::from_fn(2, 3, |i, j| (i * 3 + j) as f64 + 1.0);
+        // A = [1 2 3; 4 5 6]
+        let x = [1.0, 1.0, 1.0];
+        let mut y = [0.0, 0.0];
+        gemv(Trans::N, 1.0, a.view(), &x, 0.0, &mut y);
+        assert_eq!(y, [6.0, 15.0]);
+        let x2 = [1.0, 1.0];
+        let mut y2 = [0.0; 3];
+        gemv(Trans::T, 1.0, a.view(), &x2, 0.0, &mut y2);
+        assert_eq!(y2, [5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn gemv_beta_accumulates() {
+        let a = Mat::<f32>::full(2, 2, 1.0);
+        let x = [1.0f32, 1.0];
+        let mut y = [10.0f32, 20.0];
+        gemv(Trans::N, 1.0, a.view(), &x, 0.5, &mut y);
+        assert_eq!(y, [7.0, 12.0]);
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut a = Mat::<f64>::zeros(2, 2);
+        let mut v = a.view_mut();
+        ger(2.0, &[1.0, 2.0], &[3.0, 4.0], &mut v);
+        assert_eq!(a.get(0, 0), 6.0);
+        assert_eq!(a.get(1, 1), 16.0);
+    }
+
+    #[test]
+    fn symv_matches_full_gemv() {
+        let n = 5;
+        let full = {
+            let lower = Mat::<f64>::from_fn(n, n, |i, j| if i >= j { (i + j) as f64 + 1.0 } else { 0.0 });
+            Mat::from_fn(n, n, |i, j| if i >= j { lower.get(i, j) } else { lower.get(j, i) })
+        };
+        let lower = Mat::<f64>::from_fn(n, n, |i, j| if i >= j { (i + j) as f64 + 1.0 } else { -99.0 });
+        let x: Vec<f64> = (0..n).map(|v| v as f64 - 2.0).collect();
+        let mut y1 = vec![0.0; n];
+        let mut y2 = vec![0.0; n];
+        symv_lower(1.0, lower.view(), &x, 0.0, &mut y1);
+        gemv(Trans::N, 1.0, full.view(), &x, 0.0, &mut y2);
+        for i in 0..n {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trsv_inverts_trmv() {
+        let n = 6;
+        let a = Mat::<f64>::from_fn(n, n, |i, j| {
+            if i > j {
+                0.1 * (i + j) as f64
+            } else if i == j {
+                2.0 + i as f64
+            } else {
+                0.0
+            }
+        });
+        for trans in [Trans::N, Trans::T] {
+            for unit in [false, true] {
+                let x0: Vec<f64> = (0..n).map(|v| (v as f64).sin()).collect();
+                let mut x = x0.clone();
+                trmv(true, trans, unit, a.view(), &mut x);
+                trsv(true, trans, unit, a.view(), &mut x);
+                for i in 0..n {
+                    assert!((x[i] - x0[i]).abs() < 1e-10, "{trans:?} unit={unit}");
+                }
+            }
+        }
+    }
+}

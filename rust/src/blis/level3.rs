@@ -1,0 +1,415 @@
+//! Level-3 BLAS beyond gemm: symm, syrk, trmm, trsm — host-side blocked
+//! implementations that cast their inner products to gemm structure.
+//! (The paper's library generates these through BLIS's level-3 framework;
+//! only the gemm µ-kernel is Epiphany-accelerated, so these run at host
+//! speed, which is also what HPL experiences for dtrsm.)
+
+use super::params::Trans;
+use crate::linalg::{Mat, MatRef, Real};
+
+/// Plain host gemm used as the inner engine of the other level-3 ops (and
+/// as an independent oracle in tests): C = α·op(A)·op(B) + β·C.
+pub fn gemm_host<T: Real>(
+    ta: Trans,
+    tb: Trans,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut Mat<T>,
+) {
+    let op_a = if ta.is_trans() { a.t() } else { a };
+    let op_b = if tb.is_trans() { b.t() } else { b };
+    let (m, k, n) = (op_a.rows(), op_a.cols(), op_b.cols());
+    assert_eq!(op_b.rows(), k, "gemm_host dims");
+    assert_eq!((c.rows(), c.cols()), (m, n), "gemm_host C dims");
+    // jki loop with a column accumulator: unit-stride inner loops when C
+    // and op(A) are column-contiguous.
+    let mut col = vec![T::ZERO; m];
+    for j in 0..n {
+        for v in col.iter_mut() {
+            *v = T::ZERO;
+        }
+        for l in 0..k {
+            let blj = op_b.get(l, j);
+            if blj == T::ZERO {
+                continue;
+            }
+            if op_a.row_stride() == 1 {
+                let acol = op_a.col_slice(l, 0, m);
+                for i in 0..m {
+                    col[i] += acol[i] * blj;
+                }
+            } else {
+                for i in 0..m {
+                    col[i] += op_a.get(i, l) * blj;
+                }
+            }
+        }
+        for i in 0..m {
+            let v = alpha * col[i] + beta * c.get(i, j);
+            c.set(i, j, v);
+        }
+    }
+}
+
+/// C = α·A·B + β·C with symmetric A (lower storage), side = left.
+pub fn symm_lower_left<T: Real>(
+    alpha: T,
+    a_lower: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut Mat<T>,
+) {
+    let n = a_lower.rows();
+    assert_eq!(a_lower.cols(), n);
+    // Materialize the symmetric operand once (host op, clarity over speed).
+    let full = Mat::from_fn(n, n, |i, j| if i >= j { a_lower.get(i, j) } else { a_lower.get(j, i) });
+    gemm_host(Trans::N, Trans::N, alpha, full.view(), b, beta, c);
+}
+
+/// C = α·A·Aᵀ + β·C, lower triangle of C updated (syrk).
+pub fn syrk_lower<T: Real>(trans: Trans, alpha: T, a: MatRef<'_, T>, beta: T, c: &mut Mat<T>) {
+    let op_a = if trans.is_trans() { a.t() } else { a };
+    let (n, k) = (op_a.rows(), op_a.cols());
+    assert_eq!((c.rows(), c.cols()), (n, n));
+    for j in 0..n {
+        for i in j..n {
+            let mut acc = T::ZERO;
+            for l in 0..k {
+                acc += op_a.get(i, l) * op_a.get(j, l);
+            }
+            let v = alpha * acc + beta * c.get(i, j);
+            c.set(i, j, v);
+        }
+    }
+}
+
+/// B ← α·op(A)·B for triangular A (left side).
+pub fn trmm_left<T: Real>(
+    lower: bool,
+    trans: Trans,
+    unit: bool,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: &mut Mat<T>,
+) {
+    let m = a.rows();
+    assert_eq!(a.cols(), m);
+    assert_eq!(b.rows(), m);
+    for j in 0..b.cols() {
+        let mut col: Vec<T> = (0..m).map(|i| b.get(i, j)).collect();
+        super::level2::trmv(lower, trans, unit, a, &mut col);
+        for i in 0..m {
+            b.set(i, j, alpha * col[i]);
+        }
+    }
+}
+
+/// Solve op(A)·X = α·B for triangular A (left side), X overwrites B.
+/// Blocked: diagonal blocks solved by trsv columns, off-diagonal updates
+/// via [`gemm_host`] — the standard BLIS decomposition.
+pub fn trsm_left<T: Real>(
+    lower: bool,
+    trans: Trans,
+    unit: bool,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: &mut Mat<T>,
+) {
+    let m = a.rows();
+    assert_eq!(a.cols(), m);
+    assert_eq!(b.rows(), m);
+    let n = b.cols();
+    if alpha != T::ONE {
+        for j in 0..n {
+            for i in 0..m {
+                let v = alpha * b.get(i, j);
+                b.set(i, j, v);
+            }
+        }
+    }
+    const NB: usize = 64;
+    let eff_lower = lower ^ trans.is_trans();
+    let op_view = |i0: usize, j0: usize, r: usize, c: usize| -> (usize, usize, usize, usize) {
+        // map logical op(A) block coords back to stored A coords
+        if trans.is_trans() {
+            (j0, i0, c, r)
+        } else {
+            (i0, j0, r, c)
+        }
+    };
+    let blocks: Vec<(usize, usize)> = (0..m.div_ceil(NB)).map(|b| (b * NB, NB.min(m - b * NB))).collect();
+    let order: Vec<usize> = if eff_lower {
+        (0..blocks.len()).collect()
+    } else {
+        (0..blocks.len()).rev().collect()
+    };
+    for &bi in &order {
+        let (i0, bs) = blocks[bi];
+        // Solve the diagonal block against all RHS columns.
+        let (di, dj, dr, dc) = op_view(i0, i0, bs, bs);
+        let diag = a.sub(di, dj, dr, dc);
+        for j in 0..n {
+            let mut col: Vec<T> = (0..bs).map(|i| b.get(i0 + i, j)).collect();
+            // `lower` describes the *storage* of the diagonal block; trsv
+            // applies the op-transpose flip internally.
+            super::level2::trsv(lower, trans, unit, diag, &mut col);
+            for i in 0..bs {
+                b.set(i0 + i, j, col[i]);
+            }
+        }
+        // Update the remaining blocks: B_rest -= op(A)_rest,blk · X_blk.
+        let rest: Vec<(usize, usize)> = if eff_lower {
+            blocks[bi + 1..].to_vec()
+        } else {
+            blocks[..bi].to_vec()
+        };
+        if rest.is_empty() {
+            continue;
+        }
+        let x_blk = Mat::from_fn(bs, n, |i, j| b.get(i0 + i, j));
+        for (r0, rs) in rest {
+            let (ai, aj, ar, ac) = op_view(r0, i0, rs, bs);
+            let a_blk = a.sub(ai, aj, ar, ac);
+            let mut update = Mat::from_fn(rs, n, |i, j| b.get(r0 + i, j));
+            let ta = if trans.is_trans() { Trans::T } else { Trans::N };
+            gemm_host(ta, Trans::N, T::ZERO - T::ONE, a_blk, x_blk.view(), T::ONE, &mut update);
+            for j in 0..n {
+                for i in 0..rs {
+                    b.set(r0 + i, j, update.get(i, j));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{max_scaled_err, Mat};
+
+    fn naive_gemm(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        Mat::from_fn(m, n, |i, j| {
+            let mut acc = 0.0;
+            for l in 0..k {
+                acc += a.get(i, l) * b.get(l, j);
+            }
+            acc
+        })
+    }
+
+    #[test]
+    fn gemm_host_matches_naive_all_ops() {
+        let (m, n, k) = (13, 9, 17);
+        for ta in [Trans::N, Trans::T] {
+            for tb in [Trans::N, Trans::T] {
+                let a_log = Mat::<f64>::randn(m, k, 1);
+                let b_log = Mat::<f64>::randn(k, n, 2);
+                let a = if ta.is_trans() { a_log.transposed() } else { a_log.clone() };
+                let b = if tb.is_trans() { b_log.transposed() } else { b_log.clone() };
+                let mut c = Mat::<f64>::randn(m, n, 3);
+                let c0 = c.clone();
+                gemm_host(ta, tb, 2.0, a.view(), b.view(), -1.0, &mut c);
+                let prod = naive_gemm(&a_log, &b_log);
+                let want = Mat::from_fn(m, n, |i, j| 2.0 * prod.get(i, j) - c0.get(i, j));
+                assert!(max_scaled_err(c.view(), want.view()) < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_solves() {
+        let m = 150; // > NB to exercise blocking
+        let n = 7;
+        let a = Mat::<f64>::from_fn(m, m, |i, j| {
+            if i > j {
+                0.01 * ((i * 31 + j) % 17) as f64
+            } else if i == j {
+                3.0 + (i % 5) as f64
+            } else {
+                0.0
+            }
+        });
+        for trans in [Trans::N, Trans::T] {
+            for unit in [false, true] {
+                let x_true = Mat::<f64>::randn(m, n, 4);
+                // B = op(A)·X
+                let op_a = if trans.is_trans() { a.transposed() } else { a.clone() };
+                let mut op_au = op_a.clone();
+                if unit {
+                    for i in 0..m {
+                        op_au.set(i, i, 1.0);
+                    }
+                }
+                let b0 = naive_gemm(&op_au, &x_true);
+                let mut b = b0.clone();
+                trsm_left(true, trans, unit, 1.0, a.view(), &mut b);
+                let e = max_scaled_err(b.view(), x_true.view());
+                assert!(e < 1e-9, "{trans:?} unit={unit} err {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_alpha_scales_rhs() {
+        let a = Mat::<f64>::from_fn(3, 3, |i, j| if i == j { 2.0 } else { 0.0 });
+        let mut b = Mat::<f64>::full(3, 2, 4.0);
+        trsm_left(true, Trans::N, false, 0.5, a.view(), &mut b);
+        // X = 0.5·B / 2 = 1.0
+        for j in 0..2 {
+            for i in 0..3 {
+                assert!((b.get(i, j) - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let n = 8;
+        let k = 5;
+        let a = Mat::<f64>::randn(n, k, 5);
+        let mut c = Mat::<f64>::zeros(n, n);
+        syrk_lower(Trans::N, 1.0, a.view(), 0.0, &mut c);
+        let full = naive_gemm(&a, &a.transposed());
+        for j in 0..n {
+            for i in j..n {
+                assert!((c.get(i, j) - full.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn symm_uses_lower_storage() {
+        let n = 6;
+        let lower = Mat::<f64>::from_fn(n, n, |i, j| if i >= j { ((i + 2 * j) % 7) as f64 } else { f64::NAN });
+        let b = Mat::<f64>::randn(n, 4, 6);
+        let mut c = Mat::<f64>::zeros(n, 4);
+        symm_lower_left(1.0, lower.view(), b.view(), 0.0, &mut c);
+        assert!(c.as_slice().iter().all(|v| v.is_finite()), "NaNs leaked from upper");
+    }
+
+    #[test]
+    fn trmm_matches_explicit_product() {
+        let m = 5;
+        let a = Mat::<f64>::from_fn(m, m, |i, j| if i >= j { (i + j + 1) as f64 } else { 0.0 });
+        let b0 = Mat::<f64>::randn(m, 3, 7);
+        let mut b = b0.clone();
+        trmm_left(true, Trans::N, false, 2.0, a.view(), &mut b);
+        let want = naive_gemm(&a, &b0);
+        for j in 0..3 {
+            for i in 0..m {
+                assert!((b.get(i, j) - 2.0 * want.get(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+}
+
+/// Solve X·op(A) = α·B for triangular A (right side), X overwrites B.
+/// Implemented via the left-side solver on the transposed system:
+/// (X·op(A))ᵀ = op(A)ᵀ·Xᵀ = α·Bᵀ.
+pub fn trsm_right<T: Real>(
+    lower: bool,
+    trans: Trans,
+    unit: bool,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: &mut Mat<T>,
+) {
+    let flipped = if trans.is_trans() { Trans::N } else { Trans::T };
+    let mut bt = b.transposed();
+    trsm_left(lower, flipped, unit, alpha, a, &mut bt);
+    *b = bt.transposed();
+}
+
+/// C = α·(A·Bᵀ + B·Aᵀ) + β·C, lower triangle updated (syr2k).
+pub fn syr2k_lower<T: Real>(
+    trans: Trans,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut Mat<T>,
+) {
+    let op_a = if trans.is_trans() { a.t() } else { a };
+    let op_b = if trans.is_trans() { b.t() } else { b };
+    let (n, k) = (op_a.rows(), op_a.cols());
+    assert_eq!((op_b.rows(), op_b.cols()), (n, k), "syr2k dims");
+    assert_eq!((c.rows(), c.cols()), (n, n));
+    for j in 0..n {
+        for i in j..n {
+            let mut acc = T::ZERO;
+            for l in 0..k {
+                acc += op_a.get(i, l) * op_b.get(j, l) + op_b.get(i, l) * op_a.get(j, l);
+            }
+            let v = alpha * acc + beta * c.get(i, j);
+            c.set(i, j, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests_extra {
+    use super::*;
+    use crate::linalg::{max_scaled_err, Mat};
+
+    #[test]
+    fn trsm_right_solves() {
+        let (m, n) = (5, 120); // n > NB exercises the blocked path
+        let a = Mat::<f64>::from_fn(n, n, |i, j| {
+            if i > j {
+                0.02 * ((i + 3 * j) % 13) as f64
+            } else if i == j {
+                2.5 + (i % 3) as f64
+            } else {
+                0.0
+            }
+        });
+        for trans in [Trans::N, Trans::T] {
+            let x_true = Mat::<f64>::randn(m, n, 11);
+            // B = X · op(A)
+            let op_a = if trans.is_trans() { a.transposed() } else { a.clone() };
+            let mut b = Mat::<f64>::zeros(m, n);
+            gemm_host(Trans::N, Trans::N, 1.0, x_true.view(), op_a.view(), 0.0, &mut b);
+            trsm_right(true, trans, false, 1.0, a.view(), &mut b);
+            let e = max_scaled_err(b.view(), x_true.view());
+            assert!(e < 1e-9, "{trans:?} err {e}");
+        }
+    }
+
+    #[test]
+    fn syr2k_matches_explicit() {
+        let (n, k) = (7, 4);
+        let a = Mat::<f64>::randn(n, k, 21);
+        let b = Mat::<f64>::randn(n, k, 22);
+        let mut c = Mat::<f64>::zeros(n, n);
+        syr2k_lower(Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c);
+        let mut full = Mat::<f64>::zeros(n, n);
+        gemm_host(Trans::N, Trans::T, 1.0, a.view(), b.view(), 0.0, &mut full);
+        let mut full2 = Mat::<f64>::zeros(n, n);
+        gemm_host(Trans::N, Trans::T, 1.0, b.view(), a.view(), 0.0, &mut full2);
+        for j in 0..n {
+            for i in j..n {
+                let want = full.get(i, j) + full2.get(i, j);
+                assert!((c.get(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn syr2k_transposed_operands() {
+        let (n, k) = (6, 3);
+        let a = Mat::<f64>::randn(k, n, 23); // stored kxn, trans=T
+        let b = Mat::<f64>::randn(k, n, 24);
+        let mut c1 = Mat::<f64>::zeros(n, n);
+        syr2k_lower(Trans::T, 2.0, a.view(), b.view(), 0.0, &mut c1);
+        let mut c2 = Mat::<f64>::zeros(n, n);
+        syr2k_lower(Trans::N, 2.0, a.transposed().view(), b.transposed().view(), 0.0, &mut c2);
+        for j in 0..n {
+            for i in j..n {
+                assert!((c1.get(i, j) - c2.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! A BLIS-like framework instantiating the BLAS (paper §3.1).
+//!
+//! BLIS's job in the paper: take arbitrary `C = α·op(A)·op(B) + β·C`
+//! problems, block them into fixed-size micro-kernel calls (m=192, n=256,
+//! arbitrary K), pack operands into the micro-kernel's prescribed layouts
+//! (a1 column-major, b1 row-major), and expose the classic level-1/2/3
+//! BLAS on top. This module is that engine in Rust:
+//!
+//! * [`gemm`] — the tiled driver routing micro-tile calls through the
+//!   Epiphany service (the paper's custom µ-kernel);
+//! * [`packing`] — layout/padding transforms, whose *walk class* (contig
+//!   vs strided) is what spreads Table 4's transpose-variant GFLOPS;
+//! * [`level1`], [`level2`], [`level3`] — the host-side BLAS (the paper's
+//!   level-2 ops are unaccelerated, which §4.3 blames for the HPL number);
+//! * [`testsuite`] — BLIS-testsuite-style residue rows (Tables 3–6).
+
+pub mod blas_api;
+pub mod gemm;
+pub mod level1;
+pub mod level2;
+pub mod level3;
+pub mod packing;
+pub mod params;
+pub mod testsuite;
+
+pub use blas_api::BlasLibrary;
+pub use gemm::Blas;
+pub use params::{BlisContext, Trans};

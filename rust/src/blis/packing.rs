@@ -1,0 +1,175 @@
+//! Packing: copy op(A)/op(B) tiles into the µ-kernel's prescribed layouts
+//! (§3.3: "a1 is column-major stored, b1 is row-major stored"), zero-padded
+//! to the fixed micro-tile.
+//!
+//! The *walk class* of each pack is the performance story of Table 4: a
+//! unit-stride source walk packs at memcpy speed; a transposed walk
+//! gathers across the leading dimension and is several times slower on the
+//! Zynq (calibrated in `CalibratedModel`). The class is decided here from
+//! the view's strides and flows into the projection.
+
+use crate::epiphany::timing::WalkClass;
+use crate::linalg::{MatRef, Real};
+
+/// Pack an `m_tile × k` column-major A panel from `op_a` (already the
+/// logical op(A) view), rows `i0..i0+rows`, zero-padding to `m_tile`.
+pub fn pack_a<T: Real>(
+    op_a: MatRef<'_, T>,
+    i0: usize,
+    rows: usize,
+    m_tile: usize,
+) -> (Vec<T>, WalkClass) {
+    let k = op_a.cols();
+    let mut out = vec![T::ZERO; m_tile * k];
+    if op_a.row_stride() == 1 {
+        // Column-contiguous source: memcpy per column.
+        for l in 0..k {
+            let src = op_a.col_slice(l, i0, rows);
+            out[l * m_tile..l * m_tile + rows].copy_from_slice(src);
+        }
+        (out, WalkClass::Contig)
+    } else {
+        // Transposed A: gather walk (StridedA cost class).
+        for l in 0..k {
+            for i in 0..rows {
+                out[l * m_tile + i] = op_a.get(i0 + i, l);
+            }
+        }
+        (out, WalkClass::StridedA)
+    }
+}
+
+/// Pack a `k × n_tile` *row-major* B panel from `op_b` (the logical op(B)
+/// view), columns `j0..j0+cols`, zero-padding to `n_tile`.
+pub fn pack_b<T: Real>(
+    op_b: MatRef<'_, T>,
+    j0: usize,
+    cols: usize,
+    n_tile: usize,
+) -> (Vec<T>, WalkClass) {
+    let k = op_b.rows();
+    let mut out = vec![T::ZERO; k * n_tile];
+    if op_b.col_stride() == 1 {
+        // op(B) row-contiguous (i.e. B was transposed): each output row is
+        // a memcpy from a row of op(B). op(B) = Bᵀ view has rs = ldb,
+        // cs = 1, so row l of op(B) is column l of the stored Bᵀ.
+        let row_view = op_b.t(); // rows become columns with rs == 1
+        for l in 0..k {
+            let src = row_view.col_slice(l, j0, cols);
+            out[l * n_tile..l * n_tile + cols].copy_from_slice(src);
+        }
+        (out, WalkClass::Contig)
+    } else {
+        // Plain B: building row-major panels walks across columns
+        // (StridedB cost class).
+        for l in 0..k {
+            for j in 0..cols {
+                out[l * n_tile + j] = op_b.get(l, j0 + j);
+            }
+        }
+        (out, WalkClass::StridedB)
+    }
+}
+
+/// Extract a zero-padded column-major `m_tile × n_tile` C tile.
+pub fn pack_c<T: Real>(
+    c: MatRef<'_, T>,
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+    m_tile: usize,
+    n_tile: usize,
+) -> Vec<T> {
+    let mut out = vec![T::ZERO; m_tile * n_tile];
+    if c.row_stride() == 1 {
+        for j in 0..cols {
+            let src = c.col_slice(j0 + j, i0, rows);
+            out[j * m_tile..j * m_tile + rows].copy_from_slice(src);
+        }
+    } else {
+        for j in 0..cols {
+            for i in 0..rows {
+                out[j * m_tile + i] = c.get(i0 + i, j0 + j);
+            }
+        }
+    }
+    out
+}
+
+/// Write the real region of a µ-kernel result tile back into C.
+pub fn unpack_c<T: Real>(
+    tile: &[T],
+    c: &mut crate::linalg::MatMut<'_, T>,
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+    m_tile: usize,
+) {
+    if c.row_stride() == 1 {
+        for j in 0..cols {
+            let dst = c.col_slice_mut(j0 + j, i0, rows);
+            dst.copy_from_slice(&tile[j * m_tile..j * m_tile + rows]);
+        }
+    } else {
+        for j in 0..cols {
+            for i in 0..rows {
+                c.set(i0 + i, j0 + j, tile[j * m_tile + i]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn pack_a_contig_class_and_padding() {
+        let a = Mat::<f32>::from_fn(5, 3, |i, j| (10 * i + j) as f32);
+        let (panel, class) = pack_a(a.view(), 1, 4, 6);
+        assert_eq!(class, WalkClass::Contig);
+        // Column 0 rows 1..5 then zero pad rows 5..6.
+        assert_eq!(&panel[0..6], &[10.0, 20.0, 30.0, 40.0, 0.0, 0.0]);
+        // Column 2.
+        assert_eq!(&panel[12..18], &[12.0, 22.0, 32.0, 42.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_a_transposed_class() {
+        let a = Mat::<f32>::from_fn(3, 5, |i, j| (10 * i + j) as f32);
+        let (panel, class) = pack_a(a.t(), 0, 5, 5);
+        assert_eq!(class, WalkClass::StridedA);
+        // op(A) = A^T is 5x3: column l of the panel is row l of A.
+        assert_eq!(&panel[0..5], &[0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pack_b_classes() {
+        let b = Mat::<f32>::from_fn(4, 6, |i, j| (10 * i + j) as f32);
+        let (panel_n, class_n) = pack_b(b.view(), 2, 3, 4);
+        assert_eq!(class_n, WalkClass::StridedB);
+        // Row-major: row 0 = B[0, 2..5], padded to 4.
+        assert_eq!(&panel_n[0..4], &[2.0, 3.0, 4.0, 0.0]);
+        let bt = Mat::<f32>::from_fn(6, 4, |i, j| (10 * j + i) as f32); // Bᵀ stored
+        let (panel_t, class_t) = pack_b(bt.t(), 2, 3, 4);
+        assert_eq!(class_t, WalkClass::Contig);
+        assert_eq!(&panel_t[0..4], &[2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn c_round_trip() {
+        let c0 = Mat::<f64>::from_fn(4, 4, |i, j| (i + 10 * j) as f64);
+        let tile = pack_c(c0.view(), 1, 1, 2, 2, 3, 3);
+        assert_eq!(tile[0], c0.get(1, 1));
+        assert_eq!(tile[3 + 1], c0.get(2, 2));
+        let mut c1 = Mat::<f64>::zeros(4, 4);
+        let mut v = c1.view_mut();
+        unpack_c(&tile, &mut v, 1, 1, 2, 2, 3);
+        assert_eq!(c1.get(1, 1), c0.get(1, 1));
+        assert_eq!(c1.get(2, 2), c0.get(2, 2));
+        assert_eq!(c1.get(0, 0), 0.0);
+    }
+}

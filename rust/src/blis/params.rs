@@ -1,0 +1,83 @@
+//! BLIS context: blocking parameters and transpose/conjugation flags.
+
+use crate::epiphany::kernel::KernelGeometry;
+
+/// BLAS transpose parameter. For the real-domain BLAS the paper
+/// instantiates, `C` (conjugate) behaves as `N` and `H` (hermitian
+/// transpose) as `T` — exactly the note under the paper's Tables 4 and 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trans {
+    N,
+    T,
+    C,
+    H,
+}
+
+impl Trans {
+    /// Whether the operand is transposed in the real domain.
+    pub fn is_trans(self) -> bool {
+        matches!(self, Trans::T | Trans::H)
+    }
+
+    /// The BLIS testsuite single-letter code.
+    pub fn code(self) -> char {
+        match self {
+            Trans::N => 'n',
+            Trans::T => 't',
+            Trans::C => 'c',
+            Trans::H => 'h',
+        }
+    }
+
+    pub fn all() -> [Trans; 4] {
+        [Trans::N, Trans::T, Trans::C, Trans::H]
+    }
+}
+
+/// Blocking context. In this instantiation the micro-tile is the entire
+/// cache-block (MR = MC = 192, NR = NC = 256) and K is unblocked — the
+/// paper's µ-kernel takes arbitrary K, the chip accumulator does the rest.
+#[derive(Clone, Copy, Debug)]
+pub struct BlisContext {
+    /// Micro-tile rows (= the Epiphany kernel's m).
+    pub mr: usize,
+    /// Micro-tile cols (= the Epiphany kernel's n).
+    pub nr: usize,
+    /// K cap per µ-kernel call (0 = unbounded). The artifact chainer and
+    /// the chip accumulator both handle arbitrary K; a cap exists for
+    /// ablations on HC-RAM pressure.
+    pub kc: usize,
+}
+
+impl BlisContext {
+    pub fn paper() -> Self {
+        let g = KernelGeometry::paper();
+        BlisContext { mr: g.m, nr: g.n, kc: 0 }
+    }
+
+    /// Tiles needed to cover `len` with tile `t`.
+    pub fn tiles(len: usize, t: usize) -> usize {
+        len.div_ceil(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_domain_aliases() {
+        assert!(!Trans::N.is_trans());
+        assert!(!Trans::C.is_trans());
+        assert!(Trans::T.is_trans());
+        assert!(Trans::H.is_trans());
+    }
+
+    #[test]
+    fn paper_context() {
+        let ctx = BlisContext::paper();
+        assert_eq!((ctx.mr, ctx.nr), (192, 256));
+        assert_eq!(BlisContext::tiles(4096, 192), 22);
+        assert_eq!(BlisContext::tiles(4096, 256), 16);
+    }
+}

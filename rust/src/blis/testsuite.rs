@@ -1,0 +1,187 @@
+//! BLIS-testsuite-style verification rows: run an operation over all
+//! transpose-parameter combinations, compute the normalized residue
+//! against an f64 oracle, and emit `blis_<dt><op>_<params>_<stor>` rows —
+//! the exact format of the paper's Tables 3–6.
+
+use super::gemm::{Blas, GemmReport};
+use super::params::Trans;
+use crate::linalg::{max_scaled_err, Mat, Real};
+use anyhow::Result;
+
+/// One testsuite row.
+#[derive(Clone, Debug)]
+pub struct TestRow {
+    /// e.g. `blis_sgemm_nt_ccc`.
+    pub label: String,
+    /// Projected-Parallella GFLOPS.
+    pub gflops_projected: f64,
+    /// Wall-clock GFLOPS on this machine.
+    pub gflops_wall: f64,
+    /// Normalized residue vs the f64 oracle.
+    pub residue: f64,
+    pub report: GemmReport,
+}
+
+impl TestRow {
+    pub fn render(&self) -> String {
+        format!(
+            "{:<22} {:>8.3} {:>10.2e}   (wall {:>8.3} GF)",
+            self.label, self.gflops_projected, self.residue, self.gflops_wall
+        )
+    }
+}
+
+/// f64 oracle for `α·op(A)·op(B) + β·C`.
+fn oracle<T: Real>(
+    ta: Trans,
+    tb: Trans,
+    alpha: f64,
+    a: &Mat<T>,
+    b: &Mat<T>,
+    beta: f64,
+    c0: &Mat<T>,
+) -> Mat<f64> {
+    let a64 = a.cast::<f64>();
+    let b64 = b.cast::<f64>();
+    let op_a = if ta.is_trans() { a64.transposed() } else { a64 };
+    let op_b = if tb.is_trans() { b64.transposed() } else { b64 };
+    let mut c = c0.cast::<f64>();
+    super::level3::gemm_host(Trans::N, Trans::N, alpha, op_a.view(), op_b.view(), beta, &mut c);
+    c
+}
+
+/// Run `blis_sgemm_<params>_ccc` for one transpose pair.
+pub fn run_sgemm_case(
+    blas: &Blas,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    seed: u64,
+) -> Result<TestRow> {
+    let a = if ta.is_trans() { Mat::<f32>::randn(k, m, seed) } else { Mat::<f32>::randn(m, k, seed) };
+    let b =
+        if tb.is_trans() { Mat::<f32>::randn(n, k, seed + 1) } else { Mat::<f32>::randn(k, n, seed + 1) };
+    let c0 = Mat::<f32>::randn(m, n, seed + 2);
+    let mut c = c0.clone();
+    let report = blas.sgemm(ta, tb, 1.0, a.view(), b.view(), 1.0, &mut c)?;
+    let want = oracle(ta, tb, 1.0, &a, &b, 1.0, &c0);
+    let residue = max_scaled_err(c.view(), want.view());
+    Ok(TestRow {
+        label: format!("blis_sgemm_{}{}_ccc", ta.code(), tb.code()),
+        gflops_projected: report.projected_gflops(),
+        gflops_wall: report.wall_gflops(),
+        residue,
+        report,
+    })
+}
+
+/// Run `blis_dgemm_<params>_ccc` through the *false* dgemm.
+pub fn run_false_dgemm_case(
+    blas: &Blas,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    seed: u64,
+) -> Result<TestRow> {
+    let a = if ta.is_trans() { Mat::<f64>::randn(k, m, seed) } else { Mat::<f64>::randn(m, k, seed) };
+    let b =
+        if tb.is_trans() { Mat::<f64>::randn(n, k, seed + 1) } else { Mat::<f64>::randn(k, n, seed + 1) };
+    let c0 = Mat::<f64>::randn(m, n, seed + 2);
+    let mut c = c0.clone();
+    let report = blas.dgemm_false(ta, tb, 1.0, a.view(), b.view(), 1.0, &mut c)?;
+    let want = oracle(ta, tb, 1.0, &a, &b, 1.0, &c0);
+    let residue = max_scaled_err(c.view(), want.view());
+    Ok(TestRow {
+        label: format!("blis_dgemm_{}{}_ccc", ta.code(), tb.code()),
+        gflops_projected: report.projected_gflops(),
+        gflops_wall: report.wall_gflops(),
+        residue,
+        report,
+    })
+}
+
+/// The full 16-variant sweep (Tables 4 and 6 shape).
+pub fn sweep_all_variants(
+    blas: &Blas,
+    dgemm: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Result<Vec<TestRow>> {
+    let mut rows = Vec::new();
+    let mut seed = 1000;
+    for ta in Trans::all() {
+        for tb in Trans::all() {
+            let row = if dgemm {
+                run_false_dgemm_case(blas, ta, tb, m, n, k, seed)?
+            } else {
+                run_sgemm_case(blas, ta, tb, m, n, k, seed)?
+            };
+            rows.push(row);
+            seed += 10;
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epiphany::kernel::KernelGeometry;
+    use crate::epiphany::timing::CalibratedModel;
+    use crate::host::service::{ServiceBackend, ServiceHandle};
+
+    fn blas() -> Blas {
+        let svc = ServiceHandle::spawn(
+            ServiceBackend::Pjrt,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        Blas::new(svc)
+    }
+
+    #[test]
+    fn sgemm_row_kernel_size() {
+        // Table 3 shape: kernel-size BLIS sgemm, residue ~1e-7.
+        let blas = blas();
+        let row = run_sgemm_case(&blas, Trans::N, Trans::N, 192, 256, 512, 42).unwrap();
+        assert_eq!(row.label, "blis_sgemm_nn_ccc");
+        assert!(row.residue > 1e-9 && row.residue < 1e-5, "residue {}", row.residue);
+        assert!(row.gflops_projected > 0.5, "projected {}", row.gflops_projected);
+    }
+
+    #[test]
+    fn variant_sweep_small() {
+        // All 16 variants at a small size: correctness + n/c and t/h
+        // equivalence of projected speed (real domain).
+        let blas = blas();
+        let rows = sweep_all_variants(&blas, false, 192, 256, 128).unwrap();
+        assert_eq!(rows.len(), 16);
+        for r in &rows {
+            assert!(r.residue < 1e-5, "{} residue {}", r.label, r.residue);
+        }
+        let find = |code: &str| {
+            rows.iter().find(|r| r.label.contains(&format!("_{code}_"))).unwrap().gflops_projected
+        };
+        // c ≡ n, h ≡ t in the real domain: projections must match exactly.
+        assert!((find("nn") - find("cc")).abs() < 1e-9);
+        assert!((find("tt") - find("hh")).abs() < 1e-9);
+        // Transposed-A variants are slower (Table 4's ordering).
+        assert!(find("tn") < find("nn"));
+        assert!(find("nt") > find("nn"));
+    }
+
+    #[test]
+    fn false_dgemm_row_has_f32_not_f64_residue() {
+        let blas = blas();
+        let row = run_false_dgemm_case(&blas, Trans::N, Trans::N, 192, 256, 256, 77).unwrap();
+        assert_eq!(row.label, "blis_dgemm_nn_ccc");
+        // Table 5/6: residues ~1e-8, far above true-f64 (~1e-15).
+        assert!(row.residue > 1e-11 && row.residue < 1e-5, "residue {}", row.residue);
+    }
+}

@@ -1,0 +1,145 @@
+//! Service metrics: request counters, latency histogram, throughput.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Log-scaled latency histogram (µs buckets: 1, 2, 4, ... ~17 min).
+const BUCKETS: usize = 30;
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    errors: u64,
+    gemm_requests: u64,
+    gemv_requests: u64,
+    batched: u64,
+    flops: f64,
+    latency_us: [u64; BUCKETS],
+    total_latency_s: f64,
+    started: Option<Instant>,
+}
+
+/// Thread-safe metrics sink.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { inner: Mutex::new(Inner { started: Some(Instant::now()), ..Default::default() }) }
+    }
+
+    pub fn record_request(&self, kind: RequestKind, latency_s: f64, flops: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        match kind {
+            RequestKind::Gemm => m.gemm_requests += 1,
+            RequestKind::Gemv => m.gemv_requests += 1,
+            RequestKind::Other => {}
+        }
+        m.flops += flops;
+        m.total_latency_s += latency_s;
+        let us = (latency_s * 1e6).max(1.0);
+        let bucket = (us.log2() as usize).min(BUCKETS - 1);
+        m.latency_us[bucket] += 1;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn record_batched(&self, n: usize) {
+        self.inner.lock().unwrap().batched += n as u64;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    /// Latency below which `q` of requests fall (from the histogram).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        let m = self.inner.lock().unwrap();
+        let total: u64 = m.latency_us.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in m.latency_us.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << i) as f64 / 1e6; // bucket upper bound in s
+            }
+        }
+        (1u64 << (BUCKETS - 1)) as f64 / 1e6
+    }
+
+    /// Human-readable report (the `Stats` opcode's payload).
+    pub fn report(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let uptime = m.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let mean_lat = if m.requests > 0 { m.total_latency_s / m.requests as f64 } else { 0.0 };
+        format!(
+            "requests={} errors={} gemm={} gemv={} batched={} uptime_s={:.1} \
+             mean_latency_s={:.6} achieved_gflops={:.3}",
+            m.requests,
+            m.errors,
+            m.gemm_requests,
+            m.gemv_requests,
+            m.batched,
+            uptime,
+            mean_lat,
+            if uptime > 0.0 { m.flops / uptime / 1e9 } else { 0.0 },
+        )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Routing category of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    Gemm,
+    Gemv,
+    Other,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(RequestKind::Gemm, 0.001, 1e6);
+        m.record_request(RequestKind::Gemv, 0.002, 1e3);
+        m.record_error();
+        assert_eq!(m.requests(), 2);
+        let rep = m.report();
+        assert!(rep.contains("requests=2"));
+        assert!(rep.contains("errors=1"));
+        assert!(rep.contains("gemm=1"));
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_request(RequestKind::Gemm, i as f64 * 1e-4, 0.0);
+        }
+        let p50 = m.latency_quantile(0.5);
+        let p99 = m.latency_quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 0.0);
+    }
+
+    #[test]
+    fn empty_quantile_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile(0.9), 0.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 coordinator: a network-facing BLAS service in front of the single
+//! Epiphany workgroup.
+//!
+//! The paper's architecture has exactly one chip and one service process,
+//! so concurrent BLAS clients must be *routed, queued, and batched* onto
+//! that serial resource — the same problem a vLLM-style router solves for
+//! one accelerator. This module provides:
+//!
+//! * [`protocol`] — a compact binary wire protocol for gemm requests;
+//! * [`batcher`]  — a FIFO + shape-coalescing batcher over the service
+//!   (requests with the same (op, K-class) batch their HH-RAM crossings);
+//! * [`router`]   — dispatch: level-3 sgemm/false-dgemm to the Epiphany
+//!   queue, level-1/2 to a host worker pool;
+//! * [`server`]   — a threaded TCP accept loop;
+//! * [`metrics`]  — counters + latency histograms, `/stats`-style report.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use protocol::{Request, Response};
+pub use router::Router;
+pub use server::{BlasServer, ServerConfig};

@@ -1,0 +1,449 @@
+//! Wire protocol: length-prefixed binary frames over TCP.
+//!
+//! Frame layout (little-endian):
+//! `[u32 len][u8 opcode][payload]` where `len` counts opcode + payload.
+//!
+//! Gemm payload: `[u8 ta][u8 tb][u32 m][u32 n][u32 k][f32/f64 alpha]
+//! [f32/f64 beta][A col-major][B col-major][C col-major]` — matrices in
+//! their *stored* orientation (op applied server-side, like a BLAS call).
+
+use crate::blis::Trans;
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+/// Operation codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Opcode {
+    Sgemm = 1,
+    FalseDgemm = 2,
+    Sgemv = 3,
+    Ping = 4,
+    Stats = 5,
+    Shutdown = 6,
+}
+
+impl Opcode {
+    pub fn from_u8(v: u8) -> Result<Opcode> {
+        Ok(match v {
+            1 => Opcode::Sgemm,
+            2 => Opcode::FalseDgemm,
+            3 => Opcode::Sgemv,
+            4 => Opcode::Ping,
+            5 => Opcode::Stats,
+            6 => Opcode::Shutdown,
+            _ => bail!("unknown opcode {v}"),
+        })
+    }
+}
+
+/// A decoded request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Sgemm {
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        c: Vec<f32>,
+    },
+    FalseDgemm {
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        a: Vec<f64>,
+        b: Vec<f64>,
+        c: Vec<f64>,
+    },
+    Sgemv {
+        ta: Trans,
+        m: usize,
+        n: usize,
+        alpha: f32,
+        beta: f32,
+        a: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+    },
+    Ping,
+    Stats,
+    Shutdown,
+}
+
+/// A response frame: status byte + payload.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// C (or y) payload.
+    OkF32(Vec<f32>),
+    OkF64(Vec<f64>),
+    /// Text payload (stats, pong).
+    OkText(String),
+    Err(String),
+}
+
+fn trans_code(t: Trans) -> u8 {
+    match t {
+        Trans::N => 0,
+        Trans::T => 1,
+        Trans::C => 2,
+        Trans::H => 3,
+    }
+}
+
+fn trans_from(v: u8) -> Result<Trans> {
+    Ok(match v {
+        0 => Trans::N,
+        1 => Trans::T,
+        2 => Trans::C,
+        3 => Trans::H,
+        _ => bail!("bad trans code {v}"),
+    })
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+    fn u8(&mut self) -> Result<u8> {
+        if self.pos >= self.buf.len() {
+            bail!("truncated frame");
+        }
+        self.pos += 1;
+        Ok(self.buf[self.pos - 1])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.buf.len() {
+            bail!("truncated frame");
+        }
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        if self.pos + 8 > self.buf.len() {
+            bail!("truncated frame");
+        }
+        let v = f64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        if self.pos + 4 * n > self.buf.len() {
+            bail!("truncated f32 block (want {n})");
+        }
+        let out = self.buf[self.pos..self.pos + 4 * n]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += 4 * n;
+        Ok(out)
+    }
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        if self.pos + 8 * n > self.buf.len() {
+            bail!("truncated f64 block (want {n})");
+        }
+        let out = self.buf[self.pos..self.pos + 8 * n]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += 8 * n;
+        Ok(out)
+    }
+}
+
+impl Request {
+    /// Encode into a frame (including the length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Request::Ping => body.push(Opcode::Ping as u8),
+            Request::Stats => body.push(Opcode::Stats as u8),
+            Request::Shutdown => body.push(Opcode::Shutdown as u8),
+            Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
+                body.push(Opcode::Sgemm as u8);
+                body.push(trans_code(*ta));
+                body.push(trans_code(*tb));
+                for v in [*m as u32, *n as u32, *k as u32] {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+                body.extend_from_slice(&alpha.to_le_bytes());
+                body.extend_from_slice(&beta.to_le_bytes());
+                for arr in [a, b, c] {
+                    for v in arr.iter() {
+                        body.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            Request::FalseDgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
+                body.push(Opcode::FalseDgemm as u8);
+                body.push(trans_code(*ta));
+                body.push(trans_code(*tb));
+                for v in [*m as u32, *n as u32, *k as u32] {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+                body.extend_from_slice(&alpha.to_le_bytes());
+                body.extend_from_slice(&beta.to_le_bytes());
+                for arr in [a, b, c] {
+                    for v in arr.iter() {
+                        body.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            Request::Sgemv { ta, m, n, alpha, beta, a, x, y } => {
+                body.push(Opcode::Sgemv as u8);
+                body.push(trans_code(*ta));
+                for v in [*m as u32, *n as u32] {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+                body.extend_from_slice(&alpha.to_le_bytes());
+                body.extend_from_slice(&beta.to_le_bytes());
+                for arr in [a, x, y] {
+                    for v in arr.iter() {
+                        body.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        let mut frame = Vec::with_capacity(4 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        frame
+    }
+
+    /// Decode a frame body (without the length prefix).
+    pub fn decode(body: &[u8]) -> Result<Request> {
+        let mut cur = Cursor::new(body);
+        let op = Opcode::from_u8(cur.u8()?)?;
+        Ok(match op {
+            Opcode::Ping => Request::Ping,
+            Opcode::Stats => Request::Stats,
+            Opcode::Shutdown => Request::Shutdown,
+            Opcode::Sgemm => {
+                let ta = trans_from(cur.u8()?)?;
+                let tb = trans_from(cur.u8()?)?;
+                let (m, n, k) = (cur.u32()? as usize, cur.u32()? as usize, cur.u32()? as usize);
+                let alpha = cur.f32()?;
+                let beta = cur.f32()?;
+                let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
+                let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
+                let a = cur.f32s(am * an)?;
+                let b = cur.f32s(bm * bn)?;
+                let c = cur.f32s(m * n)?;
+                Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c }
+            }
+            Opcode::FalseDgemm => {
+                let ta = trans_from(cur.u8()?)?;
+                let tb = trans_from(cur.u8()?)?;
+                let (m, n, k) = (cur.u32()? as usize, cur.u32()? as usize, cur.u32()? as usize);
+                let alpha = cur.f64()?;
+                let beta = cur.f64()?;
+                let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
+                let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
+                let a = cur.f64s(am * an)?;
+                let b = cur.f64s(bm * bn)?;
+                let c = cur.f64s(m * n)?;
+                Request::FalseDgemm { ta, tb, m, n, k, alpha, beta, a, b, c }
+            }
+            Opcode::Sgemv => {
+                let ta = trans_from(cur.u8()?)?;
+                let (m, n) = (cur.u32()? as usize, cur.u32()? as usize);
+                let alpha = cur.f32()?;
+                let beta = cur.f32()?;
+                let a = cur.f32s(m * n)?;
+                let (xl, yl) = if ta.is_trans() { (m, n) } else { (n, m) };
+                let x = cur.f32s(xl)?;
+                let y = cur.f32s(yl)?;
+                Request::Sgemv { ta, m, n, alpha, beta, a, x, y }
+            }
+        })
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Response::OkF32(v) => {
+                body.push(0u8);
+                body.push(0u8); // dtype f32
+                for x in v {
+                    body.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Response::OkF64(v) => {
+                body.push(0u8);
+                body.push(1u8);
+                for x in v {
+                    body.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Response::OkText(s) => {
+                body.push(0u8);
+                body.push(2u8);
+                body.extend_from_slice(s.as_bytes());
+            }
+            Response::Err(e) => {
+                body.push(1u8);
+                body.extend_from_slice(e.as_bytes());
+            }
+        }
+        let mut frame = Vec::with_capacity(4 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        frame
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Response> {
+        if body.is_empty() {
+            bail!("empty response");
+        }
+        if body[0] == 1 {
+            return Ok(Response::Err(String::from_utf8_lossy(&body[1..]).into_owned()));
+        }
+        if body.len() < 2 {
+            bail!("truncated response");
+        }
+        Ok(match body[1] {
+            0 => Response::OkF32(
+                body[2..].chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            1 => Response::OkF64(
+                body[2..].chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            2 => Response::OkText(String::from_utf8_lossy(&body[2..]).into_owned()),
+            d => bail!("bad dtype tag {d}"),
+        })
+    }
+}
+
+/// Read one length-prefixed frame body from a stream.
+pub fn read_frame(stream: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > 1 << 30 {
+        bail!("frame too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Write one frame (already encoded with its prefix).
+pub fn write_frame(stream: &mut impl Write, frame: &[u8]) -> Result<()> {
+    stream.write_all(frame)?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgemm_round_trip() {
+        let req = Request::Sgemm {
+            ta: Trans::T,
+            tb: Trans::N,
+            m: 2,
+            n: 3,
+            k: 4,
+            alpha: 1.5,
+            beta: -0.5,
+            a: (0..8).map(|v| v as f32).collect(),   // k×m stored (ta=T)
+            b: (0..12).map(|v| v as f32).collect(),  // k×n
+            c: (0..6).map(|v| v as f32).collect(),
+        };
+        let frame = req.encode();
+        let body = &frame[4..];
+        match Request::decode(body).unwrap() {
+            Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
+                assert_eq!((ta, tb), (Trans::T, Trans::N));
+                assert_eq!((m, n, k), (2, 3, 4));
+                assert_eq!((alpha, beta), (1.5, -0.5));
+                assert_eq!(a.len(), 8);
+                assert_eq!(b.len(), 12);
+                assert_eq!(c, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn false_dgemm_round_trip() {
+        let req = Request::FalseDgemm {
+            ta: Trans::N,
+            tb: Trans::H,
+            m: 2,
+            n: 2,
+            k: 3,
+            alpha: 2.0,
+            beta: 0.0,
+            a: vec![1.0; 6],
+            b: vec![2.0; 6],
+            c: vec![0.0; 4],
+        };
+        let frame = req.encode();
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::FalseDgemm { tb, k, b, .. } => {
+                assert_eq!(tb, Trans::H);
+                assert_eq!(k, 3);
+                assert_eq!(b, vec![2.0; 6]);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_variants_round_trip() {
+        for resp in [
+            Response::OkF32(vec![1.0, 2.0]),
+            Response::OkF64(vec![3.0]),
+            Response::OkText("pong".into()),
+            Response::Err("boom".into()),
+        ] {
+            let frame = resp.encode();
+            let back = Response::decode(&frame[4..]).unwrap();
+            match (&resp, &back) {
+                (Response::OkF32(a), Response::OkF32(b)) => assert_eq!(a, b),
+                (Response::OkF64(a), Response::OkF64(b)) => assert_eq!(a, b),
+                (Response::OkText(a), Response::OkText(b)) => assert_eq!(a, b),
+                (Response::Err(a), Response::Err(b)) => assert_eq!(a, b),
+                _ => panic!("variant changed in round trip"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_rejected() {
+        let req = Request::Ping.encode();
+        assert!(Request::decode(&req[4..]).is_ok());
+        let bad = [Opcode::Sgemm as u8, 0, 0]; // missing everything
+        assert!(Request::decode(&bad).is_err());
+        assert!(Request::decode(&[42]).is_err(), "unknown opcode");
+    }
+
+    #[test]
+    fn frame_io() {
+        let req = Request::Ping.encode();
+        let mut buf = std::io::Cursor::new(req.clone());
+        let body = read_frame(&mut buf).unwrap();
+        assert_eq!(body, &req[4..]);
+    }
+}

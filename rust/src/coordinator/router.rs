@@ -1,0 +1,220 @@
+//! Request routing: level-3 gemm traffic to the Epiphany batcher queue,
+//! level-2 to host compute, control ops answered inline — the dispatch
+//! stage in front of the serial coprocessor.
+
+use super::batcher::{Batcher, GemmJob};
+use super::metrics::{Metrics, RequestKind};
+use super::protocol::{Request, Response};
+use crate::blis::{level2, Blas};
+use crate::linalg::{Mat, MatRef};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// The router: shared by all connection threads.
+pub struct Router {
+    batcher: Batcher,
+    blas: Arc<Blas>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Router {
+    pub fn new(blas: Arc<Blas>, batcher: Batcher, metrics: Arc<Metrics>) -> Router {
+        Router { batcher, blas, metrics }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Handle one request to completion. `Shutdown` is handled by the
+    /// server before reaching here.
+    pub fn handle(&self, req: Request) -> Response {
+        match self.dispatch(req) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.metrics.record_error();
+                Response::Err(format!("{e:#}"))
+            }
+        }
+    }
+
+    fn dispatch(&self, req: Request) -> Result<Response> {
+        match req {
+            Request::Ping => Ok(Response::OkText("pong".into())),
+            Request::Stats => Ok(Response::OkText(format!(
+                "{} queue_depth={}",
+                self.metrics.report(),
+                self.batcher.depth()
+            ))),
+            Request::Shutdown => Ok(Response::OkText("bye".into())),
+            Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
+                // Route to the Epiphany queue.
+                let rx = self.batcher.submit(GemmJob { ta, tb, m, n, k, alpha, beta, a, b, c });
+                let out = rx.recv().map_err(|_| anyhow::anyhow!("batcher gone"))??;
+                Ok(Response::OkF32(out))
+            }
+            Request::FalseDgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
+                // f64 traffic is rare (HPL); route directly, serialized by
+                // the service itself.
+                let t0 = std::time::Instant::now();
+                let (ar, ac) = if ta.is_trans() { (k, m) } else { (m, k) };
+                let (br, bc) = if tb.is_trans() { (n, k) } else { (k, n) };
+                let a_v = MatRef::from_col_major(ar, ac, ar, &a);
+                let b_v = MatRef::from_col_major(br, bc, br, &b);
+                let mut c_m = Mat::from_col_major(m, n, &c);
+                let rep = self.blas.dgemm_false(ta, tb, alpha, a_v, b_v, beta, &mut c_m)?;
+                self.metrics.record_request(RequestKind::Gemm, t0.elapsed().as_secs_f64(), rep.flops);
+                Ok(Response::OkF64(c_m.as_slice().to_vec()))
+            }
+            Request::Sgemv { ta, m, n, alpha, beta, a, x, mut y } => {
+                // Host-side level-2 (the unaccelerated class; §4.3).
+                let t0 = std::time::Instant::now();
+                let a_v = MatRef::from_col_major(m, n, m, &a);
+                level2::gemv(ta, alpha, a_v, &x, beta, &mut y);
+                let flops = 2.0 * m as f64 * n as f64;
+                self.blas.charge_host_op(
+                    flops,
+                    crate::epiphany::timing::CalibratedModel::default().host_level2_f64_gflops,
+                );
+                self.metrics.record_request(RequestKind::Gemv, t0.elapsed().as_secs_f64(), flops);
+                Ok(Response::OkF32(y))
+            }
+        }
+    }
+}
+
+/// Route classification used by tests and docs.
+pub fn route_of(req: &Request) -> &'static str {
+    match req {
+        Request::Sgemm { .. } => "epiphany-queue",
+        Request::FalseDgemm { .. } => "epiphany-direct",
+        Request::Sgemv { .. } => "host-pool",
+        Request::Ping | Request::Stats | Request::Shutdown => "control",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::Trans;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::epiphany::kernel::KernelGeometry;
+    use crate::epiphany::timing::CalibratedModel;
+    use crate::host::service::{ServiceBackend, ServiceHandle};
+    use crate::linalg::max_scaled_err;
+
+    fn router() -> Router {
+        let svc = ServiceHandle::spawn(
+            ServiceBackend::Pjrt,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        let blas = Arc::new(Blas::new(svc));
+        let metrics = Arc::new(Metrics::new());
+        let batcher = Batcher::spawn(Arc::clone(&blas), BatchPolicy::default(), Arc::clone(&metrics));
+        Router::new(blas, batcher, metrics)
+    }
+
+    #[test]
+    fn routes_classified() {
+        assert_eq!(route_of(&Request::Ping), "control");
+        let gemm = Request::Sgemm {
+            ta: Trans::N,
+            tb: Trans::N,
+            m: 1,
+            n: 1,
+            k: 1,
+            alpha: 1.0,
+            beta: 0.0,
+            a: vec![1.0],
+            b: vec![1.0],
+            c: vec![0.0],
+        };
+        assert_eq!(route_of(&gemm), "epiphany-queue");
+    }
+
+    #[test]
+    fn sgemm_through_router() {
+        let r = router();
+        let (m, n, k) = (64, 32, 48);
+        let a = Mat::<f32>::randn(m, k, 1);
+        let b = Mat::<f32>::randn(k, n, 2);
+        let resp = r.handle(Request::Sgemm {
+            ta: Trans::N,
+            tb: Trans::N,
+            m,
+            n,
+            k,
+            alpha: 1.0,
+            beta: 0.0,
+            a: a.as_slice().to_vec(),
+            b: b.as_slice().to_vec(),
+            c: vec![0.0; m * n],
+        });
+        let out = match resp {
+            Response::OkF32(v) => Mat::from_col_major(m, n, &v),
+            other => panic!("{other:?}"),
+        };
+        let mut want = Mat::<f64>::zeros(m, n);
+        crate::blis::level3::gemm_host(
+            Trans::N,
+            Trans::N,
+            1.0,
+            a.cast::<f64>().view(),
+            b.cast::<f64>().view(),
+            0.0,
+            &mut want,
+        );
+        assert!(max_scaled_err(out.view(), want.view()) < 1e-5);
+        assert_eq!(r.metrics.requests(), 1);
+    }
+
+    #[test]
+    fn sgemv_on_host_path() {
+        let r = router();
+        let (m, n) = (16, 8);
+        let a = Mat::<f32>::randn(m, n, 3);
+        let x: Vec<f32> = (0..n).map(|v| v as f32).collect();
+        let resp = r.handle(Request::Sgemv {
+            ta: Trans::N,
+            m,
+            n,
+            alpha: 1.0,
+            beta: 0.0,
+            a: a.as_slice().to_vec(),
+            x: x.clone(),
+            y: vec![0.0; m],
+        });
+        let y = match resp {
+            Response::OkF32(v) => v,
+            other => panic!("{other:?}"),
+        };
+        for i in 0..m {
+            let mut want = 0.0f64;
+            for j in 0..n {
+                want += a.get(i, j) as f64 * x[j] as f64;
+            }
+            assert!((y[i] as f64 - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bad_request_becomes_error_response() {
+        let r = router();
+        // Mismatched payload sizes.
+        let resp = r.handle(Request::Sgemm {
+            ta: Trans::N,
+            tb: Trans::N,
+            m: 4,
+            n: 4,
+            k: 4,
+            alpha: 1.0,
+            beta: 0.0,
+            a: vec![0.0; 3], // wrong
+            b: vec![0.0; 16],
+            c: vec![0.0; 16],
+        });
+        assert!(matches!(resp, Response::Err(_)));
+    }
+}

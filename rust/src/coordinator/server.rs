@@ -1,0 +1,296 @@
+//! The TCP front end: accept loop + per-connection threads over the
+//! router. (std::net blocking I/O with a thread per connection — the
+//! request path stays pure rust, no async runtime is available offline.)
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::protocol::{read_frame, write_frame, Request, Response};
+use super::router::Router;
+use crate::blis::Blas;
+use crate::epiphany::kernel::KernelGeometry;
+use crate::epiphany::timing::CalibratedModel;
+use crate::host::service::{ServiceBackend, ServiceHandle};
+use anyhow::{Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// e.g. "127.0.0.1:0" (port 0 = ephemeral).
+    pub addr: String,
+    pub backend: ServiceBackend,
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            backend: ServiceBackend::Pjrt,
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+/// A running BLAS server.
+pub struct BlasServer {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl BlasServer {
+    /// Boot the full stack (service → blas → batcher → router → TCP).
+    pub fn start(config: ServerConfig) -> Result<BlasServer> {
+        let svc = ServiceHandle::spawn(
+            config.backend,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )?;
+        let blas = Arc::new(Blas::new(svc));
+        let metrics = Arc::new(Metrics::new());
+        let batcher = Batcher::spawn(Arc::clone(&blas), config.batch, Arc::clone(&metrics));
+        let router = Arc::new(Router::new(blas, batcher, Arc::clone(&metrics)));
+
+        let listener = TcpListener::bind(&config.addr)
+            .with_context(|| format!("binding {}", config.addr))?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_accept = Arc::clone(&stop);
+
+        let accept_thread = std::thread::Builder::new().name("blas-accept".into()).spawn(move || {
+            for conn in listener.incoming() {
+                if stop_accept.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let router = Arc::clone(&router);
+                        let stop_conn = Arc::clone(&stop_accept);
+                        let _ = std::thread::Builder::new().name("blas-conn".into()).spawn(
+                            move || {
+                                let _ = serve_connection(stream, &router, &stop_conn);
+                            },
+                        );
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+
+        Ok(BlasServer { local_addr, stop, accept_thread: Some(accept_thread), metrics })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the accept thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for BlasServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    router: &Router,
+    stop: &AtomicBool,
+) -> Result<()> {
+    loop {
+        let body = match read_frame(&mut stream) {
+            Ok(b) => b,
+            Err(_) => return Ok(()), // client closed
+        };
+        let req = match Request::decode(&body) {
+            Ok(r) => r,
+            Err(e) => {
+                write_frame(&mut stream, &Response::Err(format!("{e:#}")).encode())?;
+                continue;
+            }
+        };
+        if matches!(req, Request::Shutdown) {
+            write_frame(&mut stream, &Response::OkText("bye".into()).encode())?;
+            stop.store(true, Ordering::SeqCst);
+            return Ok(());
+        }
+        let resp = router.handle(req);
+        write_frame(&mut stream, &resp.encode())?;
+    }
+}
+
+/// Minimal client for examples/tests.
+pub struct BlasClient {
+    stream: TcpStream,
+}
+
+impl BlasClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<BlasClient> {
+        Ok(BlasClient { stream: TcpStream::connect(addr)? })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.encode())?;
+        let body = read_frame(&mut self.stream)?;
+        Response::decode(&body)
+    }
+
+    /// Raw stream access (failure-injection tests hand-roll bad frames).
+    pub fn stream_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::Trans;
+    use crate::linalg::{max_scaled_err, Mat};
+
+    fn server() -> BlasServer {
+        BlasServer::start(ServerConfig::default()).expect("make artifacts first")
+    }
+
+    #[test]
+    fn ping_pong() {
+        let srv = server();
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        match cli.call(&Request::Ping).unwrap() {
+            Response::OkText(s) => assert_eq!(s, "pong"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sgemm_over_tcp() {
+        let srv = server();
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        let (m, n, k) = (64, 32, 48);
+        let a = Mat::<f32>::randn(m, k, 1);
+        let b = Mat::<f32>::randn(k, n, 2);
+        let resp = cli
+            .call(&Request::Sgemm {
+                ta: Trans::N,
+                tb: Trans::N,
+                m,
+                n,
+                k,
+                alpha: 1.0,
+                beta: 0.0,
+                a: a.as_slice().to_vec(),
+                b: b.as_slice().to_vec(),
+                c: vec![0.0; m * n],
+            })
+            .unwrap();
+        let out = match resp {
+            Response::OkF32(v) => Mat::from_col_major(m, n, &v),
+            other => panic!("{other:?}"),
+        };
+        let mut want = Mat::<f64>::zeros(m, n);
+        crate::blis::level3::gemm_host(
+            Trans::N,
+            Trans::N,
+            1.0,
+            a.cast::<f64>().view(),
+            b.cast::<f64>().view(),
+            0.0,
+            &mut want,
+        );
+        assert!(max_scaled_err(out.view(), want.view()) < 1e-5);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let srv = server();
+        let addr = srv.addr();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let mut cli = BlasClient::connect(addr).unwrap();
+                for i in 0..3 {
+                    let (m, n, k) = (32, 16, 24);
+                    let a = Mat::<f32>::randn(m, k, t * 100 + i);
+                    let b = Mat::<f32>::randn(k, n, t * 100 + i + 1);
+                    let resp = cli
+                        .call(&Request::Sgemm {
+                            ta: Trans::N,
+                            tb: Trans::N,
+                            m,
+                            n,
+                            k,
+                            alpha: 1.0,
+                            beta: 0.0,
+                            a: a.as_slice().to_vec(),
+                            b: b.as_slice().to_vec(),
+                            c: vec![0.0; m * n],
+                        })
+                        .unwrap();
+                    let out = match resp {
+                        Response::OkF32(v) => Mat::from_col_major(m, n, &v),
+                        other => panic!("{other:?}"),
+                    };
+                    let mut want = Mat::<f64>::zeros(m, n);
+                    crate::blis::level3::gemm_host(
+                        Trans::N,
+                        Trans::N,
+                        1.0,
+                        a.cast::<f64>().view(),
+                        b.cast::<f64>().view(),
+                        0.0,
+                        &mut want,
+                    );
+                    assert!(max_scaled_err(out.view(), want.view()) < 1e-5);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(srv.metrics.requests() >= 12);
+    }
+
+    #[test]
+    fn stats_endpoint() {
+        let srv = server();
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        let _ = cli.call(&Request::Ping).unwrap();
+        match cli.call(&Request::Stats).unwrap() {
+            Response::OkText(s) => {
+                assert!(s.contains("requests="), "{s}");
+                assert!(s.contains("queue_depth="), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_frame_gets_error_not_crash() {
+        let srv = server();
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        // Hand-roll a garbage frame.
+        use std::io::Write;
+        let body = [99u8, 1, 2, 3];
+        cli.stream.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        cli.stream.write_all(&body).unwrap();
+        let resp_body = super::read_frame(&mut cli.stream).unwrap();
+        assert!(matches!(Response::decode(&resp_body).unwrap(), Response::Err(_)));
+        // Connection still usable.
+        match cli.call(&Request::Ping).unwrap() {
+            Response::OkText(s) => assert_eq!(s, "pong"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Mesh-wide barrier model.
+//!
+//! The kernel barriers before and after every K Iteration (paper §3.4.3).
+//! The simulator executes cores sequentially inside a lock-step loop, so
+//! the barrier's *functional* job is an assertion device — every core must
+//! arrive exactly once per phase — while its *timing* job is a per-use
+//! cycle charge in the calibrated model.
+
+use super::CORES;
+use anyhow::{bail, Result};
+
+/// Lock-step barrier with arrival accounting.
+#[derive(Debug)]
+pub struct Barrier {
+    arrived: [bool; CORES],
+    count: usize,
+    /// Completed barrier episodes (for timing: episodes × barrier_cycles).
+    pub episodes: u64,
+}
+
+impl Barrier {
+    pub fn new() -> Self {
+        Barrier { arrived: [false; CORES], count: 0, episodes: 0 }
+    }
+
+    /// Core `id` arrives. Double arrival within one episode is a kernel
+    /// bug on silicon (deadlock or data race) and therefore an error here.
+    pub fn arrive(&mut self, id: usize) -> Result<()> {
+        if id >= CORES {
+            bail!("barrier arrival from bogus core id {id}");
+        }
+        if self.arrived[id] {
+            bail!("core {id} arrived twice at barrier (lock-step violation)");
+        }
+        self.arrived[id] = true;
+        self.count += 1;
+        if self.count == CORES {
+            self.arrived = [false; CORES];
+            self.count = 0;
+            self.episodes += 1;
+        }
+        Ok(())
+    }
+
+    /// True when a barrier episode is partially filled (would deadlock if
+    /// the remaining cores never arrive).
+    pub fn pending(&self) -> bool {
+        self.count != 0
+    }
+}
+
+impl Default for Barrier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_round_completes_episode() {
+        let mut b = Barrier::new();
+        for id in 0..CORES {
+            b.arrive(id).unwrap();
+        }
+        assert_eq!(b.episodes, 1);
+        assert!(!b.pending());
+    }
+
+    #[test]
+    fn double_arrival_is_error() {
+        let mut b = Barrier::new();
+        b.arrive(3).unwrap();
+        assert!(b.arrive(3).is_err());
+    }
+
+    #[test]
+    fn partial_round_is_pending() {
+        let mut b = Barrier::new();
+        b.arrive(0).unwrap();
+        assert!(b.pending());
+        assert_eq!(b.episodes, 0);
+    }
+
+    #[test]
+    fn bogus_core_rejected() {
+        let mut b = Barrier::new();
+        assert!(b.arrive(CORES).is_err());
+    }
+}

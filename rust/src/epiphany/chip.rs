@@ -1,0 +1,184 @@
+//! Chip-level state: 16 cores with Figure-3 local memory maps, the HC-RAM
+//! window with double-buffered input panels, and run statistics that feed
+//! the calibrated timing model.
+
+use super::barrier::Barrier;
+use super::dma::DmaStats;
+use super::kernel::KernelGeometry;
+use super::memory::{BufId, HcRam, HcSeg, LocalMemory};
+use super::mesh::MeshStats;
+use super::timing::CalibratedModel;
+use super::{CORES, CORE_HZ};
+use anyhow::Result;
+
+/// One eCore's state as the sgemm kernel sees it.
+pub struct CoreState {
+    pub lm: LocalMemory,
+    /// `a_ti-cj`: m × ksub/CORES, column-major.
+    pub a: BufId,
+    /// `b_ti-cj`: ksub/CORES × n, row-major.
+    pub b: BufId,
+    /// Fixed m × NSUB ping buffer.
+    pub res1: BufId,
+    /// m × n/CORES accumulator / pong buffer ("the entire result part that
+    /// corresponds to this core"), used in m × NSUB blocks per Column
+    /// Iteration.
+    pub res2: BufId,
+}
+
+/// Aggregate run statistics; every figure the timing model needs.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Lock-step per-core compute cycles (subMatmul + barriers + task
+    /// overhead). All cores do identical work, so one counter suffices.
+    pub cycles: u64,
+    pub submatmuls: u64,
+    pub macs: u64,
+    pub tasks: u64,
+    pub barrier_episodes: u64,
+    pub dma: DmaStats,
+    pub mesh: MeshStats,
+}
+
+impl SimStats {
+    /// Projected coprocessor seconds under the calibrated model:
+    /// e-link DMA (serial with compute, per DESIGN.md §6) + cycles +
+    /// result write-back.
+    pub fn coproc_s(&self, model: &CalibratedModel) -> f64 {
+        self.dma.in_bytes as f64 / model.w_chip_dma
+            + self.cycles as f64 / model.core_hz
+            + self.dma.out_bytes as f64 / model.w_chip_write
+    }
+
+    /// Achieved on-chip GFLOPS (compute cycles only; `macs` is the total
+    /// across all cores, `cycles` is per-core lock-step time) — comparable
+    /// to the 85%-of-peak on-chip results of the prior work the paper cites.
+    pub fn onchip_gflops(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let secs = self.cycles as f64 / CORE_HZ;
+        2.0 * self.macs as f64 / secs / 1e9
+    }
+}
+
+/// HC-RAM segment handles for the kernel's shared buffers.
+pub struct ChipSegments {
+    /// Double-buffered input panels — "two buffers reserved for each input
+    /// block" with the `selector` choosing per task.
+    pub a_in: [HcSeg; 2],
+    pub b_in: [HcSeg; 2],
+    /// Result window, m × n column-major.
+    pub out: HcSeg,
+}
+
+/// The simulated Epiphany-16 running the sgemm kernel.
+pub struct Chip {
+    pub model: CalibratedModel,
+    pub geom: KernelGeometry,
+    pub cores: Vec<CoreState>,
+    pub hcram: HcRam,
+    pub segs: ChipSegments,
+    pub barrier: Barrier,
+    pub stats: SimStats,
+}
+
+impl Chip {
+    /// Boot the chip with the Figure-3 memory map for `geom`. Fails when
+    /// the geometry does not fit the 32 KB local stores.
+    pub fn new(model: CalibratedModel, geom: KernelGeometry) -> Result<Self> {
+        geom.validate()?;
+        let mut cores = Vec::with_capacity(CORES);
+        for _ in 0..CORES {
+            let mut lm = LocalMemory::new();
+            let a = lm.alloc_f32("A (a_ti-cj)", geom.m * geom.k_slice())?;
+            let b = lm.alloc_f32("B (b_ti-cj)", geom.k_slice() * geom.n)?;
+            let res1 = lm.alloc_f32("RES1", geom.m * geom.nsub)?;
+            let res2 = lm.alloc_f32("RES2", geom.m * geom.cols_per_core())?;
+            cores.push(CoreState { lm, a, b, res1, res2 });
+        }
+        let mut hcram = HcRam::new();
+        let a_len = geom.m * geom.ksub;
+        let b_len = geom.ksub * geom.n;
+        let segs = ChipSegments {
+            a_in: [hcram.alloc("a_in[0]", a_len)?, hcram.alloc("a_in[1]", a_len)?],
+            b_in: [hcram.alloc("b_in[0]", b_len)?, hcram.alloc("b_in[1]", b_len)?],
+            out: hcram.alloc("out", geom.m * geom.n)?,
+        };
+        Ok(Chip {
+            model,
+            geom,
+            cores,
+            hcram,
+            segs,
+            barrier: Barrier::new(),
+            stats: SimStats::default(),
+        })
+    }
+
+    /// Host writes an `m × ksub` column-major A panel into input buffer
+    /// `selector` (the e-hal `e_write` path; timing charged by the caller).
+    pub fn host_write_a_panel(&mut self, selector: usize, data: &[f32]) {
+        assert_eq!(data.len(), self.geom.m * self.geom.ksub, "A panel size");
+        self.hcram.write(self.segs.a_in[selector & 1], data);
+    }
+
+    /// Host writes a `ksub × n` row-major B panel into input buffer
+    /// `selector`.
+    pub fn host_write_b_panel(&mut self, selector: usize, data: &[f32]) {
+        assert_eq!(data.len(), self.geom.ksub * self.geom.n, "B panel size");
+        self.hcram.write(self.segs.b_in[selector & 1], data);
+    }
+
+    /// Host reads the m × n column-major result window.
+    pub fn host_read_out(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.geom.m * self.geom.n, "result size");
+        self.hcram.read(self.segs.out, out);
+    }
+
+    /// The Figure-3 memory map of core 0, for docs and layout tests.
+    pub fn memory_map(&self) -> String {
+        self.cores[0].lm.render_map()
+    }
+
+    /// Reset statistics (not memory) — e.g. between bench phases.
+    pub fn reset_stats(&mut self) {
+        self.stats = SimStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry_boots() {
+        let chip = Chip::new(CalibratedModel::default(), KernelGeometry::paper()).unwrap();
+        assert_eq!(chip.cores.len(), CORES);
+        // Fig. 3 regions present in order.
+        let map = chip.memory_map();
+        let idx = |s: &str| map.find(s).unwrap_or(usize::MAX);
+        assert!(idx("code") < idx("A (a_ti-cj)"));
+        assert!(idx("A (a_ti-cj)") < idx("B (b_ti-cj)"));
+        assert!(idx("B (b_ti-cj)") < idx("RES1"));
+        assert!(idx("RES1") < idx("RES2"));
+        assert!(map.contains("stack+ctrl"));
+    }
+
+    #[test]
+    fn oversized_ksub_rejected() {
+        // KSUB = 128 doubles the input buffers: must exceed 32 KB.
+        let geom = KernelGeometry { m: 192, n: 256, ksub: 128, nsub: 4 };
+        assert!(Chip::new(CalibratedModel::default(), geom).is_err());
+    }
+
+    #[test]
+    fn hcram_panels_round_trip() {
+        let mut chip = Chip::new(CalibratedModel::default(), KernelGeometry::paper()).unwrap();
+        let g = chip.geom;
+        let a: Vec<f32> = (0..g.m * g.ksub).map(|v| v as f32).collect();
+        chip.host_write_a_panel(1, &a);
+        let got = chip.hcram.slice(chip.segs.a_in[1], 0, a.len()).to_vec();
+        assert_eq!(got, a);
+    }
+}

@@ -1,0 +1,52 @@
+//! DMA engine model: HC-RAM ↔ core-local transfers over the e-link.
+//!
+//! Each eCore has a DMA engine; the kernel uses it to pull its `a_ti-cj`
+//! and `b_ti-cj` slices from the shared DRAM window. The e-link is a single
+//! shared resource, so the timing model charges aggregate bytes at the
+//! calibrated link rate rather than simulating per-channel arbitration
+//! (DESIGN.md §6; the paper's numbers do not resolve finer structure).
+
+/// Accounting for all DMA traffic in a run.
+#[derive(Clone, Debug, Default)]
+pub struct DmaStats {
+    /// Bytes moved HC-RAM → local (input panels).
+    pub in_bytes: u64,
+    /// Bytes moved local → HC-RAM (result write-back).
+    pub out_bytes: u64,
+    /// Individual transfer descriptors issued.
+    pub transfers: u64,
+}
+
+impl DmaStats {
+    pub fn record_in(&mut self, bytes: usize) {
+        self.in_bytes += bytes as u64;
+        self.transfers += 1;
+    }
+
+    pub fn record_out(&mut self, bytes: usize) {
+        self.out_bytes += bytes as u64;
+        self.transfers += 1;
+    }
+
+    pub fn merge(&mut self, other: &DmaStats) {
+        self.in_bytes += other.in_bytes;
+        self.out_bytes += other.out_bytes;
+        self.transfers += other.transfers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut d = DmaStats::default();
+        d.record_in(1024);
+        d.record_in(2048);
+        d.record_out(512);
+        assert_eq!(d.in_bytes, 3072);
+        assert_eq!(d.out_bytes, 512);
+        assert_eq!(d.transfers, 3);
+    }
+}

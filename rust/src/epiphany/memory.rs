@@ -1,0 +1,266 @@
+//! Per-core local memory (32 KB, four 8 KB banks) and the shared DRAM
+//! window (HC-RAM).
+//!
+//! The paper's Figure 3 memory map is reproduced as a bump allocator over
+//! the 32 KB space: bank 0 is reserved for kernel code, a stack/control
+//! region is reserved at the top, and the A/B/RES1/RES2 buffers must fit in
+//! between — geometry that does not fit is a *configuration error*, exactly
+//! as it would be on silicon. Figure 9's output-streaming map is an
+//! alternative layout built through the same allocator.
+
+use super::{BANK_BYTES, HCRAM_BYTES, LOCAL_MEM_BYTES};
+use anyhow::{bail, Result};
+
+/// Bytes reserved at the bottom for the kernel's code (bank 0, Fig. 3).
+pub const CODE_BYTES: usize = BANK_BYTES;
+/// Bytes reserved at the top for stack + control variables (Fig. 3).
+pub const STACK_CTRL_BYTES: usize = 2 * 1024;
+
+/// A named region inside a core's local memory.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub name: &'static str,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// One core's 32 KB local store with named f32 buffers.
+///
+/// Buffers are held as `Vec<f32>` for the functional simulation, but every
+/// allocation is accounted against the 32 KB budget so capacity errors are
+/// real.
+pub struct LocalMemory {
+    regions: Vec<Region>,
+    buffers: Vec<Vec<f32>>,
+    cursor: usize,
+}
+
+impl LocalMemory {
+    /// Fresh local memory with code + stack/control reserved.
+    pub fn new() -> Self {
+        LocalMemory {
+            regions: vec![Region { name: "code", offset: 0, bytes: CODE_BYTES }],
+            buffers: vec![Vec::new()],
+            cursor: CODE_BYTES,
+        }
+    }
+
+    /// Allocate a named f32 buffer of `len` elements. Fails when the map
+    /// (including the reserved stack/control region) would exceed 32 KB.
+    pub fn alloc_f32(&mut self, name: &'static str, len: usize) -> Result<BufId> {
+        let bytes = len * 4;
+        if self.cursor + bytes + STACK_CTRL_BYTES > LOCAL_MEM_BYTES {
+            bail!(
+                "local memory overflow allocating '{name}' ({bytes} B at offset {}): \
+                 map exceeds {} B (stack/ctrl reserves {} B)",
+                self.cursor,
+                LOCAL_MEM_BYTES,
+                STACK_CTRL_BYTES
+            );
+        }
+        let id = BufId(self.buffers.len());
+        self.regions.push(Region { name, offset: self.cursor, bytes });
+        self.buffers.push(vec![0.0; len]);
+        self.cursor += bytes;
+        Ok(id)
+    }
+
+    /// Bytes still available for buffers.
+    pub fn free_bytes(&self) -> usize {
+        LOCAL_MEM_BYTES - STACK_CTRL_BYTES - self.cursor
+    }
+
+    /// Bytes used by buffers (excluding code and stack/control).
+    pub fn buffer_bytes(&self) -> usize {
+        self.cursor - CODE_BYTES
+    }
+
+    /// The memory map, Figure-3 style.
+    pub fn map(&self) -> &[Region] {
+        &self.regions
+    }
+
+    pub fn buf(&self, id: BufId) -> &[f32] {
+        &self.buffers[id.0]
+    }
+
+    pub fn buf_mut(&mut self, id: BufId) -> &mut [f32] {
+        &mut self.buffers[id.0]
+    }
+
+    /// Zero a buffer (the `command = 0 / 3` clear step).
+    pub fn clear(&mut self, id: BufId) {
+        self.buffers[id.0].fill(0.0);
+    }
+
+    /// Render the map for docs/tests, one line per region.
+    pub fn render_map(&self) -> String {
+        let mut out = String::new();
+        for r in &self.regions {
+            out.push_str(&format!(
+                "0x{:04x}..0x{:04x}  {:>6} B  {}\n",
+                r.offset,
+                r.offset + r.bytes,
+                r.bytes,
+                r.name
+            ));
+        }
+        out.push_str(&format!(
+            "0x{:04x}..0x{:04x}  {:>6} B  stack+ctrl (reserved)\n",
+            LOCAL_MEM_BYTES - STACK_CTRL_BYTES,
+            LOCAL_MEM_BYTES,
+            STACK_CTRL_BYTES
+        ));
+        out
+    }
+}
+
+impl Default for LocalMemory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Handle to a buffer in a core's local memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufId(usize);
+
+/// The 32 MB host↔coprocessor shared DRAM window.
+///
+/// Functionally a flat f32 arena with named segments; the host writes input
+/// panels into the double-buffered segments and the chip DMAs them out,
+/// byte counts flowing into the timing model.
+pub struct HcRam {
+    data: Vec<f32>,
+    segments: Vec<(String, usize, usize)>, // name, offset (f32 elems), len
+    cursor: usize,
+}
+
+impl HcRam {
+    pub fn new() -> Self {
+        HcRam { data: vec![0.0; HCRAM_BYTES / 4], segments: Vec::new(), cursor: 0 }
+    }
+
+    /// Reserve a named segment of `len` f32 elements.
+    pub fn alloc(&mut self, name: &str, len: usize) -> Result<HcSeg> {
+        if (self.cursor + len) * 4 > HCRAM_BYTES {
+            bail!("HC-RAM overflow allocating '{name}' ({len} f32s)");
+        }
+        let seg = HcSeg { offset: self.cursor, len };
+        self.segments.push((name.to_string(), self.cursor, len));
+        self.cursor += len;
+        Ok(seg)
+    }
+
+    pub fn write(&mut self, seg: HcSeg, data: &[f32]) {
+        assert!(data.len() <= seg.len, "segment overflow");
+        self.data[seg.offset..seg.offset + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read(&self, seg: HcSeg, out: &mut [f32]) {
+        assert!(out.len() <= seg.len, "segment overflow");
+        out.copy_from_slice(&self.data[seg.offset..seg.offset + out.len()]);
+    }
+
+    pub fn slice(&self, seg: HcSeg, start: usize, len: usize) -> &[f32] {
+        assert!(start + len <= seg.len);
+        &self.data[seg.offset + start..seg.offset + start + len]
+    }
+
+    pub fn slice_mut(&mut self, seg: HcSeg, start: usize, len: usize) -> &mut [f32] {
+        assert!(start + len <= seg.len);
+        &mut self.data[seg.offset + start..seg.offset + start + len]
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.cursor * 4
+    }
+
+    /// Drop all segments (service shutdown / reset).
+    pub fn reset(&mut self) {
+        self.segments.clear();
+        self.cursor = 0;
+    }
+}
+
+impl Default for HcRam {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Handle to an HC-RAM segment (element offsets).
+#[derive(Clone, Copy, Debug)]
+pub struct HcSeg {
+    pub offset: usize,
+    pub len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_map_fits_exactly() {
+        // Paper geometry: m=192, n=256, KSUB=64, NSUB=4, CORES=16.
+        // A: 192×4, B: 4×256, RES1: 192×4, RES2: 192×16.
+        let mut lm = LocalMemory::new();
+        lm.alloc_f32("A", 192 * 4).unwrap();
+        lm.alloc_f32("B", 4 * 256).unwrap();
+        lm.alloc_f32("RES1", 192 * 4).unwrap();
+        lm.alloc_f32("RES2", 192 * 16).unwrap();
+        // 8K code + 3K + 4K + 3K + 12K = 30K; 2K stack/ctrl ⇒ exactly 32K.
+        assert_eq!(lm.free_bytes(), 0);
+    }
+
+    #[test]
+    fn oversized_geometry_rejected() {
+        // KSUB=128 doubles A and B: must not fit (the paper's compromise
+        // between ir and or ratios is a real capacity constraint).
+        let mut lm = LocalMemory::new();
+        lm.alloc_f32("A", 192 * 8).unwrap();
+        lm.alloc_f32("B", 8 * 256).unwrap();
+        lm.alloc_f32("RES1", 192 * 4).unwrap();
+        assert!(lm.alloc_f32("RES2", 192 * 16).is_err());
+    }
+
+    #[test]
+    fn map_renders_fig3_order() {
+        let mut lm = LocalMemory::new();
+        lm.alloc_f32("A", 16).unwrap();
+        let map = lm.render_map();
+        assert!(map.contains("code"));
+        assert!(map.contains("stack+ctrl"));
+        assert!(map.lines().count() == 3);
+    }
+
+    #[test]
+    fn hcram_round_trip() {
+        let mut hc = HcRam::new();
+        let seg = hc.alloc("in_a", 128).unwrap();
+        let data: Vec<f32> = (0..128).map(|v| v as f32).collect();
+        hc.write(seg, &data);
+        let mut out = vec![0.0; 128];
+        hc.read(seg, &mut out);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn hcram_capacity_enforced() {
+        let mut hc = HcRam::new();
+        assert!(hc.alloc("big", HCRAM_BYTES / 4 + 1).is_err());
+        let a = hc.alloc("half", HCRAM_BYTES / 8).unwrap();
+        assert_eq!(a.offset, 0);
+        assert!(hc.alloc("rest", HCRAM_BYTES / 8).is_ok());
+        assert!(hc.alloc("one-more", 1).is_err());
+    }
+
+    #[test]
+    fn clear_zeroes_buffer() {
+        let mut lm = LocalMemory::new();
+        let b = lm.alloc_f32("x", 8).unwrap();
+        lm.buf_mut(b).fill(3.0);
+        lm.clear(b);
+        assert!(lm.buf(b).iter().all(|&v| v == 0.0));
+    }
+}

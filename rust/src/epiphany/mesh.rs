@@ -1,0 +1,143 @@
+//! The eMesh network-on-chip: 4×4 2D mesh, dimension-order (XY) routing,
+//! and the ring ("pipeline", paper Fig. 7) embedding used by the sgemm
+//! kernel.
+//!
+//! The kernel's inter-core traffic is exclusively "store my partial result
+//! into the next core's buffer". On silicon those stores dual-issue with
+//! FMADDs and cost zero extra cycles *when the next core is a mesh
+//! neighbour*; the ring is therefore embedded as a boustrophedon (snake)
+//! walk so every pipeline hop has mesh distance 1. The mesh model records
+//! per-link traffic so tests can verify that embedding property and
+//! ablations can price a bad embedding.
+
+use super::{CORES, MESH_COLS};
+
+/// Core coordinates on the mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coord {
+    pub row: usize,
+    pub col: usize,
+}
+
+/// Map core id → mesh coordinate (row-major physical numbering, as the
+/// Epiphany does with its (row, col) core ids).
+pub fn coord_of(core: usize) -> Coord {
+    assert!(core < CORES);
+    Coord { row: core / MESH_COLS, col: core % MESH_COLS }
+}
+
+/// Manhattan distance between two cores (XY routing hop count).
+pub fn hops(a: usize, b: usize) -> usize {
+    let (ca, cb) = (coord_of(a), coord_of(b));
+    ca.row.abs_diff(cb.row) + ca.col.abs_diff(cb.col)
+}
+
+/// The pipeline ring (paper Fig. 7) embedded as a snake over the mesh:
+/// logical position `i` in the ring maps to this physical core.
+///
+/// Rows alternate direction so consecutive ring positions are always mesh
+/// neighbours; the wrap-around (last → first) is the single multi-hop link.
+pub fn ring_core(pos: usize) -> usize {
+    assert!(pos < CORES);
+    let row = pos / MESH_COLS;
+    let col = if row % 2 == 0 { pos % MESH_COLS } else { MESH_COLS - 1 - pos % MESH_COLS };
+    row * MESH_COLS + col
+}
+
+/// Inverse of [`ring_core`].
+pub fn ring_pos(core: usize) -> usize {
+    (0..CORES).find(|&p| ring_core(p) == core).expect("core id in range")
+}
+
+/// Next core in the pipeline after logical ring position `pos`.
+pub fn ring_next(pos: usize) -> usize {
+    (pos + 1) % CORES
+}
+
+/// Traffic accounting over mesh links.
+#[derive(Clone, Debug, Default)]
+pub struct MeshStats {
+    /// Total bytes sent core→core, weighted by hop count.
+    pub byte_hops: u64,
+    /// Raw bytes sent core→core.
+    pub bytes: u64,
+    /// Number of store transactions.
+    pub stores: u64,
+    /// Max hop count seen on any transaction (1 for a good embedding,
+    /// except the ring wrap-around).
+    pub max_hops: usize,
+}
+
+impl MeshStats {
+    /// Record a transfer of `bytes` from core `src` to core `dst`.
+    pub fn record(&mut self, src: usize, dst: usize, bytes: usize) {
+        let h = hops(src, dst);
+        self.byte_hops += (bytes * h) as u64;
+        self.bytes += bytes as u64;
+        self.stores += 1;
+        self.max_hops = self.max_hops.max(h);
+    }
+
+    pub fn merge(&mut self, other: &MeshStats) {
+        self.byte_hops += other.byte_hops;
+        self.bytes += other.bytes;
+        self.stores += other.stores;
+        self.max_hops = self.max_hops.max(other.max_hops);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_row_major() {
+        assert_eq!(coord_of(0), Coord { row: 0, col: 0 });
+        assert_eq!(coord_of(5), Coord { row: 1, col: 1 });
+        assert_eq!(coord_of(15), Coord { row: 3, col: 3 });
+    }
+
+    #[test]
+    fn snake_ring_is_neighbour_embedded() {
+        // Every consecutive pipeline hop must be mesh distance 1 — the
+        // property that makes the paper's "results move for free" claim
+        // hold on the NoC.
+        for pos in 0..CORES - 1 {
+            let a = ring_core(pos);
+            let b = ring_core(pos + 1);
+            assert_eq!(hops(a, b), 1, "ring hop {pos}->{} is {a}->{b}", pos + 1);
+        }
+    }
+
+    #[test]
+    fn ring_is_a_permutation() {
+        let mut seen = [false; CORES];
+        for pos in 0..CORES {
+            let c = ring_core(pos);
+            assert!(!seen[c], "core {c} appears twice");
+            seen[c] = true;
+        }
+        for pos in 0..CORES {
+            assert_eq!(ring_pos(ring_core(pos)), pos);
+        }
+    }
+
+    #[test]
+    fn wraparound_is_the_only_long_hop() {
+        // Snake over 4×4: last ring position is core 12 (row 3 reversed),
+        // wrap to core 0 costs 3 hops.
+        let last = ring_core(CORES - 1);
+        assert_eq!(hops(last, ring_core(0)), 3);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = MeshStats::default();
+        s.record(0, 1, 100); // 1 hop
+        s.record(0, 15, 10); // 6 hops
+        assert_eq!(s.bytes, 110);
+        assert_eq!(s.byte_hops, 100 + 60);
+        assert_eq!(s.stores, 2);
+        assert_eq!(s.max_hops, 6);
+    }
+}

@@ -1,0 +1,49 @@
+//! Functional + timing simulator of the Epiphany-16 coprocessor and its
+//! Parallella-side interconnect (e-link, shared DRAM window).
+//!
+//! The paper's evaluation ran on real silicon we do not have (repro band
+//! 0/5), so this module substitutes a simulator that is:
+//!
+//! * **functionally exact** — the sgemm Epiphany kernel ([`kernel`]) executes
+//!   the paper's actual dataflow (Epiphany Task → Column Iteration →
+//!   K Iteration → inter-core pipeline → `subMatmul`/`doMult`) on real `f32`
+//!   values moving through per-core 32 KB local memories, so numerics
+//!   (accumulation order, rounding) match a faithful C port; and
+//! * **timing-calibrated** — every byte moved and cycle burned is accounted
+//!   by [`timing::CalibratedModel`], whose constants are back-derived from
+//!   the paper's Tables 1–2 (see DESIGN.md §6). The simulator therefore
+//!   reports *projected Parallella seconds* next to host wall-clock.
+//!
+//! Hardware parameters (Epiphany-16 / Parallella-16):
+//! 4×4 eCore mesh @ 600 MHz, 1 FMADD/cycle/core (19.2 GFLOPS f32 peak),
+//! 32 KB local memory per core in four 8 KB banks, eMesh NoC with
+//! single-cycle neighbour stores, 32 MB host↔chip shared DRAM (HC-RAM)
+//! reached through the Zynq FPGA e-link.
+
+pub mod barrier;
+pub mod chip;
+pub mod dma;
+pub mod kernel;
+pub mod memory;
+pub mod mesh;
+pub mod submatmul;
+pub mod timing;
+
+/// Number of eCores on the Epiphany-16 (the paper's `CORES`).
+pub const CORES: usize = 16;
+/// Mesh geometry: 4 rows × 4 columns.
+pub const MESH_ROWS: usize = 4;
+pub const MESH_COLS: usize = 4;
+/// Core clock (Parallella-16: 600 MHz).
+pub const CORE_HZ: f64 = 600.0e6;
+/// Local memory per core (32 KB in four 8 KB banks).
+pub const LOCAL_MEM_BYTES: usize = 32 * 1024;
+pub const BANK_BYTES: usize = 8 * 1024;
+/// Shared DRAM window visible to both host and chip (HC-RAM).
+pub const HCRAM_BYTES: usize = 32 * 1024 * 1024;
+/// f32 peak: 16 cores × 600 MHz × 2 flops (FMADD).
+pub const PEAK_GFLOPS: f64 = 19.2;
+
+pub use chip::{Chip, SimStats};
+pub use kernel::{Command, KernelGeometry, TaskInputs};
+pub use timing::CalibratedModel;

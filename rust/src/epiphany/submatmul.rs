@@ -1,0 +1,147 @@
+//! `subMatmul` — "the single-core version of the Epiphany K Iteration"
+//! (paper §3.4.4) — and its `doMult` building block.
+//!
+//! The assembly original multiplies `a ∈ R^{192×4}` by `b ∈ R^{4×4}` and
+//! accumulates into a 192×4 partial, built from a `doMult` macro (one
+//! scalar × a 32-float column slice, FMADD per element, dual-issued with
+//! the stores of the *previous* result block). This model reproduces:
+//!
+//! * the exact arithmetic order — per output column, walk the four k-depth
+//!   `doMult`s accumulating in "registers" (a 32-slot accumulator), then
+//!   commit — so rounding matches a faithful port, and
+//! * the cycle accounting of the assembly structure (32 FMA + setup per
+//!   doMult, loop overheads per 32-row block / column, prologue), which is
+//!   what carries the ~85%-of-peak on-chip lineage into the timing model.
+
+use super::timing::CalibratedModel;
+
+/// One `doMult`: `acc[0..32] += scalar * column[0..32]` using FMA rounding.
+#[inline]
+fn do_mult(acc: &mut [f32; 32], scalar: f32, column: &[f32]) {
+    debug_assert!(column.len() >= 32);
+    for r in 0..32 {
+        acc[r] = column[r].mul_add(scalar, acc[r]);
+    }
+}
+
+/// Result of a subMatmul call: cycles burned per the assembly model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubMatmulStats {
+    pub cycles: u64,
+    pub macs: u64,
+}
+
+/// `c_next[.., 0..nsub] = c_prev[.., 0..nsub] + a @ b`
+///
+/// * `a`: column-major `m_rows × k_depth` (the core's `a_ti-cj` slice),
+///   `m_rows` must be a multiple of 32 (the doMult vector length).
+/// * `b`: column-major `k_depth × nsub` sub-block of the core's local B.
+/// * `c_prev` / `c_next`: column-major `m_rows × nsub` partial-result
+///   buffers — "the previous result and next result pointers are passed as
+///   parameters". They may alias in the caller's world; here they are
+///   distinct slices (the pipeline always reads one buffer and writes the
+///   other, paper §3.4.3).
+pub fn submatmul(
+    model: &CalibratedModel,
+    m_rows: usize,
+    k_depth: usize,
+    nsub: usize,
+    a: &[f32],
+    b: &[f32],
+    c_prev: &[f32],
+    c_next: &mut [f32],
+) -> SubMatmulStats {
+    assert_eq!(m_rows % 32, 0, "doMult operates on 32-row slices");
+    assert!(a.len() >= m_rows * k_depth, "a slice too small");
+    assert!(b.len() >= k_depth * nsub, "b slice too small");
+    assert!(c_prev.len() >= m_rows * nsub && c_next.len() >= m_rows * nsub);
+
+    // Outer loop: the NSUB output columns.
+    for j in 0..nsub {
+        // Inner loop: 32-row blocks of the output column ("a loop that
+        // repeats the process 6 times" for m = 192).
+        for blk in 0..m_rows / 32 {
+            let base = blk * 32;
+            // Load previous partial into "registers".
+            let mut acc = [0.0f32; 32];
+            acc.copy_from_slice(&c_prev[j * m_rows + base..j * m_rows + base + 32]);
+            // k-depth doMults accumulate in registers before the store —
+            // "the partial results will be accumulated 4 times in the
+            // internal registers, before sending them back to memory".
+            for l in 0..k_depth {
+                let scalar = b[j * k_depth + l];
+                do_mult(&mut acc, scalar, &a[l * m_rows + base..l * m_rows + base + 32]);
+            }
+            c_next[j * m_rows + base..j * m_rows + base + 32].copy_from_slice(&acc);
+        }
+    }
+
+    SubMatmulStats {
+        cycles: model.submatmul_cycles(m_rows, nsub, k_depth),
+        macs: (m_rows * nsub * k_depth) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Mat, max_scaled_err};
+
+    fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c0: &[f32]) -> Vec<f32> {
+        let mut c = c0.to_vec();
+        for j in 0..n {
+            for l in 0..k {
+                for i in 0..m {
+                    c[j * m + i] += a[l * m + i] * b[j * k + l];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_192x4x4() {
+        let model = CalibratedModel::default();
+        let a = Mat::<f32>::randn(192, 4, 1);
+        let b = Mat::<f32>::randn(4, 4, 2);
+        let c0 = Mat::<f32>::randn(192, 4, 3);
+        let mut out = vec![0.0; 192 * 4];
+        submatmul(&model, 192, 4, 4, a.as_slice(), b.as_slice(), c0.as_slice(), &mut out);
+        let want = naive(192, 4, 4, a.as_slice(), b.as_slice(), c0.as_slice());
+        let got = Mat::from_col_major(192, 4, &out);
+        let want = Mat::from_col_major(192, 4, &want);
+        // FMA vs separate mul+add differ in last-ulp only.
+        assert!(max_scaled_err(got.view(), want.view()) < 1e-6);
+    }
+
+    #[test]
+    fn accumulates_prev_partial() {
+        let model = CalibratedModel::default();
+        let a = vec![0.0f32; 32 * 4];
+        let b = vec![0.0f32; 16];
+        let prev: Vec<f32> = (0..32 * 4).map(|v| v as f32).collect();
+        let mut next = vec![0.0f32; 32 * 4];
+        submatmul(&model, 32, 4, 4, &a, &b, &prev, &mut next);
+        assert_eq!(next, prev, "zero product must pass prev through");
+    }
+
+    #[test]
+    fn cycle_count_matches_model() {
+        let model = CalibratedModel::default();
+        let a = vec![0.0f32; 192 * 4];
+        let b = vec![0.0f32; 16];
+        let prev = vec![0.0f32; 192 * 4];
+        let mut next = vec![0.0f32; 192 * 4];
+        let s = submatmul(&model, 192, 4, 4, &a, &b, &prev, &mut next);
+        assert_eq!(s.cycles, 3584);
+        assert_eq!(s.macs, 3072);
+    }
+
+    #[test]
+    #[should_panic(expected = "32-row")]
+    fn rejects_unaligned_m() {
+        let model = CalibratedModel::default();
+        let mut next = vec![0.0f32; 33 * 4];
+        submatmul(&model, 33, 4, 4, &[0.0; 33 * 4], &[0.0; 16], &[0.0; 33 * 4], &mut next);
+    }
+}

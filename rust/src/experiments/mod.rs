@@ -1,0 +1,35 @@
+//! Reproduction of every table in the paper's evaluation (§4).
+//!
+//! Each `tableN()` regenerates the corresponding paper table: it runs the
+//! real code path (numerics verified on this machine) and reports the
+//! paper's value next to the calibrated-model *projection* for the
+//! Parallella and the wall-clock on this host. Absolute agreement is
+//! expected only for projections; the *shape* criteria are in DESIGN.md §5.
+//!
+//! Sizing: the paper's full sizes (4096³, N=4608) are used for projections
+//! (analytic — free), while the executed-numerics part can be scaled down
+//! via [`ExperimentScale`] so the suite also runs in CI time
+//! (`BENCH_FULL=1` forces paper sizes).
+
+pub mod tables;
+
+pub use tables::*;
+
+/// How big the executed (wall-clock) runs are.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExperimentScale {
+    /// Paper sizes everywhere (minutes of runtime).
+    Full,
+    /// Reduced executed sizes; projections still at paper size.
+    Quick,
+}
+
+impl ExperimentScale {
+    pub fn from_env() -> Self {
+        if std::env::var("BENCH_FULL").ok().as_deref() == Some("1") {
+            ExperimentScale::Full
+        } else {
+            ExperimentScale::Quick
+        }
+    }
+}

@@ -1,0 +1,488 @@
+//! One function per paper table. See module docs for the
+//! projected-vs-executed split.
+
+use super::ExperimentScale;
+use crate::blis::testsuite::{run_false_dgemm_case, run_sgemm_case, sweep_all_variants};
+use crate::blis::{Blas, Trans};
+use crate::epiphany::timing::{CalibratedModel, WalkClass};
+use crate::host::microkernel::{host_ref_sgemm, InnerMicroKernel, UkrBackend};
+use crate::host::projection::{project_host_ref, project_ukr_call, ProjectionParams};
+use crate::host::service::{ServiceBackend, ServiceHandle};
+use crate::hpl::driver::{run_hpl, HplConfig};
+use crate::linalg::{max_abs, Mat};
+use crate::runtime::GemmExecutor;
+use crate::util::tables::{gf, sci, secs, Table};
+use anyhow::Result;
+
+/// A named paper-vs-ours comparison, asserted by tests and printed by
+/// benches.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub name: String,
+    pub paper: f64,
+    pub ours: f64,
+}
+
+impl Check {
+    pub fn ratio(&self) -> f64 {
+        self.ours / self.paper
+    }
+}
+
+/// Output of one table reproduction.
+pub struct TableResult {
+    pub rendered: String,
+    pub checks: Vec<Check>,
+}
+
+fn blas(backend: ServiceBackend) -> Result<Blas> {
+    Ok(Blas::new(ServiceHandle::spawn(
+        backend,
+        CalibratedModel::default(),
+        crate::epiphany::kernel::KernelGeometry::paper(),
+    )?))
+}
+
+/// Analytic projection of a full BLIS gemm at paper scale: tile calls ×
+/// per-call projection.
+pub fn analytic_blis_gemm_s(
+    model: &CalibratedModel,
+    m: usize,
+    n: usize,
+    k: usize,
+    class_a: WalkClass,
+    class_b: WalkClass,
+    dgemm: bool,
+) -> f64 {
+    let calls = m.div_ceil(192) * n.div_ceil(256);
+    let mut p = ProjectionParams::kernel_service(k);
+    p.class_a = class_a;
+    p.class_b = class_b;
+    p.blis = true;
+    p.dgemm = dgemm;
+    calls as f64 * project_ukr_call(model, &p).total_s
+}
+
+/// Analytic projection of the HPL run (paper Table 7 parameters).
+pub fn hpl_projection_s(model: &CalibratedModel, n: usize, nb: usize) -> f64 {
+    let mut total = 0.0f64;
+    let steps = n.div_ceil(nb);
+    for s in 0..steps {
+        let j0 = s * nb;
+        let jb = nb.min(n - j0);
+        let rows = (n - j0) as f64;
+        // Panel factorization at the host level-2 rate.
+        total += rows * (jb * jb) as f64 / (model.host_level2_f64_gflops * 1e9);
+        let rest = n - (j0 + jb);
+        if rest > 0 {
+            // trsm at the host rate.
+            total += (jb * jb * rest) as f64 / (model.host_trsm_f64_gflops * 1e9);
+            // Trailing update through the false dgemm (L21 is col-major ⇒
+            // contig A walk; U12 feeds the row-major panel ⇒ strided B walk).
+            total += analytic_blis_gemm_s(model, rest, rest, jb, WalkClass::Contig, WalkClass::StridedB, true);
+        }
+    }
+    // Forward/backward solve.
+    total += 2.0 * (n * n) as f64 / (model.host_level2_f64_gflops * 1e9);
+    total
+}
+
+/// Table 1: custom test, kernel called from the same process
+/// (M=192, N=256, K=4096).
+pub fn table1(scale: ExperimentScale) -> Result<TableResult> {
+    let model = CalibratedModel::default();
+    let p = ProjectionParams::kernel_same_process(4096);
+    let proj = project_ukr_call(&model, &p);
+    let href_s = project_host_ref(&model, 192, 256, 4096);
+
+    // Executed numerics: PJRT artifact at K (full = paper's 4096).
+    let k_exec = if scale == ExperimentScale::Full { 4096 } else { 1024 };
+    let a = Mat::<f32>::randn(192, k_exec, 11);
+    let b = Mat::<f32>::randn(k_exec, 256, 12);
+    let b_rm = {
+        let mut v = vec![0.0f32; k_exec * 256];
+        for l in 0..k_exec {
+            for j in 0..256 {
+                v[l * 256 + j] = b.get(l, j);
+            }
+        }
+        v
+    };
+    let c = Mat::<f32>::zeros(192, 256);
+    let mut ukr = InnerMicroKernel::new(
+        UkrBackend::Pjrt(GemmExecutor::discover()?),
+        model.clone(),
+        crate::epiphany::kernel::KernelGeometry::paper(),
+    )?;
+    let out = ukr.sgemm(1.0, a.as_slice(), &b_rm, 0.0, c.as_slice(), p)?;
+    // Error vs the f64 oracle (the paper's error rows).
+    let mut want = Mat::<f64>::zeros(192, 256);
+    crate::blis::level3::gemm_host(
+        Trans::N,
+        Trans::N,
+        1.0,
+        a.cast::<f64>().view(),
+        b.cast::<f64>().view(),
+        0.0,
+        &mut want,
+    );
+    let got = Mat::from_col_major(192, 256, &out.c);
+    // Scale-normalized errors (|diff| / max|want|): per-element relative
+    // error is meaningless on the near-zero entries of a random-operand
+    // product; the paper's operands evidently avoided that.
+    let scale = max_abs(want.view());
+    let (mut sum_err, mut max_err) = (0.0f64, 0.0f64);
+    for j in 0..256 {
+        for i in 0..192 {
+            let d = (got.get(i, j) as f64 - want.get(i, j)).abs() / scale;
+            sum_err += d;
+            max_err = max_err.max(d);
+        }
+    }
+    let mean_err = sum_err / (192.0 * 256.0);
+
+    // Wall-clock of the naive host reference at the executed size.
+    let (_, href_wall) = crate::util::timed(|| {
+        host_ref_sgemm(192, 256, k_exec.min(512), 1.0, &a.as_slice()[..192 * k_exec.min(512)], &b_rm[..k_exec.min(512) * 256], 0.0, c.as_slice())
+    });
+
+    let mut t = Table::new(
+        "Table 1 — sgemm kernel, same process (M=192, N=256, K=4096)",
+        &["Description", "paper (s)", "projected (s)", "ratio"],
+    );
+    let r = |a: f64, b: f64| format!("{:.3}", b / a);
+    t.row(&["Host reference code".into(), secs(3.778169), secs(href_s), r(3.778169, href_s)]);
+    t.row(&["Input loading + preprocessing".into(), secs(0.094648), secs(proj.input_s), r(0.094648, proj.input_s)]);
+    t.row(&["Coprocessor work".into(), secs(0.105652), secs(proj.coproc_s), r(0.105652, proj.coproc_s)]);
+    t.row(&["Host retrieve + post-processing".into(), secs(0.005272), secs(proj.post_s), r(0.005272, proj.post_s)]);
+    t.row(&["Total sgemm µ-kernel".into(), secs(0.114114), secs(proj.total_s), r(0.114114, proj.total_s)]);
+    let mut rendered = t.render();
+    rendered.push_str(&format!(
+        "GFLOPS: paper 3.529 | projected {} | host-ref paper 0.107 | projected {}\n\
+         errors (executed @K={k_exec}, PJRT artifact): mean {} (paper 8.73e-8), max {} (paper 5.83e-7)\n\
+         host-ref wall-clock sample (K={}): {:.3}s on this machine\n",
+        gf(proj.gflops(192, 256, 4096)),
+        gf(2.0 * 192.0 * 256.0 * 4096.0 / href_s / 1e9),
+        sci(mean_err),
+        sci(max_err),
+        k_exec.min(512),
+        href_wall,
+    ));
+
+    Ok(TableResult {
+        rendered,
+        checks: vec![
+            Check { name: "t1.total_s".into(), paper: 0.114114, ours: proj.total_s },
+            Check { name: "t1.input_s".into(), paper: 0.094648, ours: proj.input_s },
+            Check { name: "t1.coproc_s".into(), paper: 0.105652, ours: proj.coproc_s },
+            Check { name: "t1.gflops".into(), paper: 3.529, ours: proj.gflops(192, 256, 4096) },
+            Check { name: "t1.hostref_s".into(), paper: 3.778169, ours: href_s },
+            Check { name: "t1.mean_err_log10".into(), paper: (8.73e-8f64).log10(), ours: mean_err.max(1e-12).log10() },
+        ],
+    })
+}
+
+/// Table 2: the kernel through the service process.
+pub fn table2(scale: ExperimentScale) -> Result<TableResult> {
+    let model = CalibratedModel::default();
+    let proj = project_ukr_call(&model, &ProjectionParams::kernel_service(4096));
+
+    // Executed: real service crossing at scaled K.
+    let k_exec = if scale == ExperimentScale::Full { 4096 } else { 512 };
+    let blas = blas(ServiceBackend::Pjrt)?;
+    let row = run_sgemm_case(&blas, Trans::N, Trans::N, 192, 256, k_exec, 21)?;
+
+    let mut t = Table::new(
+        "Table 2 — sgemm kernel via service process (M=192, N=256, K=4096)",
+        &["Description", "paper", "projected", "ratio"],
+    );
+    t.row(&["Total sgemm µ-kernel (s)".into(), secs(0.158303), secs(proj.total_s), format!("{:.3}", proj.total_s / 0.158303)]);
+    t.row(&["GFLOPS/s".into(), gf(2.543), gf(proj.gflops(192, 256, 4096)), format!("{:.3}", proj.gflops(192, 256, 4096) / 2.543)]);
+    let mut rendered = t.render();
+    rendered.push_str(&format!(
+        "executed @K={k_exec}: residue {} (service+PJRT path), wall {:.4}s\n",
+        sci(row.residue),
+        row.report.wall_s
+    ));
+    Ok(TableResult {
+        rendered,
+        checks: vec![
+            Check { name: "t2.total_s".into(), paper: 0.158303, ours: proj.total_s },
+            Check { name: "t2.gflops".into(), paper: 2.543, ours: proj.gflops(192, 256, 4096) },
+        ],
+    })
+}
+
+/// Table 3: BLIS sgemm at kernel size.
+pub fn table3(scale: ExperimentScale) -> Result<TableResult> {
+    let model = CalibratedModel::default();
+    let proj_s = analytic_blis_gemm_s(&model, 192, 256, 4096, WalkClass::Contig, WalkClass::StridedB, false);
+    let proj_gf = 2.0 * 192.0 * 256.0 * 4096.0 / proj_s / 1e9;
+
+    let k_exec = if scale == ExperimentScale::Full { 4096 } else { 512 };
+    let blas = blas(ServiceBackend::Pjrt)?;
+    let row = run_sgemm_case(&blas, Trans::N, Trans::N, 192, 256, k_exec, 31)?;
+
+    let mut t = Table::new(
+        "Table 3 — BLIS sgemm kernel results (M=192, N=256, K=4096)",
+        &["row", "paper GFLOPS", "projected GFLOPS", "residue paper", "residue ours"],
+    );
+    t.row(&[
+        "blis_sgemm_nn_ccc".into(),
+        gf(2.630),
+        gf(proj_gf),
+        sci(1.18e-7),
+        sci(row.residue),
+    ]);
+    let mut rendered = t.render();
+    rendered.push_str(
+        "note: the paper's Table 3 (2.630 GF) exceeds its own Table 2 (2.543 GF) although BLIS\n\
+         adds packing; our model cannot reproduce that inversion — see EXPERIMENTS.md.\n",
+    );
+    Ok(TableResult {
+        rendered,
+        checks: vec![Check { name: "t3.gflops".into(), paper: 2.630, ours: proj_gf }],
+    })
+}
+
+/// The 16 transpose variants of Table 4 (sgemm) / Table 6 (false dgemm).
+fn variant_table(
+    dgemm: bool,
+    paper_vals: &[(&str, f64, f64)],
+    scale: ExperimentScale,
+) -> Result<TableResult> {
+    let model = CalibratedModel::default();
+    let (m, n, k) = (4096, 4096, 4096);
+    let flops = 2.0 * (m as f64) * (n as f64) * (k as f64);
+
+    // Projected at paper size per variant.
+    let class_of = |t: Trans, is_a: bool| {
+        if is_a {
+            if t.is_trans() { WalkClass::StridedA } else { WalkClass::Contig }
+        } else if t.is_trans() {
+            WalkClass::Contig
+        } else {
+            WalkClass::StridedB
+        }
+    };
+    let mut t = Table::new(
+        &format!(
+            "Table {} — BLIS {} results (M=N=K=4096)",
+            if dgemm { 6 } else { 4 },
+            if dgemm { "\"false dgemm\"" } else { "sgemm" }
+        ),
+        &["row", "paper GF", "projected GF", "ratio", "residue paper", "residue ours"],
+    );
+    let mut checks = Vec::new();
+
+    // Executed sweep at reduced size for residues.
+    let (em, en, ek) = if scale == ExperimentScale::Full { (4096, 4096, 4096) } else { (384, 512, 256) };
+    let blas = blas(ServiceBackend::Pjrt)?;
+    let rows = sweep_all_variants(&blas, dgemm, em, en, ek)?;
+
+    for (i, &(code, paper_gf, paper_res)) in paper_vals.iter().enumerate() {
+        let ta = Trans::all()[i / 4];
+        let tb = Trans::all()[i % 4];
+        let proj_s = analytic_blis_gemm_s(&model, m, n, k, class_of(ta, true), class_of(tb, false), dgemm);
+        let proj_gf = flops / proj_s / 1e9;
+        let res = rows[i].residue;
+        t.row(&[
+            format!("blis_{}gemm_{code}_ccc", if dgemm { "d" } else { "s" }),
+            gf(paper_gf),
+            gf(proj_gf),
+            format!("{:.3}", proj_gf / paper_gf),
+            sci(paper_res),
+            sci(res),
+        ]);
+        checks.push(Check {
+            name: format!("t{}.{}", if dgemm { 6 } else { 4 }, code),
+            paper: paper_gf,
+            ours: proj_gf,
+        });
+    }
+    Ok(TableResult { rendered: t.render(), checks })
+}
+
+/// Table 4: BLIS sgemm, all 16 transpose variants at 4096³.
+pub fn table4(scale: ExperimentScale) -> Result<TableResult> {
+    #[rustfmt::skip]
+    let paper = [
+        ("nn", 2.381, 4.52e-7), ("nt", 2.455, 4.77e-7), ("nc", 2.381, 4.79e-7), ("nh", 2.456, 4.65e-7),
+        ("tn", 2.034, 4.50e-7), ("tt", 2.090, 4.55e-7), ("tc", 2.036, 4.64e-7), ("th", 2.094, 4.89e-7),
+        ("cn", 2.381, 4.69e-7), ("ct", 2.455, 4.67e-7), ("cc", 2.381, 4.75e-7), ("ch", 2.455, 4.59e-7),
+        ("hn", 2.035, 4.67e-7), ("ht", 2.090, 4.69e-7), ("hc", 2.037, 4.69e-7), ("hh", 2.094, 4.63e-7),
+    ];
+    // Reorder to [N,T,C,H]² iteration order (paper groups differently).
+    let order = ["nn", "nt", "nc", "nh", "tn", "tt", "tc", "th", "cn", "ct", "cc", "ch", "hn", "ht", "hc", "hh"];
+    let mut vals = Vec::new();
+    for (i, &code) in order.iter().enumerate() {
+        // paper lists n,c aliases: map via code lookup
+        let found = paper.iter().find(|(c, _, _)| *c == code).unwrap();
+        let _ = i;
+        vals.push(*found);
+    }
+    variant_table(false, &vals, scale)
+}
+
+/// Table 5: the false-dgemm kernel result.
+pub fn table5(scale: ExperimentScale) -> Result<TableResult> {
+    let model = CalibratedModel::default();
+    let proj_s = analytic_blis_gemm_s(&model, 192, 256, 4096, WalkClass::Contig, WalkClass::StridedB, true);
+    let proj_gf = 2.0 * 192.0 * 256.0 * 4096.0 / proj_s / 1e9;
+
+    let k_exec = if scale == ExperimentScale::Full { 4096 } else { 512 };
+    let blas = blas(ServiceBackend::Pjrt)?;
+    let row = run_false_dgemm_case(&blas, Trans::N, Trans::N, 192, 256, k_exec, 51)?;
+
+    let mut t = Table::new(
+        "Table 5 — BLIS \"false dgemm\" kernel results (M=192, N=256, K=4096)",
+        &["row", "paper GFLOPS", "projected GFLOPS", "residue paper", "residue ours"],
+    );
+    t.row(&["blis_dgemm_nn_ccc".into(), gf(2.073), gf(proj_gf), sci(9.33e-9), sci(row.residue)]);
+    Ok(TableResult {
+        rendered: t.render(),
+        checks: vec![Check { name: "t5.gflops".into(), paper: 2.073, ours: proj_gf }],
+    })
+}
+
+/// Table 6: false dgemm, all 16 variants at 4096³.
+pub fn table6(scale: ExperimentScale) -> Result<TableResult> {
+    #[rustfmt::skip]
+    let paper = [
+        ("nn", 1.785, 1.30e-8), ("nt", 1.829, 1.32e-8), ("nc", 1.785, 1.28e-8), ("nh", 1.828, 1.28e-8),
+        ("tn", 1.580, 1.27e-8), ("tt", 1.613, 1.28e-8), ("tc", 1.578, 1.29e-8), ("th", 1.611, 1.26e-8),
+        ("cn", 1.784, 1.30e-8), ("ct", 1.828, 1.28e-8), ("cc", 1.783, 1.29e-8), ("ch", 1.828, 1.29e-8),
+        ("hn", 1.579, 1.29e-8), ("ht", 1.615, 1.31e-8), ("hc", 1.575, 1.29e-8), ("hh", 1.614, 1.28e-8),
+    ];
+    variant_table(true, &paper, scale)
+}
+
+/// Table 7: HPL Linpack (N=4608, NB=768, 1×1 grid).
+pub fn table7(scale: ExperimentScale) -> Result<TableResult> {
+    let model = CalibratedModel::default();
+    let proj_s = hpl_projection_s(&model, 4608, 768);
+    let cfg_full = HplConfig::paper();
+    let proj_gf = cfg_full.flops() / proj_s / 1e9;
+
+    // Executed at scaled size (full = the paper's N, minutes of runtime).
+    let cfg = if scale == ExperimentScale::Full {
+        cfg_full
+    } else {
+        HplConfig::small(576, 96)
+    };
+    let blas = blas(ServiceBackend::Pjrt)?;
+    let res = run_hpl(&blas, cfg)?;
+
+    let mut t = Table::new(
+        "Table 7 — HPL Linpack (N=4608, NB=768, P=Q=1)",
+        &["row", "paper", "ours"],
+    );
+    t.row(&["Time (s, projected)".into(), secs(131.81), secs(proj_s)]);
+    t.row(&["GFLOPS/s (projected)".into(), gf(0.495), gf(proj_gf)]);
+    t.row(&[
+        format!("Residue (*) executed @N={}", cfg.n),
+        sci(2.34e-6),
+        sci(res.residual.raw),
+    ]);
+    t.row(&[
+        format!("HPL-scaled residual @N={}", cfg.n),
+        format!("{:.4e}", 2.1097632504e10),
+        format!("{:.4e}", res.residual.hpl_scaled),
+    ]);
+    let mut rendered = t.render();
+    rendered.push_str(&format!(
+        "executed wall {:.2}s; gemm share of projected time {:.0}% (paper's §4.3: host level-2 dominates)\n",
+        res.wall_s,
+        100.0 * res.lu.gemm_projected_s / res.projected_s
+    ));
+    Ok(TableResult {
+        rendered,
+        checks: vec![
+            Check { name: "t7.time_s".into(), paper: 131.81, ours: proj_s },
+            Check { name: "t7.gflops".into(), paper: 0.495, ours: proj_gf },
+            Check { name: "t7.residue_log10".into(), paper: (2.34e-6f64).log10(), ours: res.residual.raw.max(1e-12).log10() },
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_band(checks: &[Check], name: &str, lo: f64, hi: f64) {
+        let c = checks.iter().find(|c| c.name == name).unwrap_or_else(|| panic!("{name} missing"));
+        let r = c.ratio();
+        assert!((lo..hi).contains(&r), "{name}: paper {} ours {} ratio {r}", c.paper, c.ours);
+    }
+
+    #[test]
+    fn table1_shape() {
+        let t = table1(ExperimentScale::Quick).unwrap();
+        assert_band(&t.checks, "t1.total_s", 0.95, 1.05);
+        assert_band(&t.checks, "t1.input_s", 0.97, 1.03);
+        assert_band(&t.checks, "t1.coproc_s", 0.97, 1.03);
+        assert_band(&t.checks, "t1.gflops", 0.95, 1.05);
+        assert_band(&t.checks, "t1.hostref_s", 0.99, 1.01);
+        // error magnitude within an order of magnitude (log10 ratio band)
+        assert_band(&t.checks, "t1.mean_err_log10", 0.8, 1.2);
+    }
+
+    #[test]
+    fn table2_shape() {
+        let t = table2(ExperimentScale::Quick).unwrap();
+        assert_band(&t.checks, "t2.total_s", 0.95, 1.05);
+        assert_band(&t.checks, "t2.gflops", 0.95, 1.05);
+    }
+
+    #[test]
+    fn table3_shape() {
+        // Known anomaly: paper's Table 3 exceeds its Table 2; we accept a
+        // wider band here (see the rendered note).
+        let t = table3(ExperimentScale::Quick).unwrap();
+        assert_band(&t.checks, "t3.gflops", 0.80, 1.10);
+    }
+
+    #[test]
+    fn table4_shape() {
+        let t = table4(ExperimentScale::Quick).unwrap();
+        // Every variant within 15% of the paper.
+        for c in &t.checks {
+            let r = c.ratio();
+            assert!((0.85..1.15).contains(&r), "{}: ratio {r}", c.name);
+        }
+        // Ordering: nt > nn > tt > tn (who wins, as in the paper).
+        let get = |code: &str| t.checks.iter().find(|c| c.name.ends_with(code)).unwrap().ours;
+        assert!(get(".nt") > get(".nn"));
+        assert!(get(".nn") > get(".tt"));
+        assert!(get(".tt") > get(".tn"));
+    }
+
+    #[test]
+    fn table5_shape() {
+        let t = table5(ExperimentScale::Quick).unwrap();
+        assert_band(&t.checks, "t5.gflops", 0.80, 1.10);
+    }
+
+    #[test]
+    fn table6_shape() {
+        let t = table6(ExperimentScale::Quick).unwrap();
+        for c in &t.checks {
+            let r = c.ratio();
+            assert!((0.85..1.15).contains(&r), "{}: ratio {r}", c.name);
+        }
+    }
+
+    #[test]
+    fn table7_shape() {
+        let t = table7(ExperimentScale::Quick).unwrap();
+        assert_band(&t.checks, "t7.time_s", 0.90, 1.10);
+        assert_band(&t.checks, "t7.gflops", 0.90, 1.10);
+        // The executed residue scales with N (quick runs use a smaller
+        // system than the paper's 4608), so instead of a ratio we assert
+        // the f32-contamination class: far above f64-exact (~1e-15), far
+        // below garbage.
+        let c = t.checks.iter().find(|c| c.name == "t7.residue_log10").unwrap();
+        let res = 10f64.powf(c.ours);
+        assert!(res > 1e-13 && res < 1e-4, "residue {res} not f32-class");
+    }
+}

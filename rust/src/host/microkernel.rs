@@ -1,0 +1,395 @@
+//! The "sgemm inner micro-kernel" (paper §3.3): the host-side SUMMA loop
+//! that streams KSUB panel pairs to the coprocessor with the
+//! command/selector protocol and applies the α/β epilogue.
+//!
+//! Three interchangeable backends compute the heavy part:
+//!
+//! * [`UkrBackend::Simulator`] — the functional Epiphany simulator behind
+//!   the eSDK driver (bit-level faithful to the on-chip dataflow);
+//! * [`UkrBackend::Pjrt`] — the AOT-compiled L2/L1 jax+pallas artifact via
+//!   the PJRT runtime (the production path: fast numerics, model timing);
+//! * [`UkrBackend::HostRef`] — the naive triple loop, i.e. the paper's
+//!   "Host reference code" baseline.
+//!
+//! All backends produce the same mathematical result; tests pin them
+//! against each other.
+
+use super::projection::{project_ukr_call, Projection, ProjectionParams};
+use crate::epiphany::kernel::{Command, KernelGeometry};
+use crate::epiphany::timing::CalibratedModel;
+use crate::esdk::EHal;
+use crate::runtime::GemmExecutor;
+use anyhow::{ensure, Result};
+use std::time::Instant;
+
+/// Who does the heavy part of the calculations.
+pub enum UkrBackend {
+    Simulator(EHal),
+    Pjrt(GemmExecutor),
+    HostRef,
+}
+
+impl UkrBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            UkrBackend::Simulator(_) => "simulator",
+            UkrBackend::Pjrt(_) => "pjrt",
+            UkrBackend::HostRef => "host-ref",
+        }
+    }
+}
+
+/// Result of one µ-kernel call.
+#[derive(Clone, Debug)]
+pub struct UkrOutput {
+    /// m × n column-major result.
+    pub c: Vec<f32>,
+    /// Wall-clock seconds on this machine.
+    pub wall_s: f64,
+    /// Projected-Parallella breakdown from the calibrated model.
+    pub projection: Projection,
+}
+
+/// The micro-kernel: fixed (m, n) tile, arbitrary K.
+pub struct InnerMicroKernel {
+    pub backend: UkrBackend,
+    pub model: CalibratedModel,
+    pub geom: KernelGeometry,
+}
+
+impl InnerMicroKernel {
+    pub fn new(backend: UkrBackend, model: CalibratedModel, geom: KernelGeometry) -> Result<Self> {
+        let mut ukr = InnerMicroKernel { backend, model, geom };
+        if let UkrBackend::Simulator(hal) = &mut ukr.backend {
+            if !hal.is_open() {
+                hal.e_init(geom)?;
+            }
+        }
+        Ok(ukr)
+    }
+
+    /// `c_out = alpha · a1·b1 + beta · c_in` over the fixed tile.
+    ///
+    /// * `a_panel`: column-major m × k
+    /// * `b_panel`: row-major k × n
+    /// * `c_in`: column-major m × n
+    /// * `params`: projection context (walk classes, ipc/dgemm/blis flags);
+    ///   its dims are overwritten from the call.
+    pub fn sgemm(
+        &mut self,
+        alpha: f32,
+        a_panel: &[f32],
+        b_panel: &[f32],
+        beta: f32,
+        c_in: &[f32],
+        mut params: ProjectionParams,
+    ) -> Result<UkrOutput> {
+        let (m, n) = (self.geom.m, self.geom.n);
+        let k = if m > 0 { a_panel.len() / m } else { 0 };
+        ensure!(a_panel.len() == m * k, "a panel not m×k");
+        ensure!(b_panel.len() == k * n, "b panel len {} != k·n {}", b_panel.len(), k * n);
+        ensure!(c_in.len() == m * n, "c panel not m×n");
+        params.m = m;
+        params.n = n;
+        params.k = k;
+        params.ksub = self.geom.ksub;
+        params.nsub = self.geom.nsub;
+
+        // Reference-BLAS semantics: beta == 0 means C is *not read* (an
+        // uninitialized or NaN C must not poison the result). Substitute
+        // zeros before any backend sees it.
+        let zeros;
+        let c_in = if beta == 0.0 {
+            zeros = vec![0.0f32; m * n];
+            &zeros[..]
+        } else {
+            c_in
+        };
+
+        let t0 = Instant::now();
+        let c = match &mut self.backend {
+            UkrBackend::HostRef => host_ref_sgemm(m, n, k, alpha, a_panel, b_panel, beta, c_in),
+            UkrBackend::Pjrt(ex) => {
+                ex.sgemm_arbitrary_k(k, alpha, a_panel, b_panel, beta, c_in)?
+            }
+            UkrBackend::Simulator(hal) => {
+                simulator_sgemm(hal, self.geom, alpha, a_panel, b_panel, beta, c_in, k)?
+            }
+        };
+        let wall_s = t0.elapsed().as_secs_f64();
+        let projection = match self.backend {
+            // The host reference has no coprocessor pipeline: project at
+            // the calibrated naive-loop rate.
+            UkrBackend::HostRef => {
+                let total = super::projection::project_host_ref(&self.model, m, n, k);
+                Projection { total_s: total, ..Default::default() }
+            }
+            _ => project_ukr_call(&self.model, &params),
+        };
+        Ok(UkrOutput { c, wall_s, projection })
+    }
+
+    /// The paper's "false dgemm": f64 API around the f32 kernel —
+    /// downcast inputs, run sgemm, upcast the output (§4.2).
+    pub fn false_dgemm(
+        &mut self,
+        alpha: f64,
+        a_panel: &[f64],
+        b_panel: &[f64],
+        beta: f64,
+        c_in: &[f64],
+        mut params: ProjectionParams,
+    ) -> Result<(Vec<f64>, f64, Projection)> {
+        params.dgemm = true;
+        let a32: Vec<f32> = a_panel.iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = b_panel.iter().map(|&v| v as f32).collect();
+        let c32: Vec<f32> = c_in.iter().map(|&v| v as f32).collect();
+        let out = self.sgemm(alpha as f32, &a32, &b32, beta as f32, &c32, params)?;
+        Ok((out.c.iter().map(|&v| v as f64).collect(), out.wall_s, out.projection))
+    }
+
+    /// Simulator statistics (empty for other backends) — used by tests to
+    /// cross-check the analytic projection against executed structure.
+    pub fn sim_stats(&self) -> Option<&crate::epiphany::SimStats> {
+        match &self.backend {
+            UkrBackend::Simulator(hal) => hal.chip().ok().map(|c| &c.stats),
+            _ => None,
+        }
+    }
+}
+
+/// The naive triple loop — the paper's "Host reference code".
+pub fn host_ref_sgemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32], // col-major m×k
+    b: &[f32], // row-major k×n
+    beta: f32,
+    c_in: &[f32], // col-major m×n
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a[l * m + i] * b[l * n + j];
+            }
+            c[j * m + i] = alpha * acc + beta * c_in[j * m + i];
+        }
+    }
+    c
+}
+
+/// Drive the functional simulator through the SUMMA loop with the command
+/// protocol (§3.3): clear on the first task, accumulate in between, send
+/// back on the last; α/β applied by the host afterwards.
+#[allow(clippy::too_many_arguments)]
+fn simulator_sgemm(
+    hal: &mut EHal,
+    geom: KernelGeometry,
+    alpha: f32,
+    a_panel: &[f32],
+    b_panel: &[f32],
+    beta: f32,
+    c_in: &[f32],
+    k: usize,
+) -> Result<Vec<f32>> {
+    let (m, n, ksub) = (geom.m, geom.n, geom.ksub);
+    let tasks = k.div_ceil(ksub).max(1);
+    for t in 0..tasks {
+        let selector = t & 1;
+        // Slice / zero-pad this KSUB panel pair.
+        let k0 = t * ksub;
+        let k_real = ksub.min(k - k0.min(k));
+        let mut a_t = vec![0.0f32; m * ksub];
+        a_t[..m * k_real].copy_from_slice(&a_panel[m * k0..m * (k0 + k_real)]);
+        let mut b_t = vec![0.0f32; ksub * n];
+        b_t[..k_real * n].copy_from_slice(&b_panel[n * k0..n * (k0 + k_real)]);
+        hal.e_write_a(selector, &a_t)?;
+        hal.e_write_b(selector, &b_t)?;
+        let command = match (t == 0, t == tasks - 1) {
+            (true, true) => Command::ClearSend,
+            (true, false) => Command::ClearAccumulate,
+            (false, true) => Command::AccumulateSend,
+            (false, false) => Command::Accumulate,
+        };
+        hal.e_signal_task(command, selector)?;
+    }
+    // Retrieve the raw accumulated product and run the host epilogue
+    // ("the micro-kernel multiplies the resulting matrix by alpha and adds
+    // beta·c_in").
+    let mut raw = vec![0.0f32; m * n];
+    hal.e_read_out(&mut raw)?;
+    for idx in 0..m * n {
+        raw[idx] = alpha * raw[idx] + beta * c_in[idx];
+    }
+    Ok(raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epiphany::timing::WalkClass;
+    use crate::linalg::{max_scaled_err, Mat};
+
+    fn row_major(b: &Mat<f32>) -> Vec<f32> {
+        let (k, n) = (b.rows(), b.cols());
+        let mut out = vec![0.0f32; k * n];
+        for l in 0..k {
+            for j in 0..n {
+                out[l * n + j] = b.get(l, j);
+            }
+        }
+        out
+    }
+
+    fn params() -> ProjectionParams {
+        ProjectionParams::kernel_same_process(0)
+    }
+
+    fn check_backend(mut ukr: InnerMicroKernel, k: usize, tol: f64) {
+        let (m, n) = (ukr.geom.m, ukr.geom.n);
+        let a = Mat::<f32>::randn(m, k, 100);
+        let b = Mat::<f32>::randn(k, n, 101);
+        let c = Mat::<f32>::randn(m, n, 102);
+        let out = ukr.sgemm(1.25, a.as_slice(), &row_major(&b), -0.75, c.as_slice(), params()).unwrap();
+        let got = Mat::from_col_major(m, n, &out.c);
+        let want = Mat::from_fn(m, n, |i, j| {
+            let mut acc = 0.0f64;
+            for l in 0..k {
+                acc += a.get(i, l) as f64 * b.get(l, j) as f64;
+            }
+            (1.25 * acc - 0.75 * c.get(i, j) as f64) as f32
+        });
+        let e = max_scaled_err(got.view(), want.view());
+        assert!(e < tol, "{} backend err {e}", ukr.backend.name());
+        assert!(out.wall_s > 0.0);
+        assert!(out.projection.total_s > 0.0);
+    }
+
+    #[test]
+    fn host_ref_backend_correct() {
+        let ukr = InnerMicroKernel::new(
+            UkrBackend::HostRef,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        check_backend(ukr, 192, 1e-5);
+    }
+
+    #[test]
+    fn simulator_backend_correct() {
+        let hal = EHal::new(CalibratedModel::default());
+        let ukr = InnerMicroKernel::new(
+            UkrBackend::Simulator(hal),
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        check_backend(ukr, 192, 1e-5);
+    }
+
+    #[test]
+    fn pjrt_backend_correct() {
+        let ex = GemmExecutor::discover().expect("make artifacts first");
+        let ukr = InnerMicroKernel::new(
+            UkrBackend::Pjrt(ex),
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        check_backend(ukr, 192, 1e-5);
+    }
+
+    #[test]
+    fn backends_agree_on_ragged_k() {
+        // K = 150 is not a multiple of KSUB: both offload backends must
+        // zero-pad identically and agree with the host reference.
+        let k = 150;
+        let geom = KernelGeometry::paper();
+        let a = Mat::<f32>::randn(geom.m, k, 200);
+        let b = Mat::<f32>::randn(k, geom.n, 201);
+        let c = Mat::<f32>::randn(geom.m, geom.n, 202);
+        let b_rm = row_major(&b);
+
+        let run = |backend| {
+            let mut ukr =
+                InnerMicroKernel::new(backend, CalibratedModel::default(), geom).unwrap();
+            ukr.sgemm(1.0, a.as_slice(), &b_rm, 1.0, c.as_slice(), params()).unwrap().c
+        };
+        let href = run(UkrBackend::HostRef);
+        let sim = run(UkrBackend::Simulator(EHal::new(CalibratedModel::default())));
+        let pjrt = run(UkrBackend::Pjrt(GemmExecutor::discover().unwrap()));
+        let href = Mat::from_col_major(geom.m, geom.n, &href);
+        for (name, got) in [("sim", sim), ("pjrt", pjrt)] {
+            let got = Mat::from_col_major(geom.m, geom.n, &got);
+            let e = max_scaled_err(got.view(), href.view());
+            assert!(e < 1e-5, "{name} vs host-ref err {e}");
+        }
+    }
+
+    #[test]
+    fn false_dgemm_downcasts() {
+        let geom = KernelGeometry::paper();
+        let k = 128;
+        let mut ukr = InnerMicroKernel::new(
+            UkrBackend::Simulator(EHal::new(CalibratedModel::default())),
+            CalibratedModel::default(),
+            geom,
+        )
+        .unwrap();
+        let a = Mat::<f64>::randn(geom.m, k, 300);
+        let b = Mat::<f64>::randn(k, geom.n, 301);
+        let c = Mat::<f64>::randn(geom.m, geom.n, 302);
+        let mut b_rm = vec![0.0f64; k * geom.n];
+        for l in 0..k {
+            for j in 0..geom.n {
+                b_rm[l * geom.n + j] = b.get(l, j);
+            }
+        }
+        let (got, _, proj) = ukr
+            .false_dgemm(1.0, a.as_slice(), &b_rm, 1.0, c.as_slice(), params())
+            .unwrap();
+        let got = Mat::from_col_major(geom.m, geom.n, &got);
+        let want = Mat::from_fn(geom.m, geom.n, |i, j| {
+            let mut acc = 0.0f64;
+            for l in 0..k {
+                acc += a.get(i, l) * b.get(l, j);
+            }
+            acc + c.get(i, j)
+        });
+        let e = max_scaled_err(got.view(), want.view());
+        // f32-sized error through an f64 API.
+        assert!(e > 1e-10 && e < 1e-4, "err {e}");
+        assert!(proj.cast_s > 0.0, "cast pass must be charged");
+    }
+
+    #[test]
+    fn simulator_projection_consistent_with_executed_structure() {
+        // The analytic projection's coprocessor share must agree with the
+        // coproc time derived from the simulator's executed cycles/bytes.
+        let geom = KernelGeometry::paper();
+        let k = 4 * geom.ksub;
+        let a = Mat::<f32>::randn(geom.m, k, 400);
+        let b = Mat::<f32>::randn(k, geom.n, 401);
+        let c = Mat::<f32>::zeros(geom.m, geom.n);
+        let b_rm = row_major(&b);
+        let mut ukr = InnerMicroKernel::new(
+            UkrBackend::Simulator(EHal::new(CalibratedModel::default())),
+            CalibratedModel::default(),
+            geom,
+        )
+        .unwrap();
+        let mut p = params();
+        p.class_a = WalkClass::Contig;
+        let out = ukr.sgemm(1.0, a.as_slice(), &b_rm, 0.0, c.as_slice(), p).unwrap();
+        let stats = ukr.sim_stats().unwrap();
+        let sim_coproc = stats.coproc_s(&ukr.model);
+        let ana_coproc = out.projection.coproc_s;
+        let ratio = sim_coproc / ana_coproc;
+        assert!((0.97..1.03).contains(&ratio), "sim {sim_coproc} vs analytic {ana_coproc}");
+    }
+}

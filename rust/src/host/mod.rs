@@ -1,0 +1,19 @@
+//! The Parallella host side (paper §3.2–3.3): the sgemm inner micro-kernel
+//! (SUMMA loop + command protocol), the separate "service process" that
+//! owns the Epiphany connection, and the HH-RAM / semaphore IPC between
+//! them.
+//!
+//! Substitutions vs the paper (DESIGN.md §2): the service is a resident
+//! *thread* rather than a Linux daemon — same serialization points, same
+//! data motion, no PJRT-across-processes complications — and its IPC cost
+//! is charged by the calibrated model (Table 2 − Table 1).
+
+pub mod microkernel;
+pub mod projection;
+pub mod service;
+pub mod shm;
+
+pub use microkernel::{InnerMicroKernel, UkrBackend, UkrOutput};
+pub use projection::{Projection, ProjectionParams};
+pub use service::{ServiceHandle, ServiceRequest, ServiceResponse};
+pub use shm::{HhRam, Semaphore};

@@ -1,0 +1,239 @@
+//! Right-looking blocked LU with partial pivoting (HPL's factorization),
+//! on top of the generated BLAS:
+//!
+//! * panel factorization (`dgetf2`-style): level-1/2 host ops
+//!   (`iamax`, `dscal`/`dger` structure) — the unaccelerated part;
+//! * row swaps (`dlaswp`);
+//! * `dtrsm` on the panel's right block — host level-3;
+//! * the trailing update `A22 -= L21·U12` — **the false dgemm**, i.e. the
+//!   Epiphany-accelerated path, where almost all the flops live.
+
+use crate::blis::level1;
+use crate::blis::level3;
+use crate::blis::{Blas, Trans};
+use crate::linalg::Mat;
+use anyhow::{ensure, Result};
+
+/// Accounting for one factorization.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LuReport {
+    /// Projected seconds in the accelerated gemm updates.
+    pub gemm_projected_s: f64,
+    /// Projected seconds in host panel/trsm work (calibrated rates).
+    pub host_projected_s: f64,
+    /// Wall-clock seconds total.
+    pub wall_s: f64,
+    /// gemm flops (accelerated) and host flops.
+    pub gemm_flops: f64,
+    pub host_flops: f64,
+}
+
+impl LuReport {
+    pub fn total_projected_s(&self) -> f64 {
+        self.gemm_projected_s + self.host_projected_s
+    }
+}
+
+/// Unblocked panel factorization with partial pivoting on columns
+/// `j0..j0+nb` of `a`, rows `j0..m`. Returns pivot rows (global indices).
+fn panel_factor(a: &mut Mat<f64>, j0: usize, nb: usize) -> Result<Vec<usize>> {
+    let m = a.rows();
+    let mut pivots = Vec::with_capacity(nb);
+    for j in j0..j0 + nb {
+        // Find the pivot with iamax over the column tail.
+        let tail: Vec<f64> = (j..m).map(|i| a.get(i, j)).collect();
+        let p = j + level1::iamax(tail.len(), &tail, 1).expect("non-empty column");
+        ensure!(a.get(p, j) != 0.0, "singular matrix at column {j}");
+        pivots.push(p);
+        // Swap rows j and p across the whole matrix (HPL swaps lazily per
+        // panel + applies to the trailing part; full swap is equivalent).
+        if p != j {
+            for col in 0..a.cols() {
+                let t = a.get(j, col);
+                a.set(j, col, a.get(p, col));
+                a.set(p, col, t);
+            }
+        }
+        // Scale multipliers and rank-1 update the rest of the panel.
+        let piv = a.get(j, j);
+        for i in j + 1..m {
+            let l = a.get(i, j) / piv;
+            a.set(i, j, l);
+        }
+        for col in j + 1..j0 + nb {
+            let ujc = a.get(j, col);
+            if ujc == 0.0 {
+                continue;
+            }
+            for i in j + 1..m {
+                let v = a.get(i, col) - a.get(i, j) * ujc;
+                a.set(i, col, v);
+            }
+        }
+    }
+    Ok(pivots)
+}
+
+/// Blocked right-looking LU: factor `a` in place (L unit-lower, U upper),
+/// returning pivots and the accounting report. `nb` is HPL's NB.
+pub fn lu_factor_blocked(blas: &Blas, a: &mut Mat<f64>, nb: usize) -> Result<(Vec<usize>, LuReport)> {
+    let n = a.rows();
+    ensure!(a.cols() == n, "square matrices only (HPL solves N×N)");
+    let mut report = LuReport::default();
+    let t0 = std::time::Instant::now();
+    let model = crate::epiphany::timing::CalibratedModel::default();
+    let mut pivots = Vec::with_capacity(n);
+
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jb = nb.min(n - j0);
+        // --- panel (host level-1/2; projected at the calibrated rate) ----
+        let mut p = panel_factor(a, j0, jb)?;
+        pivots.append(&mut p);
+        let panel_flops = {
+            let rows = (n - j0) as f64;
+            // ~ Σ over jb columns of 2·rows·jb ≈ rows·jb²
+            rows * (jb * jb) as f64
+        };
+        report.host_flops += panel_flops;
+        report.host_projected_s += panel_flops / (model.host_level2_f64_gflops * 1e9);
+
+        let rest0 = j0 + jb;
+        if rest0 < n {
+            // --- U12 = L11⁻¹ · A12 (unit-lower trsm, host) ---------------
+            let l11 = a.view().sub(j0, j0, jb, jb).to_mat();
+            let mut a12 = a.view().sub(j0, rest0, jb, n - rest0).to_mat();
+            level3::trsm_left(true, Trans::N, true, 1.0, l11.view(), &mut a12);
+            for j in 0..n - rest0 {
+                for i in 0..jb {
+                    a.set(j0 + i, rest0 + j, a12.get(i, j));
+                }
+            }
+            let trsm_flops = (jb * jb) as f64 * (n - rest0) as f64;
+            report.host_flops += trsm_flops;
+            report.host_projected_s += trsm_flops / (model.host_trsm_f64_gflops * 1e9);
+
+            // --- A22 -= L21 · U12 (the Epiphany false dgemm) --------------
+            let l21 = a.view().sub(rest0, j0, n - rest0, jb).to_mat();
+            let mut a22 = a.view().sub(rest0, rest0, n - rest0, n - rest0).to_mat();
+            let rep = blas.dgemm_false(
+                Trans::N,
+                Trans::N,
+                -1.0,
+                l21.view(),
+                a12.view(),
+                1.0,
+                &mut a22,
+            )?;
+            for j in 0..n - rest0 {
+                for i in 0..n - rest0 {
+                    a.set(rest0 + i, rest0 + j, a22.get(i, j));
+                }
+            }
+            report.gemm_projected_s += rep.projected_s;
+            report.gemm_flops += rep.flops;
+        }
+        j0 += jb;
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok((pivots, report))
+}
+
+/// Solve A·x = b given the factored matrix + pivots (forward/backward
+/// substitution — host level-2).
+pub fn lu_solve(a: &Mat<f64>, pivots: &[usize], b: &[f64]) -> Vec<f64> {
+    let _n = a.rows();
+    let mut x = b.to_vec();
+    // Apply pivots in order.
+    for (j, &p) in pivots.iter().enumerate() {
+        if p != j {
+            x.swap(j, p);
+        }
+    }
+    // L y = Pb (unit lower).
+    crate::blis::level2::trsv(true, Trans::N, true, a.view(), &mut x);
+    // U x = y.
+    crate::blis::level2::trsv(false, Trans::N, false, a.view(), &mut x);
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epiphany::kernel::KernelGeometry;
+    use crate::epiphany::timing::CalibratedModel;
+    use crate::host::service::{ServiceBackend, ServiceHandle};
+    use crate::linalg::XorShiftRng;
+
+    fn blas() -> Blas {
+        let svc = ServiceHandle::spawn(
+            ServiceBackend::Pjrt,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        Blas::new(svc)
+    }
+
+    /// HPL-style random diagonally-balanced system.
+    fn system(n: usize, seed: u64) -> (Mat<f64>, Vec<f64>) {
+        let mut rng = XorShiftRng::new(seed);
+        let a = Mat::<f64>::from_fn(n, n, |_, _| rng.next_unit());
+        let b: Vec<f64> = (0..n).map(|_| rng.next_unit()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn factor_and_solve_small() {
+        let blas = blas();
+        let n = 96;
+        let (a0, b) = system(n, 1);
+        let mut a = a0.clone();
+        let (piv, _rep) = lu_factor_blocked(&blas, &mut a, 32).unwrap();
+        let x = lu_solve(&a, &piv, &b);
+        // Residual ‖Ax − b‖∞ scaled: single-precision-made error expected
+        // (the gemm update ran through the false dgemm).
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += a0.get(i, j) * x[j];
+            }
+            worst = worst.max((acc - b[i]).abs());
+        }
+        assert!(worst < 1e-2, "residual {worst}");
+        assert!(worst > 1e-12, "suspiciously exact for f32 compute: {worst}");
+    }
+
+    #[test]
+    fn report_attributes_flops() {
+        let blas = blas();
+        let n = 256;
+        let (mut a, _b) = system(n, 2);
+        let (_piv, rep) = lu_factor_blocked(&blas, &mut a, 64).unwrap();
+        assert!(rep.gemm_flops > 0.0);
+        assert!(rep.host_flops > 0.0);
+        // gemm dominates flops at this shape but host dominates projected
+        // time at small n — the §4.3 effect in miniature.
+        assert!(rep.gemm_flops > rep.host_flops);
+        assert!(rep.gemm_projected_s > 0.0 && rep.host_projected_s > 0.0);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_element() {
+        let blas = blas();
+        let mut a = Mat::<f64>::from_col_major(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        let (piv, _) = lu_factor_blocked(&blas, &mut a, 2).unwrap();
+        assert_eq!(piv[0], 1, "must pivot away from the zero");
+        let x = lu_solve(&a, &piv, &[2.0, 3.0]);
+        // A = [[0,1],[1,0]] ⇒ x = [3, 2].
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_matrix_rejected() {
+        let blas = blas();
+        let mut a = Mat::<f64>::zeros(4, 4);
+        assert!(lu_factor_blocked(&blas, &mut a, 2).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! High Performance Linpack (paper §4.3, Table 7): solve A·x = b with
+//! blocked LU + partial pivoting, built entirely on the generated BLAS —
+//! dgemm through the "false dgemm" Epiphany path, panel factorization and
+//! triangular solves through the unaccelerated host level-1/2 ops (whose
+//! low rate is the paper's explanation for the 0.495 GFLOPS result).
+
+pub mod cholesky;
+pub mod driver;
+pub mod lu;
+pub mod residual;
+
+pub use driver::{HplConfig, HplResult};
+pub use cholesky::{potrf_lower, potrs_lower};
+pub use lu::{lu_factor_blocked, lu_solve};

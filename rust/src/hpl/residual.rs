@@ -1,0 +1,85 @@
+//! The HPL residual (paper Table 7):
+//!
+//!   r_hpl = ‖Ax − b‖∞ / (ε · (‖A‖∞·‖x‖∞ + ‖b‖∞) · N)
+//!
+//! and the paper's "Residue (*)" row, which multiplies r_hpl back by
+//! ε = 2⁻⁵³ (i.e. drops the ε normalization).
+
+use crate::linalg::{inf_norm, Mat};
+
+/// ε used by HPL's double-precision check (2⁻⁵³, as the paper's footnote).
+pub const HPL_EPS: f64 = 1.1102230246251565e-16;
+
+#[derive(Clone, Copy, Debug)]
+pub struct HplResidual {
+    /// The HPL-normalized value (Table 7 row: ~2.1e10 for the paper's run,
+    /// because the compute was only f32-precise).
+    pub hpl_scaled: f64,
+    /// × ε — the paper's "(*) Residue" row (~2.34e-6).
+    pub raw: f64,
+}
+
+/// Compute both residual flavours for a candidate solution.
+pub fn hpl_residual(a: &Mat<f64>, x: &[f64], b: &[f64]) -> HplResidual {
+    let n = a.rows();
+    // ‖Ax − b‖∞
+    let mut rinf = 0.0f64;
+    for i in 0..n {
+        let mut acc = 0.0f64;
+        for j in 0..n {
+            acc += a.get(i, j) * x[j];
+        }
+        rinf = rinf.max((acc - b[i]).abs());
+    }
+    let a_inf = inf_norm(a.view());
+    let x_inf = x.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let b_inf = b.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let denom = (a_inf * x_inf + b_inf) * n as f64;
+    let raw = rinf / denom;
+    HplResidual { hpl_scaled: raw / HPL_EPS, raw }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_solution_zero_residual() {
+        // A = I, x = b.
+        let n = 8;
+        let a = Mat::<f64>::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 });
+        let b: Vec<f64> = (0..n).map(|v| v as f64).collect();
+        let r = hpl_residual(&a, &b, &b);
+        assert_eq!(r.raw, 0.0);
+        assert_eq!(r.hpl_scaled, 0.0);
+    }
+
+    #[test]
+    fn f32_precision_solution_lands_in_paper_band() {
+        // Perturb the exact solution at f32 scale: residue must land in
+        // the paper's magnitude (~1e-7..1e-5 raw), i.e. hpl_scaled ~1e9+.
+        let n = 64;
+        let a = Mat::<f64>::from_fn(n, n, |i, j| if i == j { 2.0 } else { 0.5 / (1 + i + j) as f64 });
+        let x_true: Vec<f64> = (0..n).map(|v| ((v * 37) % 11) as f64 / 11.0 - 0.5).collect();
+        let mut b = vec![0.0f64; n];
+        for i in 0..n {
+            for j in 0..n {
+                b[i] += a.get(i, j) * x_true[j];
+            }
+        }
+        let x32: Vec<f64> = x_true.iter().map(|&v| v as f32 as f64).collect();
+        let r = hpl_residual(&a, &x32, &b);
+        assert!(r.raw > 1e-12 && r.raw < 1e-4, "raw {}", r.raw);
+        assert!(r.hpl_scaled > 1e4, "scaled {}", r.hpl_scaled);
+    }
+
+    #[test]
+    fn scaling_relation_holds() {
+        let n = 4;
+        let a = Mat::<f64>::full(n, n, 1.0);
+        let b = vec![1.0; n];
+        let x = vec![0.3; n];
+        let r = hpl_residual(&a, &x, &b);
+        assert!((r.hpl_scaled * HPL_EPS / r.raw - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,54 @@
+//! # parallella-blas
+//!
+//! A reproduction of *"Generation of the Single Precision BLAS library for
+//! the Parallella platform, with Epiphany co-processor acceleration, using
+//! the BLIS framework"* (Miguel Tasende, IEEE DataCom 2016) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: a BLIS-like BLAS instantiation
+//!   framework ([`blis`]), the host-side service-process architecture and
+//!   sgemm inner micro-kernel ([`host`]), a functional + timing simulator of
+//!   the Epiphany-16 coprocessor ([`epiphany`]), an eSDK-like driver API
+//!   ([`esdk`]), an HPL Linpack substrate ([`hpl`]), and a threaded BLAS
+//!   network service ([`coordinator`]).
+//! * **L2 (python/compile/model.py)** — the sgemm inner micro-kernel compute
+//!   graph in JAX, AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/epiphany_gemm.py)** — the SUMMA-tiled
+//!   Pallas kernel the L2 graph calls, mirroring the paper's Epiphany
+//!   Task / Column Iteration / K Iteration structure.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API (the
+//! `xla` crate) so that Python is never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use parallella_blas::prelude::*;
+//!
+//! let plat = Platform::builder().backend(BackendKind::Simulator).build().unwrap();
+//! let blas = plat.blas();
+//! let a = Mat::<f32>::randn(192, 4096, 1);
+//! let b = Mat::<f32>::randn(4096, 256, 2);
+//! let mut c = Mat::<f32>::zeros(192, 256);
+//! blas.sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+//! ```
+
+pub mod blis;
+pub mod coordinator;
+pub mod epiphany;
+pub mod esdk;
+pub mod experiments;
+pub mod host;
+pub mod hpl;
+pub mod linalg;
+pub mod platform;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::blis::{Blas, Trans};
+    pub use crate::epiphany::timing::CalibratedModel;
+    pub use crate::linalg::{Mat, MatMut, MatRef};
+    pub use crate::platform::{BackendKind, Platform, PlatformBuilder};
+}

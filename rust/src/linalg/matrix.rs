@@ -1,0 +1,383 @@
+//! Owned matrices and strided views.
+//!
+//! Storage is column-major (FORTRAN order), matching both the BLAS
+//! convention and the paper's micro-kernel contract (§3.3: "a1 is
+//! column-major stored, b1 is row-major stored and c_in, c_out are
+//! column-major stored" — a row-major `b1` is just a column-major view with
+//! swapped strides).
+
+use super::rng::XorShiftRng;
+use super::scalar::Real;
+
+/// Owned, column-major dense matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat<T: Real> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Real> Mat<T> {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![T::ZERO; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, v: T) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Deterministic pseudo-normal entries in roughly `[-1, 1]` — the same
+    /// distribution class the BLIS testsuite uses for its residue checks.
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let data = (0..rows * cols).map(|_| T::from_f64(rng.next_unit())).collect();
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a column-major slice.
+    pub fn from_col_major(rows: usize, cols: usize, data: &[T]) -> Self {
+        assert_eq!(data.len(), rows * cols, "column-major data length mismatch");
+        Mat { rows, cols, data: data.to_vec() }
+    }
+
+    /// Build from a function of `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows] = v;
+    }
+
+    /// The raw column-major buffer.
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Immutable full-matrix view (`rs = 1, cs = rows`).
+    pub fn view(&self) -> MatRef<'_, T> {
+        MatRef { rows: self.rows, cols: self.cols, rs: 1, cs: self.rows as isize, data: &self.data, offset: 0 }
+    }
+
+    /// Mutable full-matrix view.
+    pub fn view_mut(&mut self) -> MatMut<'_, T> {
+        let rows = self.rows;
+        MatMut { rows, cols: self.cols, rs: 1, cs: rows as isize, data: &mut self.data, offset: 0 }
+    }
+
+    /// Transposed *view* (stride swap, no copy).
+    pub fn t(&self) -> MatRef<'_, T> {
+        self.view().t()
+    }
+
+    /// Materialize the transpose.
+    pub fn transposed(&self) -> Mat<T> {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// Cast every element (used by the "false dgemm": f64 API, f32 compute).
+    pub fn cast<U: Real>(&self) -> Mat<U> {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&v| U::from_f64(v.to_f64())).collect() }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: T) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+}
+
+impl<T: Real> std::fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(6);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>12.5e} ", self.get(i, j).to_f64())?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Immutable strided view: element `(i, j)` lives at
+/// `data[offset + i*rs + j*cs]`. BLIS semantics — `rs`/`cs` may be negative
+/// in principle, but this crate only produces non-negative strides; `cs` is
+/// kept `isize` for parity with the BLIS object API.
+#[derive(Clone, Copy)]
+pub struct MatRef<'a, T: Real> {
+    rows: usize,
+    cols: usize,
+    rs: isize,
+    cs: isize,
+    data: &'a [T],
+    offset: usize,
+}
+
+impl<'a, T: Real> MatRef<'a, T> {
+    /// View over a raw column-major buffer with an explicit leading
+    /// dimension (classic BLAS `lda`).
+    pub fn from_col_major(rows: usize, cols: usize, lda: usize, data: &'a [T]) -> Self {
+        assert!(lda >= rows, "lda {lda} < rows {rows}");
+        assert!(data.len() >= lda * cols.max(1), "buffer too small");
+        MatRef { rows, cols, rs: 1, cs: lda as isize, data, offset: 0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn row_stride(&self) -> isize {
+        self.rs
+    }
+    pub fn col_stride(&self) -> isize {
+        self.cs
+    }
+
+    /// True when columns are contiguous in memory (`rs == 1`): packing can
+    /// use `copy_from_slice` per column. This is what makes the `n` variants
+    /// faster than the `t` variants in Table 4.
+    pub fn is_col_contiguous(&self) -> bool {
+        self.rs == 1
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        let idx = self.offset as isize + i as isize * self.rs + j as isize * self.cs;
+        self.data[idx as usize]
+    }
+
+    /// Transposed view: swap dims and strides.
+    pub fn t(self) -> MatRef<'a, T> {
+        MatRef { rows: self.cols, cols: self.rows, rs: self.cs, cs: self.rs, data: self.data, offset: self.offset }
+    }
+
+    /// Sub-view of `nr x nc` starting at `(i, j)`.
+    pub fn sub(self, i: usize, j: usize, nr: usize, nc: usize) -> MatRef<'a, T> {
+        assert!(i + nr <= self.rows && j + nc <= self.cols, "sub-view out of range");
+        let offset = (self.offset as isize + i as isize * self.rs + j as isize * self.cs) as usize;
+        MatRef { rows: nr, cols: nc, rs: self.rs, cs: self.cs, data: self.data, offset }
+    }
+
+    /// Copy into an owned matrix.
+    pub fn to_mat(&self) -> Mat<T> {
+        Mat::from_fn(self.rows, self.cols, |i, j| self.get(i, j))
+    }
+
+    /// Contiguous column slice when `rs == 1`.
+    pub fn col_slice(&self, j: usize, i0: usize, len: usize) -> &'a [T] {
+        assert!(self.rs == 1, "col_slice requires unit row stride");
+        assert!(i0 + len <= self.rows);
+        let start = (self.offset as isize + i0 as isize + j as isize * self.cs) as usize;
+        &self.data[start..start + len]
+    }
+}
+
+/// Mutable strided view (same layout rules as [`MatRef`]).
+pub struct MatMut<'a, T: Real> {
+    rows: usize,
+    cols: usize,
+    rs: isize,
+    cs: isize,
+    data: &'a mut [T],
+    offset: usize,
+}
+
+impl<'a, T: Real> MatMut<'a, T> {
+    pub fn from_col_major(rows: usize, cols: usize, lda: usize, data: &'a mut [T]) -> Self {
+        assert!(lda >= rows, "lda {lda} < rows {rows}");
+        assert!(data.len() >= lda * cols.max(1), "buffer too small");
+        MatMut { rows, cols, rs: 1, cs: lda as isize, data, offset: 0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn row_stride(&self) -> isize {
+        self.rs
+    }
+    pub fn col_stride(&self) -> isize {
+        self.cs
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        let idx = self.offset as isize + i as isize * self.rs + j as isize * self.cs;
+        self.data[idx as usize]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        let idx = self.offset as isize + i as isize * self.rs + j as isize * self.cs;
+        self.data[idx as usize] = v;
+    }
+
+    #[inline(always)]
+    pub fn update(&mut self, i: usize, j: usize, f: impl FnOnce(T) -> T) {
+        let v = self.get(i, j);
+        self.set(i, j, f(v));
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_ref(&self) -> MatRef<'_, T> {
+        MatRef { rows: self.rows, cols: self.cols, rs: self.rs, cs: self.cs, data: self.data, offset: self.offset }
+    }
+
+    /// Reborrow a mutable sub-view.
+    pub fn sub_mut(&mut self, i: usize, j: usize, nr: usize, nc: usize) -> MatMut<'_, T> {
+        assert!(i + nr <= self.rows && j + nc <= self.cols, "sub-view out of range");
+        let offset = (self.offset as isize + i as isize * self.rs + j as isize * self.cs) as usize;
+        MatMut { rows: nr, cols: nc, rs: self.rs, cs: self.cs, data: self.data, offset }
+    }
+
+    /// Transposed mutable view.
+    pub fn t_mut(self) -> MatMut<'a, T> {
+        MatMut { rows: self.cols, cols: self.rows, rs: self.cs, cs: self.rs, data: self.data, offset: self.offset }
+    }
+
+    /// Contiguous mutable column slice when `rs == 1`.
+    pub fn col_slice_mut(&mut self, j: usize, i0: usize, len: usize) -> &mut [T] {
+        assert!(self.rs == 1, "col_slice_mut requires unit row stride");
+        assert!(i0 + len <= self.rows);
+        let start = (self.offset as isize + i0 as isize + j as isize * self.cs) as usize;
+        &mut self.data[start..start + len]
+    }
+
+    /// Copy every element from `src` (dims must match).
+    pub fn copy_from(&mut self, src: MatRef<'_, T>) {
+        assert_eq!((self.rows, self.cols), (src.rows(), src.cols()));
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                self.set(i, j, src.get(i, j));
+            }
+        }
+    }
+
+    pub fn fill(&mut self, v: T) {
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                self.set(i, j, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn col_major_layout() {
+        let m = Mat::<f32>::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.as_slice(), &[0.0, 10.0, 20.0, 1.0, 11.0, 21.0]);
+    }
+
+    #[test]
+    fn transpose_is_stride_swap() {
+        let m = Mat::<f32>::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        let t = m.t();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(m.get(i, j), t.get(j, i));
+            }
+        }
+        assert!(!t.is_col_contiguous());
+    }
+
+    #[test]
+    fn sub_view_indexing() {
+        let m = Mat::<f64>::from_fn(5, 5, |i, j| (i * 100 + j) as f64);
+        let s = m.view().sub(1, 2, 3, 2);
+        assert_eq!(s.get(0, 0), 102.0);
+        assert_eq!(s.get(2, 1), 303.0);
+    }
+
+    #[test]
+    fn sub_mut_writes_through() {
+        let mut m = Mat::<f32>::zeros(4, 4);
+        {
+            let mut v = m.view_mut();
+            let mut s = v.sub_mut(2, 2, 2, 2);
+            s.set(0, 0, 7.0);
+            s.set(1, 1, 9.0);
+        }
+        assert_eq!(m.get(2, 2), 7.0);
+        assert_eq!(m.get(3, 3), 9.0);
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn lda_view() {
+        // 2x2 window in a 4-row buffer: classic lda > rows.
+        let data: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let v = MatRef::from_col_major(2, 2, 4, &data);
+        assert_eq!(v.get(0, 0), 0.0);
+        assert_eq!(v.get(1, 0), 1.0);
+        assert_eq!(v.get(0, 1), 4.0);
+        assert_eq!(v.get(1, 1), 5.0);
+    }
+
+    #[test]
+    fn cast_round_trip() {
+        let m = Mat::<f64>::randn(8, 8, 3);
+        let f = m.cast::<f32>();
+        let back = f.cast::<f64>();
+        for j in 0..8 {
+            for i in 0..8 {
+                assert!((m.get(i, j) - back.get(i, j)).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let a = Mat::<f32>::randn(16, 16, 42);
+        let b = Mat::<f32>::randn(16, 16, 42);
+        assert_eq!(a.as_slice(), b.as_slice());
+        let c = Mat::<f32>::randn(16, 16, 43);
+        assert_ne!(a.as_slice(), c.as_slice());
+    }
+}

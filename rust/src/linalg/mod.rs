@@ -1,0 +1,17 @@
+//! Dense column-major matrix substrate shared by every layer of the stack.
+//!
+//! The paper's BLAS operates on FORTRAN-style column-major matrices with
+//! arbitrary leading dimensions; BLIS generalizes that to independent row
+//! and column strides. [`Mat`] owns storage; [`MatRef`]/[`MatMut`] are
+//! strided views with the BLIS `(rs, cs)` stride pair, so a transpose is a
+//! stride swap, never a copy.
+
+mod matrix;
+mod norms;
+mod rng;
+mod scalar;
+
+pub use matrix::{Mat, MatMut, MatRef};
+pub use norms::{frobenius, inf_norm, max_abs, max_rel_err, max_scaled_err, mean_rel_err, one_norm};
+pub use rng::XorShiftRng;
+pub use scalar::Real;

@@ -1,0 +1,150 @@
+//! Norms and error measures used by the result tables.
+//!
+//! The paper reports three flavours: mean/max *relative* error against a
+//! double-precision reference (Tables 1–2), the BLIS-testsuite normalized
+//! residue (Tables 3–6), and the HPL residual (Table 7).
+
+use super::matrix::MatRef;
+use super::scalar::Real;
+
+/// Infinity norm: max row sum of absolute values.
+pub fn inf_norm<T: Real>(a: MatRef<'_, T>) -> f64 {
+    let mut best = 0.0f64;
+    for i in 0..a.rows() {
+        let mut s = 0.0f64;
+        for j in 0..a.cols() {
+            s += a.get(i, j).to_f64().abs();
+        }
+        best = best.max(s);
+    }
+    best
+}
+
+/// One norm: max column sum of absolute values.
+pub fn one_norm<T: Real>(a: MatRef<'_, T>) -> f64 {
+    let mut best = 0.0f64;
+    for j in 0..a.cols() {
+        let mut s = 0.0f64;
+        for i in 0..a.rows() {
+            s += a.get(i, j).to_f64().abs();
+        }
+        best = best.max(s);
+    }
+    best
+}
+
+/// Frobenius norm.
+pub fn frobenius<T: Real>(a: MatRef<'_, T>) -> f64 {
+    let mut s = 0.0f64;
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            let v = a.get(i, j).to_f64();
+            s += v * v;
+        }
+    }
+    s.sqrt()
+}
+
+/// Largest absolute entry.
+pub fn max_abs<T: Real>(a: MatRef<'_, T>) -> f64 {
+    let mut best = 0.0f64;
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            best = best.max(a.get(i, j).to_f64().abs());
+        }
+    }
+    best
+}
+
+/// Mean of `|got - want| / |want|` over entries with non-negligible `want`
+/// — the paper's "Mean Relative Error" row (Tables 1–2), computed against
+/// an f64 reference.
+pub fn mean_rel_err<T: Real, U: Real>(got: MatRef<'_, T>, want: MatRef<'_, U>) -> f64 {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()));
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    let scale = max_abs(want).max(f64::MIN_POSITIVE);
+    for j in 0..got.cols() {
+        for i in 0..got.rows() {
+            let w = want.get(i, j).to_f64();
+            let g = got.get(i, j).to_f64();
+            // Guard tiny denominators the way numeric test suites do: fall
+            // back to the matrix scale.
+            let denom = w.abs().max(1e-6 * scale);
+            sum += (g - w).abs() / denom;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Max of `|got - want| / max|want|` — error normalized by the matrix
+/// scale. Robust for testing near-zero entries (where a per-element
+/// relative error is meaningless).
+pub fn max_scaled_err<T: Real, U: Real>(got: MatRef<'_, T>, want: MatRef<'_, U>) -> f64 {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()));
+    let scale = max_abs(want).max(f64::MIN_POSITIVE);
+    let mut best = 0.0f64;
+    for j in 0..got.cols() {
+        for i in 0..got.rows() {
+            best = best.max((got.get(i, j).to_f64() - want.get(i, j).to_f64()).abs());
+        }
+    }
+    best / scale
+}
+
+/// Max of `|got - want| / |want|` — the paper's "Maximum Relative Error".
+pub fn max_rel_err<T: Real, U: Real>(got: MatRef<'_, T>, want: MatRef<'_, U>) -> f64 {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()));
+    let mut best = 0.0f64;
+    let scale = max_abs(want).max(f64::MIN_POSITIVE);
+    for j in 0..got.cols() {
+        for i in 0..got.rows() {
+            let w = want.get(i, j).to_f64();
+            let g = got.get(i, j).to_f64();
+            let denom = w.abs().max(1e-6 * scale);
+            best = best.max((g - w).abs() / denom);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn inf_and_one_norms() {
+        let m = Mat::<f64>::from_fn(2, 2, |i, j| if (i, j) == (0, 1) { -3.0 } else { 1.0 });
+        assert_eq!(inf_norm(m.view()), 4.0); // row 0: 1 + 3
+        assert_eq!(one_norm(m.view()), 4.0); // col 1: 3 + 1
+    }
+
+    #[test]
+    fn frobenius_of_ones() {
+        let m = Mat::<f32>::full(3, 3, 1.0);
+        assert!((frobenius(m.view()) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let m = Mat::<f32>::randn(10, 10, 5);
+        assert_eq!(max_rel_err(m.view(), m.view()), 0.0);
+        assert_eq!(mean_rel_err(m.view(), m.view()), 0.0);
+    }
+
+    #[test]
+    fn rel_err_detects_perturbation() {
+        let want = Mat::<f64>::full(4, 4, 2.0);
+        let mut got = want.cast::<f32>();
+        got.set(1, 1, 2.0 + 2e-4);
+        let e = max_rel_err(got.view(), want.view());
+        assert!((e - 1e-4).abs() < 1e-6, "e = {e}");
+        assert!(mean_rel_err(got.view(), want.view()) < e);
+    }
+}

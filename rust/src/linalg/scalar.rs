@@ -1,0 +1,96 @@
+//! The scalar abstraction: the BLAS is instantiated for `f32` (sgemm et al.)
+//! and `f64` (dgemm et al., plus the paper's "false dgemm" which is an f64
+//! API over f32 compute).
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Real scalar usable by every kernel in the crate.
+///
+/// Deliberately tiny: just what the BLAS, the simulator and HPL need.
+pub trait Real:
+    Copy
+    + Clone
+    + Debug
+    + Display
+    + Default
+    + PartialOrd
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon (2^-23 for f32, 2^-53 for f64 — the paper's Table 7
+    /// residue is scaled by the latter).
+    const EPSILON: Self;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    /// Fused multiply-add; the Epiphany core's FMADD is the unit of the
+    /// cycle model, and using `mul_add` here keeps rounding single-step like
+    /// the hardware.
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn is_finite(self) -> bool;
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
+}
+
+macro_rules! impl_real {
+    ($t:ty, $eps:expr) => {
+        impl Real for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const EPSILON: Self = $eps;
+
+            #[inline(always)]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            #[inline(always)]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline(always)]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline(always)]
+            fn mul_add(self, a: Self, b: Self) -> Self {
+                <$t>::mul_add(self, a, b)
+            }
+            #[inline(always)]
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            #[inline(always)]
+            fn max(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            #[inline(always)]
+            fn min(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+        }
+    };
+}
+
+impl_real!(f32, f32::EPSILON);
+impl_real!(f64, f64::EPSILON);

@@ -1,0 +1,201 @@
+//! `parallella-blas` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve [--addr HOST:PORT] [--backend pjrt|sim|hostref]
+//!         run the L3 BLAS network service until a Shutdown frame arrives
+//!   sgemm [--m M] [--n N] [--k K] [--ta n|t] [--tb n|t] [--backend ...]
+//!         one accelerated gemm with the wall/projected/paper report
+//!   hpl   [--n N] [--nb NB]
+//!         the HPL Linpack run (paper Table 7 shape)
+//!   table <1..7> [--full]
+//!         regenerate a paper table (projections at paper size; --full
+//!         also executes at paper size)
+//!   memmap
+//!         print the per-core Fig-3 local memory map
+//!
+//! (argument parsing is hand-rolled: no clap in the offline crate set.)
+
+use anyhow::{bail, Context, Result};
+use parallella_blas::blis::Trans;
+use parallella_blas::coordinator::server::BlasServer;
+use parallella_blas::coordinator::ServerConfig;
+use parallella_blas::epiphany::kernel::KernelGeometry;
+use parallella_blas::epiphany::timing::CalibratedModel;
+use parallella_blas::epiphany::Chip;
+use parallella_blas::experiments::{self, ExperimentScale};
+use parallella_blas::host::service::ServiceBackend;
+use parallella_blas::hpl::driver::{run_hpl, HplConfig};
+use parallella_blas::linalg::Mat;
+use parallella_blas::platform::{BackendKind, Platform};
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.push((key.to_string(), argv[i + 1].clone()));
+                    i += 2;
+                } else {
+                    switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                switches.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { flags, switches }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not a number")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+fn backend_of(args: &Args) -> Result<(BackendKind, ServiceBackend)> {
+    Ok(match args.get("backend").unwrap_or("pjrt") {
+        "pjrt" => (BackendKind::Pjrt, ServiceBackend::Pjrt),
+        "sim" | "simulator" => (BackendKind::Simulator, ServiceBackend::Simulator),
+        "hostref" | "host" => (BackendKind::HostRef, ServiceBackend::HostRef),
+        other => bail!("unknown backend {other:?} (pjrt|sim|hostref)"),
+    })
+}
+
+fn trans_of(s: Option<&str>) -> Result<Trans> {
+    Ok(match s.unwrap_or("n") {
+        "n" | "N" => Trans::N,
+        "t" | "T" => Trans::T,
+        "c" | "C" => Trans::C,
+        "h" | "H" => Trans::H,
+        other => bail!("bad trans {other:?}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+
+    match cmd.as_str() {
+        "serve" => {
+            let (_, sb) = backend_of(&args)?;
+            let cfg = ServerConfig {
+                addr: args.get("addr").unwrap_or("127.0.0.1:7700").to_string(),
+                backend: sb,
+                batch: Default::default(),
+            };
+            let srv = BlasServer::start(cfg)?;
+            println!(
+                "parallella-blas serving on {} (send a Shutdown frame or Ctrl-C to stop)",
+                srv.addr()
+            );
+            // Park the main thread; the accept loop owns the work.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "sgemm" => {
+            let (bk, _) = backend_of(&args)?;
+            let m = args.usize("m", 192)?;
+            let n = args.usize("n", 256)?;
+            let k = args.usize("k", 4096)?;
+            let ta = trans_of(args.get("ta"))?;
+            let tb = trans_of(args.get("tb"))?;
+            let plat = Platform::builder().backend(bk).build()?;
+            let a = if ta.is_trans() { Mat::<f32>::randn(k, m, 1) } else { Mat::<f32>::randn(m, k, 1) };
+            let b = if tb.is_trans() { Mat::<f32>::randn(n, k, 2) } else { Mat::<f32>::randn(k, n, 2) };
+            let mut c = Mat::<f32>::zeros(m, n);
+            let rep = plat.blas().sgemm(ta, tb, 1.0, a.view(), b.view(), 0.0, &mut c)?;
+            println!(
+                "sgemm {}{} {m}x{n}x{k} [{:?}]: calls={} wall={:.4}s ({:.2} GF) projected={:.4}s ({:.3} GF)",
+                ta.code(),
+                tb.code(),
+                plat.backend,
+                rep.calls,
+                rep.wall_s,
+                rep.wall_gflops(),
+                rep.projected_s,
+                rep.projected_gflops(),
+            );
+        }
+        "hpl" => {
+            let n = args.usize("n", 768)?;
+            let nb = args.usize("nb", 96)?;
+            let plat = Platform::builder().backend(BackendKind::Pjrt).build()?;
+            let res = run_hpl(plat.blas(), HplConfig::small(n, nb))?;
+            println!(
+                "HPL N={n} NB={nb}: wall={:.2}s projected={:.2}s ({:.3} GF) residue={:.2e}",
+                res.wall_s, res.projected_s, res.projected_gflops, res.residual.raw
+            );
+        }
+        "table" => {
+            let which = args
+                .switches
+                .iter()
+                .find_map(|s| s.parse::<usize>().ok())
+                .context("usage: table <1..7> [--full]")?;
+            let scale = if args.has("full") { ExperimentScale::Full } else { ExperimentScale::Quick };
+            let t = match which {
+                1 => experiments::table1(scale)?,
+                2 => experiments::table2(scale)?,
+                3 => experiments::table3(scale)?,
+                4 => experiments::table4(scale)?,
+                5 => experiments::table5(scale)?,
+                6 => experiments::table6(scale)?,
+                7 => experiments::table7(scale)?,
+                _ => bail!("tables 1..7 exist"),
+            };
+            println!("{}", t.rendered);
+        }
+        "memmap" => {
+            let chip = Chip::new(CalibratedModel::default(), KernelGeometry::paper())?;
+            println!("per-core local memory map (paper Fig. 3):\n{}", chip.memory_map());
+        }
+        "help" | "--help" | "-h" => print_help(),
+        other => {
+            print_help();
+            bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "parallella-blas — Epiphany-accelerated BLAS (Tasende 2016) on a simulated Parallella\n\
+         \n\
+         usage: parallella-blas <command> [flags]\n\
+         \n\
+         commands:\n\
+         \u{20} serve   [--addr H:P] [--backend pjrt|sim|hostref]   run the network BLAS service\n\
+         \u{20} sgemm   [--m --n --k --ta --tb --backend]           one gemm + report\n\
+         \u{20} hpl     [--n --nb]                                  HPL Linpack run\n\
+         \u{20} table   <1..7> [--full]                             regenerate a paper table\n\
+         \u{20} memmap                                              print the Fig-3 memory map\n\
+         \n\
+         run `make artifacts` once before any pjrt-backend command."
+    );
+}

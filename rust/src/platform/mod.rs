@@ -1,0 +1,100 @@
+//! Top-level handle: boot the service with a chosen backend and hand out
+//! the generated BLAS — the "library object" a downstream user holds.
+
+use crate::blis::Blas;
+use crate::epiphany::kernel::KernelGeometry;
+use crate::epiphany::timing::CalibratedModel;
+use crate::host::service::{ServiceBackend, ServiceHandle};
+use anyhow::Result;
+
+/// Which engine computes the heavy part.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Functional Epiphany-16 simulator (exact paper dataflow; slower).
+    Simulator,
+    /// AOT jax+pallas artifact via PJRT (production numerics path).
+    Pjrt,
+    /// Naive host loop (the paper's reference baseline).
+    HostRef,
+}
+
+impl BackendKind {
+    fn service(self) -> ServiceBackend {
+        match self {
+            BackendKind::Simulator => ServiceBackend::Simulator,
+            BackendKind::Pjrt => ServiceBackend::Pjrt,
+            BackendKind::HostRef => ServiceBackend::HostRef,
+        }
+    }
+}
+
+/// Builder for [`Platform`].
+pub struct PlatformBuilder {
+    backend: BackendKind,
+    model: CalibratedModel,
+    geom: KernelGeometry,
+}
+
+impl PlatformBuilder {
+    pub fn backend(mut self, b: BackendKind) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn model(mut self, m: CalibratedModel) -> Self {
+        self.model = m;
+        self
+    }
+
+    pub fn geometry(mut self, g: KernelGeometry) -> Self {
+        self.geom = g;
+        self
+    }
+
+    pub fn build(self) -> Result<Platform> {
+        let svc = ServiceHandle::spawn(self.backend.service(), self.model.clone(), self.geom)?;
+        Ok(Platform { blas: Blas::new(svc), model: self.model, backend: self.backend })
+    }
+}
+
+/// A booted Parallella-BLAS stack: resident service + generated BLAS.
+pub struct Platform {
+    blas: Blas,
+    pub model: CalibratedModel,
+    pub backend: BackendKind,
+}
+
+impl Platform {
+    pub fn builder() -> PlatformBuilder {
+        PlatformBuilder {
+            backend: BackendKind::Pjrt,
+            model: CalibratedModel::default(),
+            geom: KernelGeometry::paper(),
+        }
+    }
+
+    pub fn blas(&self) -> &Blas {
+        &self.blas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::Trans;
+    use crate::linalg::{max_scaled_err, Mat};
+
+    #[test]
+    fn build_and_multiply() {
+        let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+        let a = Mat::<f32>::randn(100, 50, 1);
+        let b = Mat::<f32>::randn(50, 80, 2);
+        let mut c = Mat::<f32>::zeros(100, 80);
+        plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+        let mut want = Mat::<f64>::zeros(100, 80);
+        crate::blis::level3::gemm_host(
+            Trans::N, Trans::N, 1.0, a.cast::<f64>().view(), b.cast::<f64>().view(), 0.0, &mut want,
+        );
+        assert!(max_scaled_err(c.view(), want.view()) < 1e-5);
+    }
+}

@@ -1,0 +1,340 @@
+//! PJRT execution of the AOT gemm artifacts.
+//!
+//! Layout contract (zero-copy by construction, see python/compile/model.py):
+//! the artifact takes `a1` as a logical (K, m) row-major array — which is
+//! byte-identical to the column-major (m, K) panel the BLIS packing layer
+//! produces — `b1` as logical (K, n) row-major (the paper's row-major B
+//! panel as-is), and `c` as logical (n, m) row-major (= column-major m × n).
+//! No transposition happens on either side of the FFI boundary.
+
+use super::registry::{ArtifactEntry, ArtifactRegistry};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A compiled sgemm/false-dgemm artifact.
+pub struct SgemmArtifact {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Owns the PJRT CPU client and a cache of compiled executables.
+///
+/// Not `Send`: PJRT handles live and die on the thread that created them,
+/// which in this architecture is the Epiphany service thread (the paper's
+/// separate "service process" — §3.2).
+pub struct GemmExecutor {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: HashMap<String, SgemmArtifact>,
+    /// µ-kernel tile dims (fixed per instantiation, 192 × 256 in the paper).
+    pub m: usize,
+    pub n: usize,
+}
+
+impl GemmExecutor {
+    /// Create the CPU client and index the artifact registry.
+    pub fn new(registry: ArtifactRegistry, m: usize, n: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(GemmExecutor { client, registry, cache: HashMap::new(), m, n })
+    }
+
+    /// Create with the discovered registry and paper tile dims.
+    pub fn discover() -> Result<Self> {
+        Self::new(ArtifactRegistry::discover()?, 192, 256)
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Compile every manifest artifact up front (service boot) so the
+    /// request path never pays PJRT compilation latency — the moral
+    /// equivalent of the paper's service process pre-loading the Epiphany
+    /// kernel before any µ-kernel call arrives.
+    pub fn warmup(&mut self) -> Result<usize> {
+        let names: Vec<String> = self.registry.entries().iter().map(|e| e.name.clone()).collect();
+        for name in &names {
+            self.artifact(name)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn artifact(&mut self, name: &str) -> Result<&SgemmArtifact> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .registry
+                .get(name)
+                .with_context(|| format!("artifact {name:?} not in manifest"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile of {name}"))?;
+            self.cache.insert(name.to_string(), SgemmArtifact { entry, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// One sgemm artifact call at its fixed K:
+    /// `c_out = alpha·a1·b1 + beta·c_in` over the µ-kernel tile.
+    ///
+    /// * `a_panel`: column-major m × k (len m·k)
+    /// * `b_panel`: row-major k × n (len k·n)
+    /// * `c_panel`: column-major m × n (len m·n)
+    pub fn sgemm_call(
+        &mut self,
+        k: usize,
+        alpha: f32,
+        a_panel: &[f32],
+        b_panel: &[f32],
+        beta: f32,
+        c_panel: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (m, n) = (self.m, self.n);
+        if a_panel.len() != m * k || b_panel.len() != k * n || c_panel.len() != m * n {
+            bail!(
+                "sgemm_call shape mismatch: k={k}, a={}, b={}, c={}",
+                a_panel.len(),
+                b_panel.len(),
+                c_panel.len()
+            );
+        }
+        let name = format!("sgemm_inner_k{k}");
+        let art = self.artifact(&name)?;
+        let alpha_l = xla::Literal::from(alpha);
+        let beta_l = xla::Literal::from(beta);
+        // col-major (m, k) bytes == row-major (k, m) logical array.
+        let a_l = xla::Literal::vec1(a_panel).reshape(&[k as i64, m as i64])?;
+        let b_l = xla::Literal::vec1(b_panel).reshape(&[k as i64, n as i64])?;
+        let c_l = xla::Literal::vec1(c_panel).reshape(&[n as i64, m as i64])?;
+        let result = art.exe.execute::<xla::Literal>(&[alpha_l, a_l, b_l, beta_l, c_l])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// One false-dgemm artifact call (f64 API, f32 compute inside).
+    pub fn false_dgemm_call(
+        &mut self,
+        k: usize,
+        alpha: f64,
+        a_panel: &[f64],
+        b_panel: &[f64],
+        beta: f64,
+        c_panel: &[f64],
+    ) -> Result<Vec<f64>> {
+        let (m, n) = (self.m, self.n);
+        if a_panel.len() != m * k || b_panel.len() != k * n || c_panel.len() != m * n {
+            bail!("false_dgemm_call shape mismatch (k={k})");
+        }
+        let name = format!("false_dgemm_k{k}");
+        let art = self.artifact(&name)?;
+        let alpha_l = xla::Literal::from(alpha);
+        let beta_l = xla::Literal::from(beta);
+        let a_l = xla::Literal::vec1(a_panel).reshape(&[k as i64, m as i64])?;
+        let b_l = xla::Literal::vec1(b_panel).reshape(&[k as i64, n as i64])?;
+        let c_l = xla::Literal::vec1(c_panel).reshape(&[n as i64, m as i64])?;
+        let result = art.exe.execute::<xla::Literal>(&[alpha_l, a_l, b_l, beta_l, c_l])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    /// Plan K-blocking for an arbitrary reduction depth: greedy descending
+    /// over available artifact Ks, final remainder zero-padded up to the
+    /// smallest K. Returns `(block_k, padded)` pairs.
+    pub fn plan_k(&self, k_total: usize) -> Vec<(usize, bool)> {
+        let ks = self.registry.sgemm_ks();
+        let smallest = *ks.last().expect("at least one sgemm artifact");
+        let mut plan = Vec::new();
+        let mut rem = k_total;
+        for &k in &ks {
+            while rem >= k {
+                plan.push((k, false));
+                rem -= k;
+            }
+        }
+        if rem > 0 {
+            plan.push((smallest, true)); // zero-padded tail block
+        }
+        plan
+    }
+
+    /// `c_out = alpha·(a1·b1) + beta·c_in` for arbitrary K ≥ 1, chaining
+    /// artifact calls with the accumulator protocol (first call applies
+    /// beta, later calls accumulate with beta = 1).
+    pub fn sgemm_arbitrary_k(
+        &mut self,
+        k_total: usize,
+        alpha: f32,
+        a_panel: &[f32], // col-major m × k_total
+        b_panel: &[f32], // row-major k_total × n
+        beta: f32,
+        c_panel: &[f32], // col-major m × n
+    ) -> Result<Vec<f32>> {
+        let (m, n) = (self.m, self.n);
+        let plan = self.plan_k(k_total);
+        let mut c = c_panel.to_vec();
+        let mut k_done = 0usize;
+        let mut first = true;
+        for (blk, padded) in plan {
+            let real = blk.min(k_total - k_done);
+            // Slice the panels; zero-pad the tail block if needed.
+            let (a_blk, b_blk);
+            let (a_store, b_store);
+            if padded {
+                let mut a_p = vec![0.0f32; m * blk];
+                a_p[..m * real].copy_from_slice(&a_panel[m * k_done..m * (k_done + real)]);
+                let mut b_p = vec![0.0f32; blk * n];
+                b_p[..real * n].copy_from_slice(&b_panel[n * k_done..n * (k_done + real)]);
+                a_store = a_p;
+                b_store = b_p;
+                a_blk = a_store.as_slice();
+                b_blk = b_store.as_slice();
+            } else {
+                a_blk = &a_panel[m * k_done..m * (k_done + blk)];
+                b_blk = &b_panel[n * k_done..n * (k_done + blk)];
+            }
+            let (call_alpha, call_beta) = if first { (alpha, beta) } else { (alpha, 1.0) };
+            c = self.sgemm_call(blk, call_alpha, a_blk, b_blk, call_beta, &c)?;
+            first = false;
+            k_done += real;
+        }
+        if first {
+            // K = 0 degenerate case: c = beta · c.
+            for v in &mut c {
+                *v *= beta;
+            }
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{max_scaled_err, Mat};
+
+    fn executor() -> GemmExecutor {
+        GemmExecutor::discover().expect("run `make artifacts` before cargo test")
+    }
+
+    /// Pack a col-major (k, n) Mat into a row-major panel.
+    fn row_major(b: &Mat<f32>) -> Vec<f32> {
+        let (k, n) = (b.rows(), b.cols());
+        let mut out = vec![0.0f32; k * n];
+        for l in 0..k {
+            for j in 0..n {
+                out[l * n + j] = b.get(l, j);
+            }
+        }
+        out
+    }
+
+    fn oracle(alpha: f32, a: &Mat<f32>, b: &Mat<f32>, beta: f32, c: &Mat<f32>) -> Mat<f32> {
+        let (m, n, k) = (a.rows(), b.cols(), a.cols());
+        let mut out = Mat::<f64>::zeros(m, n);
+        for j in 0..n {
+            for l in 0..k {
+                for i in 0..m {
+                    out.set(i, j, out.get(i, j) + a.get(i, l) as f64 * b.get(l, j) as f64);
+                }
+            }
+        }
+        Mat::from_fn(m, n, |i, j| {
+            (alpha as f64 * out.get(i, j) + beta as f64 * c.get(i, j) as f64) as f32
+        })
+    }
+
+    #[test]
+    fn artifact_k64_matches_oracle() {
+        let mut ex = executor();
+        let a = Mat::<f32>::randn(192, 64, 1);
+        let b = Mat::<f32>::randn(64, 256, 2);
+        let c = Mat::<f32>::randn(192, 256, 3);
+        let got = ex.sgemm_call(64, 1.5, a.as_slice(), &row_major(&b), -0.5, c.as_slice()).unwrap();
+        let got = Mat::from_col_major(192, 256, &got);
+        let want = oracle(1.5, &a, &b, -0.5, &c);
+        let e = max_scaled_err(got.view(), want.view());
+        assert!(e < 1e-5, "err {e}");
+    }
+
+    #[test]
+    fn chaining_matches_oracle() {
+        // K = 576 = 512 + 64: exercises the descending planner.
+        let mut ex = executor();
+        let a = Mat::<f32>::randn(192, 576, 4);
+        let b = Mat::<f32>::randn(576, 256, 5);
+        let c = Mat::<f32>::randn(192, 256, 6);
+        let got = ex
+            .sgemm_arbitrary_k(576, 2.0, a.as_slice(), &row_major(&b), 0.5, c.as_slice())
+            .unwrap();
+        let got = Mat::from_col_major(192, 256, &got);
+        let want = oracle(2.0, &a, &b, 0.5, &c);
+        let e = max_scaled_err(got.view(), want.view());
+        assert!(e < 3e-5, "err {e}");
+    }
+
+    #[test]
+    fn ragged_k_zero_pads() {
+        // K = 100: 64-block + padded 64-block (36 real columns).
+        let mut ex = executor();
+        let a = Mat::<f32>::randn(192, 100, 7);
+        let b = Mat::<f32>::randn(100, 256, 8);
+        let c = Mat::<f32>::zeros(192, 256);
+        let got =
+            ex.sgemm_arbitrary_k(100, 1.0, a.as_slice(), &row_major(&b), 0.0, c.as_slice()).unwrap();
+        let got = Mat::from_col_major(192, 256, &got);
+        let want = oracle(1.0, &a, &b, 0.0, &c);
+        let e = max_scaled_err(got.view(), want.view());
+        assert!(e < 3e-5, "err {e}");
+    }
+
+    #[test]
+    fn plan_k_greedy_descending() {
+        let ex = executor();
+        assert_eq!(ex.plan_k(4096), vec![(4096, false)]);
+        assert_eq!(ex.plan_k(576), vec![(512, false), (64, false)]);
+        assert_eq!(ex.plan_k(100), vec![(64, false), (64, true)]);
+        assert_eq!(ex.plan_k(64), vec![(64, false)]);
+        assert_eq!(ex.plan_k(1), vec![(64, true)]);
+    }
+
+    #[test]
+    fn false_dgemm_single_precision_result() {
+        let mut ex = executor();
+        let a = Mat::<f64>::randn(192, 512, 9);
+        let b = Mat::<f64>::randn(512, 256, 10);
+        let c = Mat::<f64>::randn(192, 256, 11);
+        let mut b_rm = vec![0.0f64; 512 * 256];
+        for l in 0..512 {
+            for j in 0..256 {
+                b_rm[l * 256 + j] = b.get(l, j);
+            }
+        }
+        let got = ex.false_dgemm_call(512, 1.0, a.as_slice(), &b_rm, 1.0, c.as_slice()).unwrap();
+        let got = Mat::from_col_major(192, 256, &got);
+        // f64 oracle: error must be f32-sized (the "false" in false dgemm).
+        let mut want = Mat::<f64>::zeros(192, 256);
+        for j in 0..256 {
+            for l in 0..512 {
+                for i in 0..192 {
+                    want.set(i, j, want.get(i, j) + a.get(i, l) * b.get(l, j));
+                }
+            }
+        }
+        for j in 0..256 {
+            for i in 0..192 {
+                want.set(i, j, want.get(i, j) + c.get(i, j));
+            }
+        }
+        let e = max_scaled_err(got.view(), want.view());
+        assert!(e > 1e-9 && e < 1e-4, "err {e} must be f32-sized, not f64");
+    }
+}

@@ -1,0 +1,9 @@
+//! The AOT bridge: load `artifacts/*.hlo.txt` (lowered once from the
+//! L2 JAX model + L1 Pallas kernel by `make artifacts`) and execute them
+//! on the PJRT CPU client from the rust hot path. Python never runs here.
+
+mod executor;
+mod registry;
+
+pub use executor::{GemmExecutor, SgemmArtifact};
+pub use registry::{ArtifactEntry, ArtifactRegistry};

@@ -1,0 +1,117 @@
+//! Artifact discovery: parse `artifacts/manifest.txt` (written by
+//! `python -m compile.aot`) and locate the HLO text files.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One row of the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Reduction depth the artifact was lowered for.
+    pub k: usize,
+    /// "f32" (sgemm) or "f64" (false dgemm).
+    pub dtype: String,
+    pub path: PathBuf,
+    pub digest: String,
+}
+
+/// The set of available artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactRegistry {
+    /// Load from a directory containing `manifest.txt`. The conventional
+    /// location is `<repo>/artifacts`; tests and binaries can override via
+    /// the `PARALLELLA_BLAS_ARTIFACTS` environment variable.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} — run `make artifacts` first", manifest.display()))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("malformed manifest row: {line:?}");
+            }
+            let path = dir.join(parts[3]);
+            if !path.exists() {
+                bail!("manifest references missing artifact {}", path.display());
+            }
+            entries.push(ArtifactEntry {
+                name: parts[0].to_string(),
+                k: parts[1].parse().with_context(|| format!("bad K in {line:?}"))?,
+                dtype: parts[2].to_string(),
+                path,
+                digest: parts[4].to_string(),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest {} contains no artifacts", manifest.display());
+        }
+        Ok(ArtifactRegistry { entries })
+    }
+
+    /// Default search: `$PARALLELLA_BLAS_ARTIFACTS`, else `./artifacts`,
+    /// else `<crate root>/artifacts`.
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("PARALLELLA_BLAS_ARTIFACTS") {
+            return Self::load(Path::new(&dir));
+        }
+        let cwd = Path::new("artifacts");
+        if cwd.join("manifest.txt").exists() {
+            return Self::load(cwd);
+        }
+        let crate_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Self::load(&crate_root)
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All sgemm K variants, descending — the chaining planner wants the
+    /// largest block first.
+    pub fn sgemm_ks(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.name.starts_with("sgemm_inner_k"))
+            .map(|e| e.k)
+            .collect();
+        ks.sort_unstable_by(|a, b| b.cmp(a));
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discovers_built_artifacts() {
+        let reg = ArtifactRegistry::discover().expect("run `make artifacts` before cargo test");
+        assert!(reg.get("sgemm_inner_k64").is_some());
+        assert!(reg.get("sgemm_inner_k512").is_some());
+        assert!(reg.get("false_dgemm_k512").is_some());
+        let ks = reg.sgemm_ks();
+        assert!(ks.windows(2).all(|w| w[0] > w[1]), "descending: {ks:?}");
+        assert!(ks.contains(&64));
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactRegistry::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets in this repo use `harness = false` and call
+//! [`BenchRun`] directly. Each measurement reports min/median/mean over a
+//! configurable number of iterations with warmup, which is enough fidelity
+//! for the paper-table comparisons (the projected-Parallella numbers come
+//! from the calibrated model, not from wall-clock).
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl Measurement {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} iters={:<3} min={:.6}s median={:.6}s mean={:.6}s",
+            self.name, self.iters, self.min_s, self.median_s, self.mean_s
+        )
+    }
+}
+
+/// Harness configuration; honours `BENCH_QUICK=1` for CI-speed runs.
+pub struct BenchRun {
+    warmup: usize,
+    iters: usize,
+}
+
+impl BenchRun {
+    pub fn new() -> Self {
+        if std::env::var("BENCH_QUICK").ok().as_deref() == Some("1") {
+            BenchRun { warmup: 0, iters: 1 }
+        } else {
+            BenchRun { warmup: 1, iters: 5 }
+        }
+    }
+
+    pub fn with_iters(warmup: usize, iters: usize) -> Self {
+        BenchRun { warmup, iters }
+    }
+
+    /// Time `f` and return the measurement (also printed).
+    pub fn measure<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            min_s: samples[0],
+            median_s: samples[samples.len() / 2],
+            mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+        };
+        println!("{}", m.summary());
+        m
+    }
+}
+
+impl Default for BenchRun {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = BenchRun::with_iters(0, 3);
+        let m = b.measure("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(m.iters, 3);
+        assert!(m.min_s <= m.median_s && m.median_s <= m.mean_s * 3.0);
+    }
+}

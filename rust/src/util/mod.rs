@@ -1,0 +1,51 @@
+//! Cross-cutting helpers: wall-clock timing, table formatting for the bench
+//! harnesses, and a tiny property-testing framework (no external crates are
+//! available in this environment, so `proptest`-style checks are built here).
+
+pub mod bench;
+pub mod proptest;
+pub mod tables;
+
+use std::time::Instant;
+
+/// Measure wall-clock seconds of a closure, returning `(result, seconds)`.
+pub fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// GFLOPS for a gemm of the given dims over `secs`.
+pub fn gemm_gflops(m: usize, n: usize, k: usize, secs: f64) -> f64 {
+    (2.0 * m as f64 * n as f64 * k as f64) / secs / 1e9
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2} KiB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gflops_math() {
+        // 2*192*256*4096 flops in 0.114114 s = 3.529 GFLOPS (paper Table 1).
+        let g = gemm_gflops(192, 256, 4096, 0.114114);
+        assert!((g - 3.529).abs() < 0.005, "g = {g}");
+    }
+
+    #[test]
+    fn bytes_format() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal property-based testing support.
+//!
+//! No `proptest`/`quickcheck` crates are available offline, so this module
+//! provides the 10% of the idea the test suite needs: seeded generators,
+//! many-case runners, and greedy shrinking for integer tuples. Failures
+//! print the seed and the (shrunk) counterexample.
+
+use crate::linalg::XorShiftRng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated values. `gen` receives a fresh RNG
+/// stream per case. Panics with the failing case index + seed on failure.
+pub fn forall<V: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut XorShiftRng) -> V,
+    mut prop: impl FnMut(&V) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = XorShiftRng::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let v = gen(&mut rng);
+        if !prop(&v) {
+            panic!("property failed at case {case} (seed {:#x}): {v:?}", cfg.seed);
+        }
+    }
+}
+
+/// Like [`forall`] but with greedy shrinking: `shrink` proposes smaller
+/// candidates; the smallest still-failing value is reported.
+pub fn forall_shrink<V: std::fmt::Debug + Clone>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut XorShiftRng) -> V,
+    shrink: impl Fn(&V) -> Vec<V>,
+    mut prop: impl FnMut(&V) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = XorShiftRng::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let v = gen(&mut rng);
+        if !prop(&v) {
+            // Greedy descent: keep taking the first failing shrink.
+            let mut worst = v.clone();
+            'outer: loop {
+                for cand in shrink(&worst) {
+                    if !prop(&cand) {
+                        worst = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {case} (seed {:#x}); original {v:?}, shrunk to {worst:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator helpers for common shapes.
+pub mod gen {
+    use crate::linalg::XorShiftRng;
+
+    /// Matrix dims `(m, n, k)` with each in `[1, max]`.
+    pub fn dims(rng: &mut XorShiftRng, max: usize) -> (usize, usize, usize) {
+        (1 + rng.next_below(max), 1 + rng.next_below(max), 1 + rng.next_below(max))
+    }
+
+    /// Standard shrinker for a dim triple: halve each coordinate.
+    pub fn shrink_dims(d: &(usize, usize, usize)) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        let (m, n, k) = *d;
+        if m > 1 {
+            out.push((m / 2, n, k));
+        }
+        if n > 1 {
+            out.push((m, n / 2, k));
+        }
+        if k > 1 {
+            out.push((m, n, k / 2));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_prop() {
+        forall(Config::default(), |r| r.next_below(100), |&v| v < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(Config { cases: 200, seed: 1 }, |r| r.next_below(100), |&v| v < 50);
+    }
+
+    #[test]
+    fn shrink_finds_minimal() {
+        // Property "m < 8" fails for m >= 8; greedy halving should land at
+        // a value in [8, 15] (halving once more would pass).
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                Config { cases: 50, seed: 2 },
+                |r| (8 + r.next_below(100), 1usize, 1usize),
+                |v| gen::shrink_dims(v),
+                |&(m, _, _)| m < 8,
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk to"), "{msg}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Failure injection: the stack must degrade loudly, not silently.
+//!
+//! Covers the failure modes the paper's architecture is shaped around
+//! (eSDK re-init instability, memory-map overflow) plus operational ones
+//! (malformed network frames, mid-stream disconnects, bogus shapes).
+
+use parallella_blas::blis::Trans;
+use parallella_blas::coordinator::protocol::{read_frame, Request, Response};
+use parallella_blas::coordinator::server::{BlasClient, BlasServer};
+use parallella_blas::coordinator::ServerConfig;
+use parallella_blas::epiphany::kernel::KernelGeometry;
+use parallella_blas::epiphany::timing::CalibratedModel;
+use parallella_blas::epiphany::Chip;
+use parallella_blas::esdk::{EHal, MAX_REINIT};
+use parallella_blas::linalg::Mat;
+use std::io::Write;
+
+#[test]
+fn esdk_reinit_instability_reproduced_and_cured() {
+    // Reproduce: per-call init/finalize dies after MAX_REINIT (the bug the
+    // paper hit when the BLAS process re-initialized per µ-kernel call).
+    let mut hal = EHal::new(CalibratedModel::default());
+    for i in 0..MAX_REINIT {
+        hal.e_init(KernelGeometry::paper()).unwrap_or_else(|e| panic!("init {i}: {e}"));
+        hal.e_finalize().unwrap();
+    }
+    assert!(hal.e_init(KernelGeometry::paper()).is_err(), "must fail after {MAX_REINIT} re-inits");
+
+    // Cure: the resident service does one init for arbitrarily many calls
+    // (service tests prove > MAX_REINIT calls; here prove one hal instance
+    // stays open across many tasks).
+    let mut hal = EHal::new(CalibratedModel::default());
+    hal.e_init(KernelGeometry::paper()).unwrap();
+    let g = KernelGeometry::paper();
+    let a = vec![0.5f32; g.m * g.ksub];
+    let b = vec![0.25f32; g.ksub * g.n];
+    for t in 0..MAX_REINIT * 2 {
+        hal.e_write_a(t & 1, &a).unwrap();
+        hal.e_write_b(t & 1, &b).unwrap();
+        hal.e_signal_task(parallella_blas::epiphany::kernel::Command::ClearSend, t & 1).unwrap();
+    }
+    hal.e_finalize().unwrap();
+}
+
+#[test]
+fn local_memory_overflow_is_a_boot_error() {
+    // Geometry beyond the Fig-3 budget must fail at Chip::new, not corrupt.
+    for bad in [
+        KernelGeometry { m: 192, n: 256, ksub: 128, nsub: 4 },
+        KernelGeometry { m: 384, n: 256, ksub: 64, nsub: 4 },
+        KernelGeometry { m: 192, n: 512, ksub: 64, nsub: 4 },
+    ] {
+        let err = match Chip::new(CalibratedModel::default(), bad) {
+            Err(e) => e,
+            Ok(_) => panic!("{bad:?} must not fit"),
+        };
+        assert!(format!("{err:#}").contains("overflow"), "{bad:?}: {err:#}");
+    }
+}
+
+#[test]
+fn invalid_geometry_rejected_with_reason() {
+    let cases = [
+        (KernelGeometry { m: 100, n: 256, ksub: 64, nsub: 4 }, "multiple of 32"),
+        (KernelGeometry { m: 192, n: 250, ksub: 64, nsub: 4 }, "CORES*NSUB"),
+        (KernelGeometry { m: 192, n: 256, ksub: 60, nsub: 4 }, "divide evenly"),
+    ];
+    for (geom, needle) in cases {
+        let err = geom.validate().unwrap_err();
+        assert!(format!("{err:#}").contains(needle), "{geom:?}: {err:#}");
+    }
+}
+
+#[test]
+fn server_survives_malformed_and_oversized_frames() {
+    let srv = BlasServer::start(ServerConfig::default()).unwrap();
+    // 1. Garbage opcode.
+    {
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        cli.stream_mut().write_all(&4u32.to_le_bytes()).unwrap();
+        cli.stream_mut().write_all(&[200u8, 0, 0, 0]).unwrap();
+        let body = read_frame(cli.stream_mut()).unwrap();
+        assert!(matches!(Response::decode(&body).unwrap(), Response::Err(_)));
+    }
+    // 2. Mid-frame disconnect: open, write half a frame, drop.
+    {
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        cli.stream_mut().write_all(&100u32.to_le_bytes()).unwrap();
+        cli.stream_mut().write_all(&[1u8, 2, 3]).unwrap();
+        drop(cli);
+    }
+    // 3. Server still serves new clients correctly afterwards.
+    let mut cli = BlasClient::connect(srv.addr()).unwrap();
+    match cli.call(&Request::Ping).unwrap() {
+        Response::OkText(s) => assert_eq!(s, "pong"),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn shape_lies_in_header_are_errors_not_ub() {
+    // Header says k=8 but payload sized for k=4: decode must reject.
+    let srv = BlasServer::start(ServerConfig::default()).unwrap();
+    let mut cli = BlasClient::connect(srv.addr()).unwrap();
+    let good = Request::Sgemm {
+        ta: Trans::N,
+        tb: Trans::N,
+        m: 4,
+        n: 4,
+        k: 4,
+        alpha: 1.0,
+        beta: 0.0,
+        a: vec![0.0; 16],
+        b: vec![0.0; 16],
+        c: vec![0.0; 16],
+    };
+    let mut frame = good.encode();
+    // Corrupt the k field (offset: 4 len + 1 op + 2 trans + 8 m,n = 15).
+    frame[15..19].copy_from_slice(&8u32.to_le_bytes());
+    cli.stream_mut().write_all(&frame).unwrap();
+    let body = read_frame(cli.stream_mut()).unwrap();
+    assert!(matches!(Response::decode(&body).unwrap(), Response::Err(_)));
+}
+
+#[test]
+fn hpl_singular_input_reported() {
+    let plat = parallella_blas::platform::Platform::builder()
+        .backend(parallella_blas::platform::BackendKind::Pjrt)
+        .build()
+        .unwrap();
+    // Rank-deficient matrix: column 3 duplicated.
+    let n = 64;
+    let mut a = Mat::<f64>::randn(n, n, 9);
+    for i in 0..n {
+        let v = a.get(i, 3);
+        a.set(i, 7, v);
+    }
+    let err = parallella_blas::hpl::lu::lu_factor_blocked(plat.blas(), &mut a, 32);
+    // Exactly singular after elimination → error; f64 rounding may let it
+    // squeak through as near-singular, in which case pivots stay finite.
+    if let Err(e) = err {
+        assert!(format!("{e:#}").contains("singular"));
+    }
+}
+
+#[test]
+fn zero_sized_problems_handled() {
+    let plat = parallella_blas::platform::Platform::builder()
+        .backend(parallella_blas::platform::BackendKind::Pjrt)
+        .build()
+        .unwrap();
+    // K = 0: C = beta·C, no service crossing required to be correct.
+    let (m, n) = (8, 8);
+    let a = Mat::<f32>::zeros(m, 0);
+    let b = Mat::<f32>::zeros(0, n);
+    let mut c = Mat::<f32>::full(m, n, 3.0);
+    plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.5, &mut c).unwrap();
+    for j in 0..n {
+        for i in 0..m {
+            assert!((c.get(i, j) - 1.5).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Whole-stack integration: artifacts → runtime → service → BLIS →
+//! coordinator, cross-checked between backends at every boundary.
+
+use parallella_blas::blis::{level3, Trans};
+use parallella_blas::coordinator::server::{BlasClient, BlasServer};
+use parallella_blas::coordinator::{Request, Response, ServerConfig};
+use parallella_blas::linalg::{max_scaled_err, Mat};
+use parallella_blas::prelude::*;
+
+fn oracle(ta: Trans, tb: Trans, alpha: f64, a: &Mat<f32>, b: &Mat<f32>, beta: f64, c0: &Mat<f32>) -> Mat<f64> {
+    let a64 = a.cast::<f64>();
+    let b64 = b.cast::<f64>();
+    let mut c = c0.cast::<f64>();
+    level3::gemm_host(ta, tb, alpha, a64.view(), b64.view(), beta, &mut c);
+    c
+}
+
+#[test]
+fn simulator_and_pjrt_agree_across_shapes() {
+    let sim = Platform::builder().backend(BackendKind::Simulator).build().unwrap();
+    let pjrt = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+    for (m, n, k, seed) in [(192, 256, 64, 1u64), (100, 300, 130, 2), (400, 100, 257, 3), (64, 64, 1, 4)] {
+        let a = Mat::<f32>::randn(m, k, seed);
+        let b = Mat::<f32>::randn(k, n, seed + 10);
+        let c0 = Mat::<f32>::randn(m, n, seed + 20);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        sim.blas().sgemm(Trans::N, Trans::N, 1.5, a.view(), b.view(), -0.5, &mut c1).unwrap();
+        pjrt.blas().sgemm(Trans::N, Trans::N, 1.5, a.view(), b.view(), -0.5, &mut c2).unwrap();
+        let cross = max_scaled_err(c1.view(), c2.view());
+        assert!(cross < 2e-6, "{m}x{n}x{k}: sim vs pjrt err {cross}");
+        let want = oracle(Trans::N, Trans::N, 1.5, &a, &b, -0.5, &c0);
+        assert!(max_scaled_err(c1.view(), want.view()) < 1e-5, "{m}x{n}x{k} vs oracle");
+    }
+}
+
+#[test]
+fn transpose_variants_through_full_stack() {
+    let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+    let (m, n, k) = (250, 270, 90);
+    for ta in Trans::all() {
+        for tb in Trans::all() {
+            let a = if ta.is_trans() { Mat::<f32>::randn(k, m, 5) } else { Mat::<f32>::randn(m, k, 5) };
+            let b = if tb.is_trans() { Mat::<f32>::randn(n, k, 6) } else { Mat::<f32>::randn(k, n, 6) };
+            let c0 = Mat::<f32>::randn(m, n, 7);
+            let mut c = c0.clone();
+            plat.blas().sgemm(ta, tb, 2.0, a.view(), b.view(), 1.0, &mut c).unwrap();
+            let want = oracle(ta, tb, 2.0, &a, &b, 1.0, &c0);
+            let e = max_scaled_err(c.view(), want.view());
+            assert!(e < 1e-5, "{}{}: {e}", ta.code(), tb.code());
+        }
+    }
+}
+
+#[test]
+fn tcp_stack_serves_false_dgemm() {
+    let srv = BlasServer::start(ServerConfig::default()).unwrap();
+    let mut cli = BlasClient::connect(srv.addr()).unwrap();
+    let (m, n, k) = (96usize, 80usize, 64usize);
+    let a = Mat::<f64>::randn(m, k, 8);
+    let b = Mat::<f64>::randn(k, n, 9);
+    let resp = cli
+        .call(&Request::FalseDgemm {
+            ta: Trans::N,
+            tb: Trans::N,
+            m,
+            n,
+            k,
+            alpha: 1.0,
+            beta: 0.0,
+            a: a.as_slice().to_vec(),
+            b: b.as_slice().to_vec(),
+            c: vec![0.0; m * n],
+        })
+        .unwrap();
+    let got = match resp {
+        Response::OkF64(v) => Mat::from_col_major(m, n, &v),
+        other => panic!("{other:?}"),
+    };
+    let mut want = Mat::<f64>::zeros(m, n);
+    level3::gemm_host(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut want);
+    let e = max_scaled_err(got.view(), want.view());
+    // f32-sized error through the f64 wire type: the "false" in false dgemm
+    // must be visible end to end.
+    assert!(e > 1e-12 && e < 1e-4, "err {e}");
+}
+
+#[test]
+fn beta_semantics_preserved_through_stack() {
+    // beta=0 must ignore (not propagate NaN from) C, like reference BLAS.
+    let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+    let (m, n, k) = (192, 256, 64);
+    let a = Mat::<f32>::randn(m, k, 10);
+    let b = Mat::<f32>::randn(k, n, 11);
+    let mut c = Mat::<f32>::full(m, n, f32::NAN);
+    plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+    assert!(
+        c.as_slice().iter().all(|v| v.is_finite()),
+        "beta=0 must overwrite, not propagate NaN"
+    );
+}
+
+#[test]
+fn alpha_zero_is_pure_scale() {
+    let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+    let (m, n, k) = (192, 256, 128);
+    let a = Mat::<f32>::randn(m, k, 12);
+    let b = Mat::<f32>::randn(k, n, 13);
+    let c0 = Mat::<f32>::randn(m, n, 14);
+    let mut c = c0.clone();
+    plat.blas().sgemm(Trans::N, Trans::N, 0.0, a.view(), b.view(), 2.0, &mut c).unwrap();
+    for j in 0..n {
+        for i in 0..m {
+            assert!((c.get(i, j) - 2.0 * c0.get(i, j)).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Property-based tests (the crate's own mini-proptest; no external
+//! crates offline) over the stack's core invariants:
+//!
+//! * coordinator: routing determinism, batcher FIFO per key, protocol
+//!   encode/decode round-trip under random payloads;
+//! * BLIS packing: pack/unpack round-trip, zero-pad correctness;
+//! * Epiphany kernel: ring rotation covers every (core, target) pair,
+//!   any divisible geometry multiplies correctly;
+//! * gemm algebra: linearity in alpha, additivity over K splits.
+
+use parallella_blas::blis::packing::{pack_a, pack_b, pack_c, unpack_c};
+use parallella_blas::blis::Trans;
+use parallella_blas::coordinator::protocol::{Request, Response};
+use parallella_blas::epiphany::mesh::{ring_core, ring_pos};
+use parallella_blas::epiphany::CORES;
+use parallella_blas::linalg::{max_scaled_err, Mat, XorShiftRng};
+use parallella_blas::prelude::*;
+use parallella_blas::util::proptest::{forall, Config};
+
+#[test]
+fn prop_packing_round_trips() {
+    forall(
+        Config { cases: 48, seed: 0xA11CE },
+        |rng| {
+            let m = 1 + rng.next_below(64);
+            let n = 1 + rng.next_below(64);
+            (m, n, rng.next_u64())
+        },
+        |&(m, n, seed)| {
+            let c0 = Mat::<f32>::randn(m, n, seed);
+            let (mt, nt) = (m + rng_pad(seed), n + rng_pad(seed ^ 1));
+            let tile = pack_c(c0.view(), 0, 0, m, n, mt, nt);
+            let mut c1 = Mat::<f32>::zeros(m, n);
+            let mut v = c1.view_mut();
+            unpack_c(&tile, &mut v, 0, 0, m, n, mt);
+            c1 == c0
+        },
+    );
+}
+
+fn rng_pad(seed: u64) -> usize {
+    (seed % 5) as usize
+}
+
+#[test]
+fn prop_pack_a_padding_is_zero() {
+    forall(
+        Config { cases: 32, seed: 0xB0B },
+        |rng| (1 + rng.next_below(50), 1 + rng.next_below(20), rng.next_u64()),
+        |&(rows, k, seed)| {
+            let a = Mat::<f32>::randn(rows, k, seed);
+            let m_tile = rows + 7;
+            let (panel, _) = pack_a(a.view(), 0, rows, m_tile);
+            // all pad rows zero, all real entries exact
+            (0..k).all(|l| {
+                (rows..m_tile).all(|i| panel[l * m_tile + i] == 0.0)
+                    && (0..rows).all(|i| panel[l * m_tile + i] == a.get(i, l))
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_pack_b_transpose_consistency() {
+    // Packing op(B)=Bᵀ from a stored Bᵀ must equal packing op(B)=B from B.
+    forall(
+        Config { cases: 32, seed: 0xCAFE },
+        |rng| (1 + rng.next_below(20), 1 + rng.next_below(30), rng.next_u64()),
+        |&(k, n, seed)| {
+            let b = Mat::<f32>::randn(k, n, seed);
+            let bt = b.transposed();
+            let (p1, _) = pack_b(b.view(), 0, n, n);
+            let (p2, _) = pack_b(bt.t(), 0, n, n);
+            p1 == p2
+        },
+    );
+}
+
+#[test]
+fn prop_ring_rotation_covers_all_targets() {
+    // Over CORES iterations, each ring position computes every target
+    // exactly once, and the final iteration computes its own block — the
+    // §3.4.3 schedule invariant.
+    for pos in 0..CORES {
+        let mut seen = [false; CORES];
+        for iter in 0..CORES {
+            let target = (pos + CORES - (iter % CORES) - 1) % CORES;
+            assert!(!seen[target], "target {target} repeated");
+            seen[target] = true;
+            if iter == CORES - 1 {
+                assert_eq!(target, pos, "last iteration must be own block");
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}
+
+#[test]
+fn prop_ring_embedding_bijective() {
+    for pos in 0..CORES {
+        assert_eq!(ring_pos(ring_core(pos)), pos);
+    }
+}
+
+#[test]
+fn prop_protocol_round_trip_random() {
+    forall(
+        Config { cases: 40, seed: 0xF00D },
+        |rng| {
+            let m = 1 + rng.next_below(8);
+            let n = 1 + rng.next_below(8);
+            let k = 1 + rng.next_below(8);
+            (m, n, k, rng.next_u64())
+        },
+        |&(m, n, k, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let ta = [Trans::N, Trans::T, Trans::C, Trans::H][rng.next_below(4)];
+            let tb = [Trans::N, Trans::T, Trans::C, Trans::H][rng.next_below(4)];
+            let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
+            let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
+            let req = Request::Sgemm {
+                ta,
+                tb,
+                m,
+                n,
+                k,
+                alpha: rng.next_unit() as f32,
+                beta: rng.next_unit() as f32,
+                a: (0..am * an).map(|_| rng.next_unit() as f32).collect(),
+                b: (0..bm * bn).map(|_| rng.next_unit() as f32).collect(),
+                c: (0..m * n).map(|_| rng.next_unit() as f32).collect(),
+            };
+            let frame = req.encode();
+            match (Request::decode(&frame[4..]), &req) {
+                (
+                    Ok(Request::Sgemm { ta: ta2, tb: tb2, m: m2, n: n2, k: k2, alpha: al2, beta: be2, a: a2, b: b2, c: c2 }),
+                    Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c },
+                ) => {
+                    ta2 == *ta && tb2 == *tb && m2 == *m && n2 == *n && k2 == *k
+                        && al2 == *alpha && be2 == *beta && &a2 == a && &b2 == b && &c2 == c
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_response_error_round_trip() {
+    forall(
+        Config { cases: 16, seed: 0xE44 },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let msg = format!("error-{seed}");
+            let r = Response::Err(msg.clone());
+            matches!(Response::decode(&r.encode()[4..]), Ok(Response::Err(m)) if m == msg)
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_linear_in_alpha() {
+    // sgemm(2α) == 2·sgemm(α) when beta = 0 (checked through the full
+    // service + artifact path).
+    let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+    let (m, n, k) = (192, 256, 64);
+    let a = Mat::<f32>::randn(m, k, 77);
+    let b = Mat::<f32>::randn(k, n, 78);
+    let mut c1 = Mat::<f32>::zeros(m, n);
+    let mut c2 = Mat::<f32>::zeros(m, n);
+    plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c1).unwrap();
+    plat.blas().sgemm(Trans::N, Trans::N, 2.0, a.view(), b.view(), 0.0, &mut c2).unwrap();
+    let scaled = Mat::from_fn(m, n, |i, j| 2.0 * c1.get(i, j));
+    assert!(max_scaled_err(c2.view(), scaled.view()) < 1e-6);
+}
+
+#[test]
+fn prop_gemm_additive_over_k_split() {
+    // A·B == A1·B1 + A2·B2 for a K split — the accumulator protocol's
+    // algebraic foundation (and what the chip does across tasks).
+    let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+    let (m, n, k) = (192, 256, 256);
+    let a = Mat::<f32>::randn(m, k, 80);
+    let b = Mat::<f32>::randn(k, n, 81);
+    let mut whole = Mat::<f32>::zeros(m, n);
+    plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut whole).unwrap();
+
+    let a1 = a.view().sub(0, 0, m, k / 2).to_mat();
+    let a2 = a.view().sub(0, k / 2, m, k / 2).to_mat();
+    let b1 = b.view().sub(0, 0, k / 2, n).to_mat();
+    let b2 = b.view().sub(k / 2, 0, k / 2, n).to_mat();
+    let mut split = Mat::<f32>::zeros(m, n);
+    plat.blas().sgemm(Trans::N, Trans::N, 1.0, a1.view(), b1.view(), 0.0, &mut split).unwrap();
+    plat.blas().sgemm(Trans::N, Trans::N, 1.0, a2.view(), b2.view(), 1.0, &mut split).unwrap();
+    assert!(max_scaled_err(split.view(), whole.view()) < 1e-5);
+}
