@@ -57,7 +57,11 @@ fn main() -> anyhow::Result<()> {
     if let Response::OkText(stats) = cli.call(&Request::Stats)? {
         println!("server stats: {stats}");
     }
-    println!("p50 latency: {:.4}s  p99: {:.4}s", srv.metrics.latency_quantile(0.5), srv.metrics.latency_quantile(0.99));
+    println!(
+        "p50 latency: {:.4}s  p99: {:.4}s",
+        srv.metrics.latency_quantile(0.5),
+        srv.metrics.latency_quantile(0.99)
+    );
     println!("OK");
     Ok(())
 }

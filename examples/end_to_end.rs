@@ -1,12 +1,13 @@
 //! End-to-end driver: proves every layer composes on a real workload.
 //!
-//!     make artifacts && cargo run --release --example end_to_end
+//!     cargo run --release --example end_to_end
 //!
 //! Pipeline exercised, in order:
-//!   1. AOT artifacts (jax L2 + pallas L1, lowered once) discovered and
-//!      compiled on the PJRT CPU client — python is NOT running;
+//!   1. AOT artifacts (jax L2 + pallas L1, lowered once by `make
+//!      artifacts`) discovered — listed when present, skipped otherwise;
 //!   2. the Epiphany functional simulator cross-checked against the PJRT
-//!      artifact bit-class (same math, independent implementations);
+//!      artifact bit-class (pjrt-featured builds only; the two are the
+//!      same math in independent implementations);
 //!   3. the service process + BLIS layer serving a mixed BLAS workload;
 //!   4. the L3 TCP coordinator under concurrent clients with batching —
 //!      latency/throughput reported;
@@ -24,38 +25,54 @@ use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     println!("=== 1. AOT artifacts → PJRT ===");
-    let reg = parallella_blas::runtime::ArtifactRegistry::discover()?;
-    for e in reg.entries() {
-        println!("  artifact {:<22} K={:<5} {} ({})", e.name, e.k, e.dtype, e.digest);
+    match parallella_blas::runtime::ArtifactRegistry::discover() {
+        Ok(reg) => {
+            for e in reg.entries() {
+                println!("  artifact {:<22} K={:<5} {} ({})", e.name, e.k, e.dtype, e.digest);
+            }
+        }
+        Err(e) => println!("  no artifacts ({e:#}); continuing with the simulator backend"),
     }
 
-    println!("\n=== 2. simulator vs PJRT artifact cross-check ===");
     let sim = Platform::builder().backend(BackendKind::Simulator).build()?;
-    let pjrt = Platform::builder().backend(BackendKind::Pjrt).build()?;
-    let (m, n, k) = (192usize, 256usize, 512usize);
-    let a = Mat::<f32>::randn(m, k, 1);
-    let b = Mat::<f32>::randn(k, n, 2);
-    let mut c_sim = Mat::<f32>::zeros(m, n);
-    let mut c_pjrt = Mat::<f32>::zeros(m, n);
-    sim.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c_sim)?;
-    pjrt.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c_pjrt)?;
-    let err = max_scaled_err(c_sim.view(), c_pjrt.view());
-    println!("  functional-sim vs AOT-artifact max scaled err: {err:.2e}");
-    anyhow::ensure!(err < 1e-5, "backends disagree");
+
+    println!("\n=== 2. simulator vs PJRT artifact cross-check ===");
+    match Platform::builder().backend(BackendKind::Pjrt).build() {
+        Ok(pjrt) => {
+            let (m, n, k) = (192usize, 256usize, 512usize);
+            let a = Mat::<f32>::randn(m, k, 1);
+            let b = Mat::<f32>::randn(k, n, 2);
+            let mut c_sim = Mat::<f32>::zeros(m, n);
+            let mut c_pjrt = Mat::<f32>::zeros(m, n);
+            sim.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c_sim)?;
+            pjrt.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c_pjrt)?;
+            let err = max_scaled_err(c_sim.view(), c_pjrt.view());
+            println!("  functional-sim vs AOT-artifact max scaled err: {err:.2e}");
+            anyhow::ensure!(err < 1e-5, "backends disagree");
+        }
+        Err(e) => {
+            println!("  skipped — pjrt backend unavailable ({e:#})");
+        }
+    }
 
     println!("\n=== 3. mixed BLAS workload through the service ===");
-    let blas = pjrt.blas();
+    let blas = sim.blas();
     let t0 = Instant::now();
     let mut total_flops = 0.0f64;
     for i in 0..6 {
-        let (mm, nn, kk) = ([150, 192, 400][i % 3], [100, 256, 300][i % 3], [64, 512, 200][i % 3]);
+        let (mm, nn, kk) =
+            ([150, 192, 400][i % 3], [100, 256, 300][i % 3], [64, 512, 200][i % 3]);
         let a = Mat::<f32>::randn(mm, kk, 10 + i as u64);
         let b = Mat::<f32>::randn(kk, nn, 20 + i as u64);
         let mut c = Mat::<f32>::zeros(mm, nn);
         let rep = blas.sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c)?;
         total_flops += rep.flops;
     }
-    println!("  6 gemms, {:.2} MFLOP total, wall {:.3}s", total_flops / 1e6, t0.elapsed().as_secs_f64());
+    println!(
+        "  6 gemms, {:.2} MFLOP total, wall {:.3}s",
+        total_flops / 1e6,
+        t0.elapsed().as_secs_f64()
+    );
 
     println!("\n=== 4. L3 coordinator under concurrent load ===");
     let srv = BlasServer::start(ServerConfig::default())?;

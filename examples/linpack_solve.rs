@@ -14,12 +14,15 @@ fn main() -> anyhow::Result<()> {
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(768);
     let nb: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(96);
 
-    let plat = Platform::builder().backend(BackendKind::Pjrt).build()?;
+    let plat = Platform::builder().build()?;
     println!("HPL: N={n} NB={nb} P=1 Q=1 (false-dgemm Epiphany path)");
     let res = run_hpl(plat.blas(), HplConfig::small(n, nb))?;
 
     println!("  wall-clock            : {:.2} s", res.wall_s);
-    println!("  projected (Parallella): {:.2} s  ({:.3} GFLOPS)", res.projected_s, res.projected_gflops);
+    println!(
+        "  projected (Parallella): {:.2} s  ({:.3} GFLOPS)",
+        res.projected_s, res.projected_gflops
+    );
     println!("  residue (raw)         : {:.2e}  (paper @N=4608: 2.34e-6)", res.residual.raw);
     println!("  residue (HPL-scaled)  : {:.4e}  (paper: 2.1098e10)", res.residual.hpl_scaled);
     println!(

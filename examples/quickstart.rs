@@ -1,6 +1,6 @@
 //! Quickstart: boot the stack and run one accelerated sgemm.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
 //! Shows the three numbers this library always reports side by side:
 //! wall-clock on this machine, projected-Parallella seconds from the
@@ -9,9 +9,10 @@
 use parallella_blas::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    // Pjrt = the production path: the AOT-compiled jax+pallas artifact
-    // executed through the PJRT C API; python is not involved.
-    let plat = Platform::builder().backend(BackendKind::Pjrt).build()?;
+    // Default backend = the functional Epiphany simulator (always
+    // available). A `--features pjrt` build with `make artifacts` can
+    // swap in `BackendKind::Pjrt` for the AOT jax+pallas artifact path.
+    let plat = Platform::builder().build()?;
     let blas = plat.blas();
 
     // The paper's kernel-size problem: (192 × 4096) · (4096 × 256).
@@ -24,8 +25,16 @@ fn main() -> anyhow::Result<()> {
 
     println!("sgemm {m}x{n}x{k} through the Epiphany service:");
     println!("  µ-kernel calls        : {}", report.calls);
-    println!("  wall-clock (this host): {:.4} s  ({:.2} GFLOPS)", report.wall_s, report.wall_gflops());
-    println!("  projected (Parallella): {:.4} s  ({:.3} GFLOPS)", report.projected_s, report.projected_gflops());
+    println!(
+        "  wall-clock (this host): {:.4} s  ({:.2} GFLOPS)",
+        report.wall_s,
+        report.wall_gflops()
+    );
+    println!(
+        "  projected (Parallella): {:.4} s  ({:.3} GFLOPS)",
+        report.projected_s,
+        report.projected_gflops()
+    );
     println!("  paper (Table 2/3)     : ~0.158 s  (~2.5-2.6 GFLOPS)");
 
     // Sanity: verify against a host-side f64 oracle.

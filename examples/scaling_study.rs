@@ -46,7 +46,8 @@ fn main() {
         2.0 * 192.0 * 256.0 * 4096.0 / p.total_s / 1e9
     };
     for s in [512usize, 1024, 2048, 4096, 8192] {
-        let secs = analytic_blis_gemm_s(&model, s, s, s, WalkClass::Contig, WalkClass::StridedB, false);
+        let secs =
+            analytic_blis_gemm_s(&model, s, s, s, WalkClass::Contig, WalkClass::StridedB, false);
         let gf = 2.0 * (s as f64).powi(3) / secs / 1e9;
         let calls = s.div_ceil(192) * s.div_ceil(256);
         t2.row(&[

@@ -1,0 +1,8 @@
+"""Make the `compile` package importable when pytest runs from the repo
+root (`python -m pytest python/tests -q`): this directory is the python
+layer's source root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -23,7 +23,14 @@ fn main() {
         let geom = KernelGeometry { m: 192, n: 256, ksub, nsub: 4 };
         let fits = Chip::new(model.clone(), geom).is_ok();
         if !fits {
-            t.row(&[ksub.to_string(), "NO (Fig-3 map overflows)".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            t.row(&[
+                ksub.to_string(),
+                "NO (Fig-3 map overflows)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
             continue;
         }
         let mut p = ProjectionParams::kernel_same_process(k_total);

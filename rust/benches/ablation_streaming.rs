@@ -153,7 +153,10 @@ fn main() {
     let acc_m = Mat::from_col_major(geom.m, geom.n, &acc_out);
     let str_m = Mat::from_col_major(geom.m, geom.n, &stream_out);
     let err = max_scaled_err(str_m.view(), acc_m.view());
-    println!("functional agreement (accumulator vs send-every-task + host sum): max scaled err {err:.2e}");
+    println!(
+        "functional agreement (accumulator vs send-every-task + host sum): \
+         max scaled err {err:.2e}"
+    );
     assert!(err < 1e-6, "protocols disagree: {err}");
     println!(
         "conclusion: output-streaming's taller panels cannot compensate the per-task slow\n\

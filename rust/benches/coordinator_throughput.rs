@@ -22,7 +22,7 @@ struct Workload {
 }
 
 fn run(w: &Workload) -> (f64, f64, f64, u64) {
-    let srv = BlasServer::start(ServerConfig::default()).expect("make artifacts first");
+    let srv = BlasServer::start(ServerConfig::default()).expect("server boots");
     let addr = srv.addr();
     let (m, k) = (192usize, 256usize);
     let shared = Mat::<f32>::randn(m, k, 1).as_slice().to_vec();
@@ -80,10 +80,34 @@ fn main() {
     let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
     let scale = if quick { 1 } else { 2 };
     let workloads = [
-        Workload { name: "shared-A small", clients: 4, reqs_per_client: 8 * scale, n_cols: 32, shared_weights: true },
-        Workload { name: "shared-A large", clients: 4, reqs_per_client: 4 * scale, n_cols: 256, shared_weights: true },
-        Workload { name: "unique-A small", clients: 4, reqs_per_client: 8 * scale, n_cols: 32, shared_weights: false },
-        Workload { name: "single client ", clients: 1, reqs_per_client: 16 * scale, n_cols: 64, shared_weights: true },
+        Workload {
+            name: "shared-A small",
+            clients: 4,
+            reqs_per_client: 8 * scale,
+            n_cols: 32,
+            shared_weights: true,
+        },
+        Workload {
+            name: "shared-A large",
+            clients: 4,
+            reqs_per_client: 4 * scale,
+            n_cols: 256,
+            shared_weights: true,
+        },
+        Workload {
+            name: "unique-A small",
+            clients: 4,
+            reqs_per_client: 8 * scale,
+            n_cols: 32,
+            shared_weights: false,
+        },
+        Workload {
+            name: "single client ",
+            clients: 1,
+            reqs_per_client: 16 * scale,
+            n_cols: 64,
+            shared_weights: true,
+        },
     ];
     let mut t = Table::new(
         "L3 coordinator throughput (m=192, k=256 tile requests)",

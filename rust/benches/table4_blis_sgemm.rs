@@ -5,9 +5,15 @@ use parallella_blas::experiments::{table4, ExperimentScale};
 
 fn main() {
     let scale = ExperimentScale::from_env();
-    let t = table4(scale).expect("run `make artifacts` first");
+    let t = table4(scale).expect("table reproduction runs");
     println!("{}", t.rendered);
     for c in &t.checks {
-        println!("check {:<22} paper={:<12.6} ours={:<12.6} ratio={:.3}", c.name, c.paper, c.ours, c.ratio());
+        println!(
+            "check {:<22} paper={:<12.6} ours={:<12.6} ratio={:.3}",
+            c.name,
+            c.paper,
+            c.ours,
+            c.ratio()
+        );
     }
 }

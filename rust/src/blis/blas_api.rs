@@ -52,7 +52,16 @@ impl BlasLibrary {
     pub fn isamax(&self, n: usize, x: &[f32], incx: usize) -> Option<usize> {
         level1::iamax(n, x, incx)
     }
-    pub fn srot(&self, n: usize, x: &mut [f32], incx: usize, y: &mut [f32], incy: usize, c: f32, s: f32) {
+    pub fn srot(
+        &self,
+        n: usize,
+        x: &mut [f32],
+        incx: usize,
+        y: &mut [f32],
+        incy: usize,
+        c: f32,
+        s: f32,
+    ) {
         level1::rot(n, x, incx, y, incy, c, s);
     }
 
@@ -86,44 +95,111 @@ impl BlasLibrary {
     // ---------------- level 2 ----------------
 
     #[allow(clippy::too_many_arguments)]
-    pub fn sgemv(&self, trans: Trans, m: usize, n: usize, alpha: f32, a: &[f32], lda: usize, x: &[f32], beta: f32, y: &mut [f32]) {
+    pub fn sgemv(
+        &self,
+        trans: Trans,
+        m: usize,
+        n: usize,
+        alpha: f32,
+        a: &[f32],
+        lda: usize,
+        x: &[f32],
+        beta: f32,
+        y: &mut [f32],
+    ) {
         let a_v = MatRef::from_col_major(m, n, lda, a);
         level2::gemv(trans, alpha, a_v, x, beta, y);
         self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
     }
 
     #[allow(clippy::too_many_arguments)]
-    pub fn dgemv(&self, trans: Trans, m: usize, n: usize, alpha: f64, a: &[f64], lda: usize, x: &[f64], beta: f64, y: &mut [f64]) {
+    pub fn dgemv(
+        &self,
+        trans: Trans,
+        m: usize,
+        n: usize,
+        alpha: f64,
+        a: &[f64],
+        lda: usize,
+        x: &[f64],
+        beta: f64,
+        y: &mut [f64],
+    ) {
         let a_v = MatRef::from_col_major(m, n, lda, a);
         level2::gemv(trans, alpha, a_v, x, beta, y);
         self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
     }
 
-    pub fn sger(&self, m: usize, n: usize, alpha: f32, x: &[f32], y: &[f32], a: &mut [f32], lda: usize) {
+    pub fn sger(
+        &self,
+        m: usize,
+        n: usize,
+        alpha: f32,
+        x: &[f32],
+        y: &[f32],
+        a: &mut [f32],
+        lda: usize,
+    ) {
         let mut a_v = MatMut::from_col_major(m, n, lda, a);
         level2::ger(alpha, x, y, &mut a_v);
         self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
     }
 
-    pub fn dger(&self, m: usize, n: usize, alpha: f64, x: &[f64], y: &[f64], a: &mut [f64], lda: usize) {
+    pub fn dger(
+        &self,
+        m: usize,
+        n: usize,
+        alpha: f64,
+        x: &[f64],
+        y: &[f64],
+        a: &mut [f64],
+        lda: usize,
+    ) {
         let mut a_v = MatMut::from_col_major(m, n, lda, a);
         level2::ger(alpha, x, y, &mut a_v);
         self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
     }
 
-    pub fn strsv(&self, lower: bool, trans: Trans, unit: bool, n: usize, a: &[f32], lda: usize, x: &mut [f32]) {
+    pub fn strsv(
+        &self,
+        lower: bool,
+        trans: Trans,
+        unit: bool,
+        n: usize,
+        a: &[f32],
+        lda: usize,
+        x: &mut [f32],
+    ) {
         let a_v = MatRef::from_col_major(n, n, lda, a);
         level2::trsv(lower, trans, unit, a_v, x);
         self.inner.charge_host_op((n * n) as f64, host_rate());
     }
 
-    pub fn dtrsv(&self, lower: bool, trans: Trans, unit: bool, n: usize, a: &[f64], lda: usize, x: &mut [f64]) {
+    pub fn dtrsv(
+        &self,
+        lower: bool,
+        trans: Trans,
+        unit: bool,
+        n: usize,
+        a: &[f64],
+        lda: usize,
+        x: &mut [f64],
+    ) {
         let a_v = MatRef::from_col_major(n, n, lda, a);
         level2::trsv(lower, trans, unit, a_v, x);
         self.inner.charge_host_op((n * n) as f64, host_rate());
     }
 
-    pub fn strmv(&self, lower: bool, trans: Trans, unit: bool, n: usize, a: &[f32], lda: usize, x: &mut [f32]) {
+    pub fn strmv(
+        &self,
+        lower: bool,
+        trans: Trans,
+        unit: bool,
+        n: usize,
+        a: &[f32],
+        lda: usize,
+        x: &mut [f32],
+    ) {
         let a_v = MatRef::from_col_major(n, n, lda, a);
         level2::trmv(lower, trans, unit, a_v, x);
         self.inner.charge_host_op((n * n) as f64, host_rate());
@@ -196,7 +272,19 @@ impl BlasLibrary {
         Ok(())
     }
 
-    pub fn dtrsm_left(&self, lower: bool, trans: Trans, unit: bool, m: usize, n: usize, alpha: f64, a: &[f64], lda: usize, b: &mut [f64], ldb: usize) {
+    pub fn dtrsm_left(
+        &self,
+        lower: bool,
+        trans: Trans,
+        unit: bool,
+        m: usize,
+        n: usize,
+        alpha: f64,
+        a: &[f64],
+        lda: usize,
+        b: &mut [f64],
+        ldb: usize,
+    ) {
         let a_v = MatRef::from_col_major(m, m, lda, a);
         let mut b_m = Mat::from_fn(m, n, |i, j| b[i + j * ldb]);
         level3::trsm_left(lower, trans, unit, alpha, a_v, &mut b_m);
@@ -208,7 +296,18 @@ impl BlasLibrary {
         self.inner.charge_host_op((m * m * n) as f64, host_rate());
     }
 
-    pub fn dsyrk_lower(&self, trans: Trans, n: usize, k: usize, alpha: f64, a: &[f64], lda: usize, beta: f64, c: &mut [f64], ldc: usize) {
+    pub fn dsyrk_lower(
+        &self,
+        trans: Trans,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        a: &[f64],
+        lda: usize,
+        beta: f64,
+        c: &mut [f64],
+        ldc: usize,
+    ) {
         let (ar, ac) = if trans.is_trans() { (k, n) } else { (n, k) };
         let a_v = MatRef::from_col_major(ar, ac, lda, a);
         let mut c_m = Mat::from_fn(n, n, |i, j| c[i + j * ldc]);
@@ -236,7 +335,7 @@ mod tests {
 
     fn lib() -> BlasLibrary {
         let svc = ServiceHandle::spawn(
-            ServiceBackend::Pjrt,
+            ServiceBackend::Simulator,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )
@@ -295,7 +394,9 @@ mod tests {
         let a = Mat::<f64>::randn(m, k, 1);
         let b = Mat::<f64>::randn(k, n, 2);
         let mut c = vec![0.0f64; m * n];
-        lib.dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, &mut c, m).unwrap();
+        #[rustfmt::skip]
+        lib.dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, &mut c, m)
+            .unwrap();
         let mut want = Mat::<f64>::zeros(m, n);
         level3::gemm_host(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut want);
         let got = Mat::from_col_major(m, n, &c);

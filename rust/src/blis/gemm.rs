@@ -62,7 +62,11 @@ pub struct Blas {
 impl Blas {
     pub fn new(svc: ServiceHandle) -> Self {
         let g = svc.geometry();
-        Blas { svc, ctx: BlisContext { mr: g.m, nr: g.n, kc: 0 }, stats: Mutex::new(BlasStats::default()) }
+        Blas {
+            svc,
+            ctx: BlisContext { mr: g.m, nr: g.n, kc: 0 },
+            stats: Mutex::new(BlasStats::default()),
+        }
     }
 
     pub fn service(&self) -> &ServiceHandle {
@@ -80,7 +84,9 @@ impl Blas {
         beta: f32,
         c: &mut Mat<f32>,
     ) -> Result<GemmReport> {
-        let report = self.gemm_driver(ta, tb, a, b, c.rows(), c.cols(), |_k, a_p, b_p, c_p, params| {
+        let rows = c.rows();
+        let cols = c.cols();
+        let report = self.gemm_driver(ta, tb, a, b, rows, cols, |_k, a_p, b_p, c_p, params| {
             let (out, resp) = self.svc.sgemm(alpha, a_p, b_p, beta, c_p, params)?;
             Ok((out, resp.projection.total_s, resp.wall_s))
         }, c)?;
@@ -100,7 +106,9 @@ impl Blas {
         beta: f64,
         c: &mut Mat<f64>,
     ) -> Result<GemmReport> {
-        let report = self.gemm_driver(ta, tb, a, b, c.rows(), c.cols(), |_k, a_p, b_p, c_p, params| {
+        let rows = c.rows();
+        let cols = c.cols();
+        let report = self.gemm_driver(ta, tb, a, b, rows, cols, |_k, a_p, b_p, c_p, params| {
             let (out, resp) = self.svc.false_dgemm(alpha, a_p, b_p, beta, c_p, params)?;
             Ok((out, resp.projection.total_s, resp.wall_s))
         }, c)?;
@@ -129,7 +137,8 @@ impl Blas {
         ensure!(op_b.cols() == n, "op(B) cols {} != C cols {n}", op_b.cols());
 
         let (mr, nr) = (self.ctx.mr, self.ctx.nr);
-        let mut report = GemmReport { flops: 2.0 * m as f64 * n as f64 * k as f64, ..Default::default() };
+        let mut report =
+            GemmReport { flops: 2.0 * m as f64 * n as f64 * k as f64, ..Default::default() };
 
         // jc loop: column tiles; pack B once per tile, reuse across ic.
         for jc in 0..BlisContext::tiles(n, nr) {
@@ -180,11 +189,11 @@ mod tests {
 
     fn blas() -> Blas {
         let svc = ServiceHandle::spawn(
-            ServiceBackend::Pjrt,
+            ServiceBackend::Simulator,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )
-        .expect("make artifacts first");
+        .expect("service boots");
         Blas::new(svc)
     }
 
@@ -249,8 +258,10 @@ mod tests {
         let b = Mat::<f32>::randn(k, n, 5);
         let mut c1 = Mat::<f32>::zeros(m, n);
         let mut c2 = Mat::<f32>::zeros(m, n);
-        let rep_nn = blas.sgemm(Trans::N, Trans::N, 1.0, a_n.view(), b.view(), 0.0, &mut c1).unwrap();
-        let rep_tn = blas.sgemm(Trans::T, Trans::N, 1.0, a_t.view(), b.view(), 0.0, &mut c2).unwrap();
+        let rep_nn =
+            blas.sgemm(Trans::N, Trans::N, 1.0, a_n.view(), b.view(), 0.0, &mut c1).unwrap();
+        let rep_tn =
+            blas.sgemm(Trans::T, Trans::N, 1.0, a_t.view(), b.view(), 0.0, &mut c2).unwrap();
         assert!(
             rep_tn.projected_s > rep_nn.projected_s * 1.1,
             "tn {} vs nn {}",

@@ -166,10 +166,12 @@ mod tests {
     fn symv_matches_full_gemv() {
         let n = 5;
         let full = {
-            let lower = Mat::<f64>::from_fn(n, n, |i, j| if i >= j { (i + j) as f64 + 1.0 } else { 0.0 });
+            let lower =
+                Mat::<f64>::from_fn(n, n, |i, j| if i >= j { (i + j) as f64 + 1.0 } else { 0.0 });
             Mat::from_fn(n, n, |i, j| if i >= j { lower.get(i, j) } else { lower.get(j, i) })
         };
-        let lower = Mat::<f64>::from_fn(n, n, |i, j| if i >= j { (i + j) as f64 + 1.0 } else { -99.0 });
+        let lower =
+            Mat::<f64>::from_fn(n, n, |i, j| if i >= j { (i + j) as f64 + 1.0 } else { -99.0 });
         let x: Vec<f64> = (0..n).map(|v| v as f64 - 2.0).collect();
         let mut y1 = vec![0.0; n];
         let mut y2 = vec![0.0; n];

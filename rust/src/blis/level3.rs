@@ -64,7 +64,8 @@ pub fn symm_lower_left<T: Real>(
     let n = a_lower.rows();
     assert_eq!(a_lower.cols(), n);
     // Materialize the symmetric operand once (host op, clarity over speed).
-    let full = Mat::from_fn(n, n, |i, j| if i >= j { a_lower.get(i, j) } else { a_lower.get(j, i) });
+    let full =
+        Mat::from_fn(n, n, |i, j| if i >= j { a_lower.get(i, j) } else { a_lower.get(j, i) });
     gemm_host(Trans::N, Trans::N, alpha, full.view(), b, beta, c);
 }
 
@@ -139,7 +140,8 @@ pub fn trsm_left<T: Real>(
             (i0, j0, r, c)
         }
     };
-    let blocks: Vec<(usize, usize)> = (0..m.div_ceil(NB)).map(|b| (b * NB, NB.min(m - b * NB))).collect();
+    let blocks: Vec<(usize, usize)> =
+        (0..m.div_ceil(NB)).map(|b| (b * NB, NB.min(m - b * NB))).collect();
     let order: Vec<usize> = if eff_lower {
         (0..blocks.len()).collect()
     } else {
@@ -283,7 +285,11 @@ mod tests {
     #[test]
     fn symm_uses_lower_storage() {
         let n = 6;
-        let lower = Mat::<f64>::from_fn(n, n, |i, j| if i >= j { ((i + 2 * j) % 7) as f64 } else { f64::NAN });
+        let lower = Mat::<f64>::from_fn(
+            n,
+            n,
+            |i, j| if i >= j { ((i + 2 * j) % 7) as f64 } else { f64::NAN },
+        );
         let b = Mat::<f64>::randn(n, 4, 6);
         let mut c = Mat::<f64>::zeros(n, 4);
         symm_lower_left(1.0, lower.view(), b.view(), 0.0, &mut c);

@@ -60,9 +60,13 @@ pub fn run_sgemm_case(
     k: usize,
     seed: u64,
 ) -> Result<TestRow> {
-    let a = if ta.is_trans() { Mat::<f32>::randn(k, m, seed) } else { Mat::<f32>::randn(m, k, seed) };
-    let b =
-        if tb.is_trans() { Mat::<f32>::randn(n, k, seed + 1) } else { Mat::<f32>::randn(k, n, seed + 1) };
+    let a =
+        if ta.is_trans() { Mat::<f32>::randn(k, m, seed) } else { Mat::<f32>::randn(m, k, seed) };
+    let b = if tb.is_trans() {
+        Mat::<f32>::randn(n, k, seed + 1)
+    } else {
+        Mat::<f32>::randn(k, n, seed + 1)
+    };
     let c0 = Mat::<f32>::randn(m, n, seed + 2);
     let mut c = c0.clone();
     let report = blas.sgemm(ta, tb, 1.0, a.view(), b.view(), 1.0, &mut c)?;
@@ -87,9 +91,13 @@ pub fn run_false_dgemm_case(
     k: usize,
     seed: u64,
 ) -> Result<TestRow> {
-    let a = if ta.is_trans() { Mat::<f64>::randn(k, m, seed) } else { Mat::<f64>::randn(m, k, seed) };
-    let b =
-        if tb.is_trans() { Mat::<f64>::randn(n, k, seed + 1) } else { Mat::<f64>::randn(k, n, seed + 1) };
+    let a =
+        if ta.is_trans() { Mat::<f64>::randn(k, m, seed) } else { Mat::<f64>::randn(m, k, seed) };
+    let b = if tb.is_trans() {
+        Mat::<f64>::randn(n, k, seed + 1)
+    } else {
+        Mat::<f64>::randn(k, n, seed + 1)
+    };
     let c0 = Mat::<f64>::randn(m, n, seed + 2);
     let mut c = c0.clone();
     let report = blas.dgemm_false(ta, tb, 1.0, a.view(), b.view(), 1.0, &mut c)?;
@@ -137,7 +145,7 @@ mod tests {
 
     fn blas() -> Blas {
         let svc = ServiceHandle::spawn(
-            ServiceBackend::Pjrt,
+            ServiceBackend::Simulator,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )

@@ -247,7 +247,11 @@ fn execute_group(blas: &Blas, all: &[Queued], group: &[usize], cols: usize, metr
             first.beta,
             &mut c_cat,
         )?;
-        metrics.record_request(super::metrics::RequestKind::Gemm, t0.elapsed().as_secs_f64(), rep.flops);
+        metrics.record_request(
+            super::metrics::RequestKind::Gemm,
+            t0.elapsed().as_secs_f64(),
+            rep.flops,
+        );
         // Split back per job.
         let mut outs = Vec::with_capacity(group.len());
         let mut j0 = 0usize;
@@ -290,13 +294,15 @@ mod tests {
 
     fn batcher() -> (Batcher, Arc<Metrics>) {
         let svc = ServiceHandle::spawn(
-            ServiceBackend::Pjrt,
+            ServiceBackend::Simulator,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )
         .unwrap();
         let metrics = Arc::new(Metrics::new());
-        (Batcher::spawn(Arc::new(Blas::new(svc)), BatchPolicy::default(), Arc::clone(&metrics)), metrics)
+        let batcher =
+            Batcher::spawn(Arc::new(Blas::new(svc)), BatchPolicy::default(), Arc::clone(&metrics));
+        (batcher, metrics)
     }
 
     fn job(m: usize, n: usize, k: usize, seed: u64, a: Option<Vec<f32>>) -> GemmJob {

@@ -321,10 +321,16 @@ impl Response {
         }
         Ok(match body[1] {
             0 => Response::OkF32(
-                body[2..].chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                body[2..]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
             ),
             1 => Response::OkF64(
-                body[2..].chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+                body[2..]
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
             ),
             2 => Response::OkText(String::from_utf8_lossy(&body[2..]).into_owned()),
             d => bail!("bad dtype tag {d}"),

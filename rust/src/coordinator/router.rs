@@ -63,7 +63,11 @@ impl Router {
                 let b_v = MatRef::from_col_major(br, bc, br, &b);
                 let mut c_m = Mat::from_col_major(m, n, &c);
                 let rep = self.blas.dgemm_false(ta, tb, alpha, a_v, b_v, beta, &mut c_m)?;
-                self.metrics.record_request(RequestKind::Gemm, t0.elapsed().as_secs_f64(), rep.flops);
+                self.metrics.record_request(
+                    RequestKind::Gemm,
+                    t0.elapsed().as_secs_f64(),
+                    rep.flops,
+                );
                 Ok(Response::OkF64(c_m.as_slice().to_vec()))
             }
             Request::Sgemv { ta, m, n, alpha, beta, a, x, mut y } => {
@@ -105,14 +109,15 @@ mod tests {
 
     fn router() -> Router {
         let svc = ServiceHandle::spawn(
-            ServiceBackend::Pjrt,
+            ServiceBackend::Simulator,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )
         .unwrap();
         let blas = Arc::new(Blas::new(svc));
         let metrics = Arc::new(Metrics::new());
-        let batcher = Batcher::spawn(Arc::clone(&blas), BatchPolicy::default(), Arc::clone(&metrics));
+        let batcher =
+            Batcher::spawn(Arc::clone(&blas), BatchPolicy::default(), Arc::clone(&metrics));
         Router::new(blas, batcher, metrics)
     }
 

@@ -28,7 +28,9 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:0".into(),
-            backend: ServiceBackend::Pjrt,
+            // The simulator is the always-available backend; opt into
+            // `ServiceBackend::Pjrt` in pjrt-featured builds.
+            backend: ServiceBackend::Simulator,
             batch: BatchPolicy::default(),
         }
     }
@@ -161,7 +163,7 @@ mod tests {
     use crate::linalg::{max_scaled_err, Mat};
 
     fn server() -> BlasServer {
-        BlasServer::start(ServerConfig::default()).expect("make artifacts first")
+        BlasServer::start(ServerConfig::default()).expect("server boots")
     }
 
     #[test]

@@ -95,10 +95,23 @@ impl KernelGeometry {
     }
 
     pub fn validate(&self) -> Result<()> {
-        ensure!(self.m > 0 && self.m % 32 == 0, "m must be a positive multiple of 32 (doMult vector length), got {}", self.m);
-        ensure!(self.ksub % CORES == 0, "KSUB ({}) must divide evenly across {CORES} cores", self.ksub);
+        ensure!(
+            self.m > 0 && self.m % 32 == 0,
+            "m must be a positive multiple of 32 (doMult vector length), got {}",
+            self.m
+        );
+        ensure!(
+            self.ksub % CORES == 0,
+            "KSUB ({}) must divide evenly across {CORES} cores",
+            self.ksub
+        );
         ensure!(self.k_slice() > 0, "KSUB too small");
-        ensure!(self.n % (CORES * self.nsub) == 0, "n ({}) must be a multiple of CORES*NSUB ({})", self.n, CORES * self.nsub);
+        ensure!(
+            self.n % (CORES * self.nsub) == 0,
+            "n ({}) must be a multiple of CORES*NSUB ({})",
+            self.n,
+            CORES * self.nsub
+        );
         Ok(())
     }
 
@@ -214,7 +227,8 @@ impl Chip {
 
                     let a_local = core.lm.buf(core.a);
                     let mut next = vec![0.0f32; m * nsub];
-                    let st = submatmul(&self.model, m, k_slice, nsub, a_local, &b_sub, &prev, &mut next);
+                    let st =
+                        submatmul(&self.model, m, k_slice, nsub, a_local, &b_sub, &prev, &mut next);
                     sub_cycles = sub_cycles.max(st.cycles);
                     self.stats.submatmuls += 1;
                     self.stats.macs += st.macs;
@@ -269,7 +283,12 @@ impl Chip {
     /// Convenience: host writes both panels to `selector` and runs a task
     /// (the service's per-iteration body, without the upload/compute
     /// overlap that the timing layer models separately).
-    pub fn upload_and_run(&mut self, inputs: TaskInputs<'_>, command: Command, selector: usize) -> Result<()> {
+    pub fn upload_and_run(
+        &mut self,
+        inputs: TaskInputs<'_>,
+        command: Command,
+        selector: usize,
+    ) -> Result<()> {
         self.host_write_a_panel(selector, inputs.a_panel);
         self.host_write_b_panel(selector, inputs.b_panel);
         self.run_task(command, selector)

@@ -144,7 +144,14 @@ impl CalibratedModel {
 
     /// Chip compute time for one Epiphany Task (all cores lock-step):
     /// `col_iters × k_iters × (subMatmul + 2 barriers)` plus task overhead.
-    pub fn task_compute_s(&self, m_rows: usize, nsub: usize, k_depth: usize, col_iters: usize, k_iters: usize) -> f64 {
+    pub fn task_compute_s(
+        &self,
+        m_rows: usize,
+        nsub: usize,
+        k_depth: usize,
+        col_iters: usize,
+        k_iters: usize,
+    ) -> f64 {
         let per_k_iter = self.submatmul_cycles(m_rows, nsub, k_depth) + 2 * self.barrier_cycles;
         let cycles = (col_iters * k_iters) as u64 * per_k_iter + self.task_overhead_cycles;
         cycles as f64 / self.core_hz
@@ -179,6 +186,8 @@ impl CalibratedModel {
 mod tests {
     use super::*;
     use crate::epiphany::PEAK_GFLOPS;
+    use crate::host::projection::{project_ukr_call, ProjectionParams};
+    use crate::util::proptest::{forall, Config};
 
     #[test]
     fn peak_is_19_2() {
@@ -224,5 +233,76 @@ mod tests {
         let m = CalibratedModel::default();
         let t = m.upload_s(112 * 1024, WalkClass::Contig);
         assert!((t - 1.479e-3).abs() < 0.02e-3, "t = {t}");
+    }
+
+    // ---- property tests (crate-local mini-proptest; no external deps) ----
+
+    #[test]
+    fn prop_predicted_time_monotone_in_bytes_moved() {
+        // More bytes through any channel can never be predicted faster.
+        let m = CalibratedModel::default();
+        forall(
+            Config::default(),
+            |rng| (rng.next_below(1 << 22), rng.next_below(1 << 22)),
+            |&(x, y)| {
+                let (lo, hi) = (x.min(y), x.max(y));
+                let upload_monotone = [WalkClass::Contig, WalkClass::StridedA, WalkClass::StridedB]
+                    .iter()
+                    .all(|&w| m.upload_s(lo, w) <= m.upload_s(hi, w));
+                upload_monotone && m.task_coproc_s(lo, 0.0) <= m.task_coproc_s(hi, 0.0)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_submatmul_efficiency_strictly_below_one() {
+        // Per-doMult setup + loop overheads mean the model can never claim
+        // more than 1 MAC/cycle/core — the physical issue-rate ceiling.
+        forall(
+            Config::default(),
+            |rng| {
+                let m_rows = 32 * (1 + rng.next_below(12));
+                let nsub = 1 + rng.next_below(8);
+                let k_depth = 1 + rng.next_below(16);
+                (m_rows, nsub, k_depth)
+            },
+            |&(m_rows, nsub, k_depth)| {
+                let eff = CalibratedModel::default().submatmul_efficiency(m_rows, nsub, k_depth);
+                eff > 0.0 && eff < 1.0
+            },
+        );
+    }
+
+    #[test]
+    fn prop_projected_sgemm_gflops_never_exceed_chip_peak() {
+        // Whatever the reduction depth, a projected µ-kernel call must not
+        // beat the 19.2 GFLOPS chip peak (transfers only slow it down).
+        let model = CalibratedModel::default();
+        forall(
+            Config { cases: 128, ..Config::default() },
+            |rng| 1 + rng.next_below(1 << 15),
+            |&k| {
+                let p = ProjectionParams::kernel_same_process(k);
+                let proj = project_ukr_call(&model, &p);
+                let gf = proj.gflops(192, 256, k);
+                gf > 0.0 && gf < PEAK_GFLOPS
+            },
+        );
+    }
+
+    #[test]
+    fn prop_task_compute_monotone_in_iterations() {
+        // More Column/K Iterations can only add lock-step cycles.
+        let m = CalibratedModel::default();
+        forall(
+            Config::default(),
+            |rng| (1 + rng.next_below(8), 1 + rng.next_below(32)),
+            |&(col_iters, k_iters)| {
+                let t0 = m.task_compute_s(192, 4, 4, col_iters, k_iters);
+                let t1 = m.task_compute_s(192, 4, 4, col_iters + 1, k_iters);
+                let t2 = m.task_compute_s(192, 4, 4, col_iters, k_iters + 1);
+                t1 > t0 && t2 > t0
+            },
+        );
     }
 }

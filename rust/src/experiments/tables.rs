@@ -5,12 +5,12 @@ use super::ExperimentScale;
 use crate::blis::testsuite::{run_false_dgemm_case, run_sgemm_case, sweep_all_variants};
 use crate::blis::{Blas, Trans};
 use crate::epiphany::timing::{CalibratedModel, WalkClass};
+use crate::esdk::EHal;
 use crate::host::microkernel::{host_ref_sgemm, InnerMicroKernel, UkrBackend};
 use crate::host::projection::{project_host_ref, project_ukr_call, ProjectionParams};
 use crate::host::service::{ServiceBackend, ServiceHandle};
 use crate::hpl::driver::{run_hpl, HplConfig};
 use crate::linalg::{max_abs, Mat};
-use crate::runtime::GemmExecutor;
 use crate::util::tables::{gf, sci, secs, Table};
 use anyhow::Result;
 
@@ -79,7 +79,15 @@ pub fn hpl_projection_s(model: &CalibratedModel, n: usize, nb: usize) -> f64 {
             total += (jb * jb * rest) as f64 / (model.host_trsm_f64_gflops * 1e9);
             // Trailing update through the false dgemm (L21 is col-major ⇒
             // contig A walk; U12 feeds the row-major panel ⇒ strided B walk).
-            total += analytic_blis_gemm_s(model, rest, rest, jb, WalkClass::Contig, WalkClass::StridedB, true);
+            total += analytic_blis_gemm_s(
+                model,
+                rest,
+                rest,
+                jb,
+                WalkClass::Contig,
+                WalkClass::StridedB,
+                true,
+            );
         }
     }
     // Forward/backward solve.
@@ -95,7 +103,7 @@ pub fn table1(scale: ExperimentScale) -> Result<TableResult> {
     let proj = project_ukr_call(&model, &p);
     let href_s = project_host_ref(&model, 192, 256, 4096);
 
-    // Executed numerics: PJRT artifact at K (full = paper's 4096).
+    // Executed numerics: functional simulator at K (full = paper's 4096).
     let k_exec = if scale == ExperimentScale::Full { 4096 } else { 1024 };
     let a = Mat::<f32>::randn(192, k_exec, 11);
     let b = Mat::<f32>::randn(k_exec, 256, 12);
@@ -110,7 +118,7 @@ pub fn table1(scale: ExperimentScale) -> Result<TableResult> {
     };
     let c = Mat::<f32>::zeros(192, 256);
     let mut ukr = InnerMicroKernel::new(
-        UkrBackend::Pjrt(GemmExecutor::discover()?),
+        UkrBackend::Simulator(EHal::new(model.clone())),
         model.clone(),
         crate::epiphany::kernel::KernelGeometry::paper(),
     )?;
@@ -142,8 +150,18 @@ pub fn table1(scale: ExperimentScale) -> Result<TableResult> {
     let mean_err = sum_err / (192.0 * 256.0);
 
     // Wall-clock of the naive host reference at the executed size.
+    let k_href = k_exec.min(512);
     let (_, href_wall) = crate::util::timed(|| {
-        host_ref_sgemm(192, 256, k_exec.min(512), 1.0, &a.as_slice()[..192 * k_exec.min(512)], &b_rm[..k_exec.min(512) * 256], 0.0, c.as_slice())
+        host_ref_sgemm(
+            192,
+            256,
+            k_href,
+            1.0,
+            &a.as_slice()[..192 * k_href],
+            &b_rm[..k_href * 256],
+            0.0,
+            c.as_slice(),
+        )
     });
 
     let mut t = Table::new(
@@ -151,21 +169,25 @@ pub fn table1(scale: ExperimentScale) -> Result<TableResult> {
         &["Description", "paper (s)", "projected (s)", "ratio"],
     );
     let r = |a: f64, b: f64| format!("{:.3}", b / a);
-    t.row(&["Host reference code".into(), secs(3.778169), secs(href_s), r(3.778169, href_s)]);
-    t.row(&["Input loading + preprocessing".into(), secs(0.094648), secs(proj.input_s), r(0.094648, proj.input_s)]);
-    t.row(&["Coprocessor work".into(), secs(0.105652), secs(proj.coproc_s), r(0.105652, proj.coproc_s)]);
-    t.row(&["Host retrieve + post-processing".into(), secs(0.005272), secs(proj.post_s), r(0.005272, proj.post_s)]);
-    t.row(&["Total sgemm µ-kernel".into(), secs(0.114114), secs(proj.total_s), r(0.114114, proj.total_s)]);
+    #[rustfmt::skip]
+    {
+        t.row(&["Host reference code".into(), secs(3.778169), secs(href_s), r(3.778169, href_s)]);
+        t.row(&["Input loading + preprocessing".into(), secs(0.094648), secs(proj.input_s), r(0.094648, proj.input_s)]);
+        t.row(&["Coprocessor work".into(), secs(0.105652), secs(proj.coproc_s), r(0.105652, proj.coproc_s)]);
+        t.row(&["Host retrieve + post-processing".into(), secs(0.005272), secs(proj.post_s), r(0.005272, proj.post_s)]);
+        t.row(&["Total sgemm µ-kernel".into(), secs(0.114114), secs(proj.total_s), r(0.114114, proj.total_s)]);
+    }
     let mut rendered = t.render();
     rendered.push_str(&format!(
         "GFLOPS: paper 3.529 | projected {} | host-ref paper 0.107 | projected {}\n\
-         errors (executed @K={k_exec}, PJRT artifact): mean {} (paper 8.73e-8), max {} (paper 5.83e-7)\n\
+         errors (executed @K={k_exec}, simulator): mean {} (paper 8.73e-8), \
+         max {} (paper 5.83e-7)\n\
          host-ref wall-clock sample (K={}): {:.3}s on this machine\n",
         gf(proj.gflops(192, 256, 4096)),
         gf(2.0 * 192.0 * 256.0 * 4096.0 / href_s / 1e9),
         sci(mean_err),
         sci(max_err),
-        k_exec.min(512),
+        k_href,
         href_wall,
     ));
 
@@ -177,7 +199,11 @@ pub fn table1(scale: ExperimentScale) -> Result<TableResult> {
             Check { name: "t1.coproc_s".into(), paper: 0.105652, ours: proj.coproc_s },
             Check { name: "t1.gflops".into(), paper: 3.529, ours: proj.gflops(192, 256, 4096) },
             Check { name: "t1.hostref_s".into(), paper: 3.778169, ours: href_s },
-            Check { name: "t1.mean_err_log10".into(), paper: (8.73e-8f64).log10(), ours: mean_err.max(1e-12).log10() },
+            Check {
+                name: "t1.mean_err_log10".into(),
+                paper: (8.73e-8f64).log10(),
+                ours: mean_err.max(1e-12).log10(),
+            },
         ],
     })
 }
@@ -189,18 +215,24 @@ pub fn table2(scale: ExperimentScale) -> Result<TableResult> {
 
     // Executed: real service crossing at scaled K.
     let k_exec = if scale == ExperimentScale::Full { 4096 } else { 512 };
-    let blas = blas(ServiceBackend::Pjrt)?;
+    let blas = blas(ServiceBackend::Simulator)?;
     let row = run_sgemm_case(&blas, Trans::N, Trans::N, 192, 256, k_exec, 21)?;
 
     let mut t = Table::new(
         "Table 2 — sgemm kernel via service process (M=192, N=256, K=4096)",
         &["Description", "paper", "projected", "ratio"],
     );
-    t.row(&["Total sgemm µ-kernel (s)".into(), secs(0.158303), secs(proj.total_s), format!("{:.3}", proj.total_s / 0.158303)]);
-    t.row(&["GFLOPS/s".into(), gf(2.543), gf(proj.gflops(192, 256, 4096)), format!("{:.3}", proj.gflops(192, 256, 4096) / 2.543)]);
+    let t2_gf = proj.gflops(192, 256, 4096);
+    t.row(&[
+        "Total sgemm µ-kernel (s)".into(),
+        secs(0.158303),
+        secs(proj.total_s),
+        format!("{:.3}", proj.total_s / 0.158303),
+    ]);
+    t.row(&["GFLOPS/s".into(), gf(2.543), gf(t2_gf), format!("{:.3}", t2_gf / 2.543)]);
     let mut rendered = t.render();
     rendered.push_str(&format!(
-        "executed @K={k_exec}: residue {} (service+PJRT path), wall {:.4}s\n",
+        "executed @K={k_exec}: residue {} (service+simulator path), wall {:.4}s\n",
         sci(row.residue),
         row.report.wall_s
     ));
@@ -216,11 +248,12 @@ pub fn table2(scale: ExperimentScale) -> Result<TableResult> {
 /// Table 3: BLIS sgemm at kernel size.
 pub fn table3(scale: ExperimentScale) -> Result<TableResult> {
     let model = CalibratedModel::default();
-    let proj_s = analytic_blis_gemm_s(&model, 192, 256, 4096, WalkClass::Contig, WalkClass::StridedB, false);
+    let proj_s =
+        analytic_blis_gemm_s(&model, 192, 256, 4096, WalkClass::Contig, WalkClass::StridedB, false);
     let proj_gf = 2.0 * 192.0 * 256.0 * 4096.0 / proj_s / 1e9;
 
     let k_exec = if scale == ExperimentScale::Full { 4096 } else { 512 };
-    let blas = blas(ServiceBackend::Pjrt)?;
+    let blas = blas(ServiceBackend::Simulator)?;
     let row = run_sgemm_case(&blas, Trans::N, Trans::N, 192, 256, k_exec, 31)?;
 
     let mut t = Table::new(
@@ -276,14 +309,16 @@ fn variant_table(
     let mut checks = Vec::new();
 
     // Executed sweep at reduced size for residues.
-    let (em, en, ek) = if scale == ExperimentScale::Full { (4096, 4096, 4096) } else { (384, 512, 256) };
-    let blas = blas(ServiceBackend::Pjrt)?;
+    let (em, en, ek) =
+        if scale == ExperimentScale::Full { (4096, 4096, 4096) } else { (384, 512, 256) };
+    let blas = blas(ServiceBackend::Simulator)?;
     let rows = sweep_all_variants(&blas, dgemm, em, en, ek)?;
 
     for (i, &(code, paper_gf, paper_res)) in paper_vals.iter().enumerate() {
         let ta = Trans::all()[i / 4];
         let tb = Trans::all()[i % 4];
-        let proj_s = analytic_blis_gemm_s(&model, m, n, k, class_of(ta, true), class_of(tb, false), dgemm);
+        let proj_s =
+            analytic_blis_gemm_s(&model, m, n, k, class_of(ta, true), class_of(tb, false), dgemm);
         let proj_gf = flops / proj_s / 1e9;
         let res = rows[i].residue;
         t.row(&[
@@ -313,7 +348,9 @@ pub fn table4(scale: ExperimentScale) -> Result<TableResult> {
         ("hn", 2.035, 4.67e-7), ("ht", 2.090, 4.69e-7), ("hc", 2.037, 4.69e-7), ("hh", 2.094, 4.63e-7),
     ];
     // Reorder to [N,T,C,H]² iteration order (paper groups differently).
-    let order = ["nn", "nt", "nc", "nh", "tn", "tt", "tc", "th", "cn", "ct", "cc", "ch", "hn", "ht", "hc", "hh"];
+    #[rustfmt::skip]
+    let order = ["nn", "nt", "nc", "nh", "tn", "tt", "tc", "th",
+                 "cn", "ct", "cc", "ch", "hn", "ht", "hc", "hh"];
     let mut vals = Vec::new();
     for (i, &code) in order.iter().enumerate() {
         // paper lists n,c aliases: map via code lookup
@@ -327,11 +364,12 @@ pub fn table4(scale: ExperimentScale) -> Result<TableResult> {
 /// Table 5: the false-dgemm kernel result.
 pub fn table5(scale: ExperimentScale) -> Result<TableResult> {
     let model = CalibratedModel::default();
-    let proj_s = analytic_blis_gemm_s(&model, 192, 256, 4096, WalkClass::Contig, WalkClass::StridedB, true);
+    let proj_s =
+        analytic_blis_gemm_s(&model, 192, 256, 4096, WalkClass::Contig, WalkClass::StridedB, true);
     let proj_gf = 2.0 * 192.0 * 256.0 * 4096.0 / proj_s / 1e9;
 
     let k_exec = if scale == ExperimentScale::Full { 4096 } else { 512 };
-    let blas = blas(ServiceBackend::Pjrt)?;
+    let blas = blas(ServiceBackend::Simulator)?;
     let row = run_false_dgemm_case(&blas, Trans::N, Trans::N, 192, 256, k_exec, 51)?;
 
     let mut t = Table::new(
@@ -370,7 +408,7 @@ pub fn table7(scale: ExperimentScale) -> Result<TableResult> {
     } else {
         HplConfig::small(576, 96)
     };
-    let blas = blas(ServiceBackend::Pjrt)?;
+    let blas = blas(ServiceBackend::Simulator)?;
     let res = run_hpl(&blas, cfg)?;
 
     let mut t = Table::new(
@@ -391,7 +429,8 @@ pub fn table7(scale: ExperimentScale) -> Result<TableResult> {
     ]);
     let mut rendered = t.render();
     rendered.push_str(&format!(
-        "executed wall {:.2}s; gemm share of projected time {:.0}% (paper's §4.3: host level-2 dominates)\n",
+        "executed wall {:.2}s; gemm share of projected time {:.0}% \
+         (paper's §4.3: host level-2 dominates)\n",
         res.wall_s,
         100.0 * res.lu.gemm_projected_s / res.projected_s
     ));
@@ -400,7 +439,11 @@ pub fn table7(scale: ExperimentScale) -> Result<TableResult> {
         checks: vec![
             Check { name: "t7.time_s".into(), paper: 131.81, ours: proj_s },
             Check { name: "t7.gflops".into(), paper: 0.495, ours: proj_gf },
-            Check { name: "t7.residue_log10".into(), paper: (2.34e-6f64).log10(), ours: res.residual.raw.max(1e-12).log10() },
+            Check {
+                name: "t7.residue_log10".into(),
+                paper: (2.34e-6f64).log10(),
+                ours: res.residual.raw.max(1e-12).log10(),
+            },
         ],
     })
 }

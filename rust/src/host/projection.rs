@@ -91,7 +91,13 @@ pub fn project_ukr_call(model: &CalibratedModel, p: &ProjectionParams) -> Projec
         model.upload_s(a_bytes, p.class_a) + model.upload_s(b_bytes, p.class_b);
     // Per-task coprocessor occupancy: e-link DMA in + lock-step compute.
     let col_iters = p.n / (crate::epiphany::CORES * p.nsub);
-    let compute = model.task_compute_s(p.m, p.nsub, p.ksub / crate::epiphany::CORES, col_iters, crate::epiphany::CORES);
+    let compute = model.task_compute_s(
+        p.m,
+        p.nsub,
+        p.ksub / crate::epiphany::CORES,
+        col_iters,
+        crate::epiphany::CORES,
+    );
     let coproc = model.task_coproc_s(in_bytes, compute);
 
     // The §3.3 pipeline: upload t+1 overlaps coproc t.
@@ -114,7 +120,8 @@ pub fn project_ukr_call(model: &CalibratedModel, p: &ProjectionParams) -> Projec
 
     // Post: slow HC-RAM read + αβ epilogue on the host.
     let post_flops = 2.0 * (p.m * p.n) as f64;
-    let post_s = out_bytes as f64 / model.w_host_read + post_flops / (model.host_stream_gflops * 1e9);
+    let post_s =
+        out_bytes as f64 / model.w_host_read + post_flops / (model.host_stream_gflops * 1e9);
 
     // IPC through HH-RAM (write by caller + read by service, both ways).
     let elem_bytes = if p.dgemm { 8 } else { 4 };

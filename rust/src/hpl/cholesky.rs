@@ -71,7 +71,8 @@ pub fn potrf_lower(blas: &Blas, a: &mut Mat<f64>, nb: usize) -> Result<super::lu
             // A22 -= L21 · L21ᵀ — syrk-shaped, routed through false dgemm
             // (full update; the upper half is ignored downstream).
             let mut a22 = a.view().sub(rest0, rest0, n - rest0, n - rest0).to_mat();
-            let rep = blas.dgemm_false(Trans::N, Trans::T, -1.0, l21.view(), l21.view(), 1.0, &mut a22)?;
+            let rep =
+                blas.dgemm_false(Trans::N, Trans::T, -1.0, l21.view(), l21.view(), 1.0, &mut a22)?;
             for j in 0..n - rest0 {
                 for i in 0..n - rest0 {
                     a.set(rest0 + i, rest0 + j, a22.get(i, j));
@@ -104,7 +105,7 @@ mod tests {
 
     fn blas() -> Blas {
         let svc = ServiceHandle::spawn(
-            ServiceBackend::Pjrt,
+            ServiceBackend::Simulator,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )

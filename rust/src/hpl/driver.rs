@@ -93,7 +93,7 @@ mod tests {
 
     fn blas() -> Blas {
         let svc = ServiceHandle::spawn(
-            ServiceBackend::Pjrt,
+            ServiceBackend::Simulator,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )

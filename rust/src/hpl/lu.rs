@@ -76,7 +76,11 @@ fn panel_factor(a: &mut Mat<f64>, j0: usize, nb: usize) -> Result<Vec<usize>> {
 
 /// Blocked right-looking LU: factor `a` in place (L unit-lower, U upper),
 /// returning pivots and the accounting report. `nb` is HPL's NB.
-pub fn lu_factor_blocked(blas: &Blas, a: &mut Mat<f64>, nb: usize) -> Result<(Vec<usize>, LuReport)> {
+pub fn lu_factor_blocked(
+    blas: &Blas,
+    a: &mut Mat<f64>,
+    nb: usize,
+) -> Result<(Vec<usize>, LuReport)> {
     let n = a.rows();
     ensure!(a.cols() == n, "square matrices only (HPL solves N×N)");
     let mut report = LuReport::default();
@@ -167,7 +171,7 @@ mod tests {
 
     fn blas() -> Blas {
         let svc = ServiceHandle::spawn(
-            ServiceBackend::Pjrt,
+            ServiceBackend::Simulator,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )

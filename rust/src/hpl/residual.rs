@@ -59,7 +59,8 @@ mod tests {
         // Perturb the exact solution at f32 scale: residue must land in
         // the paper's magnitude (~1e-7..1e-5 raw), i.e. hpl_scaled ~1e9+.
         let n = 64;
-        let a = Mat::<f64>::from_fn(n, n, |i, j| if i == j { 2.0 } else { 0.5 / (1 + i + j) as f64 });
+        let a =
+            Mat::<f64>::from_fn(n, n, |i, j| if i == j { 2.0 } else { 0.5 / (1 + i + j) as f64 });
         let x_true: Vec<f64> = (0..n).map(|v| ((v * 37) % 11) as f64 / 11.0 - 0.5).collect();
         let mut b = vec![0.0f64; n];
         for i in 0..n {

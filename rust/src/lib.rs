@@ -18,7 +18,10 @@
 //!   Task / Column Iteration / K Iteration structure.
 //!
 //! The [`runtime`] module loads the AOT artifacts via the PJRT C API (the
-//! `xla` crate) so that Python is never on the request path.
+//! `xla` crate) so that Python is never on the request path. That backend
+//! is gated behind the off-by-default `pjrt` cargo feature — default
+//! builds are fully offline, with `anyhow` as the only dependency, and
+//! use the functional simulator instead.
 //!
 //! ## Quick start
 //!
@@ -32,6 +35,19 @@
 //! let mut c = Mat::<f32>::zeros(192, 256);
 //! blas.sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
 //! ```
+
+// Idioms this model-code intentionally keeps: BLAS signatures carry many
+// scalar parameters, kernels index with explicit loops to mirror the
+// paper's C/assembly structure, and a few constructors return handles
+// (`Arc<HhRam>`) rather than bare Self.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::new_ret_no_self,
+    clippy::type_complexity,
+    clippy::map_entry
+)]
 
 pub mod blis;
 pub mod coordinator;

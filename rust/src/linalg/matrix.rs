@@ -82,7 +82,14 @@ impl<T: Real> Mat<T> {
 
     /// Immutable full-matrix view (`rs = 1, cs = rows`).
     pub fn view(&self) -> MatRef<'_, T> {
-        MatRef { rows: self.rows, cols: self.cols, rs: 1, cs: self.rows as isize, data: &self.data, offset: 0 }
+        MatRef {
+            rows: self.rows,
+            cols: self.cols,
+            rs: 1,
+            cs: self.rows as isize,
+            data: &self.data,
+            offset: 0,
+        }
     }
 
     /// Mutable full-matrix view.
@@ -103,7 +110,11 @@ impl<T: Real> Mat<T> {
 
     /// Cast every element (used by the "false dgemm": f64 API, f32 compute).
     pub fn cast<U: Real>(&self) -> Mat<U> {
-        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&v| U::from_f64(v.to_f64())).collect() }
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| U::from_f64(v.to_f64())).collect(),
+        }
     }
 
     /// In-place scale.
@@ -185,7 +196,14 @@ impl<'a, T: Real> MatRef<'a, T> {
 
     /// Transposed view: swap dims and strides.
     pub fn t(self) -> MatRef<'a, T> {
-        MatRef { rows: self.cols, cols: self.rows, rs: self.cs, cs: self.rs, data: self.data, offset: self.offset }
+        MatRef {
+            rows: self.cols,
+            cols: self.rows,
+            rs: self.cs,
+            cs: self.rs,
+            data: self.data,
+            offset: self.offset,
+        }
     }
 
     /// Sub-view of `nr x nc` starting at `(i, j)`.
@@ -261,7 +279,14 @@ impl<'a, T: Real> MatMut<'a, T> {
 
     /// Reborrow as an immutable view.
     pub fn as_ref(&self) -> MatRef<'_, T> {
-        MatRef { rows: self.rows, cols: self.cols, rs: self.rs, cs: self.cs, data: self.data, offset: self.offset }
+        MatRef {
+            rows: self.rows,
+            cols: self.cols,
+            rs: self.rs,
+            cs: self.cs,
+            data: self.data,
+            offset: self.offset,
+        }
     }
 
     /// Reborrow a mutable sub-view.
@@ -273,7 +298,14 @@ impl<'a, T: Real> MatMut<'a, T> {
 
     /// Transposed mutable view.
     pub fn t_mut(self) -> MatMut<'a, T> {
-        MatMut { rows: self.cols, cols: self.rows, rs: self.cs, cs: self.rs, data: self.data, offset: self.offset }
+        MatMut {
+            rows: self.cols,
+            cols: self.rows,
+            rs: self.cs,
+            cs: self.rs,
+            data: self.data,
+            offset: self.offset,
+        }
     }
 
     /// Contiguous mutable column slice when `rs == 1`.

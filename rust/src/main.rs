@@ -73,7 +73,9 @@ impl Args {
 }
 
 fn backend_of(args: &Args) -> Result<(BackendKind, ServiceBackend)> {
-    Ok(match args.get("backend").unwrap_or("pjrt") {
+    // The simulator is always available; pjrt needs the feature + artifacts.
+    let default_backend = if cfg!(feature = "pjrt") { "pjrt" } else { "sim" };
+    Ok(match args.get("backend").unwrap_or(default_backend) {
         "pjrt" => (BackendKind::Pjrt, ServiceBackend::Pjrt),
         "sim" | "simulator" => (BackendKind::Simulator, ServiceBackend::Simulator),
         "hostref" | "host" => (BackendKind::HostRef, ServiceBackend::HostRef),
@@ -125,12 +127,15 @@ fn main() -> Result<()> {
             let ta = trans_of(args.get("ta"))?;
             let tb = trans_of(args.get("tb"))?;
             let plat = Platform::builder().backend(bk).build()?;
-            let a = if ta.is_trans() { Mat::<f32>::randn(k, m, 1) } else { Mat::<f32>::randn(m, k, 1) };
-            let b = if tb.is_trans() { Mat::<f32>::randn(n, k, 2) } else { Mat::<f32>::randn(k, n, 2) };
+            let a =
+                if ta.is_trans() { Mat::<f32>::randn(k, m, 1) } else { Mat::<f32>::randn(m, k, 1) };
+            let b =
+                if tb.is_trans() { Mat::<f32>::randn(n, k, 2) } else { Mat::<f32>::randn(k, n, 2) };
             let mut c = Mat::<f32>::zeros(m, n);
             let rep = plat.blas().sgemm(ta, tb, 1.0, a.view(), b.view(), 0.0, &mut c)?;
             println!(
-                "sgemm {}{} {m}x{n}x{k} [{:?}]: calls={} wall={:.4}s ({:.2} GF) projected={:.4}s ({:.3} GF)",
+                "sgemm {}{} {m}x{n}x{k} [{:?}]: calls={} wall={:.4}s ({:.2} GF) \
+                 projected={:.4}s ({:.3} GF)",
                 ta.code(),
                 tb.code(),
                 plat.backend,
@@ -144,7 +149,8 @@ fn main() -> Result<()> {
         "hpl" => {
             let n = args.usize("n", 768)?;
             let nb = args.usize("nb", 96)?;
-            let plat = Platform::builder().backend(BackendKind::Pjrt).build()?;
+            let (bk, _) = backend_of(&args)?;
+            let plat = Platform::builder().backend(bk).build()?;
             let res = run_hpl(plat.blas(), HplConfig::small(n, nb))?;
             println!(
                 "HPL N={n} NB={nb}: wall={:.2}s projected={:.2}s ({:.3} GF) residue={:.2e}",
@@ -157,7 +163,8 @@ fn main() -> Result<()> {
                 .iter()
                 .find_map(|s| s.parse::<usize>().ok())
                 .context("usage: table <1..7> [--full]")?;
-            let scale = if args.has("full") { ExperimentScale::Full } else { ExperimentScale::Quick };
+            let scale =
+                if args.has("full") { ExperimentScale::Full } else { ExperimentScale::Quick };
             let t = match which {
                 1 => experiments::table1(scale)?,
                 2 => experiments::table2(scale)?,
@@ -190,12 +197,12 @@ fn print_help() {
          usage: parallella-blas <command> [flags]\n\
          \n\
          commands:\n\
-         \u{20} serve   [--addr H:P] [--backend pjrt|sim|hostref]   run the network BLAS service\n\
+         \u{20} serve   [--addr H:P] [--backend sim|pjrt|hostref]   run the network BLAS service\n\
          \u{20} sgemm   [--m --n --k --ta --tb --backend]           one gemm + report\n\
-         \u{20} hpl     [--n --nb]                                  HPL Linpack run\n\
+         \u{20} hpl     [--n --nb --backend]                        HPL Linpack run\n\
          \u{20} table   <1..7> [--full]                             regenerate a paper table\n\
          \u{20} memmap                                              print the Fig-3 memory map\n\
          \n\
-         run `make artifacts` once before any pjrt-backend command."
+         the pjrt backend needs a `--features pjrt` build plus `make artifacts`."
     );
 }

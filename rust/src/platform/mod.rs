@@ -10,9 +10,11 @@ use anyhow::Result;
 /// Which engine computes the heavy part.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
-    /// Functional Epiphany-16 simulator (exact paper dataflow; slower).
+    /// Functional Epiphany-16 simulator (exact paper dataflow; the
+    /// offline default — always available).
     Simulator,
-    /// AOT jax+pallas artifact via PJRT (production numerics path).
+    /// AOT jax+pallas artifact via PJRT. Requires the `pjrt` cargo
+    /// feature and `make artifacts`; boots with an error otherwise.
     Pjrt,
     /// Naive host loop (the paper's reference baseline).
     HostRef,
@@ -67,7 +69,7 @@ pub struct Platform {
 impl Platform {
     pub fn builder() -> PlatformBuilder {
         PlatformBuilder {
-            backend: BackendKind::Pjrt,
+            backend: BackendKind::Simulator,
             model: CalibratedModel::default(),
             geom: KernelGeometry::paper(),
         }
@@ -86,7 +88,7 @@ mod tests {
 
     #[test]
     fn build_and_multiply() {
-        let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+        let plat = Platform::builder().backend(BackendKind::Simulator).build().unwrap();
         let a = Mat::<f32>::randn(100, 50, 1);
         let b = Mat::<f32>::randn(50, 80, 2);
         let mut c = Mat::<f32>::zeros(100, 80);

@@ -6,217 +6,318 @@
 //! produces — `b1` as logical (K, n) row-major (the paper's row-major B
 //! panel as-is), and `c` as logical (n, m) row-major (= column-major m × n).
 //! No transposition happens on either side of the FFI boundary.
+//!
+//! The whole executor is gated behind the `pjrt` cargo feature: offline
+//! builds (the default) get a stub with the same API whose constructors
+//! fail, so every call site — the service boot, the experiments, the CLI —
+//! compiles unconditionally and degrades to a clear runtime error.
 
-use super::registry::{ArtifactEntry, ArtifactRegistry};
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::runtime::registry::{ArtifactEntry, ArtifactRegistry};
+    use anyhow::{bail, Context, Result};
+    use std::collections::HashMap;
 
-/// A compiled sgemm/false-dgemm artifact.
-pub struct SgemmArtifact {
-    pub entry: ArtifactEntry,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Owns the PJRT CPU client and a cache of compiled executables.
-///
-/// Not `Send`: PJRT handles live and die on the thread that created them,
-/// which in this architecture is the Epiphany service thread (the paper's
-/// separate "service process" — §3.2).
-pub struct GemmExecutor {
-    client: xla::PjRtClient,
-    registry: ArtifactRegistry,
-    cache: HashMap<String, SgemmArtifact>,
-    /// µ-kernel tile dims (fixed per instantiation, 192 × 256 in the paper).
-    pub m: usize,
-    pub n: usize,
-}
-
-impl GemmExecutor {
-    /// Create the CPU client and index the artifact registry.
-    pub fn new(registry: ArtifactRegistry, m: usize, n: usize) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(GemmExecutor { client, registry, cache: HashMap::new(), m, n })
+    /// A compiled sgemm/false-dgemm artifact.
+    pub struct SgemmArtifact {
+        pub entry: ArtifactEntry,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Create with the discovered registry and paper tile dims.
-    pub fn discover() -> Result<Self> {
-        Self::new(ArtifactRegistry::discover()?, 192, 256)
-    }
-
-    pub fn registry(&self) -> &ArtifactRegistry {
-        &self.registry
-    }
-
-    /// Compile every manifest artifact up front (service boot) so the
-    /// request path never pays PJRT compilation latency — the moral
-    /// equivalent of the paper's service process pre-loading the Epiphany
-    /// kernel before any µ-kernel call arrives.
-    pub fn warmup(&mut self) -> Result<usize> {
-        let names: Vec<String> = self.registry.entries().iter().map(|e| e.name.clone()).collect();
-        for name in &names {
-            self.artifact(name)?;
-        }
-        Ok(names.len())
-    }
-
-    /// Compile (or fetch cached) an artifact by name.
-    pub fn artifact(&mut self, name: &str) -> Result<&SgemmArtifact> {
-        if !self.cache.contains_key(name) {
-            let entry = self
-                .registry
-                .get(name)
-                .with_context(|| format!("artifact {name:?} not in manifest"))?
-                .clone();
-            let proto = xla::HloModuleProto::from_text_file(
-                entry.path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("PJRT compile of {name}"))?;
-            self.cache.insert(name.to_string(), SgemmArtifact { entry, exe });
-        }
-        Ok(&self.cache[name])
-    }
-
-    /// One sgemm artifact call at its fixed K:
-    /// `c_out = alpha·a1·b1 + beta·c_in` over the µ-kernel tile.
+    /// Owns the PJRT CPU client and a cache of compiled executables.
     ///
-    /// * `a_panel`: column-major m × k (len m·k)
-    /// * `b_panel`: row-major k × n (len k·n)
-    /// * `c_panel`: column-major m × n (len m·n)
-    pub fn sgemm_call(
-        &mut self,
-        k: usize,
-        alpha: f32,
-        a_panel: &[f32],
-        b_panel: &[f32],
-        beta: f32,
-        c_panel: &[f32],
-    ) -> Result<Vec<f32>> {
-        let (m, n) = (self.m, self.n);
-        if a_panel.len() != m * k || b_panel.len() != k * n || c_panel.len() != m * n {
-            bail!(
-                "sgemm_call shape mismatch: k={k}, a={}, b={}, c={}",
-                a_panel.len(),
-                b_panel.len(),
-                c_panel.len()
-            );
-        }
-        let name = format!("sgemm_inner_k{k}");
-        let art = self.artifact(&name)?;
-        let alpha_l = xla::Literal::from(alpha);
-        let beta_l = xla::Literal::from(beta);
-        // col-major (m, k) bytes == row-major (k, m) logical array.
-        let a_l = xla::Literal::vec1(a_panel).reshape(&[k as i64, m as i64])?;
-        let b_l = xla::Literal::vec1(b_panel).reshape(&[k as i64, n as i64])?;
-        let c_l = xla::Literal::vec1(c_panel).reshape(&[n as i64, m as i64])?;
-        let result = art.exe.execute::<xla::Literal>(&[alpha_l, a_l, b_l, beta_l, c_l])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+    /// Not `Send`: PJRT handles live and die on the thread that created
+    /// them, which in this architecture is the Epiphany service thread
+    /// (the paper's separate "service process" — §3.2).
+    pub struct GemmExecutor {
+        client: xla::PjRtClient,
+        registry: ArtifactRegistry,
+        cache: HashMap<String, SgemmArtifact>,
+        /// µ-kernel tile dims (fixed per instantiation, 192 × 256 in the paper).
+        pub m: usize,
+        pub n: usize,
     }
 
-    /// One false-dgemm artifact call (f64 API, f32 compute inside).
-    pub fn false_dgemm_call(
-        &mut self,
-        k: usize,
-        alpha: f64,
-        a_panel: &[f64],
-        b_panel: &[f64],
-        beta: f64,
-        c_panel: &[f64],
-    ) -> Result<Vec<f64>> {
-        let (m, n) = (self.m, self.n);
-        if a_panel.len() != m * k || b_panel.len() != k * n || c_panel.len() != m * n {
-            bail!("false_dgemm_call shape mismatch (k={k})");
+    impl GemmExecutor {
+        /// Create the CPU client and index the artifact registry.
+        pub fn new(registry: ArtifactRegistry, m: usize, n: usize) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(GemmExecutor { client, registry, cache: HashMap::new(), m, n })
         }
-        let name = format!("false_dgemm_k{k}");
-        let art = self.artifact(&name)?;
-        let alpha_l = xla::Literal::from(alpha);
-        let beta_l = xla::Literal::from(beta);
-        let a_l = xla::Literal::vec1(a_panel).reshape(&[k as i64, m as i64])?;
-        let b_l = xla::Literal::vec1(b_panel).reshape(&[k as i64, n as i64])?;
-        let c_l = xla::Literal::vec1(c_panel).reshape(&[n as i64, m as i64])?;
-        let result = art.exe.execute::<xla::Literal>(&[alpha_l, a_l, b_l, beta_l, c_l])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f64>()?)
-    }
 
-    /// Plan K-blocking for an arbitrary reduction depth: greedy descending
-    /// over available artifact Ks, final remainder zero-padded up to the
-    /// smallest K. Returns `(block_k, padded)` pairs.
-    pub fn plan_k(&self, k_total: usize) -> Vec<(usize, bool)> {
-        let ks = self.registry.sgemm_ks();
-        let smallest = *ks.last().expect("at least one sgemm artifact");
-        let mut plan = Vec::new();
-        let mut rem = k_total;
-        for &k in &ks {
-            while rem >= k {
-                plan.push((k, false));
-                rem -= k;
-            }
+        /// Create with the discovered registry and paper tile dims.
+        pub fn discover() -> Result<Self> {
+            Self::new(ArtifactRegistry::discover()?, 192, 256)
         }
-        if rem > 0 {
-            plan.push((smallest, true)); // zero-padded tail block
-        }
-        plan
-    }
 
-    /// `c_out = alpha·(a1·b1) + beta·c_in` for arbitrary K ≥ 1, chaining
-    /// artifact calls with the accumulator protocol (first call applies
-    /// beta, later calls accumulate with beta = 1).
-    pub fn sgemm_arbitrary_k(
-        &mut self,
-        k_total: usize,
-        alpha: f32,
-        a_panel: &[f32], // col-major m × k_total
-        b_panel: &[f32], // row-major k_total × n
-        beta: f32,
-        c_panel: &[f32], // col-major m × n
-    ) -> Result<Vec<f32>> {
-        let (m, n) = (self.m, self.n);
-        let plan = self.plan_k(k_total);
-        let mut c = c_panel.to_vec();
-        let mut k_done = 0usize;
-        let mut first = true;
-        for (blk, padded) in plan {
-            let real = blk.min(k_total - k_done);
-            // Slice the panels; zero-pad the tail block if needed.
-            let (a_blk, b_blk);
-            let (a_store, b_store);
-            if padded {
-                let mut a_p = vec![0.0f32; m * blk];
-                a_p[..m * real].copy_from_slice(&a_panel[m * k_done..m * (k_done + real)]);
-                let mut b_p = vec![0.0f32; blk * n];
-                b_p[..real * n].copy_from_slice(&b_panel[n * k_done..n * (k_done + real)]);
-                a_store = a_p;
-                b_store = b_p;
-                a_blk = a_store.as_slice();
-                b_blk = b_store.as_slice();
-            } else {
-                a_blk = &a_panel[m * k_done..m * (k_done + blk)];
-                b_blk = &b_panel[n * k_done..n * (k_done + blk)];
-            }
-            let (call_alpha, call_beta) = if first { (alpha, beta) } else { (alpha, 1.0) };
-            c = self.sgemm_call(blk, call_alpha, a_blk, b_blk, call_beta, &c)?;
-            first = false;
-            k_done += real;
+        pub fn registry(&self) -> &ArtifactRegistry {
+            &self.registry
         }
-        if first {
-            // K = 0 degenerate case: c = beta · c.
-            for v in &mut c {
-                *v *= beta;
+
+        /// Compile every manifest artifact up front (service boot) so the
+        /// request path never pays PJRT compilation latency — the moral
+        /// equivalent of the paper's service process pre-loading the
+        /// Epiphany kernel before any µ-kernel call arrives.
+        pub fn warmup(&mut self) -> Result<usize> {
+            let names: Vec<String> =
+                self.registry.entries().iter().map(|e| e.name.clone()).collect();
+            for name in &names {
+                self.artifact(name)?;
             }
+            Ok(names.len())
         }
-        Ok(c)
+
+        /// Compile (or fetch cached) an artifact by name.
+        pub fn artifact(&mut self, name: &str) -> Result<&SgemmArtifact> {
+            if !self.cache.contains_key(name) {
+                let entry = self
+                    .registry
+                    .get(name)
+                    .with_context(|| format!("artifact {name:?} not in manifest"))?
+                    .clone();
+                let proto = xla::HloModuleProto::from_text_file(
+                    entry.path.to_str().context("artifact path not utf-8")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("PJRT compile of {name}"))?;
+                self.cache.insert(name.to_string(), SgemmArtifact { entry, exe });
+            }
+            Ok(&self.cache[name])
+        }
+
+        /// One sgemm artifact call at its fixed K:
+        /// `c_out = alpha·a1·b1 + beta·c_in` over the µ-kernel tile.
+        ///
+        /// * `a_panel`: column-major m × k (len m·k)
+        /// * `b_panel`: row-major k × n (len k·n)
+        /// * `c_panel`: column-major m × n (len m·n)
+        pub fn sgemm_call(
+            &mut self,
+            k: usize,
+            alpha: f32,
+            a_panel: &[f32],
+            b_panel: &[f32],
+            beta: f32,
+            c_panel: &[f32],
+        ) -> Result<Vec<f32>> {
+            let (m, n) = (self.m, self.n);
+            if a_panel.len() != m * k || b_panel.len() != k * n || c_panel.len() != m * n {
+                bail!(
+                    "sgemm_call shape mismatch: k={k}, a={}, b={}, c={}",
+                    a_panel.len(),
+                    b_panel.len(),
+                    c_panel.len()
+                );
+            }
+            let name = format!("sgemm_inner_k{k}");
+            let art = self.artifact(&name)?;
+            let alpha_l = xla::Literal::from(alpha);
+            let beta_l = xla::Literal::from(beta);
+            // col-major (m, k) bytes == row-major (k, m) logical array.
+            let a_l = xla::Literal::vec1(a_panel).reshape(&[k as i64, m as i64])?;
+            let b_l = xla::Literal::vec1(b_panel).reshape(&[k as i64, n as i64])?;
+            let c_l = xla::Literal::vec1(c_panel).reshape(&[n as i64, m as i64])?;
+            let result = art.exe.execute::<xla::Literal>(&[alpha_l, a_l, b_l, beta_l, c_l])?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        /// One false-dgemm artifact call (f64 API, f32 compute inside).
+        pub fn false_dgemm_call(
+            &mut self,
+            k: usize,
+            alpha: f64,
+            a_panel: &[f64],
+            b_panel: &[f64],
+            beta: f64,
+            c_panel: &[f64],
+        ) -> Result<Vec<f64>> {
+            let (m, n) = (self.m, self.n);
+            if a_panel.len() != m * k || b_panel.len() != k * n || c_panel.len() != m * n {
+                bail!("false_dgemm_call shape mismatch (k={k})");
+            }
+            let name = format!("false_dgemm_k{k}");
+            let art = self.artifact(&name)?;
+            let alpha_l = xla::Literal::from(alpha);
+            let beta_l = xla::Literal::from(beta);
+            let a_l = xla::Literal::vec1(a_panel).reshape(&[k as i64, m as i64])?;
+            let b_l = xla::Literal::vec1(b_panel).reshape(&[k as i64, n as i64])?;
+            let c_l = xla::Literal::vec1(c_panel).reshape(&[n as i64, m as i64])?;
+            let result = art.exe.execute::<xla::Literal>(&[alpha_l, a_l, b_l, beta_l, c_l])?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f64>()?)
+        }
+
+        /// Plan K-blocking for an arbitrary reduction depth: greedy
+        /// descending over available artifact Ks, final remainder
+        /// zero-padded up to the smallest K. Returns `(block_k, padded)`
+        /// pairs.
+        pub fn plan_k(&self, k_total: usize) -> Vec<(usize, bool)> {
+            let ks = self.registry.sgemm_ks();
+            let smallest = *ks.last().expect("at least one sgemm artifact");
+            let mut plan = Vec::new();
+            let mut rem = k_total;
+            for &k in &ks {
+                while rem >= k {
+                    plan.push((k, false));
+                    rem -= k;
+                }
+            }
+            if rem > 0 {
+                plan.push((smallest, true)); // zero-padded tail block
+            }
+            plan
+        }
+
+        /// `c_out = alpha·(a1·b1) + beta·c_in` for arbitrary K ≥ 1, chaining
+        /// artifact calls with the accumulator protocol (first call applies
+        /// beta, later calls accumulate with beta = 1).
+        pub fn sgemm_arbitrary_k(
+            &mut self,
+            k_total: usize,
+            alpha: f32,
+            a_panel: &[f32], // col-major m × k_total
+            b_panel: &[f32], // row-major k_total × n
+            beta: f32,
+            c_panel: &[f32], // col-major m × n
+        ) -> Result<Vec<f32>> {
+            let (m, n) = (self.m, self.n);
+            let plan = self.plan_k(k_total);
+            let mut c = c_panel.to_vec();
+            let mut k_done = 0usize;
+            let mut first = true;
+            for (blk, padded) in plan {
+                let real = blk.min(k_total - k_done);
+                // Slice the panels; zero-pad the tail block if needed.
+                let (a_blk, b_blk);
+                let (a_store, b_store);
+                if padded {
+                    let mut a_p = vec![0.0f32; m * blk];
+                    a_p[..m * real].copy_from_slice(&a_panel[m * k_done..m * (k_done + real)]);
+                    let mut b_p = vec![0.0f32; blk * n];
+                    b_p[..real * n].copy_from_slice(&b_panel[n * k_done..n * (k_done + real)]);
+                    a_store = a_p;
+                    b_store = b_p;
+                    a_blk = a_store.as_slice();
+                    b_blk = b_store.as_slice();
+                } else {
+                    a_blk = &a_panel[m * k_done..m * (k_done + blk)];
+                    b_blk = &b_panel[n * k_done..n * (k_done + blk)];
+                }
+                let (call_alpha, call_beta) = if first { (alpha, beta) } else { (alpha, 1.0) };
+                c = self.sgemm_call(blk, call_alpha, a_blk, b_blk, call_beta, &c)?;
+                first = false;
+                k_done += real;
+            }
+            if first {
+                // K = 0 degenerate case: c = beta · c.
+                for v in &mut c {
+                    *v *= beta;
+                }
+            }
+            Ok(c)
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::runtime::registry::{ArtifactEntry, ArtifactRegistry};
+    use anyhow::{bail, Result};
+
+    fn unavailable(what: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "{what}: this build has no PJRT runtime (the `pjrt` cargo feature is off); \
+             rebuild with `--features pjrt` or use the `sim` backend"
+        )
+    }
+
+    /// Stub of the compiled-artifact handle (`pjrt` feature off).
+    pub struct SgemmArtifact {
+        pub entry: ArtifactEntry,
+    }
+
+    /// Stub of the PJRT executor (`pjrt` feature off). Constructors fail,
+    /// so values of this type never exist at runtime; the methods keep
+    /// every call site compiling.
+    pub struct GemmExecutor {
+        registry: ArtifactRegistry,
+        pub m: usize,
+        pub n: usize,
+    }
+
+    impl GemmExecutor {
+        pub fn new(_registry: ArtifactRegistry, _m: usize, _n: usize) -> Result<Self> {
+            Err(unavailable("GemmExecutor::new"))
+        }
+
+        pub fn discover() -> Result<Self> {
+            Err(unavailable("GemmExecutor::discover"))
+        }
+
+        pub fn registry(&self) -> &ArtifactRegistry {
+            &self.registry
+        }
+
+        pub fn warmup(&mut self) -> Result<usize> {
+            Err(unavailable("GemmExecutor::warmup"))
+        }
+
+        pub fn artifact(&mut self, name: &str) -> Result<&SgemmArtifact> {
+            bail!("artifact {name:?} unavailable: built without the `pjrt` feature")
+        }
+
+        pub fn plan_k(&self, _k_total: usize) -> Vec<(usize, bool)> {
+            Vec::new()
+        }
+
+        pub fn sgemm_call(
+            &mut self,
+            _k: usize,
+            _alpha: f32,
+            _a_panel: &[f32],
+            _b_panel: &[f32],
+            _beta: f32,
+            _c_panel: &[f32],
+        ) -> Result<Vec<f32>> {
+            Err(unavailable("GemmExecutor::sgemm_call"))
+        }
+
+        pub fn false_dgemm_call(
+            &mut self,
+            _k: usize,
+            _alpha: f64,
+            _a_panel: &[f64],
+            _b_panel: &[f64],
+            _beta: f64,
+            _c_panel: &[f64],
+        ) -> Result<Vec<f64>> {
+            Err(unavailable("GemmExecutor::false_dgemm_call"))
+        }
+
+        pub fn sgemm_arbitrary_k(
+            &mut self,
+            _k_total: usize,
+            _alpha: f32,
+            _a_panel: &[f32],
+            _b_panel: &[f32],
+            _beta: f32,
+            _c_panel: &[f32],
+        ) -> Result<Vec<f32>> {
+            Err(unavailable("GemmExecutor::sgemm_arbitrary_k"))
+        }
+    }
+}
+
+pub use imp::{GemmExecutor, SgemmArtifact};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::linalg::{max_scaled_err, Mat};
@@ -258,7 +359,8 @@ mod tests {
         let a = Mat::<f32>::randn(192, 64, 1);
         let b = Mat::<f32>::randn(64, 256, 2);
         let c = Mat::<f32>::randn(192, 256, 3);
-        let got = ex.sgemm_call(64, 1.5, a.as_slice(), &row_major(&b), -0.5, c.as_slice()).unwrap();
+        let got =
+            ex.sgemm_call(64, 1.5, a.as_slice(), &row_major(&b), -0.5, c.as_slice()).unwrap();
         let got = Mat::from_col_major(192, 256, &got);
         let want = oracle(1.5, &a, &b, -0.5, &c);
         let e = max_scaled_err(got.view(), want.view());
@@ -288,8 +390,9 @@ mod tests {
         let a = Mat::<f32>::randn(192, 100, 7);
         let b = Mat::<f32>::randn(100, 256, 8);
         let c = Mat::<f32>::zeros(192, 256);
-        let got =
-            ex.sgemm_arbitrary_k(100, 1.0, a.as_slice(), &row_major(&b), 0.0, c.as_slice()).unwrap();
+        let got = ex
+            .sgemm_arbitrary_k(100, 1.0, a.as_slice(), &row_major(&b), 0.0, c.as_slice())
+            .unwrap();
         let got = Mat::from_col_major(192, 256, &got);
         let want = oracle(1.0, &a, &b, 0.0, &c);
         let e = max_scaled_err(got.view(), want.view());

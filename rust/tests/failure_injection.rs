@@ -125,7 +125,7 @@ fn shape_lies_in_header_are_errors_not_ub() {
 #[test]
 fn hpl_singular_input_reported() {
     let plat = parallella_blas::platform::Platform::builder()
-        .backend(parallella_blas::platform::BackendKind::Pjrt)
+        .backend(parallella_blas::platform::BackendKind::Simulator)
         .build()
         .unwrap();
     // Rank-deficient matrix: column 3 duplicated.
@@ -146,7 +146,7 @@ fn hpl_singular_input_reported() {
 #[test]
 fn zero_sized_problems_handled() {
     let plat = parallella_blas::platform::Platform::builder()
-        .backend(parallella_blas::platform::BackendKind::Pjrt)
+        .backend(parallella_blas::platform::BackendKind::Simulator)
         .build()
         .unwrap();
     // K = 0: C = beta·C, no service crossing required to be correct.

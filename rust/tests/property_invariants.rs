@@ -133,7 +133,18 @@ fn prop_protocol_round_trip_random() {
             let frame = req.encode();
             match (Request::decode(&frame[4..]), &req) {
                 (
-                    Ok(Request::Sgemm { ta: ta2, tb: tb2, m: m2, n: n2, k: k2, alpha: al2, beta: be2, a: a2, b: b2, c: c2 }),
+                    Ok(Request::Sgemm {
+                        ta: ta2,
+                        tb: tb2,
+                        m: m2,
+                        n: n2,
+                        k: k2,
+                        alpha: al2,
+                        beta: be2,
+                        a: a2,
+                        b: b2,
+                        c: c2,
+                    }),
                     Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c },
                 ) => {
                     ta2 == *ta && tb2 == *tb && m2 == *m && n2 == *n && k2 == *k
@@ -161,8 +172,8 @@ fn prop_response_error_round_trip() {
 #[test]
 fn prop_gemm_linear_in_alpha() {
     // sgemm(2α) == 2·sgemm(α) when beta = 0 (checked through the full
-    // service + artifact path).
-    let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+    // service + simulator path).
+    let plat = Platform::builder().backend(BackendKind::Simulator).build().unwrap();
     let (m, n, k) = (192, 256, 64);
     let a = Mat::<f32>::randn(m, k, 77);
     let b = Mat::<f32>::randn(k, n, 78);
@@ -178,7 +189,7 @@ fn prop_gemm_linear_in_alpha() {
 fn prop_gemm_additive_over_k_split() {
     // A·B == A1·B1 + A2·B2 for a K split — the accumulator protocol's
     // algebraic foundation (and what the chip does across tasks).
-    let plat = Platform::builder().backend(BackendKind::Pjrt).build().unwrap();
+    let plat = Platform::builder().backend(BackendKind::Simulator).build().unwrap();
     let (m, n, k) = (192, 256, 256);
     let a = Mat::<f32>::randn(m, k, 80);
     let b = Mat::<f32>::randn(k, n, 81);

@@ -1,0 +1,121 @@
+//! Stub of the `xla` (xla-rs) API surface that `parallella_blas`'s
+//! `pjrt` feature compiles against.
+//!
+//! Offline CI images carry no XLA/PJRT runtime, but the PJRT executor in
+//! `rust/src/runtime/executor.rs` is real integration code that must not
+//! rot. This crate keeps it type-checked: every entry point exists with
+//! the signature the executor uses and fails at *runtime* with a clear
+//! error. Deploying the real path means replacing this path dependency
+//! with an actual xla-rs build (same API) — no source changes elsewhere.
+
+use std::fmt;
+
+/// The stub's uniform error: "no PJRT runtime linked".
+#[derive(Debug)]
+pub struct Error {
+    what: &'static str,
+}
+
+impl Error {
+    fn new(what: &'static str) -> Self {
+        Error { what }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: the `xla` stub crate is linked (no PJRT runtime in this build); \
+             replace rust/xla-stub with a real xla-rs build to execute AOT artifacts",
+            self.what
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// A host-side literal (stub).
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: Copy>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::new("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::new("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::new("Literal::to_vec"))
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_v: f32) -> Literal {
+        Literal
+    }
+}
+
+impl From<f64> for Literal {
+    fn from(_v: f64) -> Literal {
+        Literal
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::new("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new("PjRtClient::compile"))
+    }
+}
