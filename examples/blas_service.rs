@@ -27,22 +27,19 @@ fn main() -> anyhow::Result<()> {
             for i in 0..8 {
                 let n = 64;
                 let b = Mat::<f32>::randn(k, n, 1000 + client_id * 100 + i);
-                let resp = cli.call(&Request::Sgemm {
-                    ta: Trans::N,
-                    tb: Trans::N,
+                let resp = cli.call(&Request::sgemm(
+                    Trans::N,
+                    Trans::N,
                     m,
                     n,
                     k,
-                    alpha: 1.0,
-                    beta: 0.0,
-                    a: weights.clone(),
-                    b: b.as_slice().to_vec(),
-                    c: vec![0.0; m * n],
-                })?;
-                match resp {
-                    Response::OkF32(v) => anyhow::ensure!(v.len() == m * n),
-                    other => anyhow::bail!("unexpected response {other:?}"),
-                }
+                    1.0,
+                    0.0,
+                    weights.clone(),
+                    b.as_slice().to_vec(),
+                    vec![0.0; m * n],
+                ))?;
+                anyhow::ensure!(resp.into_f32()?.len() == m * n);
             }
             Ok(t0.elapsed().as_secs_f64())
         }));

@@ -17,7 +17,7 @@
 
 use parallella_blas::blis::Trans;
 use parallella_blas::coordinator::server::{BlasClient, BlasServer};
-use parallella_blas::coordinator::{Request, Response, ServerConfig};
+use parallella_blas::coordinator::{Request, ServerConfig};
 use parallella_blas::hpl::driver::{run_hpl, HplConfig};
 use parallella_blas::linalg::{max_scaled_err, Mat};
 use parallella_blas::prelude::*;
@@ -86,21 +86,19 @@ fn main() -> anyhow::Result<()> {
             let mut cli = BlasClient::connect(addr)?;
             for i in 0..6 {
                 let bm = Mat::<f32>::randn(256, 64, client * 31 + i);
-                match cli.call(&Request::Sgemm {
-                    ta: Trans::N,
-                    tb: Trans::N,
-                    m: 192,
-                    n: 64,
-                    k: 256,
-                    alpha: 1.0,
-                    beta: 0.0,
-                    a: w.clone(),
-                    b: bm.as_slice().to_vec(),
-                    c: vec![0.0; 192 * 64],
-                })? {
-                    Response::OkF32(v) => anyhow::ensure!(v.len() == 192 * 64),
-                    other => anyhow::bail!("{other:?}"),
-                }
+                let resp = cli.call(&Request::sgemm(
+                    Trans::N,
+                    Trans::N,
+                    192,
+                    64,
+                    256,
+                    1.0,
+                    0.0,
+                    w.clone(),
+                    bm.as_slice().to_vec(),
+                    vec![0.0; 192 * 64],
+                ))?;
+                anyhow::ensure!(resp.into_f32()?.len() == 192 * 64);
             }
             Ok(())
         }));

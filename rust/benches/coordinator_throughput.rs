@@ -8,7 +8,7 @@
 
 use parallella_blas::blis::Trans;
 use parallella_blas::coordinator::server::{BlasClient, BlasServer};
-use parallella_blas::coordinator::{Request, Response, ServerConfig};
+use parallella_blas::coordinator::{Request, ServerConfig};
 use parallella_blas::linalg::{Mat, XorShiftRng};
 use parallella_blas::util::tables::Table;
 use std::time::Instant;
@@ -42,24 +42,21 @@ fn run(w: &Workload) -> (f64, f64, f64, u64) {
                     Mat::<f32>::randn(m, k, c as u64 * 1000 + i as u64).as_slice().to_vec()
                 };
                 let b: Vec<f32> = (0..k * n_cols).map(|_| rng.next_unit() as f32).collect();
-                match cli
-                    .call(&Request::Sgemm {
-                        ta: Trans::N,
-                        tb: Trans::N,
+                let resp = cli
+                    .call(&Request::sgemm(
+                        Trans::N,
+                        Trans::N,
                         m,
-                        n: n_cols,
+                        n_cols,
                         k,
-                        alpha: 1.0,
-                        beta: 0.0,
+                        1.0,
+                        0.0,
                         a,
                         b,
-                        c: vec![0.0; m * n_cols],
-                    })
-                    .unwrap()
-                {
-                    Response::OkF32(v) => assert_eq!(v.len(), m * n_cols),
-                    other => panic!("{other:?}"),
-                }
+                        vec![0.0; m * n_cols],
+                    ))
+                    .unwrap();
+                assert_eq!(resp.into_f32().unwrap().len(), m * n_cols);
             }
         }));
     }

@@ -3,18 +3,38 @@
 //! ScaLAPACK or HPL link against (paper §3.1: BLIS "also generates the
 //! classic FORTRAN BLAS library").
 //!
-//! Level-3 sgemm/dgemm route through the Epiphany service; everything else
-//! is host compute, as in the paper's instantiation.
+//! Every routine here is a **thin generated-style shim**: it wraps the raw
+//! buffers in views, constructs a typed descriptor from [`super::op`], and
+//! delegates to [`Blas::execute`] — the single place that validates,
+//! routes (level-3 gemm → Epiphany service, the rest → host) and accounts.
+//!
+//! # Error model
+//!
+//! [`Blas::execute`] is the one fallible path: descriptors report bad
+//! dims/strides/lengths as recoverable `Err`s. The classic shims keep
+//! their FORTRAN shapes — level-1/2 routines return values, not
+//! `Result` — so, exactly like reference BLAS's `XERBLA`, a shim called
+//! with arguments violating its documented preconditions aborts (panics)
+//! rather than corrupting memory. Callers who want recoverable errors
+//! construct descriptors and call [`Blas::execute`] directly.
 
 use super::gemm::Blas;
+use super::op::{GemmOp, GemvOp, GerOp, Level1Op, SyrkOp, TrmvOp, TrsmOp, TrsvOp};
 use super::params::Trans;
-use super::{level1, level2, level3};
 use crate::linalg::{Mat, MatMut, MatRef};
 use anyhow::Result;
 
 /// The library handle a "linked application" holds.
 pub struct BlasLibrary {
     inner: std::sync::Arc<Blas>,
+}
+
+/// Shim-side `XERBLA`: unwrap an `execute` result for the non-fallible
+/// classic signatures.
+macro_rules! xerbla {
+    ($routine:literal, $r:expr) => {
+        $r.unwrap_or_else(|e| panic!(concat!($routine, ": {:#}"), e))
+    };
 }
 
 impl BlasLibrary {
@@ -29,28 +49,28 @@ impl BlasLibrary {
     // ---------------- level 1 (f32) ----------------
 
     pub fn saxpy(&self, n: usize, alpha: f32, x: &[f32], incx: usize, y: &mut [f32], incy: usize) {
-        level1::axpy(n, alpha, x, incx, y, incy);
+        xerbla!("saxpy", self.inner.execute(Level1Op::Axpy { n, alpha, x, incx, y, incy }));
     }
     pub fn sscal(&self, n: usize, alpha: f32, x: &mut [f32], incx: usize) {
-        level1::scal(n, alpha, x, incx);
+        xerbla!("sscal", self.inner.execute(Level1Op::Scal { n, alpha, x, incx }));
     }
     pub fn scopy(&self, n: usize, x: &[f32], incx: usize, y: &mut [f32], incy: usize) {
-        level1::copy(n, x, incx, y, incy);
+        xerbla!("scopy", self.inner.execute(Level1Op::Copy { n, x, incx, y, incy }));
     }
     pub fn sswap(&self, n: usize, x: &mut [f32], incx: usize, y: &mut [f32], incy: usize) {
-        level1::swap(n, x, incx, y, incy);
+        xerbla!("sswap", self.inner.execute(Level1Op::Swap { n, x, incx, y, incy }));
     }
     pub fn sdot(&self, n: usize, x: &[f32], incx: usize, y: &[f32], incy: usize) -> f32 {
-        level1::dot(n, x, incx, y, incy)
+        xerbla!("sdot", self.inner.execute(Level1Op::Dot { n, x, incx, y, incy })).scalar()
     }
     pub fn snrm2(&self, n: usize, x: &[f32], incx: usize) -> f32 {
-        level1::nrm2(n, x, incx)
+        xerbla!("snrm2", self.inner.execute(Level1Op::Nrm2 { n, x, incx })).scalar()
     }
     pub fn sasum(&self, n: usize, x: &[f32], incx: usize) -> f32 {
-        level1::asum(n, x, incx)
+        xerbla!("sasum", self.inner.execute(Level1Op::Asum { n, x, incx })).scalar()
     }
     pub fn isamax(&self, n: usize, x: &[f32], incx: usize) -> Option<usize> {
-        level1::iamax(n, x, incx)
+        xerbla!("isamax", self.inner.execute(Level1Op::Iamax { n, x, incx })).index()
     }
     pub fn srot(
         &self,
@@ -62,38 +82,40 @@ impl BlasLibrary {
         c: f32,
         s: f32,
     ) {
-        level1::rot(n, x, incx, y, incy, c, s);
+        xerbla!("srot", self.inner.execute(Level1Op::Rot { n, x, incx, y, incy, c, s }));
     }
 
     // ---------------- level 1 (f64) ----------------
 
     pub fn daxpy(&self, n: usize, alpha: f64, x: &[f64], incx: usize, y: &mut [f64], incy: usize) {
-        level1::axpy(n, alpha, x, incx, y, incy);
+        xerbla!("daxpy", self.inner.execute(Level1Op::Axpy { n, alpha, x, incx, y, incy }));
     }
     pub fn dscal(&self, n: usize, alpha: f64, x: &mut [f64], incx: usize) {
-        level1::scal(n, alpha, x, incx);
+        xerbla!("dscal", self.inner.execute(Level1Op::Scal { n, alpha, x, incx }));
     }
     pub fn dcopy(&self, n: usize, x: &[f64], incx: usize, y: &mut [f64], incy: usize) {
-        level1::copy(n, x, incx, y, incy);
+        xerbla!("dcopy", self.inner.execute(Level1Op::Copy { n, x, incx, y, incy }));
     }
     pub fn dswap(&self, n: usize, x: &mut [f64], incx: usize, y: &mut [f64], incy: usize) {
-        level1::swap(n, x, incx, y, incy);
+        xerbla!("dswap", self.inner.execute(Level1Op::Swap { n, x, incx, y, incy }));
     }
     pub fn ddot(&self, n: usize, x: &[f64], incx: usize, y: &[f64], incy: usize) -> f64 {
-        level1::dot(n, x, incx, y, incy)
+        xerbla!("ddot", self.inner.execute(Level1Op::Dot { n, x, incx, y, incy })).scalar()
     }
     pub fn dnrm2(&self, n: usize, x: &[f64], incx: usize) -> f64 {
-        level1::nrm2(n, x, incx)
+        xerbla!("dnrm2", self.inner.execute(Level1Op::Nrm2 { n, x, incx })).scalar()
     }
     pub fn dasum(&self, n: usize, x: &[f64], incx: usize) -> f64 {
-        level1::asum(n, x, incx)
+        xerbla!("dasum", self.inner.execute(Level1Op::Asum { n, x, incx })).scalar()
     }
     pub fn idamax(&self, n: usize, x: &[f64], incx: usize) -> Option<usize> {
-        level1::iamax(n, x, incx)
+        xerbla!("idamax", self.inner.execute(Level1Op::Iamax { n, x, incx })).index()
     }
 
     // ---------------- level 2 ----------------
 
+    /// Classic sgemv with both vector strides (`incx`, `incy`), as the
+    /// FORTRAN BLAS takes them.
     #[allow(clippy::too_many_arguments)]
     pub fn sgemv(
         &self,
@@ -104,14 +126,19 @@ impl BlasLibrary {
         a: &[f32],
         lda: usize,
         x: &[f32],
+        incx: usize,
         beta: f32,
         y: &mut [f32],
+        incy: usize,
     ) {
-        let a_v = MatRef::from_col_major(m, n, lda, a);
-        level2::gemv(trans, alpha, a_v, x, beta, y);
-        self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
+        let a = MatRef::from_col_major(m, n, lda, a);
+        xerbla!(
+            "sgemv",
+            self.inner.execute(GemvOp { trans, alpha, a, x, incx, beta, y, incy })
+        );
     }
 
+    /// Classic dgemv with both vector strides (`incx`, `incy`).
     #[allow(clippy::too_many_arguments)]
     pub fn dgemv(
         &self,
@@ -122,12 +149,16 @@ impl BlasLibrary {
         a: &[f64],
         lda: usize,
         x: &[f64],
+        incx: usize,
         beta: f64,
         y: &mut [f64],
+        incy: usize,
     ) {
-        let a_v = MatRef::from_col_major(m, n, lda, a);
-        level2::gemv(trans, alpha, a_v, x, beta, y);
-        self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
+        let a = MatRef::from_col_major(m, n, lda, a);
+        xerbla!(
+            "dgemv",
+            self.inner.execute(GemvOp { trans, alpha, a, x, incx, beta, y, incy })
+        );
     }
 
     pub fn sger(
@@ -140,9 +171,8 @@ impl BlasLibrary {
         a: &mut [f32],
         lda: usize,
     ) {
-        let mut a_v = MatMut::from_col_major(m, n, lda, a);
-        level2::ger(alpha, x, y, &mut a_v);
-        self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
+        let a = MatMut::from_col_major(m, n, lda, a);
+        xerbla!("sger", self.inner.execute(GerOp { alpha, x, y, a }));
     }
 
     pub fn dger(
@@ -155,9 +185,8 @@ impl BlasLibrary {
         a: &mut [f64],
         lda: usize,
     ) {
-        let mut a_v = MatMut::from_col_major(m, n, lda, a);
-        level2::ger(alpha, x, y, &mut a_v);
-        self.inner.charge_host_op(2.0 * m as f64 * n as f64, host_rate());
+        let a = MatMut::from_col_major(m, n, lda, a);
+        xerbla!("dger", self.inner.execute(GerOp { alpha, x, y, a }));
     }
 
     pub fn strsv(
@@ -170,9 +199,8 @@ impl BlasLibrary {
         lda: usize,
         x: &mut [f32],
     ) {
-        let a_v = MatRef::from_col_major(n, n, lda, a);
-        level2::trsv(lower, trans, unit, a_v, x);
-        self.inner.charge_host_op((n * n) as f64, host_rate());
+        let a = MatRef::from_col_major(n, n, lda, a);
+        xerbla!("strsv", self.inner.execute(TrsvOp { lower, trans, unit, a, x }));
     }
 
     pub fn dtrsv(
@@ -185,9 +213,8 @@ impl BlasLibrary {
         lda: usize,
         x: &mut [f64],
     ) {
-        let a_v = MatRef::from_col_major(n, n, lda, a);
-        level2::trsv(lower, trans, unit, a_v, x);
-        self.inner.charge_host_op((n * n) as f64, host_rate());
+        let a = MatRef::from_col_major(n, n, lda, a);
+        xerbla!("dtrsv", self.inner.execute(TrsvOp { lower, trans, unit, a, x }));
     }
 
     pub fn strmv(
@@ -200,14 +227,15 @@ impl BlasLibrary {
         lda: usize,
         x: &mut [f32],
     ) {
-        let a_v = MatRef::from_col_major(n, n, lda, a);
-        level2::trmv(lower, trans, unit, a_v, x);
-        self.inner.charge_host_op((n * n) as f64, host_rate());
+        let a = MatRef::from_col_major(n, n, lda, a);
+        xerbla!("strmv", self.inner.execute(TrmvOp { lower, trans, unit, a, x }));
     }
 
     // ---------------- level 3 ----------------
 
     /// The Epiphany-accelerated sgemm (the paper's headline function).
+    /// Level-3 keeps the fallible signature: the service crossing itself
+    /// can fail, and HPL-class callers handle it.
     #[allow(clippy::too_many_arguments)]
     pub fn sgemm(
         &self,
@@ -227,16 +255,10 @@ impl BlasLibrary {
     ) -> Result<()> {
         let (ar, ac) = if ta.is_trans() { (k, m) } else { (m, k) };
         let (br, bc) = if tb.is_trans() { (n, k) } else { (k, n) };
-        let a_v = MatRef::from_col_major(ar, ac, lda, a);
-        let b_v = MatRef::from_col_major(br, bc, ldb, b);
-        // Copy-out/copy-in for C (the facade owns layout adaptation).
-        let mut c_m = Mat::from_fn(m, n, |i, j| c[i + j * ldc]);
-        self.inner.sgemm(ta, tb, alpha, a_v, b_v, beta, &mut c_m)?;
-        for j in 0..n {
-            for i in 0..m {
-                c[i + j * ldc] = c_m.get(i, j);
-            }
-        }
+        let a = MatRef::from_col_major(ar, ac, lda, a);
+        let b = MatRef::from_col_major(br, bc, ldb, b);
+        let c = MatMut::from_col_major(m, n, ldc, c);
+        self.inner.execute(GemmOp { ta, tb, alpha, a, b, beta, c })?;
         Ok(())
     }
 
@@ -260,18 +282,14 @@ impl BlasLibrary {
     ) -> Result<()> {
         let (ar, ac) = if ta.is_trans() { (k, m) } else { (m, k) };
         let (br, bc) = if tb.is_trans() { (n, k) } else { (k, n) };
-        let a_v = MatRef::from_col_major(ar, ac, lda, a);
-        let b_v = MatRef::from_col_major(br, bc, ldb, b);
-        let mut c_m = Mat::from_fn(m, n, |i, j| c[i + j * ldc]);
-        self.inner.dgemm_false(ta, tb, alpha, a_v, b_v, beta, &mut c_m)?;
-        for j in 0..n {
-            for i in 0..m {
-                c[i + j * ldc] = c_m.get(i, j);
-            }
-        }
+        let a = MatRef::from_col_major(ar, ac, lda, a);
+        let b = MatRef::from_col_major(br, bc, ldb, b);
+        let c = MatMut::from_col_major(m, n, ldc, c);
+        self.inner.execute(GemmOp { ta, tb, alpha, a, b, beta, c })?;
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn dtrsm_left(
         &self,
         lower: bool,
@@ -285,17 +303,22 @@ impl BlasLibrary {
         b: &mut [f64],
         ldb: usize,
     ) {
-        let a_v = MatRef::from_col_major(m, m, lda, a);
+        let a = MatRef::from_col_major(m, m, lda, a);
+        // The level-3 host kernels operate on dense matrices; the facade
+        // owns the lda adaptation (copy-in/copy-out).
         let mut b_m = Mat::from_fn(m, n, |i, j| b[i + j * ldb]);
-        level3::trsm_left(lower, trans, unit, alpha, a_v, &mut b_m);
+        xerbla!(
+            "dtrsm",
+            self.inner.execute(TrsmOp { lower, trans, unit, alpha, a, b: &mut b_m })
+        );
         for j in 0..n {
             for i in 0..m {
                 b[i + j * ldb] = b_m.get(i, j);
             }
         }
-        self.inner.charge_host_op((m * m * n) as f64, host_rate());
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn dsyrk_lower(
         &self,
         trans: Trans,
@@ -309,25 +332,21 @@ impl BlasLibrary {
         ldc: usize,
     ) {
         let (ar, ac) = if trans.is_trans() { (k, n) } else { (n, k) };
-        let a_v = MatRef::from_col_major(ar, ac, lda, a);
+        let a = MatRef::from_col_major(ar, ac, lda, a);
         let mut c_m = Mat::from_fn(n, n, |i, j| c[i + j * ldc]);
-        level3::syrk_lower(trans, alpha, a_v, beta, &mut c_m);
+        xerbla!("dsyrk", self.inner.execute(SyrkOp { trans, alpha, a, beta, c: &mut c_m }));
         for j in 0..n {
             for i in 0..n {
                 c[i + j * ldc] = c_m.get(i, j);
             }
         }
-        self.inner.charge_host_op((n * n * k) as f64, host_rate());
     }
-}
-
-fn host_rate() -> f64 {
-    crate::epiphany::timing::CalibratedModel::default().host_level2_f64_gflops
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::blis::level3;
     use crate::epiphany::kernel::KernelGeometry;
     use crate::epiphany::timing::CalibratedModel;
     use crate::host::service::{ServiceBackend, ServiceHandle};
@@ -362,6 +381,21 @@ mod tests {
     }
 
     #[test]
+    fn classic_minimal_c_buffer_accepted() {
+        // Reference BLAS only requires ldc·(n−1)+m elements for C; a
+        // tight trailing column must not be rejected.
+        let lib = lib();
+        let (m, n, k) = (2, 2, 3);
+        let ldc = 3;
+        let a = vec![1.0f32; m * k];
+        let b = vec![1.0f32; k * n];
+        let mut c = vec![0.0f32; ldc * (n - 1) + m]; // 5, not ldc*n = 6
+        lib.sgemm(Trans::N, Trans::N, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, ldc).unwrap();
+        // Every entry of C is Σ_k 1·1 = 3; the ldc gap entry is untouched.
+        assert_eq!(c, vec![3.0, 3.0, 0.0, 3.0, 3.0]);
+    }
+
+    #[test]
     fn level1_suite() {
         let lib = lib();
         let mut y = vec![1.0f32, 1.0, 1.0];
@@ -383,8 +417,26 @@ mod tests {
         lib.dger(m, n, 1.0, &[1.0, 2.0, 3.0], &[10.0, 20.0], &mut a, m);
         // A = x·yᵀ; A·[1,1] = 30·x
         let mut y = vec![0.0f64; m];
-        lib.dgemv(Trans::N, m, n, 1.0, &a, m, &[1.0, 1.0], 0.0, &mut y);
+        lib.dgemv(Trans::N, m, n, 1.0, &a, m, &[1.0, 1.0], 1, 0.0, &mut y, 1);
         assert_eq!(y, vec![30.0, 60.0, 90.0]);
+    }
+
+    #[test]
+    fn gemv_respects_vector_strides() {
+        let lib = lib();
+        // A = [1 2; 3 4] col-major; logical x = [1, 10] stored at stride 2;
+        // logical y stored at stride 3.
+        let a = vec![1.0f32, 3.0, 2.0, 4.0];
+        let x = vec![1.0f32, 99.0, 10.0];
+        let mut y = vec![0.0f32, -1.0, -1.0, 0.0, -1.0, -1.0];
+        lib.sgemv(Trans::N, 2, 2, 1.0, &a, 2, &x, 2, 0.0, &mut y, 3);
+        assert_eq!(y, vec![21.0, -1.0, -1.0, 43.0, -1.0, -1.0]);
+        // The f64 twin must agree with its own strides.
+        let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let mut y64 = vec![0.0f64; 2];
+        lib.dgemv(Trans::N, 2, 2, 1.0, &a64, 2, &x64, 2, 0.0, &mut y64, 1);
+        assert_eq!(y64, vec![21.0, 43.0]);
     }
 
     #[test]
@@ -402,5 +454,14 @@ mod tests {
         let got = Mat::from_col_major(m, n, &c);
         let e = crate::linalg::max_scaled_err(got.view(), want.view());
         assert!(e > 1e-12 && e < 1e-4, "err {e}: must be f32-class through the f64 API");
+    }
+
+    #[test]
+    #[should_panic(expected = "saxpy")]
+    fn shim_precondition_violation_is_xerbla_panic() {
+        let lib = lib();
+        let x = vec![1.0f32; 2];
+        let mut y = vec![0.0f32; 8];
+        lib.saxpy(5, 1.0, &x, 1, &mut y, 1); // x shorter than n
     }
 }

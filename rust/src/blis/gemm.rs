@@ -5,13 +5,14 @@
 //! fixed layouts and routed through the service (HH-RAM IPC included).
 //! B panels are packed once per column tile and reused across row tiles.
 
+use super::op::{BlasOp, Element, Route, Ticket};
 use super::packing::{pack_a, pack_b, pack_c, unpack_c};
 use super::params::{BlisContext, Trans};
 use crate::host::projection::ProjectionParams;
 use crate::host::service::ServiceHandle;
-use crate::linalg::{Mat, MatRef, Real};
+use crate::linalg::{Mat, MatMut, MatRef, Real};
 use anyhow::{ensure, Result};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Aggregate accounting for one BLAS call (and, via [`BlasStats`], for a
 /// whole run).
@@ -73,7 +74,91 @@ impl Blas {
         &self.svc
     }
 
+    /// Execute one typed operation descriptor — **the** dispatch path of
+    /// the library. Owns, in one place, what the per-routine facades used
+    /// to scatter:
+    ///
+    /// * **routing** — [`Route::Epiphany`] ops cross the service boundary
+    ///   (level-3 gemm, the paper's accelerated class); [`Route::Host`]
+    ///   ops run on the host CPU;
+    /// * **stats accounting** — host-routed flops are charged to the
+    ///   projection ledger here; Epiphany-routed tile reports are merged
+    ///   by the tiled driver;
+    /// * **error handling** — descriptors validate dims/strides/lengths
+    ///   and return recoverable errors; nothing below this layer is
+    ///   expected to fail on well-formed descriptors.
+    pub fn execute<O: BlasOp>(&self, op: O) -> Result<O::Output> {
+        let route = op.route();
+        let flops = op.flops();
+        let out = op.run(self)?;
+        if route == Route::Host {
+            self.charge_host_op(flops, host_rate());
+        }
+        Ok(out)
+    }
+
+    /// Submit an owned descriptor for asynchronous execution and get a
+    /// [`Ticket`] back. The op runs on a dedicated submission thread via
+    /// [`Blas::execute`]; per-µ-kernel HH-RAM crossings serialize inside
+    /// the service handle, so a caller can pack/enqueue the next operation
+    /// while an earlier one is still in flight (§3.2, pipelined).
+    pub fn submit<O>(self: Arc<Self>, op: O) -> Ticket<O::Output>
+    where
+        O: BlasOp + Send + 'static,
+        O::Output: Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name("blas-submit".into())
+            .spawn(move || {
+                let _ = tx.send(self.execute(op));
+            })
+            .expect("spawn submission thread");
+        Ticket::new(rx, join)
+    }
+
+    /// Precision-generic tiled gemm: `C ← α·op(A)·op(B) + β·C` for any
+    /// [`Element`]. `T = f32` is the paper's accelerated sgemm; `T = f64`
+    /// its "false dgemm" (f64 API, f32 Epiphany compute) — one driver,
+    /// dispatched by [`Element::service_gemm`].
+    pub fn gemm<T: Element>(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut Mat<T>,
+    ) -> Result<GemmReport> {
+        let mut view = c.view_mut();
+        self.gemm_view(ta, tb, alpha, a, b, beta, &mut view)
+    }
+
+    /// [`Blas::gemm`] over a strided mutable view (what [`super::op::GemmOp`]
+    /// descriptors carry). Merges the tile report into the stats ledger.
+    pub(crate) fn gemm_view<T: Element>(
+        &self,
+        ta: Trans,
+        tb: Trans,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
+    ) -> Result<GemmReport> {
+        let rows = c.rows();
+        let cols = c.cols();
+        let report = self.gemm_driver(ta, tb, a, b, rows, cols, |_k, a_p, b_p, c_p, params| {
+            let (out, resp) = T::service_gemm(&self.svc, alpha, a_p, b_p, beta, c_p, params)?;
+            Ok((out, resp.projection.total_s, resp.wall_s))
+        }, c)?;
+        self.stats.lock().unwrap().gemm.merge(&report);
+        Ok(report)
+    }
+
     /// Single-precision general matrix multiply (the accelerated path).
+    /// Generated-style shim over [`Blas::gemm`].
     pub fn sgemm(
         &self,
         ta: Trans,
@@ -84,18 +169,12 @@ impl Blas {
         beta: f32,
         c: &mut Mat<f32>,
     ) -> Result<GemmReport> {
-        let rows = c.rows();
-        let cols = c.cols();
-        let report = self.gemm_driver(ta, tb, a, b, rows, cols, |_k, a_p, b_p, c_p, params| {
-            let (out, resp) = self.svc.sgemm(alpha, a_p, b_p, beta, c_p, params)?;
-            Ok((out, resp.projection.total_s, resp.wall_s))
-        }, c)?;
-        self.stats.lock().unwrap().gemm.merge(&report);
-        Ok(report)
+        self.gemm(ta, tb, alpha, a, b, beta, c)
     }
 
     /// The paper's "false dgemm": double-precision API, single-precision
     /// Epiphany compute (downcast/upcast inside the service path).
+    /// Generated-style shim over [`Blas::gemm`].
     pub fn dgemm_false(
         &self,
         ta: Trans,
@@ -106,14 +185,7 @@ impl Blas {
         beta: f64,
         c: &mut Mat<f64>,
     ) -> Result<GemmReport> {
-        let rows = c.rows();
-        let cols = c.cols();
-        let report = self.gemm_driver(ta, tb, a, b, rows, cols, |_k, a_p, b_p, c_p, params| {
-            let (out, resp) = self.svc.false_dgemm(alpha, a_p, b_p, beta, c_p, params)?;
-            Ok((out, resp.projection.total_s, resp.wall_s))
-        }, c)?;
-        self.stats.lock().unwrap().gemm.merge(&report);
-        Ok(report)
+        self.gemm(ta, tb, alpha, a, b, beta, c)
     }
 
     /// Shared tile loop. `call(k, a_panel, b_panel, c_tile, params)` runs
@@ -127,7 +199,7 @@ impl Blas {
         m: usize,
         n: usize,
         call: impl Fn(usize, &[T], &[T], &[T], ProjectionParams) -> Result<(Vec<T>, f64, f64)>,
-        c: &mut Mat<T>,
+        c: &mut MatMut<'_, T>,
     ) -> Result<GemmReport> {
         let op_a = if ta.is_trans() { a.t() } else { a };
         let op_b = if tb.is_trans() { b.t() } else { b };
@@ -150,14 +222,13 @@ impl Blas {
                 let i0 = ic * mr;
                 let rows = mr.min(m - i0);
                 let (a_panel, class_a) = pack_a(op_a, i0, rows, mr);
-                let c_tile = pack_c(c.view(), i0, j0, rows, cols, mr, nr);
+                let c_tile = pack_c(c.as_ref(), i0, j0, rows, cols, mr, nr);
                 let mut params = ProjectionParams::kernel_service(k);
                 params.class_a = class_a;
                 params.class_b = class_b;
                 params.blis = true;
                 let (out, proj_s, wall_s) = call(k, &a_panel, &b_panel, &c_tile, params)?;
-                let mut cv = c.view_mut();
-                unpack_c(&out, &mut cv, i0, j0, rows, cols, mr);
+                unpack_c(&out, c, i0, j0, rows, cols, mr);
                 report.projected_s += proj_s;
                 report.wall_s += wall_s;
                 report.calls += 1;
@@ -167,7 +238,7 @@ impl Blas {
     }
 
     /// Record an unaccelerated host op (level-1/2/3 fallbacks) against the
-    /// projection ledger at the given f64 rate.
+    /// projection ledger at the given rate.
     pub fn charge_host_op(&self, flops: f64, gflops_rate: f64) {
         let mut s = self.stats.lock().unwrap();
         s.host_level12_s += flops / (gflops_rate * 1e9);
@@ -177,6 +248,12 @@ impl Blas {
     pub fn stats_snapshot(&self) -> BlasStats {
         *self.stats.lock().unwrap()
     }
+}
+
+/// Calibrated host rate used for ledger charges of unaccelerated ops
+/// (the paper's §4.3 level-2 rate).
+pub(crate) fn host_rate() -> f64 {
+    crate::epiphany::timing::CalibratedModel::default().host_level2_f64_gflops
 }
 
 #[cfg(test)]

@@ -9,26 +9,31 @@
 use super::params::Trans;
 use crate::linalg::{MatMut, MatRef, Real};
 
-/// y ← α·op(A)·x + β·y
+/// y ← α·op(A)·x + β·y over strided vectors (classic BLAS `incx`/`incy`;
+/// element `i` of a logical vector lives at `v[i * inc]`).
 pub fn gemv<T: Real>(
     trans: Trans,
     alpha: T,
     a: MatRef<'_, T>,
     x: &[T],
+    incx: usize,
     beta: T,
     y: &mut [T],
+    incy: usize,
 ) {
     let op_a = if trans.is_trans() { a.t() } else { a };
     let (m, n) = (op_a.rows(), op_a.cols());
-    assert!(x.len() >= n && y.len() >= m, "gemv dims");
-    for yi in y.iter_mut().take(m) {
-        *yi *= beta;
+    assert!(incx >= 1 && incy >= 1, "gemv strides");
+    assert!(n == 0 || x.len() > (n - 1) * incx, "gemv x length");
+    assert!(m == 0 || y.len() > (m - 1) * incy, "gemv y length");
+    for i in 0..m {
+        y[i * incy] *= beta;
     }
-    if op_a.row_stride() == 1 {
+    if op_a.row_stride() == 1 && incy == 1 {
         // Column-sweep: unit-stride inner loop (auto-vectorizable — the
         // "NEON-like" host path).
         for j in 0..n {
-            let axj = alpha * x[j];
+            let axj = alpha * x[j * incx];
             let col = op_a.col_slice(j, 0, m);
             for i in 0..m {
                 y[i] += axj * col[i];
@@ -36,9 +41,9 @@ pub fn gemv<T: Real>(
         }
     } else {
         for j in 0..n {
-            let axj = alpha * x[j];
+            let axj = alpha * x[j * incx];
             for i in 0..m {
-                y[i] += axj * op_a.get(i, j);
+                y[i * incy] += axj * op_a.get(i, j);
             }
         }
     }
@@ -136,12 +141,28 @@ mod tests {
         // A = [1 2 3; 4 5 6]
         let x = [1.0, 1.0, 1.0];
         let mut y = [0.0, 0.0];
-        gemv(Trans::N, 1.0, a.view(), &x, 0.0, &mut y);
+        gemv(Trans::N, 1.0, a.view(), &x, 1, 0.0, &mut y, 1);
         assert_eq!(y, [6.0, 15.0]);
         let x2 = [1.0, 1.0];
         let mut y2 = [0.0; 3];
-        gemv(Trans::T, 1.0, a.view(), &x2, 0.0, &mut y2);
+        gemv(Trans::T, 1.0, a.view(), &x2, 1, 0.0, &mut y2, 1);
         assert_eq!(y2, [5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn gemv_strided_vectors() {
+        // A = [1 2; 3 4]; x = [1, 10] strided by 2; y strided by 3.
+        let a = Mat::<f64>::from_fn(2, 2, |i, j| (i * 2 + j) as f64 + 1.0);
+        let x = [1.0, -7.0, 10.0];
+        let mut y = [5.0, -1.0, -1.0, 6.0, -1.0, -1.0];
+        gemv(Trans::N, 1.0, a.view(), &x, 2, 2.0, &mut y, 3);
+        // y0 = 2*5 + (1*1 + 2*10) = 31; y1 = 2*6 + (3*1 + 4*10) = 55.
+        assert_eq!(y, [31.0, -1.0, -1.0, 55.0, -1.0, -1.0]);
+        // Transposed walk with strides exercises the non-contiguous path.
+        let mut yt = [0.0, 9.0, 0.0, 9.0];
+        gemv(Trans::T, 1.0, a.view(), &x, 2, 0.0, &mut yt, 2);
+        // Aᵀ·[1,10] = [1*1+3*10, 2*1+4*10] = [31, 42].
+        assert_eq!(yt, [31.0, 9.0, 42.0, 9.0]);
     }
 
     #[test]
@@ -149,7 +170,7 @@ mod tests {
         let a = Mat::<f32>::full(2, 2, 1.0);
         let x = [1.0f32, 1.0];
         let mut y = [10.0f32, 20.0];
-        gemv(Trans::N, 1.0, a.view(), &x, 0.5, &mut y);
+        gemv(Trans::N, 1.0, a.view(), &x, 1, 0.5, &mut y, 1);
         assert_eq!(y, [7.0, 12.0]);
     }
 
@@ -176,7 +197,7 @@ mod tests {
         let mut y1 = vec![0.0; n];
         let mut y2 = vec![0.0; n];
         symv_lower(1.0, lower.view(), &x, 0.0, &mut y1);
-        gemv(Trans::N, 1.0, full.view(), &x, 0.0, &mut y2);
+        gemv(Trans::N, 1.0, full.view(), &x, 1, 0.0, &mut y2, 1);
         for i in 0..n {
             assert!((y1[i] - y2[i]).abs() < 1e-12);
         }

@@ -6,12 +6,17 @@
 //! (a1 column-major, b1 row-major), and expose the classic level-1/2/3
 //! BLAS on top. This module is that engine in Rust:
 //!
+//! * [`op`] — the typed, precision-generic operation-descriptor core
+//!   ([`op::GemmOp`], [`op::GemvOp`], [`op::Level1Op`], …) dispatched by
+//!   [`Blas::execute`] and submittable asynchronously via [`Blas::submit`];
 //! * [`gemm`] — the tiled driver routing micro-tile calls through the
 //!   Epiphany service (the paper's custom µ-kernel);
 //! * [`packing`] — layout/padding transforms, whose *walk class* (contig
 //!   vs strided) is what spreads Table 4's transpose-variant GFLOPS;
 //! * [`level1`], [`level2`], [`level3`] — the host-side BLAS (the paper's
 //!   level-2 ops are unaccelerated, which §4.3 blames for the HPL number);
+//! * [`blas_api`] — the classic FORTRAN-style surface (`sgemm`, `saxpy`,
+//!   …), generated-style shims over the descriptor core;
 //! * [`testsuite`] — BLIS-testsuite-style residue rows (Tables 3–6).
 
 pub mod blas_api;
@@ -19,10 +24,12 @@ pub mod gemm;
 pub mod level1;
 pub mod level2;
 pub mod level3;
+pub mod op;
 pub mod packing;
 pub mod params;
 pub mod testsuite;
 
 pub use blas_api::BlasLibrary;
 pub use gemm::Blas;
+pub use op::{BlasOp, Dtype, Element, GemmOp, GemmTask, GemvOp, Level1Op, Route, Ticket};
 pub use params::{BlisContext, Trans};

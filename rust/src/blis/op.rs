@@ -1,0 +1,725 @@
+//! Typed, precision-generic BLAS operation descriptors — the object-based
+//! core the classic FORTRAN shims are generated over.
+//!
+//! BLIS itself exposes an object API underneath the FORTRAN names (Van Zee
+//! & van de Geijn); the paper's §3.1 generation step wraps it. This module
+//! is that core for the Rust instantiation:
+//!
+//! * every BLAS call is a value implementing [`BlasOp`] — a descriptor
+//!   carrying views ([`MatRef`]/[`MatMut`]), scalars and flags;
+//! * [`crate::blis::Blas::execute`] is the **single fallible dispatch
+//!   path**: it validates the descriptor, routes it (level-3 gemm → the
+//!   Epiphany service, everything else → host compute) and owns the stats
+//!   accounting — the classic shims in [`crate::blis::blas_api`] are thin
+//!   generated-style wrappers that construct descriptors and delegate;
+//! * [`crate::blis::Blas::submit`] turns any `Send` descriptor into an
+//!   in-flight [`Ticket`], so callers can overlap packing of the next
+//!   operand with an in-flight µ-kernel batch (the paper's §3.2 service
+//!   process, made pipelineable).
+//!
+//! Precision is a type parameter, not a name prefix: [`GemmOp<f32>`] is
+//! the paper's accelerated sgemm, [`GemmOp<f64>`] its "false dgemm" (f64
+//! API, f32 Epiphany compute) — both run through one driver, selected by
+//! the [`Element`] trait.
+
+use super::gemm::{Blas, GemmReport};
+use super::params::Trans;
+use super::{level1, level2, level3};
+use crate::host::projection::ProjectionParams;
+use crate::host::service::{ServiceHandle, ServiceResponse};
+use crate::linalg::{Mat, MatMut, MatRef, Real};
+use anyhow::{anyhow, ensure, Result};
+use std::sync::mpsc;
+
+/// Element dtype tag — shared by the descriptor core and the coordinator
+/// wire protocol (one byte on the wire).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F64,
+}
+
+impl Dtype {
+    pub fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F64 => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<Dtype> {
+        match v {
+            0 => Ok(Dtype::F32),
+            1 => Ok(Dtype::F64),
+            _ => Err(anyhow!("unknown dtype tag {v}")),
+        }
+    }
+
+    /// Bytes per element (wire + HH-RAM sizing).
+    pub fn size_of(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    pub fn all() -> [Dtype; 2] {
+        [Dtype::F32, Dtype::F64]
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Dtype::F32 => write!(f, "f32"),
+            Dtype::F64 => write!(f, "f64"),
+        }
+    }
+}
+
+/// A [`Real`] scalar the descriptor core can dispatch: it knows its dtype
+/// tag and how a packed gemm micro-panel of it crosses the service
+/// boundary (f32 → the sgemm path, f64 → the paper's false dgemm).
+pub trait Element: Real {
+    const DTYPE: Dtype;
+
+    /// One µ-kernel call through the resident service (HH-RAM IPC
+    /// included) for this precision.
+    fn service_gemm(
+        svc: &ServiceHandle,
+        alpha: Self,
+        a_panel: &[Self],
+        b_panel: &[Self],
+        beta: Self,
+        c_in: &[Self],
+        params: ProjectionParams,
+    ) -> Result<(Vec<Self>, ServiceResponse)>;
+}
+
+impl Element for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+
+    fn service_gemm(
+        svc: &ServiceHandle,
+        alpha: f32,
+        a_panel: &[f32],
+        b_panel: &[f32],
+        beta: f32,
+        c_in: &[f32],
+        params: ProjectionParams,
+    ) -> Result<(Vec<f32>, ServiceResponse)> {
+        svc.sgemm(alpha, a_panel, b_panel, beta, c_in, params)
+    }
+}
+
+impl Element for f64 {
+    const DTYPE: Dtype = Dtype::F64;
+
+    fn service_gemm(
+        svc: &ServiceHandle,
+        alpha: f64,
+        a_panel: &[f64],
+        b_panel: &[f64],
+        beta: f64,
+        c_in: &[f64],
+        params: ProjectionParams,
+    ) -> Result<(Vec<f64>, ServiceResponse)> {
+        svc.false_dgemm(alpha, a_panel, b_panel, beta, c_in, params)
+    }
+}
+
+/// Where an operation executes — the paper's split: only the gemm
+/// µ-kernel is Epiphany-accelerated, everything else is host compute
+/// (§4.3 blames exactly this split for the HPL ceiling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Through the resident service to the (simulated) Epiphany chip.
+    Epiphany,
+    /// Host CPU, charged to the projection ledger at the host rate.
+    Host,
+}
+
+/// One BLAS operation as a value. `run` performs the computation;
+/// [`Blas::execute`] is the public entry that adds routing-aware stats
+/// accounting around it. Implementations validate their own descriptor
+/// (dims, strides, slice lengths) with recoverable errors — this is the
+/// error-reporting path the classic shims lack.
+pub trait BlasOp {
+    type Output;
+
+    /// Service routing class for this op.
+    fn route(&self) -> Route;
+
+    /// Logical flop count (the stats ledger's unit).
+    fn flops(&self) -> f64;
+
+    /// Validate and compute. Called by [`Blas::execute`]; prefer that
+    /// entry point — it owns the accounting.
+    fn run(self, blas: &Blas) -> Result<Self::Output>;
+}
+
+/// Required stored length of a strided vector of `n` logical elements —
+/// the classic BLAS `(n−1)·inc + 1`. Shared by descriptor validation and
+/// the coordinator's wire-payload sizing.
+pub fn strided_len(n: usize, inc: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        (n - 1) * inc + 1
+    }
+}
+
+fn check_vec<T: Real>(name: &str, v: &[T], n: usize, inc: usize) -> Result<()> {
+    ensure!(inc >= 1, "{name}: stride must be >= 1, got {inc}");
+    ensure!(
+        v.len() >= strided_len(n, inc),
+        "{name}: stored length {} < required {} (n={n}, inc={inc})",
+        v.len(),
+        strided_len(n, inc)
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Level 3: gemm (the accelerated op)
+// ---------------------------------------------------------------------------
+
+/// `C ← α·op(A)·op(B) + β·C`, routed through the Epiphany service.
+///
+/// The only descriptor whose route is [`Route::Epiphany`]; its per-tile
+/// timing is merged into [`crate::blis::gemm::BlasStats::gemm`] by the
+/// tiled driver itself (wall + projected seconds per µ-kernel call).
+pub struct GemmOp<'a, T: Element> {
+    pub ta: Trans,
+    pub tb: Trans,
+    pub alpha: T,
+    pub a: MatRef<'a, T>,
+    pub b: MatRef<'a, T>,
+    pub beta: T,
+    pub c: MatMut<'a, T>,
+}
+
+impl<T: Element> BlasOp for GemmOp<'_, T> {
+    type Output = GemmReport;
+
+    fn route(&self) -> Route {
+        Route::Epiphany
+    }
+
+    fn flops(&self) -> f64 {
+        let k = if self.ta.is_trans() { self.a.rows() } else { self.a.cols() };
+        2.0 * self.c.rows() as f64 * self.c.cols() as f64 * k as f64
+    }
+
+    fn run(mut self, blas: &Blas) -> Result<GemmReport> {
+        blas.gemm_view(self.ta, self.tb, self.alpha, self.a, self.b, self.beta, &mut self.c)
+    }
+}
+
+/// Owned variant of [`GemmOp`] for asynchronous submission: the operands
+/// are owned matrices, so the descriptor is `Send + 'static` and can ride
+/// a [`Ticket`]. `wait()` hands C back along with the tile report.
+pub struct GemmTask<T: Element> {
+    pub ta: Trans,
+    pub tb: Trans,
+    pub alpha: T,
+    pub a: Mat<T>,
+    pub b: Mat<T>,
+    pub beta: T,
+    pub c: Mat<T>,
+}
+
+impl<T: Element> BlasOp for GemmTask<T> {
+    type Output = (Mat<T>, GemmReport);
+
+    fn route(&self) -> Route {
+        Route::Epiphany
+    }
+
+    fn flops(&self) -> f64 {
+        let k = if self.ta.is_trans() { self.a.rows() } else { self.a.cols() };
+        2.0 * self.c.rows() as f64 * self.c.cols() as f64 * k as f64
+    }
+
+    fn run(mut self, blas: &Blas) -> Result<(Mat<T>, GemmReport)> {
+        let (a, b) = (self.a.view(), self.b.view());
+        let mut view = self.c.view_mut();
+        let report = blas.gemm_view(self.ta, self.tb, self.alpha, a, b, self.beta, &mut view)?;
+        drop(view);
+        Ok((self.c, report))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Level 3: host-side ops (trsm, syrk)
+// ---------------------------------------------------------------------------
+
+/// `B ← α·op(A)⁻¹·B` for triangular A (left side), host compute.
+pub struct TrsmOp<'a, T: Real> {
+    pub lower: bool,
+    pub trans: Trans,
+    pub unit: bool,
+    pub alpha: T,
+    pub a: MatRef<'a, T>,
+    pub b: &'a mut Mat<T>,
+}
+
+impl<T: Real> BlasOp for TrsmOp<'_, T> {
+    type Output = ();
+
+    fn route(&self) -> Route {
+        Route::Host
+    }
+
+    fn flops(&self) -> f64 {
+        (self.a.rows() * self.a.rows() * self.b.cols()) as f64
+    }
+
+    fn run(self, _blas: &Blas) -> Result<()> {
+        let m = self.a.rows();
+        ensure!(self.a.cols() == m, "trsm: A must be square, got {m}x{}", self.a.cols());
+        ensure!(self.b.rows() == m, "trsm: B rows {} != A order {m}", self.b.rows());
+        level3::trsm_left(self.lower, self.trans, self.unit, self.alpha, self.a, self.b);
+        Ok(())
+    }
+}
+
+/// `C ← α·op(A)·op(A)ᵀ + β·C`, lower triangle of C updated, host compute.
+pub struct SyrkOp<'a, T: Real> {
+    pub trans: Trans,
+    pub alpha: T,
+    pub a: MatRef<'a, T>,
+    pub beta: T,
+    pub c: &'a mut Mat<T>,
+}
+
+impl<T: Real> BlasOp for SyrkOp<'_, T> {
+    type Output = ();
+
+    fn route(&self) -> Route {
+        Route::Host
+    }
+
+    fn flops(&self) -> f64 {
+        let (n, k) = if self.trans.is_trans() {
+            (self.a.cols(), self.a.rows())
+        } else {
+            (self.a.rows(), self.a.cols())
+        };
+        (n * n * k) as f64
+    }
+
+    fn run(self, _blas: &Blas) -> Result<()> {
+        let n = if self.trans.is_trans() { self.a.cols() } else { self.a.rows() };
+        ensure!(
+            self.c.rows() == n && self.c.cols() == n,
+            "syrk: C must be {n}x{n}, got {}x{}",
+            self.c.rows(),
+            self.c.cols()
+        );
+        level3::syrk_lower(self.trans, self.alpha, self.a, self.beta, self.c);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Level 2 (host compute)
+// ---------------------------------------------------------------------------
+
+/// `y ← α·op(A)·x + β·y` with classic BLAS vector strides.
+pub struct GemvOp<'a, T: Real> {
+    pub trans: Trans,
+    pub alpha: T,
+    pub a: MatRef<'a, T>,
+    pub x: &'a [T],
+    pub incx: usize,
+    pub beta: T,
+    pub y: &'a mut [T],
+    pub incy: usize,
+}
+
+impl<T: Real> BlasOp for GemvOp<'_, T> {
+    type Output = ();
+
+    fn route(&self) -> Route {
+        Route::Host
+    }
+
+    fn flops(&self) -> f64 {
+        2.0 * self.a.rows() as f64 * self.a.cols() as f64
+    }
+
+    fn run(self, _blas: &Blas) -> Result<()> {
+        let (m, n) = if self.trans.is_trans() {
+            (self.a.cols(), self.a.rows())
+        } else {
+            (self.a.rows(), self.a.cols())
+        };
+        check_vec("gemv x", self.x, n, self.incx)?;
+        check_vec("gemv y", self.y, m, self.incy)?;
+        level2::gemv(self.trans, self.alpha, self.a, self.x, self.incx, self.beta, self.y,
+            self.incy);
+        Ok(())
+    }
+}
+
+/// `A ← α·x·yᵀ + A` (rank-1 update), host compute.
+pub struct GerOp<'a, T: Real> {
+    pub alpha: T,
+    pub x: &'a [T],
+    pub y: &'a [T],
+    pub a: MatMut<'a, T>,
+}
+
+impl<T: Real> BlasOp for GerOp<'_, T> {
+    type Output = ();
+
+    fn route(&self) -> Route {
+        Route::Host
+    }
+
+    fn flops(&self) -> f64 {
+        2.0 * self.a.rows() as f64 * self.a.cols() as f64
+    }
+
+    fn run(mut self, _blas: &Blas) -> Result<()> {
+        let (m, n) = (self.a.rows(), self.a.cols());
+        check_vec("ger x", self.x, m, 1)?;
+        check_vec("ger y", self.y, n, 1)?;
+        level2::ger(self.alpha, self.x, self.y, &mut self.a);
+        Ok(())
+    }
+}
+
+/// `x ← op(A)·x` for triangular A, host compute.
+pub struct TrmvOp<'a, T: Real> {
+    pub lower: bool,
+    pub trans: Trans,
+    pub unit: bool,
+    pub a: MatRef<'a, T>,
+    pub x: &'a mut [T],
+}
+
+impl<T: Real> BlasOp for TrmvOp<'_, T> {
+    type Output = ();
+
+    fn route(&self) -> Route {
+        Route::Host
+    }
+
+    fn flops(&self) -> f64 {
+        (self.a.rows() * self.a.rows()) as f64
+    }
+
+    fn run(self, _blas: &Blas) -> Result<()> {
+        let n = self.a.rows();
+        ensure!(self.a.cols() == n, "trmv: A must be square");
+        check_vec("trmv x", self.x, n, 1)?;
+        level2::trmv(self.lower, self.trans, self.unit, self.a, self.x);
+        Ok(())
+    }
+}
+
+/// Solve `op(A)·x = b` in place for triangular A, host compute.
+pub struct TrsvOp<'a, T: Real> {
+    pub lower: bool,
+    pub trans: Trans,
+    pub unit: bool,
+    pub a: MatRef<'a, T>,
+    pub x: &'a mut [T],
+}
+
+impl<T: Real> BlasOp for TrsvOp<'_, T> {
+    type Output = ();
+
+    fn route(&self) -> Route {
+        Route::Host
+    }
+
+    fn flops(&self) -> f64 {
+        (self.a.rows() * self.a.rows()) as f64
+    }
+
+    fn run(self, _blas: &Blas) -> Result<()> {
+        let n = self.a.rows();
+        ensure!(self.a.cols() == n, "trsv: A must be square");
+        check_vec("trsv x", self.x, n, 1)?;
+        level2::trsv(self.lower, self.trans, self.unit, self.a, self.x);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Level 1 (host compute)
+// ---------------------------------------------------------------------------
+
+/// One level-1 (vector-vector) operation over strided vectors.
+pub enum Level1Op<'a, T: Real> {
+    /// `y ← αx + y`
+    Axpy { n: usize, alpha: T, x: &'a [T], incx: usize, y: &'a mut [T], incy: usize },
+    /// `x ← αx`
+    Scal { n: usize, alpha: T, x: &'a mut [T], incx: usize },
+    /// `y ← x`
+    Copy { n: usize, x: &'a [T], incx: usize, y: &'a mut [T], incy: usize },
+    /// `x ↔ y`
+    Swap { n: usize, x: &'a mut [T], incx: usize, y: &'a mut [T], incy: usize },
+    /// `xᵀy`
+    Dot { n: usize, x: &'a [T], incx: usize, y: &'a [T], incy: usize },
+    /// `‖x‖₂`
+    Nrm2 { n: usize, x: &'a [T], incx: usize },
+    /// `Σ|xᵢ|`
+    Asum { n: usize, x: &'a [T], incx: usize },
+    /// `argmax |xᵢ|`
+    Iamax { n: usize, x: &'a [T], incx: usize },
+    /// Givens rotation `(x, y) ← (c·x + s·y, c·y − s·x)`
+    Rot { n: usize, x: &'a mut [T], incx: usize, y: &'a mut [T], incy: usize, c: T, s: T },
+}
+
+/// Result of a [`Level1Op`]: either nothing (in-place update), a scalar
+/// reduction, or an index (iamax).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Level1Out<T> {
+    Done,
+    Scalar(T),
+    Index(Option<usize>),
+}
+
+impl<T: Real> Level1Out<T> {
+    /// Unwrap a scalar reduction (dot, nrm2, asum).
+    pub fn scalar(self) -> T {
+        match self {
+            Level1Out::Scalar(v) => v,
+            other => panic!("level-1 output is not a scalar: {other:?}"),
+        }
+    }
+
+    /// Unwrap an index result (iamax).
+    pub fn index(self) -> Option<usize> {
+        match self {
+            Level1Out::Index(i) => i,
+            other => panic!("level-1 output is not an index: {other:?}"),
+        }
+    }
+}
+
+impl<T: Real> BlasOp for Level1Op<'_, T> {
+    type Output = Level1Out<T>;
+
+    fn route(&self) -> Route {
+        Route::Host
+    }
+
+    fn flops(&self) -> f64 {
+        match self {
+            Level1Op::Axpy { n, .. } | Level1Op::Dot { n, .. } | Level1Op::Nrm2 { n, .. } => {
+                2.0 * *n as f64
+            }
+            Level1Op::Scal { n, .. } | Level1Op::Asum { n, .. } => *n as f64,
+            Level1Op::Rot { n, .. } => 6.0 * *n as f64,
+            Level1Op::Copy { .. } | Level1Op::Swap { .. } | Level1Op::Iamax { .. } => 0.0,
+        }
+    }
+
+    fn run(self, _blas: &Blas) -> Result<Level1Out<T>> {
+        Ok(match self {
+            Level1Op::Axpy { n, alpha, x, incx, y, incy } => {
+                check_vec("axpy x", x, n, incx)?;
+                check_vec("axpy y", y, n, incy)?;
+                level1::axpy(n, alpha, x, incx, y, incy);
+                Level1Out::Done
+            }
+            Level1Op::Scal { n, alpha, x, incx } => {
+                check_vec("scal x", x, n, incx)?;
+                level1::scal(n, alpha, x, incx);
+                Level1Out::Done
+            }
+            Level1Op::Copy { n, x, incx, y, incy } => {
+                check_vec("copy x", x, n, incx)?;
+                check_vec("copy y", y, n, incy)?;
+                level1::copy(n, x, incx, y, incy);
+                Level1Out::Done
+            }
+            Level1Op::Swap { n, x, incx, y, incy } => {
+                check_vec("swap x", x, n, incx)?;
+                check_vec("swap y", y, n, incy)?;
+                level1::swap(n, x, incx, y, incy);
+                Level1Out::Done
+            }
+            Level1Op::Dot { n, x, incx, y, incy } => {
+                check_vec("dot x", x, n, incx)?;
+                check_vec("dot y", y, n, incy)?;
+                Level1Out::Scalar(level1::dot(n, x, incx, y, incy))
+            }
+            Level1Op::Nrm2 { n, x, incx } => {
+                check_vec("nrm2 x", x, n, incx)?;
+                Level1Out::Scalar(level1::nrm2(n, x, incx))
+            }
+            Level1Op::Asum { n, x, incx } => {
+                check_vec("asum x", x, n, incx)?;
+                Level1Out::Scalar(level1::asum(n, x, incx))
+            }
+            Level1Op::Iamax { n, x, incx } => {
+                check_vec("iamax x", x, n, incx)?;
+                Level1Out::Index(level1::iamax(n, x, incx))
+            }
+            Level1Op::Rot { n, x, incx, y, incy, c, s } => {
+                check_vec("rot x", x, n, incx)?;
+                check_vec("rot y", y, n, incy)?;
+                level1::rot(n, x, incx, y, incy, c, s);
+                Level1Out::Done
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Async submission
+// ---------------------------------------------------------------------------
+
+/// Handle to an in-flight submitted operation (see [`Blas::submit`]).
+///
+/// The computation runs on a submission thread; the HH-RAM exchange with
+/// the service serializes per µ-kernel call, so two in-flight gemms
+/// interleave their packing with each other's service crossings.
+pub struct Ticket<T> {
+    rx: mpsc::Receiver<Result<T>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<T> Ticket<T> {
+    pub(crate) fn new(rx: mpsc::Receiver<Result<T>>, join: std::thread::JoinHandle<()>) -> Self {
+        Ticket { rx, join: Some(join) }
+    }
+
+    /// Block until the submitted op completes and return its output.
+    pub fn wait(mut self) -> Result<T> {
+        let out = self.rx.recv().map_err(|_| anyhow!("submission worker died before replying"));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        out?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epiphany::kernel::KernelGeometry;
+    use crate::epiphany::timing::CalibratedModel;
+    use crate::host::service::{ServiceBackend, ServiceHandle};
+    use crate::linalg::max_scaled_err;
+    use std::sync::Arc;
+
+    fn blas() -> Arc<Blas> {
+        let svc = ServiceHandle::spawn(
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        Arc::new(Blas::new(svc))
+    }
+
+    #[test]
+    fn dtype_round_trip() {
+        for d in Dtype::all() {
+            assert_eq!(Dtype::from_u8(d.code()).unwrap(), d);
+        }
+        assert!(Dtype::from_u8(9).is_err());
+        assert_eq!((Dtype::F32.size_of(), Dtype::F64.size_of()), (4, 8));
+    }
+
+    #[test]
+    fn execute_routes_and_accounts() {
+        let blas = blas();
+        // Host-routed level-1 op charges the host ledger.
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![0.0f32; 3];
+        let out = blas
+            .execute(Level1Op::Axpy { n: 3, alpha: 2.0, x: &x, incx: 1, y: &mut y, incy: 1 })
+            .unwrap();
+        assert_eq!(out, Level1Out::Done);
+        assert_eq!(y, vec![2.0, 4.0, 6.0]);
+        let stats = blas.stats_snapshot();
+        assert!(stats.host_level12_flops >= 6.0);
+        assert_eq!(stats.gemm.calls, 0);
+
+        // Epiphany-routed gemm feeds the gemm report, not the host ledger.
+        let a = Mat::<f32>::randn(32, 16, 1);
+        let b = Mat::<f32>::randn(16, 24, 2);
+        let mut c = Mat::<f32>::zeros(32, 24);
+        let rep = blas
+            .execute(GemmOp {
+                ta: Trans::N,
+                tb: Trans::N,
+                alpha: 1.0,
+                a: a.view(),
+                b: b.view(),
+                beta: 0.0,
+                c: c.view_mut(),
+            })
+            .unwrap();
+        assert!(rep.calls >= 1 && rep.projected_s > 0.0);
+        let stats = blas.stats_snapshot();
+        assert_eq!(stats.gemm.calls, rep.calls);
+    }
+
+    #[test]
+    fn invalid_descriptor_is_err_not_panic() {
+        let blas = blas();
+        let x = vec![1.0f32; 2];
+        let mut y = vec![0.0f32; 8];
+        // x too short for n=5.
+        let r = blas
+            .execute(Level1Op::Axpy { n: 5, alpha: 1.0, x: &x, incx: 1, y: &mut y, incy: 1 });
+        assert!(r.is_err());
+        // zero stride rejected.
+        let r = blas.execute(Level1Op::Nrm2 { n: 2, x: &x, incx: 0 });
+        assert!(r.is_err());
+        // gemm K mismatch.
+        let a = Mat::<f32>::randn(8, 4, 1);
+        let b = Mat::<f32>::randn(5, 8, 2);
+        let mut c = Mat::<f32>::zeros(8, 8);
+        let r = blas.execute(GemmOp {
+            ta: Trans::N,
+            tb: Trans::N,
+            alpha: 1.0,
+            a: a.view(),
+            b: b.view(),
+            beta: 0.0,
+            c: c.view_mut(),
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn submit_ticket_round_trip() {
+        let blas = blas();
+        let (m, n, k) = (64, 48, 32);
+        let a = Mat::<f32>::randn(m, k, 5);
+        let b = Mat::<f32>::randn(k, n, 6);
+        let task = GemmTask {
+            ta: Trans::N,
+            tb: Trans::N,
+            alpha: 1.0,
+            a: a.clone(),
+            b: b.clone(),
+            beta: 0.0,
+            c: Mat::<f32>::zeros(m, n),
+        };
+        let ticket = Arc::clone(&blas).submit(task);
+        let (c, rep) = ticket.wait().unwrap();
+        assert!(rep.calls >= 1);
+        let mut want = Mat::<f64>::zeros(m, n);
+        level3::gemm_host(
+            Trans::N,
+            Trans::N,
+            1.0,
+            a.cast::<f64>().view(),
+            b.cast::<f64>().view(),
+            0.0,
+            &mut want,
+        );
+        assert!(max_scaled_err(c.view(), want.view()) < 1e-5);
+    }
+}

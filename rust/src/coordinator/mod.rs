@@ -6,7 +6,10 @@
 //! that serial resource — the same problem a vLLM-style router solves for
 //! one accelerator. This module provides:
 //!
-//! * [`protocol`] — a compact binary wire protocol for gemm requests;
+//! * [`protocol`] — a compact binary wire protocol: one frame header
+//!   `[len][opcode][dtype][flags]` and one payload codec shared by every
+//!   opcode × dtype (dtype-tagged descriptor structs, not per-precision
+//!   enum variants);
 //! * [`batcher`]  — a FIFO + shape-coalescing batcher over the service
 //!   (requests with the same (op, K-class) batch their HH-RAM crossings);
 //! * [`router`]   — dispatch: level-3 sgemm/false-dgemm to the Epiphany
@@ -22,6 +25,6 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use protocol::{Request, Response};
+pub use protocol::{GemmWire, GemvWire, Opcode, Request, Response, Tensor};
 pub use router::Router;
 pub use server::{BlasServer, ServerConfig};

@@ -1,90 +1,190 @@
-//! Wire protocol: length-prefixed binary frames over TCP.
+//! Wire protocol: length-prefixed binary frames over TCP, with **one**
+//! frame header and **one** payload codec shared by every opcode × dtype.
 //!
-//! Frame layout (little-endian):
-//! `[u32 len][u8 opcode][payload]` where `len` counts opcode + payload.
+//! Frame layout (little-endian), identical for requests and responses:
 //!
-//! Gemm payload: `[u8 ta][u8 tb][u32 m][u32 n][u32 k][f32/f64 alpha]
-//! [f32/f64 beta][A col-major][B col-major][C col-major]` — matrices in
-//! their *stored* orientation (op applied server-side, like a BLAS call).
+//! ```text
+//! [u32 len][u8 tag][u8 dtype][u8 flags][payload]
+//! ```
+//!
+//! where `len` counts tag + dtype + flags + payload. For requests `tag`
+//! is the [`Opcode`]; for responses it is the status. `dtype` tags the
+//! element type of every scalar and tensor in the payload ([`Dtype`]),
+//! so an op is defined once and instantiated per precision by the codec —
+//! adding a routed op adds one opcode, one descriptor struct and one
+//! codec routine, not a variant per dtype across protocol/router/server.
+//! `flags` is reserved (must be 0).
+//!
+//! Gemm payload: `[u8 ta][u8 tb][u32 m][u32 n][u32 k][scalar alpha]
+//! [scalar beta][A][B][C]` — matrices col-major in their *stored*
+//! orientation (op applied server-side, like a BLAS call), scalars and
+//! elements at the dtype's width.
+//!
+//! Gemv payload: `[u8 ta][u32 m][u32 n][u32 incx][u32 incy]
+//! [scalar alpha][scalar beta][A][x][y]` with classic BLAS vector
+//! strides; stored vector length is `(len-1)*inc + 1`.
 
-use crate::blis::Trans;
-use anyhow::{bail, Result};
+use crate::blis::{Dtype, Trans};
+use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
 
-/// Operation codes.
+/// Operation codes (request tags). 1–15 are routed compute ops, 16+ are
+/// control ops with empty payloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Opcode {
-    Sgemm = 1,
-    FalseDgemm = 2,
-    Sgemv = 3,
-    Ping = 4,
-    Stats = 5,
-    Shutdown = 6,
+    Gemm = 1,
+    Gemv = 2,
+    Ping = 16,
+    Stats = 17,
+    Shutdown = 18,
 }
 
 impl Opcode {
     pub fn from_u8(v: u8) -> Result<Opcode> {
         Ok(match v {
-            1 => Opcode::Sgemm,
-            2 => Opcode::FalseDgemm,
-            3 => Opcode::Sgemv,
-            4 => Opcode::Ping,
-            5 => Opcode::Stats,
-            6 => Opcode::Shutdown,
+            1 => Opcode::Gemm,
+            2 => Opcode::Gemv,
+            16 => Opcode::Ping,
+            17 => Opcode::Stats,
+            18 => Opcode::Shutdown,
             _ => bail!("unknown opcode {v}"),
         })
     }
+
+    pub fn all() -> [Opcode; 5] {
+        [Opcode::Gemm, Opcode::Gemv, Opcode::Ping, Opcode::Stats, Opcode::Shutdown]
+    }
 }
 
-/// A decoded request.
+/// A dtype-tagged element buffer — the payload unit of the protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(_) => Dtype::F32,
+            Tensor::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::F64(_) => bail!("tensor is f64, expected f32"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match self {
+            Tensor::F64(v) => Ok(v),
+            Tensor::F32(_) => bail!("tensor is f32, expected f64"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::F64(_) => bail!("tensor is f64, expected f32"),
+        }
+    }
+
+    pub fn into_f64(self) -> Result<Vec<f64>> {
+        match self {
+            Tensor::F64(v) => Ok(v),
+            Tensor::F32(_) => bail!("tensor is f32, expected f64"),
+        }
+    }
+}
+
+/// Dtype-tagged gemm descriptor: `C ← α·op(A)·op(B) + β·C`.
+///
+/// `alpha`/`beta` are carried as `f64` in memory but travel at the
+/// dtype's width on the wire (`f32 → f64` widening is exact, so f32
+/// scalars round-trip bit-identically).
+#[derive(Clone, Debug)]
+pub struct GemmWire {
+    pub ta: Trans,
+    pub tb: Trans,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub a: Tensor,
+    pub b: Tensor,
+    pub c: Tensor,
+}
+
+impl GemmWire {
+    pub fn dtype(&self) -> Dtype {
+        self.a.dtype()
+    }
+}
+
+/// Dtype-tagged gemv descriptor: `y ← α·op(A)·x + β·y` with strides.
+///
+/// For wire transport the stored vectors must have **exactly** the codec
+/// lengths (`m·n` for A, `strided_len` for x/y) — the [`Request::sgemv`]
+/// and [`Request::dgemv`] constructors trim slack automatically. The
+/// in-process router accepts `>=` lengths.
+#[derive(Clone, Debug)]
+pub struct GemvWire {
+    pub ta: Trans,
+    pub m: usize,
+    pub n: usize,
+    pub incx: usize,
+    pub incy: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub a: Tensor,
+    pub x: Tensor,
+    pub y: Tensor,
+}
+
+impl GemvWire {
+    pub fn dtype(&self) -> Dtype {
+        self.a.dtype()
+    }
+
+    /// Logical (x, y) lengths implied by op(A)'s shape.
+    pub fn xy_logical_len(&self) -> (usize, usize) {
+        if self.ta.is_trans() {
+            (self.m, self.n)
+        } else {
+            (self.n, self.m)
+        }
+    }
+}
+
+/// A decoded request: dtype-tagged descriptors plus control ops.
 #[derive(Clone, Debug)]
 pub enum Request {
-    Sgemm {
-        ta: Trans,
-        tb: Trans,
-        m: usize,
-        n: usize,
-        k: usize,
-        alpha: f32,
-        beta: f32,
-        a: Vec<f32>,
-        b: Vec<f32>,
-        c: Vec<f32>,
-    },
-    FalseDgemm {
-        ta: Trans,
-        tb: Trans,
-        m: usize,
-        n: usize,
-        k: usize,
-        alpha: f64,
-        beta: f64,
-        a: Vec<f64>,
-        b: Vec<f64>,
-        c: Vec<f64>,
-    },
-    Sgemv {
-        ta: Trans,
-        m: usize,
-        n: usize,
-        alpha: f32,
-        beta: f32,
-        a: Vec<f32>,
-        x: Vec<f32>,
-        y: Vec<f32>,
-    },
+    Gemm(GemmWire),
+    Gemv(GemvWire),
     Ping,
     Stats,
     Shutdown,
 }
 
-/// A response frame: status byte + payload.
+/// A response frame: a dtype-tagged tensor, text, or an error.
 #[derive(Clone, Debug)]
 pub enum Response {
-    /// C (or y) payload.
-    OkF32(Vec<f32>),
-    OkF64(Vec<f64>),
-    /// Text payload (stats, pong).
+    Ok(Tensor),
     OkText(String),
     Err(String),
 }
@@ -108,233 +208,465 @@ fn trans_from(v: u8) -> Result<Trans> {
     })
 }
 
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
+pub use crate::blis::op::strided_len;
+
+// ---------------------------------------------------------------------------
+// The single payload codec
+// ---------------------------------------------------------------------------
+
+/// Builds one frame: header bytes first, then dtype-width payload items.
+struct FrameWriter {
+    buf: Vec<u8>,
+    dtype: Dtype,
 }
 
-impl<'a> Cursor<'a> {
-    fn new(buf: &'a [u8]) -> Self {
-        Cursor { buf, pos: 0 }
+impl FrameWriter {
+    fn new(tag: u8, dtype: Dtype) -> Self {
+        FrameWriter { buf: vec![tag, dtype.code(), 0 /* flags: reserved */], dtype }
     }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// A scalar at the frame dtype's width.
+    fn scalar(&mut self, v: f64) {
+        match self.dtype {
+            Dtype::F32 => self.buf.extend_from_slice(&(v as f32).to_le_bytes()),
+            Dtype::F64 => self.buf.extend_from_slice(&v.to_le_bytes()),
+        }
+    }
+
+    /// An element buffer; must match the frame dtype (descriptor
+    /// constructors guarantee this).
+    fn tensor(&mut self, t: &Tensor) {
+        debug_assert_eq!(t.dtype(), self.dtype, "tensor dtype != frame dtype");
+        match t {
+            Tensor::F32(v) => {
+                for x in v {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Tensor::F64(v) => {
+                for x in v {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefix and return the finished frame.
+    fn finish(self) -> Vec<u8> {
+        let mut frame = Vec::with_capacity(4 + self.buf.len());
+        frame.extend_from_slice(&(self.buf.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&self.buf);
+        frame
+    }
+}
+
+/// Parses one frame body (after the length prefix has been stripped).
+struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    dtype: Dtype,
+}
+
+impl<'a> FrameReader<'a> {
+    /// Parse the 3-byte header; returns `(tag, reader)`.
+    fn new(body: &'a [u8]) -> Result<(u8, FrameReader<'a>)> {
+        ensure!(body.len() >= 3, "frame shorter than its header");
+        let tag = body[0];
+        let dtype = Dtype::from_u8(body[1])?;
+        ensure!(body[2] == 0, "reserved flags byte must be 0, got {}", body[2]);
+        Ok((tag, FrameReader { buf: body, pos: 3, dtype }))
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n);
+        let end = match end {
+            Some(e) if e <= self.buf.len() => e,
+            _ => bail!("truncated frame (want {n} more bytes)"),
+        };
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
     fn u8(&mut self) -> Result<u8> {
-        if self.pos >= self.buf.len() {
-            bail!("truncated frame");
-        }
-        self.pos += 1;
-        Ok(self.buf[self.pos - 1])
+        Ok(self.take(1)?[0])
     }
+
     fn u32(&mut self) -> Result<u32> {
-        if self.pos + 4 > self.buf.len() {
-            bail!("truncated frame");
-        }
-        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
-        self.pos += 4;
-        Ok(v)
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_bits(self.u32()?))
+
+    /// A scalar at the frame dtype's width, widened to f64 (exact).
+    fn scalar(&mut self) -> Result<f64> {
+        Ok(match self.dtype {
+            Dtype::F32 => f32::from_le_bytes(self.take(4)?.try_into().unwrap()) as f64,
+            Dtype::F64 => f64::from_le_bytes(self.take(8)?.try_into().unwrap()),
+        })
     }
-    fn f64(&mut self) -> Result<f64> {
-        if self.pos + 8 > self.buf.len() {
-            bail!("truncated frame");
-        }
-        let v = f64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
-        self.pos += 8;
-        Ok(v)
+
+    /// An element buffer of `n` logical elements at the frame dtype.
+    fn tensor(&mut self, n: usize) -> Result<Tensor> {
+        let nbytes = match n.checked_mul(self.dtype.size_of()) {
+            Some(b) => b,
+            None => bail!("tensor of {n} elements overflows the frame"),
+        };
+        Ok(match self.dtype {
+            Dtype::F32 => {
+                let raw = self.take(nbytes)?;
+                let els = raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap()));
+                Tensor::F32(els.collect())
+            }
+            Dtype::F64 => {
+                let raw = self.take(nbytes)?;
+                let els = raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap()));
+                Tensor::F64(els.collect())
+            }
+        })
     }
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        if self.pos + 4 * n > self.buf.len() {
-            bail!("truncated f32 block (want {n})");
-        }
-        let out = self.buf[self.pos..self.pos + 4 * n]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        self.pos += 4 * n;
-        Ok(out)
+
+    /// Every remaining byte as elements of the frame dtype.
+    fn rest_tensor(&mut self) -> Result<Tensor> {
+        let rest = self.buf.len() - self.pos;
+        let width = self.dtype.size_of();
+        ensure!(rest % width == 0, "payload length {rest} not a multiple of element width {width}");
+        self.tensor(rest / width)
     }
-    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
-        if self.pos + 8 * n > self.buf.len() {
-            bail!("truncated f64 block (want {n})");
-        }
-        let out = self.buf[self.pos..self.pos + 8 * n]
-            .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        self.pos += 8 * n;
-        Ok(out)
+
+    fn rest_bytes(&mut self) -> &'a [u8] {
+        let out = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        out
+    }
+
+    fn finish(&self) -> Result<()> {
+        let trailing = self.buf.len() - self.pos;
+        ensure!(trailing == 0, "{trailing} trailing bytes in frame");
+        Ok(())
     }
 }
 
 impl Request {
-    /// Encode into a frame (including the length prefix).
-    pub fn encode(&self) -> Vec<u8> {
-        let mut body = Vec::new();
+    fn opcode(&self) -> Opcode {
         match self {
-            Request::Ping => body.push(Opcode::Ping as u8),
-            Request::Stats => body.push(Opcode::Stats as u8),
-            Request::Shutdown => body.push(Opcode::Shutdown as u8),
-            Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
-                body.push(Opcode::Sgemm as u8);
-                body.push(trans_code(*ta));
-                body.push(trans_code(*tb));
-                for v in [*m as u32, *n as u32, *k as u32] {
-                    body.extend_from_slice(&v.to_le_bytes());
-                }
-                body.extend_from_slice(&alpha.to_le_bytes());
-                body.extend_from_slice(&beta.to_le_bytes());
-                for arr in [a, b, c] {
-                    for v in arr.iter() {
-                        body.extend_from_slice(&v.to_le_bytes());
-                    }
-                }
-            }
-            Request::FalseDgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
-                body.push(Opcode::FalseDgemm as u8);
-                body.push(trans_code(*ta));
-                body.push(trans_code(*tb));
-                for v in [*m as u32, *n as u32, *k as u32] {
-                    body.extend_from_slice(&v.to_le_bytes());
-                }
-                body.extend_from_slice(&alpha.to_le_bytes());
-                body.extend_from_slice(&beta.to_le_bytes());
-                for arr in [a, b, c] {
-                    for v in arr.iter() {
-                        body.extend_from_slice(&v.to_le_bytes());
-                    }
-                }
-            }
-            Request::Sgemv { ta, m, n, alpha, beta, a, x, y } => {
-                body.push(Opcode::Sgemv as u8);
-                body.push(trans_code(*ta));
-                for v in [*m as u32, *n as u32] {
-                    body.extend_from_slice(&v.to_le_bytes());
-                }
-                body.extend_from_slice(&alpha.to_le_bytes());
-                body.extend_from_slice(&beta.to_le_bytes());
-                for arr in [a, x, y] {
-                    for v in arr.iter() {
-                        body.extend_from_slice(&v.to_le_bytes());
-                    }
-                }
-            }
+            Request::Gemm(_) => Opcode::Gemm,
+            Request::Gemv(_) => Opcode::Gemv,
+            Request::Ping => Opcode::Ping,
+            Request::Stats => Opcode::Stats,
+            Request::Shutdown => Opcode::Shutdown,
         }
-        let mut frame = Vec::with_capacity(4 + body.len());
-        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&body);
-        frame
     }
 
-    /// Decode a frame body (without the length prefix).
+    /// The frame dtype (control ops carry the default tag; their payloads
+    /// are empty).
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Request::Gemm(g) => g.dtype(),
+            Request::Gemv(g) => g.dtype(),
+            _ => Dtype::F32,
+        }
+    }
+
+    /// Encode into a frame (including the length prefix). One code path
+    /// for every opcode × dtype.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = FrameWriter::new(self.opcode() as u8, self.dtype());
+        match self {
+            Request::Ping | Request::Stats | Request::Shutdown => {}
+            Request::Gemm(g) => {
+                w.u8(trans_code(g.ta));
+                w.u8(trans_code(g.tb));
+                w.u32(g.m as u32);
+                w.u32(g.n as u32);
+                w.u32(g.k as u32);
+                w.scalar(g.alpha);
+                w.scalar(g.beta);
+                w.tensor(&g.a);
+                w.tensor(&g.b);
+                w.tensor(&g.c);
+            }
+            Request::Gemv(g) => {
+                w.u8(trans_code(g.ta));
+                w.u32(g.m as u32);
+                w.u32(g.n as u32);
+                w.u32(g.incx as u32);
+                w.u32(g.incy as u32);
+                w.scalar(g.alpha);
+                w.scalar(g.beta);
+                w.tensor(&g.a);
+                w.tensor(&g.x);
+                w.tensor(&g.y);
+            }
+        }
+        w.finish()
+    }
+
+    /// Decode a frame body (without the length prefix). The same generic
+    /// routine serves every dtype; payload sizes are derived from the
+    /// header dims and validated.
     pub fn decode(body: &[u8]) -> Result<Request> {
-        let mut cur = Cursor::new(body);
-        let op = Opcode::from_u8(cur.u8()?)?;
-        Ok(match op {
+        let (tag, mut r) = FrameReader::new(body)?;
+        let req = match Opcode::from_u8(tag)? {
             Opcode::Ping => Request::Ping,
             Opcode::Stats => Request::Stats,
             Opcode::Shutdown => Request::Shutdown,
-            Opcode::Sgemm => {
-                let ta = trans_from(cur.u8()?)?;
-                let tb = trans_from(cur.u8()?)?;
-                let (m, n, k) = (cur.u32()? as usize, cur.u32()? as usize, cur.u32()? as usize);
-                let alpha = cur.f32()?;
-                let beta = cur.f32()?;
+            Opcode::Gemm => {
+                let ta = trans_from(r.u8()?)?;
+                let tb = trans_from(r.u8()?)?;
+                let (m, n, k) = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+                let alpha = r.scalar()?;
+                let beta = r.scalar()?;
                 let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
                 let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
-                let a = cur.f32s(am * an)?;
-                let b = cur.f32s(bm * bn)?;
-                let c = cur.f32s(m * n)?;
-                Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c }
+                let a = r.tensor(am * an)?;
+                let b = r.tensor(bm * bn)?;
+                let c = r.tensor(m * n)?;
+                Request::Gemm(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c })
             }
-            Opcode::FalseDgemm => {
-                let ta = trans_from(cur.u8()?)?;
-                let tb = trans_from(cur.u8()?)?;
-                let (m, n, k) = (cur.u32()? as usize, cur.u32()? as usize, cur.u32()? as usize);
-                let alpha = cur.f64()?;
-                let beta = cur.f64()?;
-                let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
-                let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
-                let a = cur.f64s(am * an)?;
-                let b = cur.f64s(bm * bn)?;
-                let c = cur.f64s(m * n)?;
-                Request::FalseDgemm { ta, tb, m, n, k, alpha, beta, a, b, c }
-            }
-            Opcode::Sgemv => {
-                let ta = trans_from(cur.u8()?)?;
-                let (m, n) = (cur.u32()? as usize, cur.u32()? as usize);
-                let alpha = cur.f32()?;
-                let beta = cur.f32()?;
-                let a = cur.f32s(m * n)?;
+            Opcode::Gemv => {
+                let ta = trans_from(r.u8()?)?;
+                let (m, n) = (r.u32()? as usize, r.u32()? as usize);
+                let (incx, incy) = (r.u32()? as usize, r.u32()? as usize);
+                ensure!(incx >= 1 && incy >= 1, "gemv strides must be >= 1");
+                let alpha = r.scalar()?;
+                let beta = r.scalar()?;
+                let a = r.tensor(m * n)?;
                 let (xl, yl) = if ta.is_trans() { (m, n) } else { (n, m) };
-                let x = cur.f32s(xl)?;
-                let y = cur.f32s(yl)?;
-                Request::Sgemv { ta, m, n, alpha, beta, a, x, y }
+                let x = r.tensor(strided_len(xl, incx))?;
+                let y = r.tensor(strided_len(yl, incy))?;
+                Request::Gemv(GemvWire { ta, m, n, incx, incy, alpha, beta, a, x, y })
             }
+        };
+        r.finish()?;
+        Ok(req)
+    }
+
+    // -- generated-style constructors (what clients actually type) --
+    //
+    // Constructors trim each buffer to the exact stored length the codec
+    // emits and the decoder expects, so a BLAS-legal slack buffer (e.g. a
+    // natural `n·incx`-sized x) still produces a decodable frame.
+
+    /// f32 gemm request (the accelerated sgemm).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgemm(
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        mut a: Vec<f32>,
+        mut b: Vec<f32>,
+        mut c: Vec<f32>,
+    ) -> Request {
+        trim_gemm(ta, tb, m, n, k, &mut a, &mut b, &mut c);
+        Request::Gemm(GemmWire {
+            ta,
+            tb,
+            m,
+            n,
+            k,
+            alpha: alpha as f64,
+            beta: beta as f64,
+            a: Tensor::F32(a),
+            b: Tensor::F32(b),
+            c: Tensor::F32(c),
+        })
+    }
+
+    /// f64 gemm request (the paper's "false dgemm" path server-side).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dgemm(
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        mut a: Vec<f64>,
+        mut b: Vec<f64>,
+        mut c: Vec<f64>,
+    ) -> Request {
+        trim_gemm(ta, tb, m, n, k, &mut a, &mut b, &mut c);
+        Request::Gemm(GemmWire {
+            ta,
+            tb,
+            m,
+            n,
+            k,
+            alpha,
+            beta,
+            a: Tensor::F64(a),
+            b: Tensor::F64(b),
+            c: Tensor::F64(c),
+        })
+    }
+
+    /// f32 gemv request with classic vector strides.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgemv(
+        ta: Trans,
+        m: usize,
+        n: usize,
+        alpha: f32,
+        mut a: Vec<f32>,
+        mut x: Vec<f32>,
+        incx: usize,
+        beta: f32,
+        mut y: Vec<f32>,
+        incy: usize,
+    ) -> Request {
+        trim_gemv(ta, m, n, incx, incy, &mut a, &mut x, &mut y);
+        Request::Gemv(GemvWire {
+            ta,
+            m,
+            n,
+            incx,
+            incy,
+            alpha: alpha as f64,
+            beta: beta as f64,
+            a: Tensor::F32(a),
+            x: Tensor::F32(x),
+            y: Tensor::F32(y),
+        })
+    }
+
+    /// f64 gemv request with classic vector strides.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dgemv(
+        ta: Trans,
+        m: usize,
+        n: usize,
+        alpha: f64,
+        mut a: Vec<f64>,
+        mut x: Vec<f64>,
+        incx: usize,
+        beta: f64,
+        mut y: Vec<f64>,
+        incy: usize,
+    ) -> Request {
+        trim_gemv(ta, m, n, incx, incy, &mut a, &mut x, &mut y);
+        Request::Gemv(GemvWire {
+            ta,
+            m,
+            n,
+            incx,
+            incy,
+            alpha,
+            beta,
+            a: Tensor::F64(a),
+            x: Tensor::F64(x),
+            y: Tensor::F64(y),
         })
     }
 }
 
+/// Trim gemm buffers to the exact stored sizes the codec carries.
+/// Undersized buffers are left as-is: the resulting short frame is
+/// rejected loudly at decode, matching the router's own validation.
+fn trim_gemm<T>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &mut Vec<T>,
+    b: &mut Vec<T>,
+    c: &mut Vec<T>,
+) {
+    let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
+    let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
+    a.truncate(am * an);
+    b.truncate(bm * bn);
+    c.truncate(m * n);
+}
+
+/// Trim gemv buffers to the exact stored sizes the codec carries.
+fn trim_gemv<T>(
+    ta: Trans,
+    m: usize,
+    n: usize,
+    incx: usize,
+    incy: usize,
+    a: &mut Vec<T>,
+    x: &mut Vec<T>,
+    y: &mut Vec<T>,
+) {
+    let (xl, yl) = if ta.is_trans() { (m, n) } else { (n, m) };
+    a.truncate(m * n);
+    x.truncate(strided_len(xl, incx));
+    y.truncate(strided_len(yl, incy));
+}
+
+const STATUS_OK: u8 = 0;
+const STATUS_TEXT: u8 = 1;
+const STATUS_ERR: u8 = 2;
+
 impl Response {
+    /// Encode with the same frame header as requests; the payload of an
+    /// `Ok` tensor is raw elements (count implied by the frame length).
     pub fn encode(&self) -> Vec<u8> {
-        let mut body = Vec::new();
         match self {
-            Response::OkF32(v) => {
-                body.push(0u8);
-                body.push(0u8); // dtype f32
-                for x in v {
-                    body.extend_from_slice(&x.to_le_bytes());
-                }
-            }
-            Response::OkF64(v) => {
-                body.push(0u8);
-                body.push(1u8);
-                for x in v {
-                    body.extend_from_slice(&x.to_le_bytes());
-                }
+            Response::Ok(t) => {
+                let mut w = FrameWriter::new(STATUS_OK, t.dtype());
+                w.tensor(t);
+                w.finish()
             }
             Response::OkText(s) => {
-                body.push(0u8);
-                body.push(2u8);
-                body.extend_from_slice(s.as_bytes());
+                let mut w = FrameWriter::new(STATUS_TEXT, Dtype::F32);
+                w.bytes(s.as_bytes());
+                w.finish()
             }
             Response::Err(e) => {
-                body.push(1u8);
-                body.extend_from_slice(e.as_bytes());
+                let mut w = FrameWriter::new(STATUS_ERR, Dtype::F32);
+                w.bytes(e.as_bytes());
+                w.finish()
             }
         }
-        let mut frame = Vec::with_capacity(4 + body.len());
-        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&body);
-        frame
     }
 
     pub fn decode(body: &[u8]) -> Result<Response> {
-        if body.is_empty() {
-            bail!("empty response");
+        let (tag, mut r) = FrameReader::new(body)?;
+        let resp = match tag {
+            STATUS_OK => Response::Ok(r.rest_tensor()?),
+            STATUS_TEXT => Response::OkText(String::from_utf8_lossy(r.rest_bytes()).into_owned()),
+            STATUS_ERR => Response::Err(String::from_utf8_lossy(r.rest_bytes()).into_owned()),
+            other => bail!("bad response status {other}"),
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+
+    /// Unwrap an f32 tensor payload, turning server errors into `Err`.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Response::Ok(t) => t.into_f32(),
+            Response::OkText(s) => bail!("expected f32 payload, got text {s:?}"),
+            Response::Err(e) => bail!("server error: {e}"),
         }
-        if body[0] == 1 {
-            return Ok(Response::Err(String::from_utf8_lossy(&body[1..]).into_owned()));
+    }
+
+    /// Unwrap an f64 tensor payload, turning server errors into `Err`.
+    pub fn into_f64(self) -> Result<Vec<f64>> {
+        match self {
+            Response::Ok(t) => t.into_f64(),
+            Response::OkText(s) => bail!("expected f64 payload, got text {s:?}"),
+            Response::Err(e) => bail!("server error: {e}"),
         }
-        if body.len() < 2 {
-            bail!("truncated response");
-        }
-        Ok(match body[1] {
-            0 => Response::OkF32(
-                body[2..]
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect(),
-            ),
-            1 => Response::OkF64(
-                body[2..]
-                    .chunks_exact(8)
-                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-                    .collect(),
-            ),
-            2 => Response::OkText(String::from_utf8_lossy(&body[2..]).into_owned()),
-            d => bail!("bad dtype tag {d}"),
-        })
     }
 }
 
@@ -364,53 +696,108 @@ mod tests {
 
     #[test]
     fn sgemm_round_trip() {
-        let req = Request::Sgemm {
-            ta: Trans::T,
-            tb: Trans::N,
-            m: 2,
-            n: 3,
-            k: 4,
-            alpha: 1.5,
-            beta: -0.5,
-            a: (0..8).map(|v| v as f32).collect(),   // k×m stored (ta=T)
-            b: (0..12).map(|v| v as f32).collect(),  // k×n
-            c: (0..6).map(|v| v as f32).collect(),
-        };
+        let req = Request::sgemm(
+            Trans::T,
+            Trans::N,
+            2,
+            3,
+            4,
+            1.5,
+            -0.5,
+            (0..8).map(|v| v as f32).collect(), // k×m stored (ta=T)
+            (0..12).map(|v| v as f32).collect(), // k×n
+            (0..6).map(|v| v as f32).collect(),
+        );
         let frame = req.encode();
         let body = &frame[4..];
         match Request::decode(body).unwrap() {
-            Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
-                assert_eq!((ta, tb), (Trans::T, Trans::N));
-                assert_eq!((m, n, k), (2, 3, 4));
-                assert_eq!((alpha, beta), (1.5, -0.5));
-                assert_eq!(a.len(), 8);
-                assert_eq!(b.len(), 12);
-                assert_eq!(c, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+            Request::Gemm(g) => {
+                assert_eq!(g.dtype(), Dtype::F32);
+                assert_eq!((g.ta, g.tb), (Trans::T, Trans::N));
+                assert_eq!((g.m, g.n, g.k), (2, 3, 4));
+                assert_eq!((g.alpha, g.beta), (1.5, -0.5));
+                assert_eq!(g.a.len(), 8);
+                assert_eq!(g.b.len(), 12);
+                assert_eq!(g.c.as_f32().unwrap(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
             }
             other => panic!("wrong decode: {other:?}"),
         }
     }
 
     #[test]
-    fn false_dgemm_round_trip() {
-        let req = Request::FalseDgemm {
-            ta: Trans::N,
-            tb: Trans::H,
-            m: 2,
-            n: 2,
-            k: 3,
-            alpha: 2.0,
-            beta: 0.0,
-            a: vec![1.0; 6],
-            b: vec![2.0; 6],
-            c: vec![0.0; 4],
-        };
+    fn dgemm_round_trip_same_codec() {
+        let req = Request::dgemm(
+            Trans::N,
+            Trans::H,
+            2,
+            2,
+            3,
+            2.0,
+            0.0,
+            vec![1.0; 6],
+            vec![2.0; 6],
+            vec![0.0; 4],
+        );
         let frame = req.encode();
         match Request::decode(&frame[4..]).unwrap() {
-            Request::FalseDgemm { tb, k, b, .. } => {
-                assert_eq!(tb, Trans::H);
-                assert_eq!(k, 3);
-                assert_eq!(b, vec![2.0; 6]);
+            Request::Gemm(g) => {
+                assert_eq!(g.dtype(), Dtype::F64);
+                assert_eq!(g.tb, Trans::H);
+                assert_eq!(g.k, 3);
+                assert_eq!(g.b.as_f64().unwrap(), &[2.0; 6]);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slack_buffers_trimmed_to_decodable_frames() {
+        // A natural n·incx-sized x (4 elements) exceeds the wire's exact
+        // stored length ((n−1)·incx+1 = 3); the constructor trims it so
+        // the frame still decodes.
+        let req = Request::sgemv(
+            Trans::N,
+            2,
+            2,
+            1.0,
+            vec![1.0; 4],
+            vec![1.0, 0.0, 2.0, 0.0], // slack tail element
+            2,
+            0.0,
+            vec![0.0; 2],
+            1,
+        );
+        let frame = req.encode();
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::Gemv(g) => {
+                assert_eq!(g.x.len(), 3);
+                assert_eq!(g.x.as_f32().unwrap(), &[1.0, 0.0, 2.0]);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gemv_strides_round_trip() {
+        // x logical 3 @ incx 2 → stored 5; y logical 2 @ incy 3 → stored 4.
+        let req = Request::sgemv(
+            Trans::N,
+            2,
+            3,
+            1.0,
+            vec![0.5; 6],
+            vec![1.0; 5],
+            2,
+            0.0,
+            vec![2.0; 4],
+            3,
+        );
+        let frame = req.encode();
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::Gemv(g) => {
+                assert_eq!((g.incx, g.incy), (2, 3));
+                assert_eq!((g.x.len(), g.y.len()), (5, 4));
+                assert_eq!(g.xy_logical_len(), (3, 2));
             }
             other => panic!("wrong decode: {other:?}"),
         }
@@ -419,16 +806,15 @@ mod tests {
     #[test]
     fn response_variants_round_trip() {
         for resp in [
-            Response::OkF32(vec![1.0, 2.0]),
-            Response::OkF64(vec![3.0]),
+            Response::Ok(Tensor::F32(vec![1.0, 2.0])),
+            Response::Ok(Tensor::F64(vec![3.0])),
             Response::OkText("pong".into()),
             Response::Err("boom".into()),
         ] {
             let frame = resp.encode();
             let back = Response::decode(&frame[4..]).unwrap();
             match (&resp, &back) {
-                (Response::OkF32(a), Response::OkF32(b)) => assert_eq!(a, b),
-                (Response::OkF64(a), Response::OkF64(b)) => assert_eq!(a, b),
+                (Response::Ok(a), Response::Ok(b)) => assert_eq!(a, b),
                 (Response::OkText(a), Response::OkText(b)) => assert_eq!(a, b),
                 (Response::Err(a), Response::Err(b)) => assert_eq!(a, b),
                 _ => panic!("variant changed in round trip"),
@@ -440,9 +826,22 @@ mod tests {
     fn truncated_frames_rejected() {
         let req = Request::Ping.encode();
         assert!(Request::decode(&req[4..]).is_ok());
-        let bad = [Opcode::Sgemm as u8, 0, 0]; // missing everything
+        let bad = [Opcode::Gemm as u8, 0, 0]; // header only, no payload
         assert!(Request::decode(&bad).is_err());
-        assert!(Request::decode(&[42]).is_err(), "unknown opcode");
+        assert!(Request::decode(&[42, 0, 0]).is_err(), "unknown opcode");
+        assert!(Request::decode(&[16, 9, 0]).is_err(), "unknown dtype");
+        assert!(Request::decode(&[16, 0, 7]).is_err(), "nonzero reserved flags");
+        assert!(Request::decode(&[16]).is_err(), "shorter than header");
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut frame = Request::Ping.encode();
+        frame.extend_from_slice(&[0, 0, 0, 0]);
+        // Re-stamp the length prefix to cover the garbage.
+        let len = (frame.len() - 4) as u32;
+        frame[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(Request::decode(&frame[4..]).is_err());
     }
 
     #[test]

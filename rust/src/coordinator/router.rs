@@ -1,13 +1,17 @@
 //! Request routing: level-3 gemm traffic to the Epiphany batcher queue,
 //! level-2 to host compute, control ops answered inline — the dispatch
 //! stage in front of the serial coprocessor.
+//!
+//! Routing is decided by (opcode, dtype) of the descriptor frame: the op
+//! class picks the route, the dtype picks the precision instantiation —
+//! adding a routed op means one dispatch arm here, not one per dtype.
 
 use super::batcher::{Batcher, GemmJob};
 use super::metrics::{Metrics, RequestKind};
-use super::protocol::{Request, Response};
-use crate::blis::{level2, Blas};
-use crate::linalg::{Mat, MatRef};
-use anyhow::Result;
+use super::protocol::{GemvWire, Request, Response, Tensor};
+use crate::blis::{Blas, Dtype, GemvOp};
+use crate::linalg::{Mat, MatRef, Real};
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 
 /// The router: shared by all connection threads.
@@ -47,52 +51,114 @@ impl Router {
                 self.batcher.depth()
             ))),
             Request::Shutdown => Ok(Response::OkText("bye".into())),
-            Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
-                // Route to the Epiphany queue.
-                let rx = self.batcher.submit(GemmJob { ta, tb, m, n, k, alpha, beta, a, b, c });
-                let out = rx.recv().map_err(|_| anyhow::anyhow!("batcher gone"))??;
-                Ok(Response::OkF32(out))
+            Request::Gemm(g) => {
+                // Wire-decoded frames are size-checked already; guard
+                // hand-built descriptors so both arms err, not panic (a
+                // panic in the batcher worker would wedge the f32 queue).
+                let (ar, ac) = if g.ta.is_trans() { (g.k, g.m) } else { (g.m, g.k) };
+                let (br, bc) = if g.tb.is_trans() { (g.n, g.k) } else { (g.k, g.n) };
+                ensure!(g.a.len() == ar * ac, "gemm A payload {} != {ar}x{ac}", g.a.len());
+                ensure!(g.b.len() == br * bc, "gemm B payload {} != {br}x{bc}", g.b.len());
+                ensure!(g.c.len() == g.m * g.n, "gemm C payload {} != m·n", g.c.len());
+                match g.dtype() {
+                    // f32: the serving-style traffic class — route to the
+                    // Epiphany batcher queue (coalescing + FIFO).
+                    Dtype::F32 => {
+                        let rx = self.batcher.submit(GemmJob {
+                            ta: g.ta,
+                            tb: g.tb,
+                            m: g.m,
+                            n: g.n,
+                            k: g.k,
+                            alpha: g.alpha as f32,
+                            beta: g.beta as f32,
+                            a: g.a.into_f32()?,
+                            b: g.b.into_f32()?,
+                            c: g.c.into_f32()?,
+                        });
+                        let out = rx.recv().map_err(|_| anyhow::anyhow!("batcher gone"))??;
+                        Ok(Response::Ok(Tensor::F32(out)))
+                    }
+                    // f64 traffic is rare (HPL); route directly, serialized
+                    // by the service itself.
+                    Dtype::F64 => {
+                        let t0 = std::time::Instant::now();
+                        let a = g.a.into_f64()?;
+                        let b = g.b.into_f64()?;
+                        let a_v = MatRef::from_col_major(ar, ac, ar, &a);
+                        let b_v = MatRef::from_col_major(br, bc, br, &b);
+                        let mut c_m = Mat::from_col_major(g.m, g.n, g.c.as_f64()?);
+                        let rep = self
+                            .blas
+                            .dgemm_false(g.ta, g.tb, g.alpha, a_v, b_v, g.beta, &mut c_m)?;
+                        self.metrics.record_request(
+                            RequestKind::Gemm,
+                            t0.elapsed().as_secs_f64(),
+                            rep.flops,
+                        );
+                        Ok(Response::Ok(Tensor::F64(c_m.as_slice().to_vec())))
+                    }
+                }
             }
-            Request::FalseDgemm { ta, tb, m, n, k, alpha, beta, a, b, c } => {
-                // f64 traffic is rare (HPL); route directly, serialized by
-                // the service itself.
+            // Host-side level-2 (the unaccelerated class; §4.3): descriptor
+            // dispatch through `Blas::execute`, which owns validation and
+            // the host-ledger accounting — one instantiation per dtype.
+            Request::Gemv(g) => {
                 let t0 = std::time::Instant::now();
-                let (ar, ac) = if ta.is_trans() { (k, m) } else { (m, k) };
-                let (br, bc) = if tb.is_trans() { (n, k) } else { (k, n) };
-                let a_v = MatRef::from_col_major(ar, ac, ar, &a);
-                let b_v = MatRef::from_col_major(br, bc, br, &b);
-                let mut c_m = Mat::from_col_major(m, n, &c);
-                let rep = self.blas.dgemm_false(ta, tb, alpha, a_v, b_v, beta, &mut c_m)?;
-                self.metrics.record_request(
-                    RequestKind::Gemm,
-                    t0.elapsed().as_secs_f64(),
-                    rep.flops,
-                );
-                Ok(Response::OkF64(c_m.as_slice().to_vec()))
-            }
-            Request::Sgemv { ta, m, n, alpha, beta, a, x, mut y } => {
-                // Host-side level-2 (the unaccelerated class; §4.3).
-                let t0 = std::time::Instant::now();
-                let a_v = MatRef::from_col_major(m, n, m, &a);
-                level2::gemv(ta, alpha, a_v, &x, beta, &mut y);
-                let flops = 2.0 * m as f64 * n as f64;
-                self.blas.charge_host_op(
-                    flops,
-                    crate::epiphany::timing::CalibratedModel::default().host_level2_f64_gflops,
-                );
+                let flops = 2.0 * g.m as f64 * g.n as f64;
+                ensure!(g.a.len() >= g.m * g.n, "gemv A payload {} < m·n", g.a.len());
+                let out = match g.dtype() {
+                    Dtype::F32 => Tensor::F32(self.exec_gemv(
+                        &g,
+                        g.a.as_f32()?,
+                        g.x.as_f32()?,
+                        g.y.as_f32()?,
+                    )?),
+                    Dtype::F64 => Tensor::F64(self.exec_gemv(
+                        &g,
+                        g.a.as_f64()?,
+                        g.x.as_f64()?,
+                        g.y.as_f64()?,
+                    )?),
+                };
                 self.metrics.record_request(RequestKind::Gemv, t0.elapsed().as_secs_f64(), flops);
-                Ok(Response::OkF32(y))
+                Ok(Response::Ok(out))
             }
         }
+    }
+
+    /// The dtype-generic gemv route: wrap the wire payload in a
+    /// [`GemvOp`] descriptor and let [`Blas::execute`] validate, run and
+    /// account it (recoverable errors on malformed descriptors).
+    fn exec_gemv<T: Real>(
+        &self,
+        g: &GemvWire,
+        a: &[T],
+        x: &[T],
+        y: &[T],
+    ) -> Result<Vec<T>> {
+        let a_v = MatRef::from_col_major(g.m, g.n, g.m, a);
+        let mut y = y.to_vec();
+        self.blas.execute(GemvOp {
+            trans: g.ta,
+            alpha: T::from_f64(g.alpha),
+            a: a_v,
+            x,
+            incx: g.incx,
+            beta: T::from_f64(g.beta),
+            y: &mut y,
+            incy: g.incy,
+        })?;
+        Ok(y)
     }
 }
 
 /// Route classification used by tests and docs.
 pub fn route_of(req: &Request) -> &'static str {
     match req {
-        Request::Sgemm { .. } => "epiphany-queue",
-        Request::FalseDgemm { .. } => "epiphany-direct",
-        Request::Sgemv { .. } => "host-pool",
+        Request::Gemm(g) if g.dtype() == Dtype::F32 => "epiphany-queue",
+        Request::Gemm(_) => "epiphany-direct",
+        Request::Gemv(_) => "host-pool",
         Request::Ping | Request::Stats | Request::Shutdown => "control",
     }
 }
@@ -124,19 +190,35 @@ mod tests {
     #[test]
     fn routes_classified() {
         assert_eq!(route_of(&Request::Ping), "control");
-        let gemm = Request::Sgemm {
-            ta: Trans::N,
-            tb: Trans::N,
-            m: 1,
-            n: 1,
-            k: 1,
-            alpha: 1.0,
-            beta: 0.0,
-            a: vec![1.0],
-            b: vec![1.0],
-            c: vec![0.0],
-        };
-        assert_eq!(route_of(&gemm), "epiphany-queue");
+        let sgemm = Request::sgemm(
+            Trans::N,
+            Trans::N,
+            1,
+            1,
+            1,
+            1.0,
+            0.0,
+            vec![1.0],
+            vec![1.0],
+            vec![0.0],
+        );
+        assert_eq!(route_of(&sgemm), "epiphany-queue");
+        let dgemm = Request::dgemm(
+            Trans::N,
+            Trans::N,
+            1,
+            1,
+            1,
+            1.0,
+            0.0,
+            vec![1.0],
+            vec![1.0],
+            vec![0.0],
+        );
+        assert_eq!(route_of(&dgemm), "epiphany-direct");
+        let gemv =
+            Request::sgemv(Trans::N, 1, 1, 1.0, vec![1.0], vec![1.0], 1, 0.0, vec![0.0], 1);
+        assert_eq!(route_of(&gemv), "host-pool");
     }
 
     #[test]
@@ -145,22 +227,19 @@ mod tests {
         let (m, n, k) = (64, 32, 48);
         let a = Mat::<f32>::randn(m, k, 1);
         let b = Mat::<f32>::randn(k, n, 2);
-        let resp = r.handle(Request::Sgemm {
-            ta: Trans::N,
-            tb: Trans::N,
+        let resp = r.handle(Request::sgemm(
+            Trans::N,
+            Trans::N,
             m,
             n,
             k,
-            alpha: 1.0,
-            beta: 0.0,
-            a: a.as_slice().to_vec(),
-            b: b.as_slice().to_vec(),
-            c: vec![0.0; m * n],
-        });
-        let out = match resp {
-            Response::OkF32(v) => Mat::from_col_major(m, n, &v),
-            other => panic!("{other:?}"),
-        };
+            1.0,
+            0.0,
+            a.as_slice().to_vec(),
+            b.as_slice().to_vec(),
+            vec![0.0; m * n],
+        ));
+        let out = Mat::from_col_major(m, n, &resp.into_f32().unwrap());
         let mut want = Mat::<f64>::zeros(m, n);
         crate::blis::level3::gemm_host(
             Trans::N,
@@ -176,25 +255,24 @@ mod tests {
     }
 
     #[test]
-    fn sgemv_on_host_path() {
+    fn gemv_on_host_path_both_dtypes() {
         let r = router();
         let (m, n) = (16, 8);
         let a = Mat::<f32>::randn(m, n, 3);
         let x: Vec<f32> = (0..n).map(|v| v as f32).collect();
-        let resp = r.handle(Request::Sgemv {
-            ta: Trans::N,
+        let resp = r.handle(Request::sgemv(
+            Trans::N,
             m,
             n,
-            alpha: 1.0,
-            beta: 0.0,
-            a: a.as_slice().to_vec(),
-            x: x.clone(),
-            y: vec![0.0; m],
-        });
-        let y = match resp {
-            Response::OkF32(v) => v,
-            other => panic!("{other:?}"),
-        };
+            1.0,
+            a.as_slice().to_vec(),
+            x.clone(),
+            1,
+            0.0,
+            vec![0.0; m],
+            1,
+        ));
+        let y = resp.into_f32().unwrap();
         for i in 0..m {
             let mut want = 0.0f64;
             for j in 0..n {
@@ -202,13 +280,60 @@ mod tests {
             }
             assert!((y[i] as f64 - want).abs() < 1e-4);
         }
+        // Same wire op, f64 instantiation.
+        let a64 = a.cast::<f64>();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let resp = r.handle(Request::dgemv(
+            Trans::N,
+            m,
+            n,
+            1.0,
+            a64.as_slice().to_vec(),
+            x64.clone(),
+            1,
+            0.0,
+            vec![0.0; m],
+            1,
+        ));
+        let y64 = resp.into_f64().unwrap();
+        for i in 0..m {
+            let mut want = 0.0f64;
+            for j in 0..n {
+                want += a64.get(i, j) * x64[j];
+            }
+            assert!((y64[i] - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn strided_gemv_through_router() {
+        // A = [1 2; 3 4]; x = [1, 10] at incx 2; y at incy 3.
+        let r = router();
+        let a = vec![1.0f32, 3.0, 2.0, 4.0];
+        let resp = r.handle(Request::sgemv(
+            Trans::N,
+            2,
+            2,
+            1.0,
+            a,
+            vec![1.0, 0.0, 10.0],
+            2,
+            0.0,
+            vec![0.0; 4],
+            3,
+        ));
+        let y = resp.into_f32().unwrap();
+        assert_eq!(y[0], 21.0);
+        assert_eq!(y[3], 43.0);
     }
 
     #[test]
     fn bad_request_becomes_error_response() {
         let r = router();
-        // Mismatched payload sizes.
-        let resp = r.handle(Request::Sgemm {
+        // Mismatched payload sizes (hand-built wire struct skips the
+        // constructor's implicit sizing).
+        use crate::coordinator::protocol::GemmWire;
+        let resp = r.handle(Request::Gemm(GemmWire {
             ta: Trans::N,
             tb: Trans::N,
             m: 4,
@@ -216,10 +341,28 @@ mod tests {
             k: 4,
             alpha: 1.0,
             beta: 0.0,
-            a: vec![0.0; 3], // wrong
-            b: vec![0.0; 16],
-            c: vec![0.0; 16],
-        });
+            a: Tensor::F32(vec![0.0; 3]), // wrong
+            b: Tensor::F32(vec![0.0; 16]),
+            c: Tensor::F32(vec![0.0; 16]),
+        }));
         assert!(matches!(resp, Response::Err(_)));
+        // The malformed request must be rejected BEFORE reaching the
+        // batcher: the worker stays alive and serves the next request.
+        let (m, n, k) = (8, 8, 8);
+        let a = Mat::<f32>::randn(m, k, 5);
+        let b = Mat::<f32>::randn(k, n, 6);
+        let good = r.handle(Request::sgemm(
+            Trans::N,
+            Trans::N,
+            m,
+            n,
+            k,
+            1.0,
+            0.0,
+            a.as_slice().to_vec(),
+            b.as_slice().to_vec(),
+            vec![0.0; m * n],
+        ));
+        assert_eq!(good.into_f32().unwrap().len(), m * n);
     }
 }

@@ -184,23 +184,20 @@ mod tests {
         let a = Mat::<f32>::randn(m, k, 1);
         let b = Mat::<f32>::randn(k, n, 2);
         let resp = cli
-            .call(&Request::Sgemm {
-                ta: Trans::N,
-                tb: Trans::N,
+            .call(&Request::sgemm(
+                Trans::N,
+                Trans::N,
                 m,
                 n,
                 k,
-                alpha: 1.0,
-                beta: 0.0,
-                a: a.as_slice().to_vec(),
-                b: b.as_slice().to_vec(),
-                c: vec![0.0; m * n],
-            })
+                1.0,
+                0.0,
+                a.as_slice().to_vec(),
+                b.as_slice().to_vec(),
+                vec![0.0; m * n],
+            ))
             .unwrap();
-        let out = match resp {
-            Response::OkF32(v) => Mat::from_col_major(m, n, &v),
-            other => panic!("{other:?}"),
-        };
+        let out = Mat::from_col_major(m, n, &resp.into_f32().unwrap());
         let mut want = Mat::<f64>::zeros(m, n);
         crate::blis::level3::gemm_host(
             Trans::N,
@@ -227,23 +224,20 @@ mod tests {
                     let a = Mat::<f32>::randn(m, k, t * 100 + i);
                     let b = Mat::<f32>::randn(k, n, t * 100 + i + 1);
                     let resp = cli
-                        .call(&Request::Sgemm {
-                            ta: Trans::N,
-                            tb: Trans::N,
+                        .call(&Request::sgemm(
+                            Trans::N,
+                            Trans::N,
                             m,
                             n,
                             k,
-                            alpha: 1.0,
-                            beta: 0.0,
-                            a: a.as_slice().to_vec(),
-                            b: b.as_slice().to_vec(),
-                            c: vec![0.0; m * n],
-                        })
+                            1.0,
+                            0.0,
+                            a.as_slice().to_vec(),
+                            b.as_slice().to_vec(),
+                            vec![0.0; m * n],
+                        ))
                         .unwrap();
-                    let out = match resp {
-                        Response::OkF32(v) => Mat::from_col_major(m, n, &v),
-                        other => panic!("{other:?}"),
-                    };
+                    let out = Mat::from_col_major(m, n, &resp.into_f32().unwrap());
                     let mut want = Mat::<f64>::zeros(m, n);
                     crate::blis::level3::gemm_host(
                         Trans::N,

@@ -16,7 +16,7 @@ use crate::esdk::EHal;
 use crate::runtime::GemmExecutor;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Which backend the service boots.
@@ -67,6 +67,12 @@ pub struct ServiceHandle {
     /// tests and the coordinator's backpressure).
     pub sem_request: Semaphore,
     pub sem_done: Semaphore,
+    /// Serializes the client side of one HH-RAM exchange (stage → signal →
+    /// reply → collect). There is exactly one staging region (§3.2), so
+    /// concurrent callers — async tickets, router threads — must not
+    /// interleave their payloads; packing for the *next* call can still
+    /// proceed outside this critical section.
+    ipc_lock: Mutex<()>,
     join: Option<JoinHandle<()>>,
     geom: KernelGeometry,
 }
@@ -144,6 +150,7 @@ impl ServiceHandle {
             shm,
             sem_request,
             sem_done,
+            ipc_lock: Mutex::new(()),
             join: Some(join),
             geom,
         })
@@ -168,6 +175,7 @@ impl ServiceHandle {
     ) -> Result<(Vec<f32>, ServiceResponse)> {
         params.ipc = true;
         let k = a_panel.len() / self.geom.m;
+        let _ipc = self.ipc_lock.lock().unwrap();
         // Stage request payload into HH-RAM: [a | b | c] (single copy).
         self.shm.write_f32_parts(&[a_panel, b_panel, c_in]);
         self.sem_request.post();
@@ -196,6 +204,7 @@ impl ServiceHandle {
         params.ipc = true;
         params.dgemm = true;
         let k = a_panel.len() / self.geom.m;
+        let _ipc = self.ipc_lock.lock().unwrap();
         self.shm.write_f64_parts(&[a_panel, b_panel, c_in]);
         self.sem_request.post();
 

@@ -23,17 +23,70 @@
 //! builds are fully offline, with `anyhow` as the only dependency, and
 //! use the functional simulator instead.
 //!
+//! ## The descriptor API
+//!
+//! Every BLAS call is a typed, precision-generic descriptor from
+//! [`blis::op`] — [`blis::GemmOp`], [`blis::GemvOp`], [`blis::Level1Op`],
+//! … — executed by [`blis::Blas::execute`], the single path that
+//! validates, routes (level-3 gemm → the Epiphany service, the rest →
+//! host) and accounts. The classic FORTRAN-style names (`sgemm`, `saxpy`,
+//! `sgemv`, …) survive as generated-style shims on
+//! [`blis::BlasLibrary`]. Owned descriptors can also be submitted
+//! asynchronously: [`blis::Blas::submit`] returns a [`blis::Ticket`]
+//! whose `wait()` joins the in-flight op, so packing the next operand
+//! overlaps the current service crossing.
+//!
 //! ## Quick start
 //!
 //! ```no_run
+//! use parallella_blas::blis::{GemmOp, GemmTask};
 //! use parallella_blas::prelude::*;
+//! use std::sync::Arc;
 //!
 //! let plat = Platform::builder().backend(BackendKind::Simulator).build().unwrap();
 //! let blas = plat.blas();
 //! let a = Mat::<f32>::randn(192, 4096, 1);
 //! let b = Mat::<f32>::randn(4096, 256, 2);
 //! let mut c = Mat::<f32>::zeros(192, 256);
+//!
+//! // Classic shim (unchanged surface) ...
 //! blas.sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+//!
+//! // ... or the descriptor core it delegates to ...
+//! let op = GemmOp {
+//!     ta: Trans::N,
+//!     tb: Trans::N,
+//!     alpha: 1.0f32,
+//!     a: a.view(),
+//!     b: b.view(),
+//!     beta: 0.0,
+//!     c: c.view_mut(),
+//! };
+//! blas.execute(op).unwrap();
+//!
+//! // ... or asynchronously, overlapping two in-flight gemms.
+//! let h = plat.blas_handle();
+//! let t1 = Arc::clone(&h).submit(GemmTask {
+//!     ta: Trans::N,
+//!     tb: Trans::N,
+//!     alpha: 1.0f32,
+//!     a: a.clone(),
+//!     b: b.clone(),
+//!     beta: 0.0,
+//!     c: Mat::zeros(192, 256),
+//! });
+//! let t2 = Arc::clone(&h).submit(GemmTask {
+//!     ta: Trans::N,
+//!     tb: Trans::N,
+//!     alpha: 1.0f32,
+//!     a,
+//!     b,
+//!     beta: 0.0,
+//!     c: Mat::zeros(192, 256),
+//! });
+//! let (c1, _report1) = t1.wait().unwrap();
+//! let (c2, _report2) = t2.wait().unwrap();
+//! # let _ = (c1, c2);
 //! ```
 
 // Idioms this model-code intentionally keeps: BLAS signatures carry many
@@ -63,7 +116,7 @@ pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::blis::{Blas, Trans};
+    pub use crate::blis::{Blas, BlasLibrary, BlasOp, Dtype, Ticket, Trans};
     pub use crate::epiphany::timing::CalibratedModel;
     pub use crate::linalg::{Mat, MatMut, MatRef};
     pub use crate::platform::{BackendKind, Platform, PlatformBuilder};

@@ -160,10 +160,12 @@ pub struct MatRef<'a, T: Real> {
 
 impl<'a, T: Real> MatRef<'a, T> {
     /// View over a raw column-major buffer with an explicit leading
-    /// dimension (classic BLAS `lda`).
+    /// dimension (classic BLAS `lda`). Accepts the classic minimal
+    /// buffer: `lda·(cols−1) + rows` elements (tight trailing column).
     pub fn from_col_major(rows: usize, cols: usize, lda: usize, data: &'a [T]) -> Self {
         assert!(lda >= rows, "lda {lda} < rows {rows}");
-        assert!(data.len() >= lda * cols.max(1), "buffer too small");
+        let need = if cols == 0 { 0 } else { lda * (cols - 1) + rows };
+        assert!(data.len() >= need, "buffer too small: {} < {need}", data.len());
         MatRef { rows, cols, rs: 1, cs: lda as isize, data, offset: 0 }
     }
 
@@ -238,9 +240,12 @@ pub struct MatMut<'a, T: Real> {
 }
 
 impl<'a, T: Real> MatMut<'a, T> {
+    /// See [`MatRef::from_col_major`]; the classic minimal buffer of
+    /// `lda·(cols−1) + rows` elements is accepted.
     pub fn from_col_major(rows: usize, cols: usize, lda: usize, data: &'a mut [T]) -> Self {
         assert!(lda >= rows, "lda {lda} < rows {rows}");
-        assert!(data.len() >= lda * cols.max(1), "buffer too small");
+        let need = if cols == 0 { 0 } else { lda * (cols - 1) + rows };
+        assert!(data.len() >= need, "buffer too small: {} < {need}", data.len());
         MatMut { rows, cols, rs: 1, cs: lda as isize, data, offset: 0 }
     }
 

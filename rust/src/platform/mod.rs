@@ -1,11 +1,12 @@
 //! Top-level handle: boot the service with a chosen backend and hand out
 //! the generated BLAS — the "library object" a downstream user holds.
 
-use crate::blis::Blas;
+use crate::blis::{Blas, BlasLibrary};
 use crate::epiphany::kernel::KernelGeometry;
 use crate::epiphany::timing::CalibratedModel;
 use crate::host::service::{ServiceBackend, ServiceHandle};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Which engine computes the heavy part.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,13 +56,13 @@ impl PlatformBuilder {
 
     pub fn build(self) -> Result<Platform> {
         let svc = ServiceHandle::spawn(self.backend.service(), self.model.clone(), self.geom)?;
-        Ok(Platform { blas: Blas::new(svc), model: self.model, backend: self.backend })
+        Ok(Platform { blas: Arc::new(Blas::new(svc)), model: self.model, backend: self.backend })
     }
 }
 
 /// A booted Parallella-BLAS stack: resident service + generated BLAS.
 pub struct Platform {
-    blas: Blas,
+    blas: Arc<Blas>,
     pub model: CalibratedModel,
     pub backend: BackendKind,
 }
@@ -77,6 +78,19 @@ impl Platform {
 
     pub fn blas(&self) -> &Blas {
         &self.blas
+    }
+
+    /// A shared handle to the descriptor core — what
+    /// [`Blas::submit`](crate::blis::Blas::submit) tickets are issued
+    /// against.
+    pub fn blas_handle(&self) -> Arc<Blas> {
+        Arc::clone(&self.blas)
+    }
+
+    /// The classic FORTRAN-style surface (`sgemm`, `saxpy`, …) over this
+    /// platform's descriptor core.
+    pub fn library(&self) -> BlasLibrary {
+        BlasLibrary::new(Arc::clone(&self.blas))
     }
 }
 

@@ -1,0 +1,390 @@
+//! f32-vs-f64 conformance suite: every classic shim on [`BlasLibrary`]
+//! must match a naive f64 reference within a precision-scaled tolerance,
+//! against both the functional `Simulator` and the naive `HostRef`
+//! service backends.
+//!
+//! Tolerances scale with machine epsilon of the *compute* precision:
+//! f32 routines and both gemms (dgemm is the paper's "false dgemm" — f64
+//! API, f32 Epiphany compute) get f32-scaled bounds; the true-f64 host
+//! routines get f64-scaled bounds, which would catch any accidental
+//! downcast on those paths.
+
+use parallella_blas::blis::{Blas, BlasLibrary, Trans};
+use parallella_blas::epiphany::kernel::KernelGeometry;
+use parallella_blas::epiphany::timing::CalibratedModel;
+use parallella_blas::host::service::{ServiceBackend, ServiceHandle};
+use parallella_blas::linalg::Mat;
+use std::sync::Arc;
+
+fn lib(backend: ServiceBackend) -> BlasLibrary {
+    let svc =
+        ServiceHandle::spawn(backend, CalibratedModel::default(), KernelGeometry::paper()).unwrap();
+    BlasLibrary::new(Arc::new(Blas::new(svc)))
+}
+
+const BACKENDS: [ServiceBackend; 2] = [ServiceBackend::Simulator, ServiceBackend::HostRef];
+
+/// Precision-scaled tolerance: `eps · n · 32` (generous slack for
+/// accumulation order differences, still orders of magnitude below the
+/// other precision's epsilon).
+fn tol(eps: f64, n: usize) -> f64 {
+    eps * (n.max(1) as f64) * 32.0
+}
+
+fn assert_close(got: f64, want: f64, t: f64, what: &str) {
+    let scale = want.abs().max(1.0);
+    assert!((got - want).abs() <= t * scale, "{what}: got {got}, want {want} (tol {t:.3e})");
+}
+
+// ---------------------------------------------------------------------------
+// level 1
+// ---------------------------------------------------------------------------
+
+/// One level-1 sweep in precision `$t`, via the `$prefix`-named shims.
+macro_rules! level1_conformance {
+    ($lib:expr, $t:ty, $eps:expr, $axpy:ident, $scal:ident, $copy:ident, $swap:ident,
+     $dot:ident, $nrm2:ident, $asum:ident, $iamax:ident) => {{
+        let lib = $lib;
+        let n = 48usize;
+        let x: Vec<$t> = (0..n).map(|i| ((i * 7 % 13) as $t) / 13.0 - 0.4).collect();
+        let y0: Vec<$t> = (0..n).map(|i| ((i * 5 % 11) as $t) / 11.0 - 0.6).collect();
+        let alpha: $t = 1.25;
+        let t = tol($eps, n);
+
+        // axpy
+        let mut y = y0.clone();
+        lib.$axpy(n, alpha, &x, 1, &mut y, 1);
+        for i in 0..n {
+            let want = alpha as f64 * x[i] as f64 + y0[i] as f64;
+            assert_close(y[i] as f64, want, t, "axpy");
+        }
+        // scal
+        let mut xs = x.clone();
+        lib.$scal(n, alpha, &mut xs, 1);
+        for i in 0..n {
+            assert_close(xs[i] as f64, alpha as f64 * x[i] as f64, t, "scal");
+        }
+        // copy + swap
+        let mut dst = vec![0.0 as $t; n];
+        lib.$copy(n, &x, 1, &mut dst, 1);
+        assert_eq!(dst, x, "copy must be exact");
+        let mut a = x.clone();
+        let mut b = y0.clone();
+        lib.$swap(n, &mut a, 1, &mut b, 1);
+        assert_eq!((a, b), (y0.clone(), x.clone()), "swap must be exact");
+        // dot
+        let got = lib.$dot(n, &x, 1, &y0, 1) as f64;
+        let want: f64 = (0..n).map(|i| x[i] as f64 * y0[i] as f64).sum();
+        assert_close(got, want, t, "dot");
+        // nrm2
+        let got = lib.$nrm2(n, &x, 1) as f64;
+        let want = (0..n).map(|i| (x[i] as f64).powi(2)).sum::<f64>().sqrt();
+        assert_close(got, want, t, "nrm2");
+        // asum
+        let got = lib.$asum(n, &x, 1) as f64;
+        let want: f64 = (0..n).map(|i| (x[i] as f64).abs()).sum();
+        assert_close(got, want, t, "asum");
+        // iamax (exact, first index on ties)
+        let mut want = 0usize;
+        for i in 1..n {
+            if x[i].abs() > x[want].abs() {
+                want = i;
+            }
+        }
+        assert_eq!(lib.$iamax(n, &x, 1), Some(want), "iamax");
+        // strided variants agree with the dense ones
+        let xs2: Vec<$t> = x.iter().flat_map(|&v| [v, -99.0]).collect();
+        let got = lib.$dot(n, &xs2, 2, &y0, 1) as f64;
+        let want: f64 = (0..n).map(|i| x[i] as f64 * y0[i] as f64).sum();
+        assert_close(got, want, t, "strided dot");
+    }};
+}
+
+#[test]
+fn level1_f32_conformance() {
+    for backend in BACKENDS {
+        level1_conformance!(
+            lib(backend),
+            f32,
+            f32::EPSILON as f64,
+            saxpy,
+            sscal,
+            scopy,
+            sswap,
+            sdot,
+            snrm2,
+            sasum,
+            isamax
+        );
+    }
+}
+
+#[test]
+fn level1_f64_conformance() {
+    for backend in BACKENDS {
+        level1_conformance!(
+            lib(backend),
+            f64,
+            f64::EPSILON,
+            daxpy,
+            dscal,
+            dcopy,
+            dswap,
+            ddot,
+            dnrm2,
+            dasum,
+            idamax
+        );
+    }
+}
+
+#[test]
+fn srot_conformance() {
+    for backend in BACKENDS {
+        let lib = lib(backend);
+        let n = 16usize;
+        let x0: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let y0: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let (c, s) = (0.6f32, 0.8f32);
+        let mut x = x0.clone();
+        let mut y = y0.clone();
+        lib.srot(n, &mut x, 1, &mut y, 1, c, s);
+        let t = tol(f32::EPSILON as f64, n);
+        for i in 0..n {
+            let wx = c as f64 * x0[i] as f64 + s as f64 * y0[i] as f64;
+            let wy = c as f64 * y0[i] as f64 - s as f64 * x0[i] as f64;
+            assert_close(x[i] as f64, wx, t, "rot x");
+            assert_close(y[i] as f64, wy, t, "rot y");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// level 2
+// ---------------------------------------------------------------------------
+
+/// gemv/ger/trsv conformance in precision `$t` via the `$prefix` shims.
+macro_rules! level2_conformance {
+    ($lib:expr, $t:ty, $eps:expr, $gemv:ident, $ger:ident, $trsv:ident) => {{
+        let lib = $lib;
+        let (m, n) = (24usize, 17usize);
+        let a: Vec<$t> =
+            (0..m * n).map(|i| ((i * 31 % 23) as $t) / 23.0 - 0.5).collect();
+        let x: Vec<$t> = (0..n).map(|i| ((i * 3 % 7) as $t) / 7.0 - 0.3).collect();
+        let y0: Vec<$t> = (0..m).map(|i| ((i * 11 % 5) as $t) / 5.0).collect();
+        let t = tol($eps, m.max(n));
+
+        // gemv N, unit strides
+        let mut y = y0.clone();
+        lib.$gemv(Trans::N, m, n, 2.0, &a, m, &x, 1, 0.5, &mut y, 1);
+        for i in 0..m {
+            let mut acc = 0.0f64;
+            for j in 0..n {
+                acc += a[i + j * m] as f64 * x[j] as f64;
+            }
+            let want = 2.0 * acc + 0.5 * y0[i] as f64;
+            assert_close(y[i] as f64, want, t, "gemv N");
+        }
+        // gemv T with strided x and y
+        let xt: Vec<$t> = (0..m).map(|i| ((i * 13 % 9) as $t) / 9.0 - 0.4).collect();
+        let xt_strided: Vec<$t> = xt.iter().flat_map(|&v| [v, 77.0]).collect();
+        let mut yt = vec![0.0 as $t; 3 * n];
+        lib.$gemv(Trans::T, m, n, 1.0, &a, m, &xt_strided, 2, 0.0, &mut yt, 3);
+        for j in 0..n {
+            let mut want = 0.0f64;
+            for i in 0..m {
+                want += a[i + j * m] as f64 * xt[i] as f64;
+            }
+            assert_close(yt[3 * j] as f64, want, t, "gemv T strided");
+        }
+        // ger
+        let mut g = a.clone();
+        lib.$ger(m, n, 1.5, &xt, &x, &mut g, m);
+        for j in 0..n {
+            for i in 0..m {
+                let want = a[i + j * m] as f64 + 1.5 * xt[i] as f64 * x[j] as f64;
+                assert_close(g[i + j * m] as f64, want, t, "ger");
+            }
+        }
+        // trsv against a well-conditioned lower-triangular system
+        let nn = 12usize;
+        let mut tri = vec![0.0 as $t; nn * nn];
+        for j in 0..nn {
+            for i in j..nn {
+                tri[i + j * nn] =
+                    if i == j { 3.0 + j as $t } else { 0.25 / (1.0 + (i - j) as $t) };
+            }
+        }
+        let b: Vec<$t> = (0..nn).map(|i| ((i % 4) as $t) - 1.5).collect();
+        let mut xs = b.clone();
+        lib.$trsv(true, Trans::N, false, nn, &tri, nn, &mut xs);
+        // residual check: tri · xs == b
+        for i in 0..nn {
+            let mut acc = 0.0f64;
+            for j in 0..=i {
+                acc += tri[i + j * nn] as f64 * xs[j] as f64;
+            }
+            assert_close(acc, b[i] as f64, tol($eps, nn) * 4.0, "trsv residual");
+        }
+    }};
+}
+
+#[test]
+fn level2_f32_conformance() {
+    for backend in BACKENDS {
+        level2_conformance!(lib(backend), f32, f32::EPSILON as f64, sgemv, sger, strsv);
+    }
+}
+
+#[test]
+fn level2_f64_conformance() {
+    for backend in BACKENDS {
+        level2_conformance!(lib(backend), f64, f64::EPSILON, dgemv, dger, dtrsv);
+    }
+}
+
+#[test]
+fn strmv_conformance() {
+    for backend in BACKENDS {
+        let lib = lib(backend);
+        let n = 10usize;
+        let mut a = vec![0.0f32; n * n];
+        for j in 0..n {
+            for i in j..n {
+                a[i + j * n] = 1.0 + ((i + 2 * j) % 5) as f32 * 0.3;
+            }
+        }
+        let x0: Vec<f32> = (0..n).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let mut x = x0.clone();
+        lib.strmv(true, Trans::N, false, n, &a, n, &mut x);
+        let t = tol(f32::EPSILON as f64, n);
+        for i in 0..n {
+            let mut want = 0.0f64;
+            for j in 0..=i {
+                want += a[i + j * n] as f64 * x0[j] as f64;
+            }
+            assert_close(x[i] as f64, want, t, "trmv");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// level 3
+// ---------------------------------------------------------------------------
+
+fn naive_gemm_f64(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+) -> Vec<f64> {
+    // a, b in stored col-major orientation.
+    let get_a = |i: usize, l: usize| if ta.is_trans() { a[l + i * k] } else { a[i + l * m] };
+    let get_b = |l: usize, j: usize| if tb.is_trans() { b[j + l * n] } else { b[l + j * k] };
+    let mut c = vec![0.0f64; m * n];
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = 0.0;
+            for l in 0..k {
+                acc += get_a(i, l) * get_b(l, j);
+            }
+            c[i + j * m] = acc;
+        }
+    }
+    c
+}
+
+#[test]
+fn sgemm_conformance_both_backends() {
+    for backend in BACKENDS {
+        let lib = lib(backend);
+        let (m, n, k) = (64usize, 48usize, 32usize);
+        for (ta, tb) in [(Trans::N, Trans::N), (Trans::T, Trans::N), (Trans::N, Trans::T)] {
+            let (ar, ac) = if ta.is_trans() { (k, m) } else { (m, k) };
+            let (br, bc) = if tb.is_trans() { (n, k) } else { (k, n) };
+            let a = Mat::<f32>::randn(ar, ac, 40);
+            let b = Mat::<f32>::randn(br, bc, 41);
+            let mut c = vec![0.0f32; m * n];
+            lib.sgemm(ta, tb, m, n, k, 1.0, a.as_slice(), ar, b.as_slice(), br, 0.0, &mut c, m)
+                .unwrap();
+            let a64: Vec<f64> = a.as_slice().iter().map(|&v| v as f64).collect();
+            let b64: Vec<f64> = b.as_slice().iter().map(|&v| v as f64).collect();
+            let want = naive_gemm_f64(ta, tb, m, n, k, &a64, &b64);
+            let t = tol(f32::EPSILON as f64, k);
+            for i in 0..m * n {
+                assert_close(c[i] as f64, want[i], t, "sgemm");
+            }
+        }
+    }
+}
+
+#[test]
+fn dgemm_conformance_is_f32_class_both_backends() {
+    for backend in BACKENDS {
+        let lib = lib(backend);
+        let (m, n, k) = (48usize, 40usize, 36usize);
+        let a = Mat::<f64>::randn(m, k, 50);
+        let b = Mat::<f64>::randn(k, n, 51);
+        let mut c = vec![0.0f64; m * n];
+        lib.dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0,
+            &mut c, m)
+            .unwrap();
+        let want = naive_gemm_f64(Trans::N, Trans::N, m, n, k, a.as_slice(), b.as_slice());
+        // f32-scaled tolerance passes ...
+        let t32 = tol(f32::EPSILON as f64, k);
+        let mut max_err = 0.0f64;
+        for i in 0..m * n {
+            assert_close(c[i], want[i], t32, "dgemm (false) f32-class");
+            max_err = max_err.max((c[i] - want[i]).abs() / want[i].abs().max(1.0));
+        }
+        // ... and the error is visibly f32-sized, NOT true f64 (the
+        // "false" in false dgemm must survive the shim rewrite).
+        assert!(max_err > f64::EPSILON * 1e3, "dgemm unexpectedly exact: {max_err:.3e}");
+    }
+}
+
+#[test]
+fn dtrsm_dsyrk_conformance() {
+    for backend in BACKENDS {
+        let lib = lib(backend);
+        // dtrsm: solve L·X = alpha·B, check residual in f64 precision.
+        let (m, n) = (16usize, 9usize);
+        let mut l = vec![0.0f64; m * m];
+        for j in 0..m {
+            for i in j..m {
+                l[i + j * m] = if i == j { 2.0 + j as f64 } else { 0.3 / (1.0 + (i - j) as f64) };
+            }
+        }
+        let b0 = Mat::<f64>::randn(m, n, 60);
+        let mut b = b0.as_slice().to_vec();
+        lib.dtrsm_left(true, Trans::N, false, m, n, 1.5, &l, m, &mut b, m);
+        let t = tol(f64::EPSILON, m) * 4.0;
+        for j in 0..n {
+            for i in 0..m {
+                let mut acc = 0.0;
+                for p in 0..=i {
+                    acc += l[i + p * m] * b[p + j * m];
+                }
+                assert_close(acc, 1.5 * b0.get(i, j), t, "dtrsm residual");
+            }
+        }
+        // dsyrk: C ← A·Aᵀ (lower), true f64 host op.
+        let (nn, k) = (12usize, 7usize);
+        let a = Mat::<f64>::randn(nn, k, 61);
+        let mut c = vec![0.0f64; nn * nn];
+        lib.dsyrk_lower(Trans::N, nn, k, 1.0, a.as_slice(), nn, 0.0, &mut c, nn);
+        let t = tol(f64::EPSILON, k);
+        for j in 0..nn {
+            for i in j..nn {
+                let mut want = 0.0;
+                for p in 0..k {
+                    want += a.get(i, p) * a.get(j, p);
+                }
+                assert_close(c[i + j * nn], want, t, "dsyrk");
+            }
+        }
+    }
+}

@@ -102,21 +102,21 @@ fn shape_lies_in_header_are_errors_not_ub() {
     // Header says k=8 but payload sized for k=4: decode must reject.
     let srv = BlasServer::start(ServerConfig::default()).unwrap();
     let mut cli = BlasClient::connect(srv.addr()).unwrap();
-    let good = Request::Sgemm {
-        ta: Trans::N,
-        tb: Trans::N,
-        m: 4,
-        n: 4,
-        k: 4,
-        alpha: 1.0,
-        beta: 0.0,
-        a: vec![0.0; 16],
-        b: vec![0.0; 16],
-        c: vec![0.0; 16],
-    };
+    let good = Request::sgemm(
+        Trans::N,
+        Trans::N,
+        4,
+        4,
+        4,
+        1.0,
+        0.0,
+        vec![0.0; 16],
+        vec![0.0; 16],
+        vec![0.0; 16],
+    );
     let mut frame = good.encode();
-    // Corrupt the k field (offset: 4 len + 1 op + 2 trans + 8 m,n = 15).
-    frame[15..19].copy_from_slice(&8u32.to_le_bytes());
+    // Corrupt the k field (offset: 4 len + 3 header + 2 trans + 8 m,n = 17).
+    frame[17..21].copy_from_slice(&8u32.to_le_bytes());
     cli.stream_mut().write_all(&frame).unwrap();
     let body = read_frame(cli.stream_mut()).unwrap();
     assert!(matches!(Response::decode(&body).unwrap(), Response::Err(_)));

@@ -1,11 +1,12 @@
 //! Whole-stack integration: artifacts → runtime → service → BLIS →
 //! coordinator, cross-checked between backends at every boundary.
 
-use parallella_blas::blis::{level3, Trans};
+use parallella_blas::blis::{level3, GemmTask, Trans};
 use parallella_blas::coordinator::server::{BlasClient, BlasServer};
-use parallella_blas::coordinator::{Request, Response, ServerConfig};
+use parallella_blas::coordinator::{Request, ServerConfig};
 use parallella_blas::linalg::{max_scaled_err, Mat};
 use parallella_blas::prelude::*;
+use std::sync::Arc;
 
 fn oracle(
     ta: Trans,
@@ -74,23 +75,20 @@ fn tcp_stack_serves_false_dgemm() {
     let a = Mat::<f64>::randn(m, k, 8);
     let b = Mat::<f64>::randn(k, n, 9);
     let resp = cli
-        .call(&Request::FalseDgemm {
-            ta: Trans::N,
-            tb: Trans::N,
+        .call(&Request::dgemm(
+            Trans::N,
+            Trans::N,
             m,
             n,
             k,
-            alpha: 1.0,
-            beta: 0.0,
-            a: a.as_slice().to_vec(),
-            b: b.as_slice().to_vec(),
-            c: vec![0.0; m * n],
-        })
+            1.0,
+            0.0,
+            a.as_slice().to_vec(),
+            b.as_slice().to_vec(),
+            vec![0.0; m * n],
+        ))
         .unwrap();
-    let got = match resp {
-        Response::OkF64(v) => Mat::from_col_major(m, n, &v),
-        other => panic!("{other:?}"),
-    };
+    let got = Mat::from_col_major(m, n, &resp.into_f64().unwrap());
     let mut want = Mat::<f64>::zeros(m, n);
     level3::gemm_host(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut want);
     let e = max_scaled_err(got.view(), want.view());
@@ -127,5 +125,58 @@ fn alpha_zero_is_pure_scale() {
         for i in 0..m {
             assert!((c.get(i, j) - 2.0 * c0.get(i, j)).abs() < 1e-4);
         }
+    }
+}
+
+#[test]
+fn async_submit_overlaps_two_gemms() {
+    // The §3.2 service process, pipelined: two gemm tasks are submitted
+    // back-to-back *before* either is waited on, so the second task's
+    // packing overlaps the first task's in-flight µ-kernel batches (the
+    // per-call HH-RAM exchange serializes inside the service handle).
+    let plat = Platform::builder().backend(BackendKind::Simulator).build().unwrap();
+    let blas = plat.blas_handle();
+    let (m, n, k) = (200, 300, 96);
+    let a1 = Mat::<f32>::randn(m, k, 30);
+    let b1 = Mat::<f32>::randn(k, n, 31);
+    let a2 = Mat::<f32>::randn(m, k, 32);
+    let b2 = Mat::<f32>::randn(k, n, 33);
+
+    let t1 = Arc::clone(&blas).submit(GemmTask {
+        ta: Trans::N,
+        tb: Trans::N,
+        alpha: 1.0f32,
+        a: a1.clone(),
+        b: b1.clone(),
+        beta: 0.0,
+        c: Mat::zeros(m, n),
+    });
+    let t2 = Arc::clone(&blas).submit(GemmTask {
+        ta: Trans::N,
+        tb: Trans::N,
+        alpha: 1.0f32,
+        a: a2.clone(),
+        b: b2.clone(),
+        beta: 0.0,
+        c: Mat::zeros(m, n),
+    });
+    // Both tickets are in flight here; wait in reverse submission order to
+    // prove completion does not depend on wait order.
+    let (c2, rep2) = t2.wait().unwrap();
+    let (c1, rep1) = t1.wait().unwrap();
+    assert!(rep1.calls >= 1 && rep2.calls >= 1);
+
+    for (a, b, c) in [(&a1, &b1, &c1), (&a2, &b2, &c2)] {
+        let mut want = Mat::<f64>::zeros(m, n);
+        level3::gemm_host(
+            Trans::N,
+            Trans::N,
+            1.0,
+            a.cast::<f64>().view(),
+            b.cast::<f64>().view(),
+            0.0,
+            &mut want,
+        );
+        assert!(max_scaled_err(c.view(), want.view()) < 1e-5);
     }
 }

@@ -10,7 +10,9 @@
 
 use parallella_blas::blis::packing::{pack_a, pack_b, pack_c, unpack_c};
 use parallella_blas::blis::Trans;
-use parallella_blas::coordinator::protocol::{Request, Response};
+use parallella_blas::coordinator::protocol::{
+    strided_len, GemmWire, GemvWire, Opcode, Request, Response, Tensor,
+};
 use parallella_blas::epiphany::mesh::{ring_core, ring_pos};
 use parallella_blas::epiphany::CORES;
 use parallella_blas::linalg::{max_scaled_err, Mat, XorShiftRng};
@@ -102,69 +104,159 @@ fn prop_ring_embedding_bijective() {
     }
 }
 
+/// Build a random tensor of `len` elements in the requested dtype.
+fn rand_tensor(rng: &mut XorShiftRng, dtype: Dtype, len: usize) -> Tensor {
+    match dtype {
+        Dtype::F32 => Tensor::F32((0..len).map(|_| rng.next_unit() as f32).collect()),
+        Dtype::F64 => Tensor::F64((0..len).map(|_| rng.next_unit()).collect()),
+    }
+}
+
+/// Build a random request for one (opcode, dtype) cell; `(m, n, k)` sizes
+/// the payload (0 = empty tensors are legal frames).
+fn rand_request(
+    rng: &mut XorShiftRng,
+    op: Opcode,
+    dtype: Dtype,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Request {
+    let trans_of = |r: &mut XorShiftRng| [Trans::N, Trans::T, Trans::C, Trans::H][r.next_below(4)];
+    match op {
+        Opcode::Ping => Request::Ping,
+        Opcode::Stats => Request::Stats,
+        Opcode::Shutdown => Request::Shutdown,
+        Opcode::Gemm => {
+            let (ta, tb) = (trans_of(rng), trans_of(rng));
+            let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
+            let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
+            let (a, b) = (rand_tensor(rng, dtype, am * an), rand_tensor(rng, dtype, bm * bn));
+            let c = rand_tensor(rng, dtype, m * n);
+            let (alpha, beta) = scalars(rng, dtype);
+            Request::Gemm(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c })
+        }
+        Opcode::Gemv => {
+            let ta = trans_of(rng);
+            let (incx, incy) = (1 + rng.next_below(3), 1 + rng.next_below(3));
+            let (xl, yl) = if ta.is_trans() { (m, n) } else { (n, m) };
+            let a = rand_tensor(rng, dtype, m * n);
+            let x = rand_tensor(rng, dtype, strided_len(xl, incx));
+            let y = rand_tensor(rng, dtype, strided_len(yl, incy));
+            let (alpha, beta) = scalars(rng, dtype);
+            Request::Gemv(GemvWire { ta, m, n, incx, incy, alpha, beta, a, x, y })
+        }
+    }
+}
+
+/// Random scalars exactly representable at the wire dtype's width.
+fn scalars(rng: &mut XorShiftRng, dtype: Dtype) -> (f64, f64) {
+    match dtype {
+        Dtype::F32 => (rng.next_unit() as f32 as f64, rng.next_unit() as f32 as f64),
+        Dtype::F64 => (rng.next_unit(), rng.next_unit()),
+    }
+}
+
+fn requests_equal(a: &Request, b: &Request) -> bool {
+    match (a, b) {
+        (Request::Ping, Request::Ping)
+        | (Request::Stats, Request::Stats)
+        | (Request::Shutdown, Request::Shutdown) => true,
+        (Request::Gemm(x), Request::Gemm(y)) => {
+            x.ta == y.ta
+                && x.tb == y.tb
+                && (x.m, x.n, x.k) == (y.m, y.n, y.k)
+                && (x.alpha, x.beta) == (y.alpha, y.beta)
+                && x.a == y.a
+                && x.b == y.b
+                && x.c == y.c
+        }
+        (Request::Gemv(x), Request::Gemv(y)) => {
+            x.ta == y.ta
+                && (x.m, x.n) == (y.m, y.n)
+                && (x.incx, x.incy) == (y.incx, y.incy)
+                && (x.alpha, x.beta) == (y.alpha, y.beta)
+                && x.a == y.a
+                && x.x == y.x
+                && x.y == y.y
+        }
+        _ => false,
+    }
+}
+
+#[test]
+fn prop_protocol_round_trip_every_opcode_dtype() {
+    // encode→decode identity for EVERY opcode × dtype, including the empty
+    // payload (m=n=k=0) and the µ-kernel max-tile payload (192×256).
+    let mut rng = XorShiftRng::new(0xF00D);
+    let shapes: [(usize, usize, usize); 4] = [
+        (0, 0, 0),      // empty tensors
+        (1, 1, 1),      // minimal
+        (5, 3, 7),      // ragged
+        (192, 256, 16), // µ-kernel max tile (m × n), K short to stay fast
+    ];
+    for op in Opcode::all() {
+        for dtype in Dtype::all() {
+            for &(m, n, k) in &shapes {
+                let req = rand_request(&mut rng, op, dtype, m, n, k);
+                let frame = req.encode();
+                let back = Request::decode(&frame[4..])
+                    .unwrap_or_else(|e| panic!("{op:?} {dtype:?} ({m},{n},{k}): {e:#}"));
+                assert!(
+                    requests_equal(&req, &back),
+                    "round trip changed {op:?} {dtype:?} ({m},{n},{k})"
+                );
+                // The dtype byte in the header must match the descriptor.
+                assert_eq!(frame[5], req.dtype().code(), "{op:?} {dtype:?} header dtype");
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_protocol_round_trip_random() {
     forall(
-        Config { cases: 40, seed: 0xF00D },
+        Config { cases: 60, seed: 0xF00D },
         |rng| {
             let m = 1 + rng.next_below(8);
             let n = 1 + rng.next_below(8);
             let k = 1 + rng.next_below(8);
-            (m, n, k, rng.next_u64())
+            let op = [Opcode::Gemm, Opcode::Gemv][rng.next_below(2)];
+            let dtype = [Dtype::F32, Dtype::F64][rng.next_below(2)];
+            (op, dtype, m, n, k, rng.next_u64())
         },
-        |&(m, n, k, seed)| {
+        |&(op, dtype, m, n, k, seed)| {
             let mut rng = XorShiftRng::new(seed);
-            let ta = [Trans::N, Trans::T, Trans::C, Trans::H][rng.next_below(4)];
-            let tb = [Trans::N, Trans::T, Trans::C, Trans::H][rng.next_below(4)];
-            let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
-            let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
-            let req = Request::Sgemm {
-                ta,
-                tb,
-                m,
-                n,
-                k,
-                alpha: rng.next_unit() as f32,
-                beta: rng.next_unit() as f32,
-                a: (0..am * an).map(|_| rng.next_unit() as f32).collect(),
-                b: (0..bm * bn).map(|_| rng.next_unit() as f32).collect(),
-                c: (0..m * n).map(|_| rng.next_unit() as f32).collect(),
-            };
+            let req = rand_request(&mut rng, op, dtype, m, n, k);
             let frame = req.encode();
-            match (Request::decode(&frame[4..]), &req) {
-                (
-                    Ok(Request::Sgemm {
-                        ta: ta2,
-                        tb: tb2,
-                        m: m2,
-                        n: n2,
-                        k: k2,
-                        alpha: al2,
-                        beta: be2,
-                        a: a2,
-                        b: b2,
-                        c: c2,
-                    }),
-                    Request::Sgemm { ta, tb, m, n, k, alpha, beta, a, b, c },
-                ) => {
-                    ta2 == *ta && tb2 == *tb && m2 == *m && n2 == *n && k2 == *k
-                        && al2 == *alpha && be2 == *beta && &a2 == a && &b2 == b && &c2 == c
-                }
-                _ => false,
+            match Request::decode(&frame[4..]) {
+                Ok(back) => requests_equal(&req, &back),
+                Err(_) => false,
             }
         },
     );
 }
 
 #[test]
-fn prop_response_error_round_trip() {
+fn prop_response_round_trip() {
     forall(
-        Config { cases: 16, seed: 0xE44 },
-        |rng| rng.next_u64(),
-        |&seed| {
-            let msg = format!("error-{seed}");
-            let r = Response::Err(msg.clone());
-            matches!(Response::decode(&r.encode()[4..]), Ok(Response::Err(m)) if m == msg)
+        Config { cases: 24, seed: 0xE44 },
+        |rng| (rng.next_below(4), rng.next_below(9), rng.next_u64()),
+        |&(variant, len, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let resp = match variant {
+                0 => Response::Ok(rand_tensor(&mut rng, Dtype::F32, len)),
+                1 => Response::Ok(rand_tensor(&mut rng, Dtype::F64, len)),
+                2 => Response::OkText(format!("text-{seed}")),
+                _ => Response::Err(format!("error-{seed}")),
+            };
+            let back = Response::decode(&resp.encode()[4..]);
+            match (&resp, back) {
+                (Response::Ok(a), Ok(Response::Ok(b))) => *a == b,
+                (Response::OkText(a), Ok(Response::OkText(b))) => *a == b,
+                (Response::Err(a), Ok(Response::Err(b))) => *a == b,
+                _ => false,
+            }
         },
     );
 }
