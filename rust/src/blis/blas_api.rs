@@ -38,40 +38,51 @@ macro_rules! xerbla {
 }
 
 impl BlasLibrary {
+    /// Wrap a shared [`Blas`] core as the classic library surface.
     pub fn new(inner: std::sync::Arc<Blas>) -> Self {
         BlasLibrary { inner }
     }
 
+    /// The descriptor core the shims delegate to.
     pub fn inner(&self) -> &Blas {
         &self.inner
     }
 
     // ---------------- level 1 (f32) ----------------
 
+    /// `y ← αx + y` (f32).
     pub fn saxpy(&self, n: usize, alpha: f32, x: &[f32], incx: usize, y: &mut [f32], incy: usize) {
         xerbla!("saxpy", self.inner.execute(Level1Op::Axpy { n, alpha, x, incx, y, incy }));
     }
+    /// `x ← αx` (f32).
     pub fn sscal(&self, n: usize, alpha: f32, x: &mut [f32], incx: usize) {
         xerbla!("sscal", self.inner.execute(Level1Op::Scal { n, alpha, x, incx }));
     }
+    /// `y ← x` (f32).
     pub fn scopy(&self, n: usize, x: &[f32], incx: usize, y: &mut [f32], incy: usize) {
         xerbla!("scopy", self.inner.execute(Level1Op::Copy { n, x, incx, y, incy }));
     }
+    /// `x ↔ y` (f32).
     pub fn sswap(&self, n: usize, x: &mut [f32], incx: usize, y: &mut [f32], incy: usize) {
         xerbla!("sswap", self.inner.execute(Level1Op::Swap { n, x, incx, y, incy }));
     }
+    /// `xᵀy` (f32).
     pub fn sdot(&self, n: usize, x: &[f32], incx: usize, y: &[f32], incy: usize) -> f32 {
         xerbla!("sdot", self.inner.execute(Level1Op::Dot { n, x, incx, y, incy })).scalar()
     }
+    /// `‖x‖₂` (f32).
     pub fn snrm2(&self, n: usize, x: &[f32], incx: usize) -> f32 {
         xerbla!("snrm2", self.inner.execute(Level1Op::Nrm2 { n, x, incx })).scalar()
     }
+    /// `Σ|xᵢ|` (f32).
     pub fn sasum(&self, n: usize, x: &[f32], incx: usize) -> f32 {
         xerbla!("sasum", self.inner.execute(Level1Op::Asum { n, x, incx })).scalar()
     }
+    /// `argmax |xᵢ|` (f32; `None` when `n == 0`).
     pub fn isamax(&self, n: usize, x: &[f32], incx: usize) -> Option<usize> {
         xerbla!("isamax", self.inner.execute(Level1Op::Iamax { n, x, incx })).index()
     }
+    /// Apply a Givens rotation to `(x, y)` (f32).
     pub fn srot(
         &self,
         n: usize,
@@ -87,27 +98,35 @@ impl BlasLibrary {
 
     // ---------------- level 1 (f64) ----------------
 
+    /// `y ← αx + y` (f64).
     pub fn daxpy(&self, n: usize, alpha: f64, x: &[f64], incx: usize, y: &mut [f64], incy: usize) {
         xerbla!("daxpy", self.inner.execute(Level1Op::Axpy { n, alpha, x, incx, y, incy }));
     }
+    /// `x ← αx` (f64).
     pub fn dscal(&self, n: usize, alpha: f64, x: &mut [f64], incx: usize) {
         xerbla!("dscal", self.inner.execute(Level1Op::Scal { n, alpha, x, incx }));
     }
+    /// `y ← x` (f64).
     pub fn dcopy(&self, n: usize, x: &[f64], incx: usize, y: &mut [f64], incy: usize) {
         xerbla!("dcopy", self.inner.execute(Level1Op::Copy { n, x, incx, y, incy }));
     }
+    /// `x ↔ y` (f64).
     pub fn dswap(&self, n: usize, x: &mut [f64], incx: usize, y: &mut [f64], incy: usize) {
         xerbla!("dswap", self.inner.execute(Level1Op::Swap { n, x, incx, y, incy }));
     }
+    /// `xᵀy` (f64).
     pub fn ddot(&self, n: usize, x: &[f64], incx: usize, y: &[f64], incy: usize) -> f64 {
         xerbla!("ddot", self.inner.execute(Level1Op::Dot { n, x, incx, y, incy })).scalar()
     }
+    /// `‖x‖₂` (f64).
     pub fn dnrm2(&self, n: usize, x: &[f64], incx: usize) -> f64 {
         xerbla!("dnrm2", self.inner.execute(Level1Op::Nrm2 { n, x, incx })).scalar()
     }
+    /// `Σ|xᵢ|` (f64).
     pub fn dasum(&self, n: usize, x: &[f64], incx: usize) -> f64 {
         xerbla!("dasum", self.inner.execute(Level1Op::Asum { n, x, incx })).scalar()
     }
+    /// `argmax |xᵢ|` (f64; `None` when `n == 0`).
     pub fn idamax(&self, n: usize, x: &[f64], incx: usize) -> Option<usize> {
         xerbla!("idamax", self.inner.execute(Level1Op::Iamax { n, x, incx })).index()
     }
@@ -161,6 +180,7 @@ impl BlasLibrary {
         );
     }
 
+    /// `A ← α·x·yᵀ + A` (f32 rank-1 update).
     pub fn sger(
         &self,
         m: usize,
@@ -175,6 +195,7 @@ impl BlasLibrary {
         xerbla!("sger", self.inner.execute(GerOp { alpha, x, y, a }));
     }
 
+    /// `A ← α·x·yᵀ + A` (f64 rank-1 update).
     pub fn dger(
         &self,
         m: usize,
@@ -189,6 +210,7 @@ impl BlasLibrary {
         xerbla!("dger", self.inner.execute(GerOp { alpha, x, y, a }));
     }
 
+    /// Solve `op(A)·x = b` in place for triangular A (f32).
     pub fn strsv(
         &self,
         lower: bool,
@@ -203,6 +225,7 @@ impl BlasLibrary {
         xerbla!("strsv", self.inner.execute(TrsvOp { lower, trans, unit, a, x }));
     }
 
+    /// Solve `op(A)·x = b` in place for triangular A (f64).
     pub fn dtrsv(
         &self,
         lower: bool,
@@ -217,6 +240,7 @@ impl BlasLibrary {
         xerbla!("dtrsv", self.inner.execute(TrsvOp { lower, trans, unit, a, x }));
     }
 
+    /// `x ← op(A)·x` for triangular A (f32).
     pub fn strmv(
         &self,
         lower: bool,
@@ -289,6 +313,8 @@ impl BlasLibrary {
         Ok(())
     }
 
+    /// `B ← α·op(A)⁻¹·B` for triangular A on the left (f64), with
+    /// classic `lda`/`ldb` leading dimensions.
     #[allow(clippy::too_many_arguments)]
     pub fn dtrsm_left(
         &self,
@@ -318,6 +344,7 @@ impl BlasLibrary {
         }
     }
 
+    /// `C ← α·op(A)·op(A)ᵀ + β·C`, lower triangle of C updated (f64).
     #[allow(clippy::too_many_arguments)]
     pub fn dsyrk_lower(
         &self,

@@ -1,45 +1,67 @@
-//! The tiled gemm driver: BLIS's loop nest around the Epiphany µ-kernel.
+//! The tiled gemm driver: BLIS's loop nest around the Epiphany µ-kernel,
+//! sharded across a [`ChipPool`].
 //!
 //! `C = α·op(A)·op(B) + β·C` for arbitrary (m, n, K) is covered by
 //! `⌈m/192⌉ × ⌈n/256⌉` micro-tile calls, each packed to the µ-kernel's
-//! fixed layouts and routed through the service (HH-RAM IPC included).
-//! B panels are packed once per column tile and reused across row tiles.
+//! fixed layouts and routed through a resident service (HH-RAM IPC
+//! included). B panels are packed once per column tile and reused across
+//! row tiles.
+//!
+//! With more than one chip in the pool, the `jc` column-tile range is
+//! split into contiguous shards (SUMMA-style; [`ShardPolicy`]) that
+//! execute concurrently, one service crossing stream per chip. A pool of
+//! one runs the original serial loop on the calling thread, so the
+//! single-chip result is bit-identical to the pre-pool backend.
 
 use super::op::{BlasOp, Element, Route, Ticket};
 use super::packing::{pack_a, pack_b, pack_c, unpack_c};
 use super::params::{BlisContext, Trans};
+use crate::epiphany::timing::WalkClass;
+use crate::host::pool::{ChipPool, ShardPolicy};
 use crate::host::projection::ProjectionParams;
 use crate::host::service::ServiceHandle;
-use crate::linalg::{Mat, MatMut, MatRef, Real};
-use anyhow::{ensure, Result};
+use crate::linalg::{Mat, MatMut, MatRef};
+use anyhow::{anyhow, ensure, Result};
 use std::sync::{mpsc, Arc, Mutex};
 
 /// Aggregate accounting for one BLAS call (and, via [`BlasStats`], for a
 /// whole run).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GemmReport {
-    /// Projected-Parallella seconds (calibrated model).
+    /// Projected-Parallella seconds (calibrated model). For a sharded op
+    /// this is the *maximum* over the concurrent per-chip shard times —
+    /// the modeled makespan — so a pool of one reports the same serial
+    /// sum as before.
     pub projected_s: f64,
-    /// Wall-clock seconds on this machine.
+    /// Wall-clock seconds on this machine (same makespan semantics).
     pub wall_s: f64,
-    /// µ-kernel calls issued.
+    /// µ-kernel calls issued (summed across chips).
     pub calls: usize,
     /// Logical flops of the operation.
     pub flops: f64,
+    /// Chips that executed shards of this op (1 = serial plan).
+    pub chips: usize,
 }
 
 impl GemmReport {
+    /// Flop rate against the projected (modeled) time.
     pub fn projected_gflops(&self) -> f64 {
         self.flops / self.projected_s / 1e9
     }
+
+    /// Flop rate against the measured wall time.
     pub fn wall_gflops(&self) -> f64 {
         self.flops / self.wall_s / 1e9
     }
+
+    /// Fold another report into this one (cumulative-ledger semantics:
+    /// times and work add, chip width takes the widest plan seen).
     pub fn merge(&mut self, o: &GemmReport) {
         self.projected_s += o.projected_s;
         self.wall_s += o.wall_s;
         self.calls += o.calls;
         self.flops += o.flops;
+        self.chips = self.chips.max(o.chips);
     }
 }
 
@@ -47,31 +69,91 @@ impl GemmReport {
 /// the numbers behind the paper's §4.3 "Level-2 ops limit HPL" discussion.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BlasStats {
+    /// Aggregate of every Epiphany-routed gemm tile report.
     pub gemm: GemmReport,
     /// Projected seconds spent in unaccelerated host level-1/2/3 ops.
     pub host_level12_s: f64,
+    /// Logical flops charged to the host ledger.
     pub host_level12_flops: f64,
 }
 
-/// The generated BLAS library facade (what `BLIS` "instantiates").
+/// One µ-kernel result tile, produced by a shard worker and written back
+/// into C by the coordinator after every shard joins.
+struct TileOut<T> {
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+/// Pairs [`ChipPool::enter`]/[`ChipPool::exit`] through `Drop`, so the
+/// pool's in-flight gauge can never leak — even when a shard panics
+/// mid-tile (the scoped-thread join surfaces the panic as an error, and
+/// the guard still unwinds). `calls` accumulates the crossings to charge.
+struct PoolGuard<'a> {
+    pool: &'a ChipPool,
+    chip: usize,
+    calls: u64,
+}
+
+impl<'a> PoolGuard<'a> {
+    fn enter(pool: &'a ChipPool, chip: usize) -> Self {
+        pool.enter(chip);
+        PoolGuard { pool, chip, calls: 0 }
+    }
+}
+
+impl Drop for PoolGuard<'_> {
+    fn drop(&mut self) {
+        self.pool.exit(self.chip, self.calls);
+    }
+}
+
+/// The generated BLAS library facade (what `BLIS` "instantiates"),
+/// executing over a [`ChipPool`].
 pub struct Blas {
-    svc: ServiceHandle,
+    pool: ChipPool,
+    /// How level-3 gemms are split across the pool (see [`ShardPolicy`]).
+    pub policy: ShardPolicy,
+    /// Blocking parameters (micro-tile geometry).
     pub ctx: BlisContext,
+    /// Cumulative accounting ledger.
     pub stats: Mutex<BlasStats>,
 }
 
 impl Blas {
+    /// Wrap one already-booted service as a single-chip BLAS (the
+    /// original backend shape; bit-identical results and timing).
     pub fn new(svc: ServiceHandle) -> Self {
-        let g = svc.geometry();
+        Blas::with_pool(ChipPool::single(svc), ShardPolicy::default())
+    }
+
+    /// A BLAS over an explicit chip pool and shard policy.
+    pub fn with_pool(pool: ChipPool, policy: ShardPolicy) -> Self {
+        let g = pool.geometry();
         Blas {
-            svc,
+            pool,
+            policy,
             ctx: BlisContext { mr: g.m, nr: g.n, kc: 0 },
             stats: Mutex::new(BlasStats::default()),
         }
     }
 
+    /// Chip 0's service handle (the whole service for a single-chip pool;
+    /// kept for the pre-pool API surface and the IPC-level tests).
     pub fn service(&self) -> &ServiceHandle {
-        &self.svc
+        self.pool.chip(0)
+    }
+
+    /// The chip pool this BLAS executes on.
+    pub fn pool(&self) -> &ChipPool {
+        &self.pool
+    }
+
+    /// Number of chips in the pool.
+    pub fn chips(&self) -> usize {
+        self.pool.len()
     }
 
     /// Execute one typed operation descriptor — **the** dispatch path of
@@ -87,6 +169,28 @@ impl Blas {
     /// * **error handling** — descriptors validate dims/strides/lengths
     ///   and return recoverable errors; nothing below this layer is
     ///   expected to fail on well-formed descriptors.
+    ///
+    /// ```
+    /// use parallella_blas::blis::GemmOp;
+    /// use parallella_blas::prelude::*;
+    ///
+    /// let plat = Platform::builder().build()?;
+    /// let blas = plat.blas();
+    /// let a = Mat::<f32>::randn(64, 32, 1);
+    /// let b = Mat::<f32>::randn(32, 48, 2);
+    /// let mut c = Mat::<f32>::zeros(64, 48);
+    /// let report = blas.execute(GemmOp {
+    ///     ta: Trans::N,
+    ///     tb: Trans::N,
+    ///     alpha: 1.0f32,
+    ///     a: a.view(),
+    ///     b: b.view(),
+    ///     beta: 0.0,
+    ///     c: c.view_mut(),
+    /// })?;
+    /// assert_eq!(report.calls, 1);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn execute<O: BlasOp>(&self, op: O) -> Result<O::Output> {
         let route = op.route();
         let flops = op.flops();
@@ -100,8 +204,35 @@ impl Blas {
     /// Submit an owned descriptor for asynchronous execution and get a
     /// [`Ticket`] back. The op runs on a dedicated submission thread via
     /// [`Blas::execute`]; per-µ-kernel HH-RAM crossings serialize inside
-    /// the service handle, so a caller can pack/enqueue the next operation
-    /// while an earlier one is still in flight (§3.2, pipelined).
+    /// each chip's service handle, so a caller can pack/enqueue the next
+    /// operation while an earlier one is still in flight (§3.2,
+    /// pipelined).
+    ///
+    /// ```
+    /// use parallella_blas::blis::GemmTask;
+    /// use parallella_blas::prelude::*;
+    /// use std::sync::Arc;
+    ///
+    /// let plat = Platform::builder().build()?;
+    /// let h = plat.blas_handle();
+    /// let a = Mat::<f32>::randn(48, 16, 1);
+    /// let b = Mat::<f32>::randn(16, 32, 2);
+    /// let task = || GemmTask {
+    ///     ta: Trans::N,
+    ///     tb: Trans::N,
+    ///     alpha: 1.0f32,
+    ///     a: a.clone(),
+    ///     b: b.clone(),
+    ///     beta: 0.0,
+    ///     c: Mat::zeros(48, 32),
+    /// };
+    /// let t1 = Arc::clone(&h).submit(task());
+    /// let t2 = Arc::clone(&h).submit(task()); // both in flight
+    /// let (c1, _report1) = t1.wait()?;
+    /// let (c2, _report2) = t2.wait()?;
+    /// assert_eq!(c1.as_slice(), c2.as_slice());
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn submit<O>(self: Arc<Self>, op: O) -> Ticket<O::Output>
     where
         O: BlasOp + Send + 'static,
@@ -120,7 +251,8 @@ impl Blas {
     /// Precision-generic tiled gemm: `C ← α·op(A)·op(B) + β·C` for any
     /// [`Element`]. `T = f32` is the paper's accelerated sgemm; `T = f64`
     /// its "false dgemm" (f64 API, f32 Epiphany compute) — one driver,
-    /// dispatched by [`Element::service_gemm`].
+    /// dispatched by [`Element::service_gemm`]. Sharding follows
+    /// [`Blas::policy`].
     pub fn gemm<T: Element>(
         &self,
         ta: Trans,
@@ -135,24 +267,24 @@ impl Blas {
         self.gemm_view(ta, tb, alpha, a, b, beta, &mut view)
     }
 
-    /// [`Blas::gemm`] over a strided mutable view (what [`super::op::GemmOp`]
-    /// descriptors carry). Merges the tile report into the stats ledger.
-    pub(crate) fn gemm_view<T: Element>(
+    /// [`Blas::gemm`] pinned to one chip of the pool — every tile of the
+    /// op crosses through `chip`'s service. This is what the
+    /// coordinator's per-chip batcher workers call, so a coalesced batch
+    /// stays on the chip whose queue it was drained from.
+    pub fn gemm_on<T: Element>(
         &self,
+        chip: usize,
         ta: Trans,
         tb: Trans,
         alpha: T,
         a: MatRef<'_, T>,
         b: MatRef<'_, T>,
         beta: T,
-        c: &mut MatMut<'_, T>,
+        c: &mut Mat<T>,
     ) -> Result<GemmReport> {
-        let rows = c.rows();
-        let cols = c.cols();
-        let report = self.gemm_driver(ta, tb, a, b, rows, cols, |_k, a_p, b_p, c_p, params| {
-            let (out, resp) = T::service_gemm(&self.svc, alpha, a_p, b_p, beta, c_p, params)?;
-            Ok((out, resp.projection.total_s, resp.wall_s))
-        }, c)?;
+        let mut view = c.view_mut();
+        let report =
+            self.gemm_view_with(ShardPolicy::Pinned(chip), ta, tb, alpha, a, b, beta, &mut view)?;
         self.stats.lock().unwrap().gemm.merge(&report);
         Ok(report)
     }
@@ -188,19 +320,41 @@ impl Blas {
         self.gemm(ta, tb, alpha, a, b, beta, c)
     }
 
-    /// Shared tile loop. `call(k, a_panel, b_panel, c_tile, params)` runs
-    /// one µ-kernel invocation and returns `(c_out, projected_s, wall_s)`.
-    fn gemm_driver<T: Real>(
+    /// [`Blas::gemm`] over a strided mutable view (what [`super::op::GemmOp`]
+    /// descriptors carry). Shards per [`Blas::policy`] and merges the
+    /// aggregate report into the stats ledger.
+    pub(crate) fn gemm_view<T: Element>(
         &self,
         ta: Trans,
         tb: Trans,
+        alpha: T,
         a: MatRef<'_, T>,
         b: MatRef<'_, T>,
-        m: usize,
-        n: usize,
-        call: impl Fn(usize, &[T], &[T], &[T], ProjectionParams) -> Result<(Vec<T>, f64, f64)>,
+        beta: T,
         c: &mut MatMut<'_, T>,
     ) -> Result<GemmReport> {
+        let report = self.gemm_view_with(self.policy, ta, tb, alpha, a, b, beta, c)?;
+        self.stats.lock().unwrap().gemm.merge(&report);
+        Ok(report)
+    }
+
+    /// The shard coordinator: validate, plan, fan the `jc` ranges out to
+    /// the chips, join, write every result tile back into C, and merge
+    /// per-chip timing into one aggregate report (makespan = max over
+    /// concurrent shards).
+    pub(crate) fn gemm_view_with<T: Element>(
+        &self,
+        policy: ShardPolicy,
+        ta: Trans,
+        tb: Trans,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
+    ) -> Result<GemmReport> {
+        let m = c.rows();
+        let n = c.cols();
         let op_a = if ta.is_trans() { a.t() } else { a };
         let op_b = if tb.is_trans() { b.t() } else { b };
         let k = op_a.cols();
@@ -208,33 +362,184 @@ impl Blas {
         ensure!(op_b.rows() == k, "op(B) rows {} != K {k}", op_b.rows());
         ensure!(op_b.cols() == n, "op(B) cols {} != C cols {n}", op_b.cols());
 
-        let (mr, nr) = (self.ctx.mr, self.ctx.nr);
-        let mut report =
-            GemmReport { flops: 2.0 * m as f64 * n as f64 * k as f64, ..Default::default() };
+        let plan = self.shard_plan(policy, BlisContext::tiles(n, self.ctx.nr))?;
+        let mut report = GemmReport {
+            flops: 2.0 * m as f64 * n as f64 * k as f64,
+            chips: plan.len(),
+            ..Default::default()
+        };
 
-        // jc loop: column tiles; pack B once per tile, reuse across ic.
-        for jc in 0..BlisContext::tiles(n, nr) {
-            let j0 = jc * nr;
-            let cols = nr.min(n - j0);
-            let (b_panel, class_b) = pack_b(op_b, j0, cols, nr);
-            // ic loop: row tiles.
-            for ic in 0..BlisContext::tiles(m, mr) {
-                let i0 = ic * mr;
-                let rows = mr.min(m - i0);
-                let (a_panel, class_a) = pack_a(op_a, i0, rows, mr);
-                let c_tile = pack_c(c.as_ref(), i0, j0, rows, cols, mr, nr);
-                let mut params = ProjectionParams::kernel_service(k);
-                params.class_a = class_a;
-                params.class_b = class_b;
-                params.blis = true;
-                let (out, proj_s, wall_s) = call(k, &a_panel, &b_panel, &c_tile, params)?;
-                unpack_c(&out, c, i0, j0, rows, cols, mr);
-                report.projected_s += proj_s;
-                report.wall_s += wall_s;
-                report.calls += 1;
+        if plan.len() == 1 {
+            // Degenerate plan: run serially on the calling thread — the
+            // exact pre-pool code path (same timing ledger, and each
+            // result tile streams straight back into C instead of being
+            // buffered, so peak memory matches the old backend too).
+            let (chip, lo, hi) = plan[0];
+            let shard_rep = self.run_shard_streaming(chip, op_a, op_b, alpha, beta, lo, hi, c)?;
+            report.calls = shard_rep.calls;
+            report.projected_s = shard_rep.projected_s;
+            report.wall_s = shard_rep.wall_s;
+            return Ok(report);
+        }
+
+        let c0 = c.as_ref();
+        let shard_results: Vec<Result<(Vec<TileOut<T>>, GemmReport)>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = plan
+                    .iter()
+                    .map(|&(chip, lo, hi)| {
+                        s.spawn(move || self.run_shard(chip, op_a, op_b, c0, alpha, beta, lo, hi))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("shard worker panicked"))))
+                    .collect()
+            });
+
+        for result in shard_results {
+            let (tiles, shard_rep) = result?;
+            report.calls += shard_rep.calls;
+            report.projected_s = report.projected_s.max(shard_rep.projected_s);
+            report.wall_s = report.wall_s.max(shard_rep.wall_s);
+            for t in tiles {
+                unpack_c(&t.data, c, t.i0, t.j0, t.rows, t.cols, self.ctx.mr);
             }
         }
         Ok(report)
+    }
+
+    /// Split `jc_tiles` column tiles into per-chip contiguous ranges
+    /// `(chip, jc_lo, jc_hi)` according to `policy`.
+    fn shard_plan(
+        &self,
+        policy: ShardPolicy,
+        jc_tiles: usize,
+    ) -> Result<Vec<(usize, usize, usize)>> {
+        let nchips = self.pool.len();
+        match policy {
+            ShardPolicy::Pinned(i) => {
+                ensure!(i < nchips, "pinned chip {i} out of range (pool has {nchips} chips)");
+                Ok(vec![(i, 0, jc_tiles)])
+            }
+            ShardPolicy::ColumnPanels => {
+                let shards = nchips.min(jc_tiles).max(1);
+                let (base, extra) = (jc_tiles / shards, jc_tiles % shards);
+                let mut plan = Vec::with_capacity(shards);
+                let mut lo = 0usize;
+                for chip in 0..shards {
+                    let w = base + usize::from(chip < extra);
+                    plan.push((chip, lo, lo + w));
+                    lo += w;
+                }
+                Ok(plan)
+            }
+        }
+    }
+
+    /// The shard tile loop: iterate this shard's jc/ic tiles in order
+    /// (packing B once per column tile, reused across the ic row tiles)
+    /// and hand each tile's coordinates + B panel to `tile`. Shared by
+    /// the buffering (parallel) and streaming (serial) executors, so
+    /// their tile order and packing can never diverge.
+    fn for_each_tile<T: Element>(
+        &self,
+        m: usize,
+        n: usize,
+        op_b: MatRef<'_, T>,
+        jc_lo: usize,
+        jc_hi: usize,
+        mut tile: impl FnMut(usize, usize, usize, usize, &[T], WalkClass) -> Result<()>,
+    ) -> Result<()> {
+        let (mr, nr) = (self.ctx.mr, self.ctx.nr);
+        for jc in jc_lo..jc_hi {
+            let j0 = jc * nr;
+            let cols = nr.min(n - j0);
+            let (b_panel, class_b) = pack_b(op_b, j0, cols, nr);
+            for ic in 0..BlisContext::tiles(m, mr) {
+                let i0 = ic * mr;
+                let rows = mr.min(m - i0);
+                tile(i0, rows, j0, cols, &b_panel, class_b)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One shard: the serial tile loop over `jc_lo..jc_hi`, every
+    /// µ-kernel call crossing through `chip`'s own service (its private
+    /// HH-RAM + semaphores). Returns the result tiles and this chip's
+    /// summed timing; the caller owns the write-back into C.
+    fn run_shard<T: Element>(
+        &self,
+        chip: usize,
+        op_a: MatRef<'_, T>,
+        op_b: MatRef<'_, T>,
+        c0: MatRef<'_, T>,
+        alpha: T,
+        beta: T,
+        jc_lo: usize,
+        jc_hi: usize,
+    ) -> Result<(Vec<TileOut<T>>, GemmReport)> {
+        let (m, n, k) = (c0.rows(), c0.cols(), op_a.cols());
+        let (mr, nr) = (self.ctx.mr, self.ctx.nr);
+        let svc = self.pool.chip(chip);
+        let mut guard = PoolGuard::enter(&self.pool, chip);
+        let mut tiles = Vec::new();
+        let mut rep = GemmReport::default();
+        self.for_each_tile(m, n, op_b, jc_lo, jc_hi, |i0, rows, j0, cols, b_p, class_b| {
+            let data = tile_call(
+                svc, op_a, c0, b_p, class_b, alpha, beta, k, mr, nr, i0, rows, j0, cols, &mut rep,
+            )?;
+            guard.calls += 1;
+            tiles.push(TileOut { i0, j0, rows, cols, data });
+            Ok(())
+        })?;
+        Ok((tiles, rep))
+    }
+
+    /// [`Blas`]'s degenerate serial plan: the same tile loop and timing
+    /// ledger as [`Self::run_shard`], but each result tile is unpacked
+    /// into C as soon as its service crossing returns — no `TileOut`
+    /// buffering, matching the pre-pool backend's peak memory.
+    fn run_shard_streaming<T: Element>(
+        &self,
+        chip: usize,
+        op_a: MatRef<'_, T>,
+        op_b: MatRef<'_, T>,
+        alpha: T,
+        beta: T,
+        jc_lo: usize,
+        jc_hi: usize,
+        c: &mut MatMut<'_, T>,
+    ) -> Result<GemmReport> {
+        let (m, n, k) = (c.rows(), c.cols(), op_a.cols());
+        let (mr, nr) = (self.ctx.mr, self.ctx.nr);
+        let svc = self.pool.chip(chip);
+        let mut guard = PoolGuard::enter(&self.pool, chip);
+        let mut rep = GemmReport::default();
+        self.for_each_tile(m, n, op_b, jc_lo, jc_hi, |i0, rows, j0, cols, b_p, cb| {
+            let data = tile_call(
+                svc,
+                op_a,
+                c.as_ref(),
+                b_p,
+                cb,
+                alpha,
+                beta,
+                k,
+                mr,
+                nr,
+                i0,
+                rows,
+                j0,
+                cols,
+                &mut rep,
+            )?;
+            guard.calls += 1;
+            unpack_c(&data, c, i0, j0, rows, cols, mr);
+            Ok(())
+        })?;
+        Ok(rep)
     }
 
     /// Record an unaccelerated host op (level-1/2/3 fallbacks) against the
@@ -245,9 +550,43 @@ impl Blas {
         s.host_level12_flops += flops;
     }
 
+    /// A copy of the cumulative accounting ledger.
     pub fn stats_snapshot(&self) -> BlasStats {
         *self.stats.lock().unwrap()
     }
+}
+
+/// One µ-kernel tile call: pack the A panel and the C tile (B is packed
+/// once per jc tile by the caller), cross `svc`, and accumulate the
+/// crossing's timing into `rep`. Returns the padded result tile.
+fn tile_call<T: Element>(
+    svc: &ServiceHandle,
+    op_a: MatRef<'_, T>,
+    c_read: MatRef<'_, T>,
+    b_panel: &[T],
+    class_b: WalkClass,
+    alpha: T,
+    beta: T,
+    k: usize,
+    mr: usize,
+    nr: usize,
+    i0: usize,
+    rows: usize,
+    j0: usize,
+    cols: usize,
+    rep: &mut GemmReport,
+) -> Result<Vec<T>> {
+    let (a_panel, class_a) = pack_a(op_a, i0, rows, mr);
+    let c_tile = pack_c(c_read, i0, j0, rows, cols, mr, nr);
+    let mut params = ProjectionParams::kernel_service(k);
+    params.class_a = class_a;
+    params.class_b = class_b;
+    params.blis = true;
+    let (data, resp) = T::service_gemm(svc, alpha, &a_panel, b_panel, beta, &c_tile, params)?;
+    rep.projected_s += resp.projection.total_s;
+    rep.wall_s += resp.wall_s;
+    rep.calls += 1;
+    Ok(data)
 }
 
 /// Calibrated host rate used for ledger charges of unaccelerated ops
@@ -272,6 +611,17 @@ mod tests {
         )
         .expect("service boots");
         Blas::new(svc)
+    }
+
+    fn blas_pool(n: usize) -> Blas {
+        let pool = ChipPool::spawn(
+            n,
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .expect("pool boots");
+        Blas::with_pool(pool, ShardPolicy::ColumnPanels)
     }
 
     fn oracle_f64(
@@ -314,14 +664,13 @@ mod tests {
                 };
                 let c0 = Mat::<f32>::randn(m, n, 3);
                 let mut c = c0.clone();
-                let rep = blas
-                    .sgemm(ta, tb, 1.5, a.view(), b.view(), -0.5, &mut c)
-                    .unwrap();
+                let rep = blas.sgemm(ta, tb, 1.5, a.view(), b.view(), -0.5, &mut c).unwrap();
                 let want = oracle_f64(ta, tb, 1.5, &a, &b, -0.5, &c0);
                 let e = max_scaled_err(c.view(), want.view());
                 assert!(e < 1e-5, "{}{} err {e}", ta.code(), tb.code());
                 assert_eq!(rep.calls, 2 * 2); // ⌈200/192⌉ × ⌈300/256⌉
                 assert!(rep.projected_s > 0.0);
+                assert_eq!(rep.chips, 1);
             }
         }
     }
@@ -374,5 +723,65 @@ mod tests {
         let b = Mat::<f32>::randn(21, 30, 2); // K mismatch
         let mut c = Mat::<f32>::zeros(10, 30);
         assert!(blas.sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).is_err());
+    }
+
+    #[test]
+    fn pool4_bit_identical_to_pool1() {
+        // The acceptance bar for the sharded backend: N=1 is the
+        // degenerate plan, and N=4 must produce the same bits — same
+        // panels, same µ-kernel math, only the jc ranges move.
+        let b1 = blas_pool(1);
+        let b4 = blas_pool(4);
+        for (ta, tb) in [(Trans::N, Trans::N), (Trans::T, Trans::N), (Trans::N, Trans::T)] {
+            let (m, n, k) = (200, 900, 96); // 4 jc tiles: one per chip
+            let a = if ta.is_trans() {
+                Mat::<f32>::randn(k, m, 11)
+            } else {
+                Mat::<f32>::randn(m, k, 11)
+            };
+            let b = if tb.is_trans() {
+                Mat::<f32>::randn(n, k, 12)
+            } else {
+                Mat::<f32>::randn(k, n, 12)
+            };
+            let c0 = Mat::<f32>::randn(m, n, 13);
+            let mut c_single = c0.clone();
+            let mut c_pooled = c0.clone();
+            let r1 = b1.sgemm(ta, tb, 1.25, a.view(), b.view(), -0.5, &mut c_single).unwrap();
+            let r4 = b4.sgemm(ta, tb, 1.25, a.view(), b.view(), -0.5, &mut c_pooled).unwrap();
+            assert_eq!(c_single.as_slice(), c_pooled.as_slice(), "{}{}", ta.code(), tb.code());
+            assert_eq!(r1.calls, r4.calls);
+            assert_eq!(r1.chips, 1);
+            assert_eq!(r4.chips, 4);
+        }
+    }
+
+    #[test]
+    fn column_panels_spread_across_chips() {
+        let blas = blas_pool(2);
+        let (m, n, k) = (192, 512, 64); // 2 jc tiles
+        let a = Mat::<f32>::randn(m, k, 20);
+        let b = Mat::<f32>::randn(k, n, 21);
+        let mut c = Mat::<f32>::zeros(m, n);
+        let rep = blas.sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+        assert_eq!(rep.calls, 2);
+        assert_eq!(rep.chips, 2);
+        let crossings = blas.pool().crossings();
+        assert_eq!(crossings, vec![1, 1], "each chip executed its own column panel");
+    }
+
+    #[test]
+    fn pinned_policy_keeps_one_chip_hot() {
+        let blas = blas_pool(3);
+        let (m, n, k) = (64, 600, 32); // 3 jc tiles, all pinned to chip 2
+        let a = Mat::<f32>::randn(m, k, 30);
+        let b = Mat::<f32>::randn(k, n, 31);
+        let mut c = Mat::<f32>::zeros(m, n);
+        blas.gemm_on(2, Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+        assert_eq!(blas.pool().crossings(), vec![0, 0, 3]);
+        // Out-of-range pins are recoverable errors, not panics.
+        let mut c2 = Mat::<f32>::zeros(m, n);
+        let r = blas.gemm_on(7, Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c2);
+        assert!(r.is_err());
     }
 }

@@ -18,6 +18,9 @@
 //! * [`blas_api`] — the classic FORTRAN-style surface (`sgemm`, `saxpy`,
 //!   …), generated-style shims over the descriptor core;
 //! * [`testsuite`] — BLIS-testsuite-style residue rows (Tables 3–6).
+//!
+//! How a level-3 call flows from [`Blas::execute`] through the shard plan
+//! down to per-chip HH-RAM is drawn in `docs/ARCHITECTURE.md`.
 
 pub mod blas_api;
 pub mod gemm;

@@ -35,11 +35,14 @@ use std::sync::mpsc;
 /// wire protocol (one byte on the wire).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dtype {
+    /// Single precision (the paper's accelerated sgemm class).
     F32,
+    /// Double precision (the "false dgemm" class: f64 API, f32 compute).
     F64,
 }
 
 impl Dtype {
+    /// The one-byte wire tag of this dtype.
     pub fn code(self) -> u8 {
         match self {
             Dtype::F32 => 0,
@@ -47,6 +50,7 @@ impl Dtype {
         }
     }
 
+    /// Decode a wire tag; unknown tags are recoverable errors.
     pub fn from_u8(v: u8) -> Result<Dtype> {
         match v {
             0 => Ok(Dtype::F32),
@@ -63,6 +67,7 @@ impl Dtype {
         }
     }
 
+    /// Every dtype the stack instantiates (test-matrix helper).
     pub fn all() -> [Dtype; 2] {
         [Dtype::F32, Dtype::F64]
     }
@@ -81,6 +86,7 @@ impl std::fmt::Display for Dtype {
 /// tag and how a packed gemm micro-panel of it crosses the service
 /// boundary (f32 → the sgemm path, f64 → the paper's false dgemm).
 pub trait Element: Real {
+    /// The dtype tag of this element type.
     const DTYPE: Dtype;
 
     /// One µ-kernel call through the resident service (HH-RAM IPC
@@ -145,6 +151,8 @@ pub enum Route {
 /// (dims, strides, slice lengths) with recoverable errors — this is the
 /// error-reporting path the classic shims lack.
 pub trait BlasOp {
+    /// What the operation yields: a [`GemmReport`] for Epiphany-routed
+    /// gemms, `()` for in-place host ops, a [`Level1Out`] for reductions.
     type Output;
 
     /// Service routing class for this op.
@@ -190,12 +198,19 @@ fn check_vec<T: Real>(name: &str, v: &[T], n: usize, inc: usize) -> Result<()> {
 /// timing is merged into [`crate::blis::gemm::BlasStats::gemm`] by the
 /// tiled driver itself (wall + projected seconds per µ-kernel call).
 pub struct GemmOp<'a, T: Element> {
+    /// Transpose flag for A.
     pub ta: Trans,
+    /// Transpose flag for B.
     pub tb: Trans,
+    /// Scale on the product.
     pub alpha: T,
+    /// A operand (stored orientation; `ta` applies the op).
     pub a: MatRef<'a, T>,
+    /// B operand (stored orientation; `tb` applies the op).
     pub b: MatRef<'a, T>,
+    /// Scale on the C input.
     pub beta: T,
+    /// C, updated in place.
     pub c: MatMut<'a, T>,
 }
 
@@ -220,12 +235,19 @@ impl<T: Element> BlasOp for GemmOp<'_, T> {
 /// are owned matrices, so the descriptor is `Send + 'static` and can ride
 /// a [`Ticket`]. `wait()` hands C back along with the tile report.
 pub struct GemmTask<T: Element> {
+    /// Transpose flag for A.
     pub ta: Trans,
+    /// Transpose flag for B.
     pub tb: Trans,
+    /// Scale on the product.
     pub alpha: T,
+    /// Owned A operand (stored orientation; `ta` applies the op).
     pub a: Mat<T>,
+    /// Owned B operand (stored orientation; `tb` applies the op).
     pub b: Mat<T>,
+    /// Scale on the C input.
     pub beta: T,
+    /// Owned C; handed back by [`Ticket::wait`].
     pub c: Mat<T>,
 }
 
@@ -256,11 +278,17 @@ impl<T: Element> BlasOp for GemmTask<T> {
 
 /// `B ← α·op(A)⁻¹·B` for triangular A (left side), host compute.
 pub struct TrsmOp<'a, T: Real> {
+    /// Whether A's stored triangle is the lower one.
     pub lower: bool,
+    /// Transpose flag for A.
     pub trans: Trans,
+    /// Whether A's diagonal is implicitly 1 (not stored).
     pub unit: bool,
+    /// Scale applied to B before the solve.
     pub alpha: T,
+    /// The triangular A operand.
     pub a: MatRef<'a, T>,
+    /// Right-hand sides, overwritten with the solution.
     pub b: &'a mut Mat<T>,
 }
 
@@ -286,10 +314,15 @@ impl<T: Real> BlasOp for TrsmOp<'_, T> {
 
 /// `C ← α·op(A)·op(A)ᵀ + β·C`, lower triangle of C updated, host compute.
 pub struct SyrkOp<'a, T: Real> {
+    /// `N`: `C ← α·A·Aᵀ + β·C`; transposed: `C ← α·Aᵀ·A + β·C`.
     pub trans: Trans,
+    /// Scale on the rank-k product.
     pub alpha: T,
+    /// The A operand.
     pub a: MatRef<'a, T>,
+    /// Scale on the C input.
     pub beta: T,
+    /// C, lower triangle updated in place.
     pub c: &'a mut Mat<T>,
 }
 
@@ -328,13 +361,21 @@ impl<T: Real> BlasOp for SyrkOp<'_, T> {
 
 /// `y ← α·op(A)·x + β·y` with classic BLAS vector strides.
 pub struct GemvOp<'a, T: Real> {
+    /// Transpose flag for A.
     pub trans: Trans,
+    /// Scale on the product.
     pub alpha: T,
+    /// The A operand (stored orientation; `trans` applies the op).
     pub a: MatRef<'a, T>,
+    /// Input vector, read at stride `incx`.
     pub x: &'a [T],
+    /// Stride of `x` (classic BLAS `INCX`, >= 1).
     pub incx: usize,
+    /// Scale on the y input.
     pub beta: T,
+    /// Output vector, updated in place at stride `incy`.
     pub y: &'a mut [T],
+    /// Stride of `y` (classic BLAS `INCY`, >= 1).
     pub incy: usize,
 }
 
@@ -365,9 +406,13 @@ impl<T: Real> BlasOp for GemvOp<'_, T> {
 
 /// `A ← α·x·yᵀ + A` (rank-1 update), host compute.
 pub struct GerOp<'a, T: Real> {
+    /// Scale on the outer product.
     pub alpha: T,
+    /// Column vector (length = rows of A).
     pub x: &'a [T],
+    /// Row vector (length = cols of A).
     pub y: &'a [T],
+    /// A, updated in place.
     pub a: MatMut<'a, T>,
 }
 
@@ -393,10 +438,15 @@ impl<T: Real> BlasOp for GerOp<'_, T> {
 
 /// `x ← op(A)·x` for triangular A, host compute.
 pub struct TrmvOp<'a, T: Real> {
+    /// Whether A's stored triangle is the lower one.
     pub lower: bool,
+    /// Transpose flag for A.
     pub trans: Trans,
+    /// Whether A's diagonal is implicitly 1 (not stored).
     pub unit: bool,
+    /// The triangular A operand.
     pub a: MatRef<'a, T>,
+    /// Vector, overwritten with `op(A)·x`.
     pub x: &'a mut [T],
 }
 
@@ -422,10 +472,15 @@ impl<T: Real> BlasOp for TrmvOp<'_, T> {
 
 /// Solve `op(A)·x = b` in place for triangular A, host compute.
 pub struct TrsvOp<'a, T: Real> {
+    /// Whether A's stored triangle is the lower one.
     pub lower: bool,
+    /// Transpose flag for A.
     pub trans: Trans,
+    /// Whether A's diagonal is implicitly 1 (not stored).
     pub unit: bool,
+    /// The triangular A operand.
     pub a: MatRef<'a, T>,
+    /// Right-hand side, overwritten with the solution.
     pub x: &'a mut [T],
 }
 
@@ -454,6 +509,10 @@ impl<T: Real> BlasOp for TrsvOp<'_, T> {
 // ---------------------------------------------------------------------------
 
 /// One level-1 (vector-vector) operation over strided vectors.
+///
+/// Field conventions are the classic BLAS ones throughout: `n` is the
+/// logical element count, `incx`/`incy` the strides (>= 1) of `x`/`y`.
+#[allow(missing_docs)] // fields are the classic BLAS n/alpha/x/incx/y/incy
 pub enum Level1Op<'a, T: Real> {
     /// `y ← αx + y`
     Axpy { n: usize, alpha: T, x: &'a [T], incx: usize, y: &'a mut [T], incy: usize },
@@ -471,7 +530,8 @@ pub enum Level1Op<'a, T: Real> {
     Asum { n: usize, x: &'a [T], incx: usize },
     /// `argmax |xᵢ|`
     Iamax { n: usize, x: &'a [T], incx: usize },
-    /// Givens rotation `(x, y) ← (c·x + s·y, c·y − s·x)`
+    /// Givens rotation `(x, y) ← (c·x + s·y, c·y − s·x)`; `c`/`s` are the
+    /// rotation's cosine and sine.
     Rot { n: usize, x: &'a mut [T], incx: usize, y: &'a mut [T], incy: usize, c: T, s: T },
 }
 
@@ -479,8 +539,11 @@ pub enum Level1Op<'a, T: Real> {
 /// reduction, or an index (iamax).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Level1Out<T> {
+    /// In-place update finished (axpy, scal, copy, swap, rot).
     Done,
+    /// A scalar reduction (dot, nrm2, asum).
     Scalar(T),
+    /// An index result (iamax; `None` on an empty vector).
     Index(Option<usize>),
 }
 

@@ -7,9 +7,13 @@ use crate::epiphany::kernel::KernelGeometry;
 /// transpose) as `T` — exactly the note under the paper's Tables 4 and 6.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Trans {
+    /// No transpose.
     N,
+    /// Transpose.
     T,
+    /// Conjugate (= `N` in the real domain).
     C,
+    /// Hermitian transpose (= `T` in the real domain).
     H,
 }
 
@@ -29,6 +33,7 @@ impl Trans {
         }
     }
 
+    /// Every transpose flag (the testsuite's parameter sweep).
     pub fn all() -> [Trans; 4] {
         [Trans::N, Trans::T, Trans::C, Trans::H]
     }
@@ -50,6 +55,7 @@ pub struct BlisContext {
 }
 
 impl BlisContext {
+    /// The paper's blocking: MR = 192, NR = 256, K unblocked.
     pub fn paper() -> Self {
         let g = KernelGeometry::paper();
         BlisContext { mr: g.m, nr: g.n, kc: 0 }

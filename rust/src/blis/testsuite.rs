@@ -19,10 +19,12 @@ pub struct TestRow {
     pub gflops_wall: f64,
     /// Normalized residue vs the f64 oracle.
     pub residue: f64,
+    /// The aggregate tile report behind the GFLOPS columns.
     pub report: GemmReport,
 }
 
 impl TestRow {
+    /// One `blis_*` table line in the paper's Tables 3–6 format.
     pub fn render(&self) -> String {
         format!(
             "{:<22} {:>8.3} {:>10.2e}   (wall {:>8.3} GF)",

@@ -1,24 +1,30 @@
-//! Dynamic batching in front of the single Epiphany workgroup.
+//! Dynamic batching in front of the Epiphany chip pool.
 //!
-//! There is exactly one chip and one service process (paper §3.2), so all
-//! level-3 traffic funnels through one serial resource. The batcher:
+//! The paper's platform has one chip and one service process (§3.2), so
+//! all level-3 traffic funnels through one serial resource; with a
+//! [`ChipPool`](crate::host::pool::ChipPool) there are N such resources.
+//! The batcher keeps **one FIFO queue and one worker thread per chip**:
 //!
-//! * queues incoming gemm jobs FIFO (fairness),
-//! * **coalesces** consecutive jobs that share the same A operand and
-//!   scalars by concatenating their B/C along the n dimension — one
-//!   service crossing instead of many (the serving-style case: one weight
-//!   matrix, many activations), and
-//! * executes batches on a dedicated worker thread that owns the BLAS.
+//! * jobs enter a chip's queue FIFO (fairness) — either pinned by a wire
+//!   shard hint ([`Batcher::submit_to`]) or sent to the least-loaded
+//!   queue ([`Batcher::submit`]);
+//! * each worker **coalesces** consecutive jobs that share the same A
+//!   operand and scalars by concatenating their B/C along the n
+//!   dimension — one service crossing instead of many (the serving-style
+//!   case: one weight matrix, many activations);
+//! * each worker executes its batches pinned to its own chip
+//!   ([`crate::blis::Blas::gemm_on`]), so queues drain independently and
+//!   a slow batch on one chip never blocks another chip's traffic.
 //!
-//! Coalescing never reorders: only *adjacent* compatible jobs merge, so
-//! FIFO latency bounds hold.
+//! Coalescing never reorders: only *adjacent* compatible jobs merge
+//! (see [`coalesce_plan`]), so per-queue FIFO latency bounds hold.
 
 use super::metrics::Metrics;
 use crate::blis::{Blas, Trans};
 use crate::linalg::{Mat, MatRef};
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 /// Batching knobs.
@@ -38,21 +44,35 @@ impl Default for BatchPolicy {
 
 /// One queued sgemm job (stored orientation, like the wire protocol).
 pub struct GemmJob {
+    /// Transpose flag for A.
     pub ta: Trans,
+    /// Transpose flag for B.
     pub tb: Trans,
+    /// Rows of C.
     pub m: usize,
+    /// Columns of C.
     pub n: usize,
+    /// Inner (contraction) dimension.
     pub k: usize,
+    /// Scale on the product.
     pub alpha: f32,
+    /// Scale on the C input.
     pub beta: f32,
+    /// Stored A (col-major in its stored orientation).
     pub a: Vec<f32>,
+    /// Stored B (col-major in its stored orientation).
     pub b: Vec<f32>,
+    /// C input, col-major m×n.
     pub c: Vec<f32>,
 }
 
+/// The coalescing key of a [`GemmJob`]: two jobs may merge only when
+/// op flags, m/k shape, scalars and (a hash of) the A operand all agree.
+pub type CoalesceKey = (u8, u8, usize, usize, u32, u32, u64);
+
 impl GemmJob {
     /// Coalescing key: jobs merge when op/shape/scalars/A agree.
-    fn key(&self) -> (u8, u8, usize, usize, u32, u32, u64) {
+    pub fn key(&self) -> CoalesceKey {
         (
             self.ta.code() as u8,
             self.tb.code() as u8,
@@ -77,6 +97,34 @@ fn hash_f32(v: &[f32]) -> u64 {
     h
 }
 
+/// Greedy adjacent coalescing over `(key, n_cols)` pairs — the pure
+/// planning step the worker applies to each drained FIFO slice.
+///
+/// Returns half-open index ranges `(start, end)`. Invariants (held by
+/// construction, pinned by property tests):
+///
+/// * the ranges concatenate to exactly `0..jobs.len()` in order — no job
+///   is reordered, dropped or duplicated, so FIFO latency bounds hold;
+/// * every job in a range shares the first job's key;
+/// * a range of more than one job never exceeds `max_cols` summed
+///   columns (a single oversized job still runs, alone).
+pub fn coalesce_plan(jobs: &[(CoalesceKey, usize)], max_cols: usize) -> Vec<(usize, usize)> {
+    let mut plan = Vec::new();
+    let mut i = 0usize;
+    while i < jobs.len() {
+        let key = jobs[i].0;
+        let mut cols = jobs[i].1;
+        let mut j = i + 1;
+        while j < jobs.len() && jobs[j].0 == key && cols + jobs[j].1 <= max_cols {
+            cols += jobs[j].1;
+            j += 1;
+        }
+        plan.push((i, j));
+        i = j;
+    }
+    plan
+}
+
 struct Queued {
     job: GemmJob,
     reply: mpsc::Sender<Result<Vec<f32>>>,
@@ -86,51 +134,107 @@ struct Shared {
     queue: Mutex<VecDeque<Queued>>,
     cv: Condvar,
     stop: AtomicBool,
+    /// Jobs drained off the queue and currently executing on the worker —
+    /// without this the scheduler would see a chip grinding through a big
+    /// batch as idle (its queue is empty) and keep feeding it.
+    active: AtomicUsize,
 }
 
-/// The batcher handle; clone-free, share via `Arc`.
+/// The batcher handle: one FIFO queue + worker thread per pool chip.
+/// Clone-free; share via `Arc`.
 pub struct Batcher {
-    shared: Arc<Shared>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    shards: Vec<Arc<Shared>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// The batching knobs every worker applies.
     pub policy: BatchPolicy,
 }
 
 impl Batcher {
-    /// Spawn the worker that owns `blas` and drains the queue.
+    /// Spawn one worker per chip of `blas`'s pool; each worker owns its
+    /// chip's queue and executes batches pinned to that chip.
     pub fn spawn(blas: Arc<Blas>, policy: BatchPolicy, metrics: Arc<Metrics>) -> Batcher {
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
-            stop: AtomicBool::new(false),
-        });
-        let shared_w = Arc::clone(&shared);
-        let worker = std::thread::Builder::new()
-            .name("gemm-batcher".into())
-            .spawn(move || worker_loop(shared_w, blas, policy, metrics))
-            .expect("spawn batcher");
-        Batcher { shared, worker: Some(worker), policy }
+        let chips = blas.chips().max(1);
+        let mut shards = Vec::with_capacity(chips);
+        let mut workers = Vec::with_capacity(chips);
+        for chip in 0..chips {
+            let shared = Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                stop: AtomicBool::new(false),
+                active: AtomicUsize::new(0),
+            });
+            let shared_w = Arc::clone(&shared);
+            let blas_w = Arc::clone(&blas);
+            let metrics_w = Arc::clone(&metrics);
+            let worker = std::thread::Builder::new()
+                .name(format!("gemm-batcher-{chip}"))
+                .spawn(move || worker_loop(shared_w, blas_w, chip, policy, metrics_w))
+                .expect("spawn batcher worker");
+            shards.push(shared);
+            workers.push(worker);
+        }
+        Batcher { shards, workers, policy }
     }
 
-    /// Submit a job; returns the receiver for its result.
+    /// Number of per-chip queues (= chips in the BLAS pool).
+    pub fn chips(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Submit a job to the least-loaded chip queue; returns the receiver
+    /// for its result.
     pub fn submit(&self, job: GemmJob) -> mpsc::Receiver<Result<Vec<f32>>> {
+        self.submit_to(self.least_loaded(), job)
+    }
+
+    /// Submit a job pinned to one chip's queue (wire shard hints land
+    /// here). The index is reduced modulo the pool size, so any hint a
+    /// client sends is routable.
+    pub fn submit_to(&self, chip: usize, job: GemmJob) -> mpsc::Receiver<Result<Vec<f32>>> {
+        let shard = &self.shards[chip % self.shards.len()];
         let (tx, rx) = mpsc::channel();
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = shard.queue.lock().unwrap();
             q.push_back(Queued { job, reply: tx });
         }
-        self.shared.cv.notify_one();
+        shard.cv.notify_one();
         rx
     }
 
-    /// Queue depth (for backpressure decisions).
-    pub fn depth(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+    /// The chip with the least pending work — queued jobs *plus* jobs its
+    /// worker has drained and is still executing, so a chip mid-batch is
+    /// not mistaken for idle. Lowest index wins ties (deterministic).
+    pub fn least_loaded(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_depth = usize::MAX;
+        for (i, s) in self.shards.iter().enumerate() {
+            let d = s.queue.lock().unwrap().len() + s.active.load(Ordering::SeqCst);
+            if d < best_depth {
+                best_depth = d;
+                best = i;
+            }
+        }
+        best
     }
 
+    /// Total queued jobs across every chip queue (for backpressure).
+    pub fn depth(&self) -> usize {
+        self.shards.iter().map(|s| s.queue.lock().unwrap().len()).sum()
+    }
+
+    /// Queued jobs on one chip's queue. The index is reduced modulo the
+    /// pool size, matching [`Batcher::submit_to`]'s routing.
+    pub fn depth_of(&self, chip: usize) -> usize {
+        self.shards[chip % self.shards.len()].queue.lock().unwrap().len()
+    }
+
+    /// Stop every worker after it drains its queue, and join them.
     pub fn shutdown(&mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
-        if let Some(w) = self.worker.take() {
+        for s in &self.shards {
+            s.stop.store(true, Ordering::SeqCst);
+            s.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -142,9 +246,15 @@ impl Drop for Batcher {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, blas: Arc<Blas>, policy: BatchPolicy, metrics: Arc<Metrics>) {
+fn worker_loop(
+    shared: Arc<Shared>,
+    blas: Arc<Blas>,
+    chip: usize,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
     loop {
-        // Wait for work.
+        // Wait for work on this chip's queue.
         let mut drained: Vec<Queued> = Vec::new();
         {
             let mut q = shared.queue.lock().unwrap();
@@ -160,35 +270,43 @@ fn worker_loop(shared: Arc<Shared>, blas: Arc<Blas>, policy: BatchPolicy, metric
                     None => break,
                 }
             }
+            // Count the drained jobs as load *before* releasing the queue
+            // lock — least_loaded reads the queue under the same lock, so
+            // it can never observe this chip as idle mid-drain.
+            shared.active.store(drained.len(), Ordering::SeqCst);
         }
-        // Coalesce adjacent same-key jobs.
-        let mut i = 0usize;
-        while i < drained.len() {
-            let key = drained[i].job.key();
-            let mut group = vec![i];
-            let mut cols = drained[i].job.n;
-            let mut j = i + 1;
-            while j < drained.len()
-                && drained[j].job.key() == key
-                && cols + drained[j].job.n <= policy.max_cols
-            {
-                cols += drained[j].job.n;
-                group.push(j);
-                j += 1;
+        // Coalesce adjacent same-key jobs and execute each group pinned
+        // to this worker's chip; the active gauge drains as groups finish.
+        let keys: Vec<(CoalesceKey, usize)> =
+            drained.iter().map(|x| (x.job.key(), x.job.n)).collect();
+        for (start, end) in coalesce_plan(&keys, policy.max_cols) {
+            // The key carries only a 64-bit hash of A; confirm bytewise A
+            // equality before merging so a hash collision can never
+            // execute one client's job with another client's weights.
+            // (Inequality splits the run; results stay correct either way.)
+            let mut s = start;
+            for i in start + 1..=end {
+                if i < end && drained[i].job.a == drained[s].job.a {
+                    continue;
+                }
+                let group = &drained[s..i];
+                execute_group(&blas, chip, group, &metrics);
+                if group.len() > 1 {
+                    metrics.record_batched(group.len());
+                }
+                shared.active.fetch_sub(group.len(), Ordering::SeqCst);
+                s = i;
             }
-            execute_group(&blas, &drained[..], &group, cols, &metrics);
-            if group.len() > 1 {
-                metrics.record_batched(group.len());
-            }
-            i = j;
         }
     }
 }
 
-/// Run one (possibly coalesced) group and fan the results back out.
-fn execute_group(blas: &Blas, all: &[Queued], group: &[usize], cols: usize, metrics: &Metrics) {
-    let first = &all[group[0]].job;
+/// Run one (possibly coalesced) group on `chip` and fan the results back
+/// out to each job's reply channel.
+fn execute_group(blas: &Blas, chip: usize, group: &[Queued], metrics: &Metrics) {
+    let first = &group[0].job;
     let (m, k) = (first.m, first.k);
+    let cols: usize = group.iter().map(|q| q.job.n).sum();
     let result: Result<Vec<Vec<f32>>> = (|| {
         // Stack op(B) and C along n by concatenating stored columns.
         // op(B) stored: tb=N ⇒ k×n col-major (concat natural); tb=T ⇒ n×k
@@ -198,8 +316,8 @@ fn execute_group(blas: &Blas, all: &[Queued], group: &[usize], cols: usize, metr
         let a_view = MatRef::from_col_major(ar, ac, ar, a_stored);
         let mut c_cat = Mat::<f32>::zeros(m, cols);
         let mut j0 = 0usize;
-        for &gi in group {
-            let job = &all[gi].job;
+        for q in group {
+            let job = &q.job;
             for j in 0..job.n {
                 for i in 0..m {
                     c_cat.set(i, j0 + j, job.c[j * m + i]);
@@ -212,8 +330,8 @@ fn execute_group(blas: &Blas, all: &[Queued], group: &[usize], cols: usize, metr
             // stored n×k each; stack rows.
             let mut mcat = Mat::<f32>::zeros(cols, k);
             let mut r0 = 0usize;
-            for &gi in group {
-                let job = &all[gi].job;
+            for q in group {
+                let job = &q.job;
                 for j in 0..k {
                     for i in 0..job.n {
                         mcat.set(r0 + i, j, job.b[j * job.n + i]);
@@ -226,8 +344,8 @@ fn execute_group(blas: &Blas, all: &[Queued], group: &[usize], cols: usize, metr
             // stored k×n each; stack columns.
             let mut mcat = Mat::<f32>::zeros(k, cols);
             let mut c0 = 0usize;
-            for &gi in group {
-                let job = &all[gi].job;
+            for q in group {
+                let job = &q.job;
                 for j in 0..job.n {
                     for i in 0..k {
                         mcat.set(i, c0 + j, job.b[j * k + i]);
@@ -238,7 +356,8 @@ fn execute_group(blas: &Blas, all: &[Queued], group: &[usize], cols: usize, metr
             mcat
         };
         let t0 = std::time::Instant::now();
-        let rep = blas.sgemm(
+        let rep = blas.gemm_on(
+            chip,
             first.ta,
             first.tb,
             first.alpha,
@@ -252,11 +371,12 @@ fn execute_group(blas: &Blas, all: &[Queued], group: &[usize], cols: usize, metr
             t0.elapsed().as_secs_f64(),
             rep.flops,
         );
+        metrics.record_chip_request(chip);
         // Split back per job.
         let mut outs = Vec::with_capacity(group.len());
         let mut j0 = 0usize;
-        for &gi in group {
-            let job = &all[gi].job;
+        for q in group {
+            let job = &q.job;
             let mut out = vec![0.0f32; m * job.n];
             for j in 0..job.n {
                 for i in 0..m {
@@ -271,14 +391,14 @@ fn execute_group(blas: &Blas, all: &[Queued], group: &[usize], cols: usize, metr
 
     match result {
         Ok(outs) => {
-            for (&gi, out) in group.iter().zip(outs) {
-                let _ = all[gi].reply.send(Ok(out));
+            for (q, out) in group.iter().zip(outs) {
+                let _ = q.reply.send(Ok(out));
             }
         }
         Err(e) => {
             metrics.record_error();
-            for &gi in group {
-                let _ = all[gi].reply.send(Err(anyhow!("{e:#}")));
+            for q in group {
+                let _ = q.reply.send(Err(anyhow!("{e:#}")));
             }
         }
     }
@@ -289,8 +409,10 @@ mod tests {
     use super::*;
     use crate::epiphany::kernel::KernelGeometry;
     use crate::epiphany::timing::CalibratedModel;
+    use crate::host::pool::{ChipPool, ShardPolicy};
     use crate::host::service::{ServiceBackend, ServiceHandle};
     use crate::linalg::max_scaled_err;
+    use crate::util::proptest::{forall, Config};
 
     fn batcher() -> (Batcher, Arc<Metrics>) {
         let svc = ServiceHandle::spawn(
@@ -302,6 +424,20 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let batcher =
             Batcher::spawn(Arc::new(Blas::new(svc)), BatchPolicy::default(), Arc::clone(&metrics));
+        (batcher, metrics)
+    }
+
+    fn batcher_pool(chips: usize) -> (Batcher, Arc<Metrics>) {
+        let pool = ChipPool::spawn(
+            chips,
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        let blas = Arc::new(Blas::with_pool(pool, ShardPolicy::ColumnPanels));
+        let metrics = Arc::new(Metrics::new());
+        let batcher = Batcher::spawn(blas, BatchPolicy::default(), Arc::clone(&metrics));
         (batcher, metrics)
     }
 
@@ -385,5 +521,100 @@ mod tests {
             let got = Mat::from_col_major(32, 8, &rx.recv().unwrap().unwrap());
             assert!(max_scaled_err(got.view(), want.view()) < 1e-5);
         }
+    }
+
+    #[test]
+    fn per_chip_queues_drain_independently() {
+        // Pin distinct job streams to each chip of a 2-chip pool: both
+        // queues drain, each on its own chip, results all correct.
+        let (b, metrics) = batcher_pool(2);
+        assert_eq!(b.chips(), 2);
+        let mut rxs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..6 {
+            let j = job(32, 8, 16, 200 + i, None);
+            wants.push(oracle(&j));
+            rxs.push(b.submit_to(i as usize % 2, j));
+        }
+        for (rx, want) in rxs.into_iter().zip(wants) {
+            let got = Mat::from_col_major(32, 8, &rx.recv().unwrap().unwrap());
+            assert!(max_scaled_err(got.view(), want.view()) < 1e-5);
+        }
+        assert_eq!(b.depth(), 0);
+        let per_chip = metrics.chip_requests();
+        assert_eq!(per_chip.len(), 2, "both chips executed work: {per_chip:?}");
+        assert!(per_chip.iter().all(|&c| c > 0), "both chips executed work: {per_chip:?}");
+    }
+
+    #[test]
+    fn shard_hints_reduce_modulo_pool() {
+        let (b, _) = batcher_pool(2);
+        let j = job(16, 4, 8, 300, None);
+        let want = oracle(&j);
+        // Hint 7 on a 2-chip pool routes to chip 1, not out of bounds.
+        let got = b.submit_to(7, j).recv().unwrap().unwrap();
+        let got = Mat::from_col_major(16, 4, &got);
+        assert!(max_scaled_err(got.view(), want.view()) < 1e-5);
+    }
+
+    // ---- coalesce_plan property tests (the FIFO/batching invariants) ----
+
+    /// Random `(key, cols)` sequences drawn from a small key alphabet so
+    /// adjacent duplicates actually occur.
+    fn gen_jobs(rng: &mut crate::linalg::XorShiftRng) -> (Vec<(CoalesceKey, usize)>, usize) {
+        let len = rng.next_below(24);
+        let jobs: Vec<(CoalesceKey, usize)> = (0..len)
+            .map(|_| {
+                let key_id = rng.next_below(3) as u64;
+                let cols = 1 + rng.next_below(64);
+                ((0, 0, 8, 8, 0, 0, key_id), cols)
+            })
+            .collect();
+        let max_cols = 32 + rng.next_below(96);
+        (jobs, max_cols)
+    }
+
+    #[test]
+    fn coalesce_plan_never_reorders_or_drops() {
+        forall(Config::default(), gen_jobs, |(jobs, max_cols)| {
+            let plan = coalesce_plan(jobs, *max_cols);
+            // Ranges must tile 0..len exactly, in order.
+            let mut next = 0usize;
+            for &(start, end) in &plan {
+                if start != next || end <= start {
+                    return false;
+                }
+                next = end;
+            }
+            next == jobs.len()
+        });
+    }
+
+    #[test]
+    fn coalesce_plan_respects_max_cols_and_keys() {
+        forall(Config::default(), gen_jobs, |(jobs, max_cols)| {
+            let plan = coalesce_plan(jobs, *max_cols);
+            plan.iter().all(|&(start, end)| {
+                let group = &jobs[start..end];
+                let homogeneous = group.iter().all(|(k, _)| *k == group[0].0);
+                let cols: usize = group.iter().map(|(_, n)| n).sum();
+                homogeneous && (group.len() == 1 || cols <= *max_cols)
+            })
+        });
+    }
+
+    #[test]
+    fn coalesce_plan_merges_adjacent_same_key_runs() {
+        // Deterministic spot check: k0 k0 k1 k0 under a generous budget
+        // yields [0,2) [2,3) [3,4) — merges the run, never across keys,
+        // never across the gap (no reordering).
+        let k0: CoalesceKey = (0, 0, 8, 8, 0, 0, 0);
+        let k1: CoalesceKey = (0, 0, 8, 8, 0, 0, 1);
+        let jobs = vec![(k0, 4), (k0, 4), (k1, 4), (k0, 4)];
+        assert_eq!(coalesce_plan(&jobs, 1024), vec![(0, 2), (2, 3), (3, 4)]);
+        // A tight budget splits the run.
+        assert_eq!(coalesce_plan(&jobs, 4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        // An oversized single job still forms its own group.
+        assert_eq!(coalesce_plan(&[(k0, 4096)], 16), vec![(0, 1)]);
     }
 }

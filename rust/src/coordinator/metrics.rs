@@ -1,4 +1,5 @@
-//! Service metrics: request counters, latency histogram, throughput.
+//! Service metrics: request counters, latency histogram, throughput, and
+//! per-chip execution counts for the sharded pool.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -17,6 +18,8 @@ struct Inner {
     latency_us: [u64; BUCKETS],
     total_latency_s: f64,
     started: Option<Instant>,
+    /// Batch executions per chip (index = chip id; grown on demand).
+    chip_gemms: Vec<u64>,
 }
 
 /// Thread-safe metrics sink.
@@ -25,10 +28,13 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// A fresh sink; uptime starts now.
     pub fn new() -> Self {
         Metrics { inner: Mutex::new(Inner { started: Some(Instant::now()), ..Default::default() }) }
     }
 
+    /// Record one completed request of `kind` with its latency and
+    /// logical flop count.
     pub fn record_request(&self, kind: RequestKind, latency_s: f64, flops: f64) {
         let mut m = self.inner.lock().unwrap();
         m.requests += 1;
@@ -44,26 +50,56 @@ impl Metrics {
         m.latency_us[bucket] += 1;
     }
 
+    /// Record a failed request.
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Record that `n` jobs executed as one coalesced batch.
     pub fn record_batched(&self, n: usize) {
         self.inner.lock().unwrap().batched += n as u64;
     }
 
+    /// Record one chip-pinned execution on `chip` (the counter behind the
+    /// `chipN_gemms` report labels). Counts batcher groups and hinted
+    /// direct gemms — an *unhinted* f64 gemm shards across the whole pool
+    /// and is visible in [`crate::host::pool::ChipPool::crossings`]
+    /// rather than here.
+    pub fn record_chip_request(&self, chip: usize) {
+        let mut m = self.inner.lock().unwrap();
+        if m.chip_gemms.len() <= chip {
+            m.chip_gemms.resize(chip + 1, 0);
+        }
+        m.chip_gemms[chip] += 1;
+    }
+
+    /// Total requests recorded.
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
     }
 
-    /// Latency below which `q` of requests fall (from the histogram).
+    /// Per-chip batch-execution counts (empty until a chip executes).
+    pub fn chip_requests(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().chip_gemms.clone()
+    }
+
+    /// Latency below which a fraction `q` of requests fall, read from the
+    /// log-scaled histogram (a bucket *upper* bound, in seconds).
+    ///
+    /// The edges are explicit:
+    /// * no samples recorded → `0.0`, whatever `q` is;
+    /// * a non-finite `q` (NaN, ±∞ — arithmetic upstream gone wrong) is
+    ///   treated as `0.0`;
+    /// * `q` outside `[0, 1]` is clamped, so `q <= 0` returns the
+    ///   smallest occupied bucket bound and `q >= 1` the largest.
     pub fn latency_quantile(&self, q: f64) -> f64 {
         let m = self.inner.lock().unwrap();
         let total: u64 = m.latency_us.iter().sum();
         if total == 0 {
             return 0.0;
         }
-        let target = (q * total as f64).ceil() as u64;
+        let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 0.0 };
+        let target = ((q * total as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, &c) in m.latency_us.iter().enumerate() {
             seen += c;
@@ -74,12 +110,13 @@ impl Metrics {
         (1u64 << (BUCKETS - 1)) as f64 / 1e6
     }
 
-    /// Human-readable report (the `Stats` opcode's payload).
+    /// Human-readable report (the `Stats` opcode's payload), with one
+    /// `chipN_gemms` label per chip that has executed work.
     pub fn report(&self) -> String {
         let m = self.inner.lock().unwrap();
         let uptime = m.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         let mean_lat = if m.requests > 0 { m.total_latency_s / m.requests as f64 } else { 0.0 };
-        format!(
+        let mut line = format!(
             "requests={} errors={} gemm={} gemv={} batched={} uptime_s={:.1} \
              mean_latency_s={:.6} achieved_gflops={:.3}",
             m.requests,
@@ -90,7 +127,11 @@ impl Metrics {
             uptime,
             mean_lat,
             if uptime > 0.0 { m.flops / uptime / 1e9 } else { 0.0 },
-        )
+        );
+        for (i, c) in m.chip_gemms.iter().enumerate() {
+            line.push_str(&format!(" chip{i}_gemms={c}"));
+        }
+        line
     }
 }
 
@@ -103,8 +144,11 @@ impl Default for Metrics {
 /// Routing category of a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RequestKind {
+    /// Level-3 gemm (the Epiphany-accelerated class).
     Gemm,
+    /// Level-2 gemv (host compute).
     Gemv,
+    /// Anything else (control ops).
     Other,
 }
 
@@ -141,5 +185,36 @@ mod tests {
     fn empty_quantile_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile(0.9), 0.0);
+        // Out-of-range and non-finite q are still 0 on no samples.
+        assert_eq!(m.latency_quantile(-3.0), 0.0);
+        assert_eq!(m.latency_quantile(f64::NAN), 0.0);
+    }
+
+    #[test]
+    fn quantile_q_edges_clamped() {
+        let m = Metrics::new();
+        m.record_request(RequestKind::Gemm, 1e-5, 0.0);
+        m.record_request(RequestKind::Gemm, 1e-1, 0.0);
+        let lo = m.latency_quantile(0.0);
+        let hi = m.latency_quantile(1.0);
+        assert!(lo > 0.0 && lo <= hi);
+        // q below 0 / above 1 clamp to the same edges.
+        assert_eq!(m.latency_quantile(-1.0), lo);
+        assert_eq!(m.latency_quantile(7.5), hi);
+        // Non-finite q reads as 0.
+        assert_eq!(m.latency_quantile(f64::NAN), lo);
+        assert_eq!(m.latency_quantile(f64::INFINITY), lo);
+    }
+
+    #[test]
+    fn per_chip_labels_in_report() {
+        let m = Metrics::new();
+        m.record_chip_request(1);
+        m.record_chip_request(1);
+        m.record_chip_request(0);
+        assert_eq!(m.chip_requests(), vec![1, 2]);
+        let rep = m.report();
+        assert!(rep.contains("chip0_gemms=1"), "{rep}");
+        assert!(rep.contains("chip1_gemms=2"), "{rep}");
     }
 }

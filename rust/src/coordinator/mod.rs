@@ -1,21 +1,29 @@
-//! L3 coordinator: a network-facing BLAS service in front of the single
-//! Epiphany workgroup.
+//! L3 coordinator: a network-facing BLAS service in front of the
+//! Epiphany chip pool.
 //!
 //! The paper's architecture has exactly one chip and one service process,
 //! so concurrent BLAS clients must be *routed, queued, and batched* onto
 //! that serial resource — the same problem a vLLM-style router solves for
-//! one accelerator. This module provides:
+//! one accelerator. With a [`crate::host::pool::ChipPool`] there are N
+//! such resources, and the coordinator schedules across them: one batcher
+//! queue + worker per chip, least-loaded placement by default, and a wire
+//! shard hint for clients that want chip affinity. This module provides:
 //!
 //! * [`protocol`] — a compact binary wire protocol: one frame header
 //!   `[len][opcode][dtype][flags]` and one payload codec shared by every
 //!   opcode × dtype (dtype-tagged descriptor structs, not per-precision
-//!   enum variants);
-//! * [`batcher`]  — a FIFO + shape-coalescing batcher over the service
-//!   (requests with the same (op, K-class) batch their HH-RAM crossings);
-//! * [`router`]   — dispatch: level-3 sgemm/false-dgemm to the Epiphany
-//!   queue, level-1/2 to a host worker pool;
+//!   enum variants); the `flags` nibble carries the shard hint;
+//! * [`batcher`]  — per-chip FIFO + shape-coalescing batchers (requests
+//!   with the same (op, K-class) batch their HH-RAM crossings, pinned to
+//!   their queue's chip);
+//! * [`router`]   — dispatch: level-3 sgemm/false-dgemm to a chip queue
+//!   (hinted or least-loaded), level-1/2 to a host worker pool;
 //! * [`server`]   — a threaded TCP accept loop;
-//! * [`metrics`]  — counters + latency histograms, `/stats`-style report.
+//! * [`metrics`]  — counters + latency histograms + per-chip execution
+//!   counts, `/stats`-style report.
+//!
+//! The full map — layers, wire grammar, and the sharded data flow — is
+//! drawn in `docs/ARCHITECTURE.md`.
 
 pub mod batcher;
 pub mod metrics;

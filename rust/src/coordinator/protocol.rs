@@ -13,7 +13,14 @@
 //! so an op is defined once and instantiated per precision by the codec —
 //! adding a routed op adds one opcode, one descriptor struct and one
 //! codec routine, not a variant per dtype across protocol/router/server.
-//! `flags` is reserved (must be 0).
+//!
+//! `flags` carries the **shard hint** on `Gemm` request frames: the low
+//! nibble is `0` for "no affinity" (the server picks the least-loaded
+//! chip) or `1 + chip` to pin the job to `chip`'s queue (so a remote
+//! client can keep a weight matrix hot on one chip's batcher; the server
+//! reduces the index modulo its pool size). The high nibble is reserved
+//! and must be 0, as must the whole byte on every other frame kind —
+//! pre-shard clients, which always sent 0, remain wire-compatible.
 //!
 //! Gemm payload: `[u8 ta][u8 tb][u32 m][u32 n][u32 k][scalar alpha]
 //! [scalar beta][A][B][C]` — matrices col-major in their *stored*
@@ -32,14 +39,20 @@ use std::io::{Read, Write};
 /// control ops with empty payloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Opcode {
+    /// Level-3 gemm (Epiphany-routed; may carry a shard hint in `flags`).
     Gemm = 1,
+    /// Level-2 gemv (host-routed).
     Gemv = 2,
+    /// Liveness check; empty payload.
     Ping = 16,
+    /// Ask for the metrics report; empty payload.
     Stats = 17,
+    /// Stop the server; empty payload.
     Shutdown = 18,
 }
 
 impl Opcode {
+    /// Decode a request tag; unknown tags are recoverable errors.
     pub fn from_u8(v: u8) -> Result<Opcode> {
         Ok(match v {
             1 => Opcode::Gemm,
@@ -51,6 +64,7 @@ impl Opcode {
         })
     }
 
+    /// Every opcode (the property suite's round-trip sweep).
     pub fn all() -> [Opcode; 5] {
         [Opcode::Gemm, Opcode::Gemv, Opcode::Ping, Opcode::Stats, Opcode::Shutdown]
     }
@@ -59,11 +73,14 @@ impl Opcode {
 /// A dtype-tagged element buffer — the payload unit of the protocol.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
+    /// Single-precision elements.
     F32(Vec<f32>),
+    /// Double-precision elements.
     F64(Vec<f64>),
 }
 
 impl Tensor {
+    /// The dtype tag of the carried elements.
     pub fn dtype(&self) -> Dtype {
         match self {
             Tensor::F32(_) => Dtype::F32,
@@ -71,6 +88,7 @@ impl Tensor {
         }
     }
 
+    /// Logical element count (not bytes).
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32(v) => v.len(),
@@ -78,10 +96,12 @@ impl Tensor {
         }
     }
 
+    /// Whether the buffer holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Borrow as f32 elements; errs on a dtype mismatch.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Tensor::F32(v) => Ok(v),
@@ -89,6 +109,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow as f64 elements; errs on a dtype mismatch.
     pub fn as_f64(&self) -> Result<&[f64]> {
         match self {
             Tensor::F64(v) => Ok(v),
@@ -96,6 +117,7 @@ impl Tensor {
         }
     }
 
+    /// Take the f32 elements; errs on a dtype mismatch.
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
             Tensor::F32(v) => Ok(v),
@@ -103,6 +125,7 @@ impl Tensor {
         }
     }
 
+    /// Take the f64 elements; errs on a dtype mismatch.
     pub fn into_f64(self) -> Result<Vec<f64>> {
         match self {
             Tensor::F64(v) => Ok(v),
@@ -118,21 +141,46 @@ impl Tensor {
 /// scalars round-trip bit-identically).
 #[derive(Clone, Debug)]
 pub struct GemmWire {
+    /// Transpose flag for A.
     pub ta: Trans,
+    /// Transpose flag for B.
     pub tb: Trans,
+    /// Rows of C.
     pub m: usize,
+    /// Columns of C.
     pub n: usize,
+    /// Inner (contraction) dimension.
     pub k: usize,
+    /// Scale on the product (travels at the dtype's width).
     pub alpha: f64,
+    /// Scale on the C input (travels at the dtype's width).
     pub beta: f64,
+    /// Stored A operand.
     pub a: Tensor,
+    /// Stored B operand.
     pub b: Tensor,
+    /// C input.
     pub c: Tensor,
+    /// Chip-affinity hint, carried in the frame's `flags` nibble:
+    /// `None` lets the server pick the least-loaded chip; `Some(chip)`
+    /// pins the job to `chip`'s batcher queue (reduced modulo the pool
+    /// size server-side). At most 15 distinct pins fit the nibble, so
+    /// hints above 14 encode as 14.
+    pub shard_hint: Option<usize>,
 }
 
 impl GemmWire {
+    /// The element dtype of the descriptor's tensors.
     pub fn dtype(&self) -> Dtype {
         self.a.dtype()
+    }
+
+    /// The `flags` byte this descriptor encodes to.
+    fn flags(&self) -> u8 {
+        match self.shard_hint {
+            None => 0,
+            Some(chip) => chip.min(14) as u8 + 1,
+        }
     }
 }
 
@@ -144,19 +192,30 @@ impl GemmWire {
 /// in-process router accepts `>=` lengths.
 #[derive(Clone, Debug)]
 pub struct GemvWire {
+    /// Transpose flag for A.
     pub ta: Trans,
+    /// Rows of the stored A.
     pub m: usize,
+    /// Columns of the stored A.
     pub n: usize,
+    /// Stride of `x` (classic BLAS `INCX`, >= 1).
     pub incx: usize,
+    /// Stride of `y` (classic BLAS `INCY`, >= 1).
     pub incy: usize,
+    /// Scale on the product (travels at the dtype's width).
     pub alpha: f64,
+    /// Scale on the y input (travels at the dtype's width).
     pub beta: f64,
+    /// Stored A operand (col-major m×n).
     pub a: Tensor,
+    /// Stored x vector (`strided_len` elements).
     pub x: Tensor,
+    /// Stored y input (`strided_len` elements).
     pub y: Tensor,
 }
 
 impl GemvWire {
+    /// The element dtype of the descriptor's tensors.
     pub fn dtype(&self) -> Dtype {
         self.a.dtype()
     }
@@ -174,18 +233,26 @@ impl GemvWire {
 /// A decoded request: dtype-tagged descriptors plus control ops.
 #[derive(Clone, Debug)]
 pub enum Request {
+    /// Level-3 gemm (Epiphany-routed).
     Gemm(GemmWire),
+    /// Level-2 gemv (host-routed).
     Gemv(GemvWire),
+    /// Liveness check.
     Ping,
+    /// Ask for the metrics report.
     Stats,
+    /// Stop the server.
     Shutdown,
 }
 
 /// A response frame: a dtype-tagged tensor, text, or an error.
 #[derive(Clone, Debug)]
 pub enum Response {
+    /// Success with a tensor payload (the updated C or y).
     Ok(Tensor),
+    /// Success with a text payload (pong, stats report, bye).
     OkText(String),
+    /// A recoverable server-side error, as text.
     Err(String),
 }
 
@@ -222,7 +289,11 @@ struct FrameWriter {
 
 impl FrameWriter {
     fn new(tag: u8, dtype: Dtype) -> Self {
-        FrameWriter { buf: vec![tag, dtype.code(), 0 /* flags: reserved */], dtype }
+        FrameWriter::with_flags(tag, dtype, 0)
+    }
+
+    fn with_flags(tag: u8, dtype: Dtype, flags: u8) -> Self {
+        FrameWriter { buf: vec![tag, dtype.code(), flags], dtype }
     }
 
     fn u8(&mut self, v: u8) {
@@ -280,13 +351,13 @@ struct FrameReader<'a> {
 }
 
 impl<'a> FrameReader<'a> {
-    /// Parse the 3-byte header; returns `(tag, reader)`.
-    fn new(body: &'a [u8]) -> Result<(u8, FrameReader<'a>)> {
+    /// Parse the 3-byte header; returns `(tag, flags, reader)`. Flag
+    /// *policy* (which bits an opcode may carry) is the caller's job.
+    fn new(body: &'a [u8]) -> Result<(u8, u8, FrameReader<'a>)> {
         ensure!(body.len() >= 3, "frame shorter than its header");
         let tag = body[0];
         let dtype = Dtype::from_u8(body[1])?;
-        ensure!(body[2] == 0, "reserved flags byte must be 0, got {}", body[2]);
-        Ok((tag, FrameReader { buf: body, pos: 3, dtype }))
+        Ok((tag, body[2], FrameReader { buf: body, pos: 3, dtype }))
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
@@ -379,9 +450,14 @@ impl Request {
     }
 
     /// Encode into a frame (including the length prefix). One code path
-    /// for every opcode × dtype.
+    /// for every opcode × dtype; gemm frames carry the shard hint in the
+    /// `flags` byte.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = FrameWriter::new(self.opcode() as u8, self.dtype());
+        let flags = match self {
+            Request::Gemm(g) => g.flags(),
+            _ => 0,
+        };
+        let mut w = FrameWriter::with_flags(self.opcode() as u8, self.dtype(), flags);
         match self {
             Request::Ping | Request::Stats | Request::Shutdown => {}
             Request::Gemm(g) => {
@@ -416,12 +492,20 @@ impl Request {
     /// routine serves every dtype; payload sizes are derived from the
     /// header dims and validated.
     pub fn decode(body: &[u8]) -> Result<Request> {
-        let (tag, mut r) = FrameReader::new(body)?;
-        let req = match Opcode::from_u8(tag)? {
+        let (tag, flags, mut r) = FrameReader::new(body)?;
+        let opcode = Opcode::from_u8(tag)?;
+        if opcode == Opcode::Gemm {
+            ensure!(flags & 0xF0 == 0, "reserved high flag bits must be 0, got {flags:#04x}");
+        } else {
+            ensure!(flags == 0, "flags byte must be 0 on a non-gemm frame, got {flags:#04x}");
+        }
+        let req = match opcode {
             Opcode::Ping => Request::Ping,
             Opcode::Stats => Request::Stats,
             Opcode::Shutdown => Request::Shutdown,
             Opcode::Gemm => {
+                let shard_hint =
+                    if flags & 0x0F == 0 { None } else { Some((flags & 0x0F) as usize - 1) };
                 let ta = trans_from(r.u8()?)?;
                 let tb = trans_from(r.u8()?)?;
                 let (m, n, k) = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
@@ -432,7 +516,7 @@ impl Request {
                 let a = r.tensor(am * an)?;
                 let b = r.tensor(bm * bn)?;
                 let c = r.tensor(m * n)?;
-                Request::Gemm(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c })
+                Request::Gemm(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c, shard_hint })
             }
             Opcode::Gemv => {
                 let ta = trans_from(r.u8()?)?;
@@ -484,6 +568,7 @@ impl Request {
             a: Tensor::F32(a),
             b: Tensor::F32(b),
             c: Tensor::F32(c),
+            shard_hint: None,
         })
     }
 
@@ -513,7 +598,19 @@ impl Request {
             a: Tensor::F64(a),
             b: Tensor::F64(b),
             c: Tensor::F64(c),
+            shard_hint: None,
         })
+    }
+
+    /// Pin a gemm request to a chip's queue via the frame's shard-hint
+    /// flag nibble (no-op on non-gemm requests). Hints above 14 encode
+    /// as 14 — the nibble's ceiling — and the server reduces the index
+    /// modulo its pool size either way.
+    pub fn with_shard_hint(mut self, chip: usize) -> Request {
+        if let Request::Gemm(g) = &mut self {
+            g.shard_hint = Some(chip.min(14));
+        }
+        self
     }
 
     /// f32 gemv request with classic vector strides.
@@ -639,8 +736,10 @@ impl Response {
         }
     }
 
+    /// Decode a response frame body (without the length prefix).
     pub fn decode(body: &[u8]) -> Result<Response> {
-        let (tag, mut r) = FrameReader::new(body)?;
+        let (tag, flags, mut r) = FrameReader::new(body)?;
+        ensure!(flags == 0, "flags byte must be 0 on a response frame, got {flags:#04x}");
         let resp = match tag {
             STATUS_OK => Response::Ok(r.rest_tensor()?),
             STATUS_TEXT => Response::OkText(String::from_utf8_lossy(r.rest_bytes()).into_owned()),
@@ -832,6 +931,44 @@ mod tests {
         assert!(Request::decode(&[16, 9, 0]).is_err(), "unknown dtype");
         assert!(Request::decode(&[16, 0, 7]).is_err(), "nonzero reserved flags");
         assert!(Request::decode(&[16]).is_err(), "shorter than header");
+    }
+
+    fn tiny_sgemm() -> Request {
+        Request::sgemm(Trans::N, Trans::N, 1, 1, 1, 1.0, 0.0, vec![1.0], vec![1.0], vec![0.0])
+    }
+
+    #[test]
+    fn shard_hint_rides_the_flags_byte() {
+        let frame = tiny_sgemm().with_shard_hint(3).encode();
+        assert_eq!(frame[6], 4, "flags nibble is chip + 1");
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::Gemm(g) => assert_eq!(g.shard_hint, Some(3)),
+            other => panic!("wrong decode: {other:?}"),
+        }
+        // No hint keeps flags == 0: pre-shard clients stay compatible.
+        let plain = tiny_sgemm().encode();
+        assert_eq!(plain[6], 0);
+        match Request::decode(&plain[4..]).unwrap() {
+            Request::Gemm(g) => assert_eq!(g.shard_hint, None),
+            other => panic!("wrong decode: {other:?}"),
+        }
+        // Hints saturate at the nibble ceiling (14).
+        let big = tiny_sgemm().with_shard_hint(99).encode();
+        match Request::decode(&big[4..]).unwrap() {
+            Request::Gemm(g) => assert_eq!(g.shard_hint, Some(14)),
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reserved_high_flag_bits_rejected() {
+        let mut frame = tiny_sgemm().encode();
+        frame[6] = 0x10; // high nibble is reserved, even on gemm frames
+        assert!(Request::decode(&frame[4..]).is_err());
+        // And any flags at all are rejected on non-gemm frames.
+        let mut ping = Request::Ping.encode();
+        ping[6] = 0x01;
+        assert!(Request::decode(&ping[4..]).is_err());
     }
 
     #[test]

@@ -18,14 +18,17 @@ use std::sync::Arc;
 pub struct Router {
     batcher: Batcher,
     blas: Arc<Blas>,
+    /// The metrics sink every dispatch records into.
     pub metrics: Arc<Metrics>,
 }
 
 impl Router {
+    /// Assemble the dispatch stage over a BLAS pool and its batcher.
     pub fn new(blas: Arc<Blas>, batcher: Batcher, metrics: Arc<Metrics>) -> Router {
         Router { batcher, blas, metrics }
     }
 
+    /// Total jobs queued across every chip's batcher queue.
     pub fn queue_depth(&self) -> usize {
         self.batcher.depth()
     }
@@ -61,10 +64,12 @@ impl Router {
                 ensure!(g.b.len() == br * bc, "gemm B payload {} != {br}x{bc}", g.b.len());
                 ensure!(g.c.len() == g.m * g.n, "gemm C payload {} != m·n", g.c.len());
                 match g.dtype() {
-                    // f32: the serving-style traffic class — route to the
-                    // Epiphany batcher queue (coalescing + FIFO).
+                    // f32: the serving-style traffic class — route to a
+                    // per-chip Epiphany batcher queue (coalescing + FIFO).
+                    // A wire shard hint pins the chip; otherwise the
+                    // least-loaded queue wins.
                     Dtype::F32 => {
-                        let rx = self.batcher.submit(GemmJob {
+                        let job = GemmJob {
                             ta: g.ta,
                             tb: g.tb,
                             m: g.m,
@@ -75,12 +80,18 @@ impl Router {
                             a: g.a.into_f32()?,
                             b: g.b.into_f32()?,
                             c: g.c.into_f32()?,
-                        });
+                        };
+                        let rx = match g.shard_hint {
+                            Some(chip) => self.batcher.submit_to(chip, job),
+                            None => self.batcher.submit(job),
+                        };
                         let out = rx.recv().map_err(|_| anyhow::anyhow!("batcher gone"))??;
                         Ok(Response::Ok(Tensor::F32(out)))
                     }
                     // f64 traffic is rare (HPL); route directly, serialized
-                    // by the service itself.
+                    // by the service itself. A wire shard hint still pins
+                    // the chip (reduced modulo the pool, like the batcher);
+                    // unhinted requests shard per the pool's policy.
                     Dtype::F64 => {
                         let t0 = std::time::Instant::now();
                         let a = g.a.into_f64()?;
@@ -88,9 +99,19 @@ impl Router {
                         let a_v = MatRef::from_col_major(ar, ac, ar, &a);
                         let b_v = MatRef::from_col_major(br, bc, br, &b);
                         let mut c_m = Mat::from_col_major(g.m, g.n, g.c.as_f64()?);
-                        let rep = self
-                            .blas
-                            .dgemm_false(g.ta, g.tb, g.alpha, a_v, b_v, g.beta, &mut c_m)?;
+                        let rep = match g.shard_hint {
+                            Some(chip) => {
+                                let chip = chip % self.blas.chips();
+                                let rep = self.blas.gemm_on(
+                                    chip, g.ta, g.tb, g.alpha, a_v, b_v, g.beta, &mut c_m,
+                                )?;
+                                self.metrics.record_chip_request(chip);
+                                rep
+                            }
+                            None => self
+                                .blas
+                                .dgemm_false(g.ta, g.tb, g.alpha, a_v, b_v, g.beta, &mut c_m)?,
+                        };
                         self.metrics.record_request(
                             RequestKind::Gemm,
                             t0.elapsed().as_secs_f64(),
@@ -344,6 +365,7 @@ mod tests {
             a: Tensor::F32(vec![0.0; 3]), // wrong
             b: Tensor::F32(vec![0.0; 16]),
             c: Tensor::F32(vec![0.0; 16]),
+            shard_hint: None,
         }));
         assert!(matches!(resp, Response::Err(_)));
         // The malformed request must be rejected BEFORE reaching the

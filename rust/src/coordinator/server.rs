@@ -9,7 +9,8 @@ use super::router::Router;
 use crate::blis::Blas;
 use crate::epiphany::kernel::KernelGeometry;
 use crate::epiphany::timing::CalibratedModel;
-use crate::host::service::{ServiceBackend, ServiceHandle};
+use crate::host::pool::{ChipPool, ShardPolicy};
+use crate::host::service::ServiceBackend;
 use anyhow::{Context, Result};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -20,8 +21,13 @@ use std::sync::Arc;
 pub struct ServerConfig {
     /// e.g. "127.0.0.1:0" (port 0 = ephemeral).
     pub addr: String,
+    /// Which engine each chip of the pool computes on.
     pub backend: ServiceBackend,
+    /// Per-chip batcher knobs.
     pub batch: BatchPolicy,
+    /// Simulated Epiphany chips to boot (each with its own service loop
+    /// and HH-RAM window; values below 1 are treated as 1).
+    pub chips: usize,
 }
 
 impl Default for ServerConfig {
@@ -32,6 +38,7 @@ impl Default for ServerConfig {
             // `ServiceBackend::Pjrt` in pjrt-featured builds.
             backend: ServiceBackend::Simulator,
             batch: BatchPolicy::default(),
+            chips: 1,
         }
     }
 }
@@ -41,18 +48,21 @@ pub struct BlasServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// The server's metrics sink (shared with the router and batchers).
     pub metrics: Arc<Metrics>,
 }
 
 impl BlasServer {
-    /// Boot the full stack (service → blas → batcher → router → TCP).
+    /// Boot the full stack (chip pool → blas → per-chip batcher →
+    /// router → TCP).
     pub fn start(config: ServerConfig) -> Result<BlasServer> {
-        let svc = ServiceHandle::spawn(
+        let pool = ChipPool::spawn(
+            config.chips.max(1),
             config.backend,
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )?;
-        let blas = Arc::new(Blas::new(svc));
+        let blas = Arc::new(Blas::with_pool(pool, ShardPolicy::ColumnPanels));
         let metrics = Arc::new(Metrics::new());
         let batcher = Batcher::spawn(Arc::clone(&blas), config.batch, Arc::clone(&metrics));
         let router = Arc::new(Router::new(blas, batcher, Arc::clone(&metrics)));
@@ -86,6 +96,7 @@ impl BlasServer {
         Ok(BlasServer { local_addr, stop, accept_thread: Some(accept_thread), metrics })
     }
 
+    /// The bound listen address (resolves port 0 to the real port).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.local_addr
     }
@@ -140,10 +151,12 @@ pub struct BlasClient {
 }
 
 impl BlasClient {
+    /// Open a connection to a running [`BlasServer`].
     pub fn connect(addr: std::net::SocketAddr) -> Result<BlasClient> {
         Ok(BlasClient { stream: TcpStream::connect(addr)? })
     }
 
+    /// One synchronous request/response round trip.
     pub fn call(&mut self, req: &Request) -> Result<Response> {
         write_frame(&mut self.stream, &req.encode())?;
         let body = read_frame(&mut self.stream)?;
@@ -256,6 +269,51 @@ mod tests {
             h.join().unwrap();
         }
         assert!(srv.metrics.requests() >= 12);
+    }
+
+    #[test]
+    fn sharded_server_honors_hints() {
+        let srv = BlasServer::start(ServerConfig { chips: 2, ..Default::default() }).unwrap();
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        let (m, n, k) = (32, 16, 24);
+        let a = Mat::<f32>::randn(m, k, 7);
+        let b = Mat::<f32>::randn(k, n, 8);
+        let mut want = Mat::<f64>::zeros(m, n);
+        crate::blis::level3::gemm_host(
+            Trans::N,
+            Trans::N,
+            1.0,
+            a.cast::<f64>().view(),
+            b.cast::<f64>().view(),
+            0.0,
+            &mut want,
+        );
+        // Hints 0, 1 and 5 (= chip 1 mod 2) all route and compute right.
+        for chip in [0usize, 1, 5] {
+            let req = Request::sgemm(
+                Trans::N,
+                Trans::N,
+                m,
+                n,
+                k,
+                1.0,
+                0.0,
+                a.as_slice().to_vec(),
+                b.as_slice().to_vec(),
+                vec![0.0; m * n],
+            )
+            .with_shard_hint(chip);
+            let out = Mat::from_col_major(m, n, &cli.call(&req).unwrap().into_f32().unwrap());
+            assert!(max_scaled_err(out.view(), want.view()) < 1e-5, "hint {chip}");
+        }
+        // Both chips executed work, and the stats report labels them.
+        match cli.call(&Request::Stats).unwrap() {
+            Response::OkText(s) => {
+                assert!(s.contains("chip0_gemms="), "{s}");
+                assert!(s.contains("chip1_gemms="), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub struct Barrier {
 }
 
 impl Barrier {
+    /// A fresh barrier: no arrivals, no completed episodes.
     pub fn new() -> Self {
         Barrier { arrived: [false; CORES], count: 0, episodes: 0 }
     }

@@ -13,6 +13,7 @@ use anyhow::Result;
 
 /// One eCore's state as the sgemm kernel sees it.
 pub struct CoreState {
+    /// The core's 32 KB local store with its Figure-3 region map.
     pub lm: LocalMemory,
     /// `a_ti-cj`: m × ksub/CORES, column-major.
     pub a: BufId,
@@ -32,11 +33,17 @@ pub struct SimStats {
     /// Lock-step per-core compute cycles (subMatmul + barriers + task
     /// overhead). All cores do identical work, so one counter suffices.
     pub cycles: u64,
+    /// `subMatmul` invocations across all cores.
     pub submatmuls: u64,
+    /// Multiply-accumulate operations across all cores.
     pub macs: u64,
+    /// Epiphany Tasks executed (outermost kernel unit).
     pub tasks: u64,
+    /// Completed mesh-wide barrier episodes.
     pub barrier_episodes: u64,
+    /// Aggregate e-link DMA traffic.
     pub dma: DmaStats,
+    /// Aggregate eMesh neighbour-store traffic.
     pub mesh: MeshStats,
 }
 
@@ -67,6 +74,7 @@ pub struct ChipSegments {
     /// Double-buffered input panels — "two buffers reserved for each input
     /// block" with the `selector` choosing per task.
     pub a_in: [HcSeg; 2],
+    /// Double-buffered B input panels (same selector discipline as A).
     pub b_in: [HcSeg; 2],
     /// Result window, m × n column-major.
     pub out: HcSeg,
@@ -74,12 +82,19 @@ pub struct ChipSegments {
 
 /// The simulated Epiphany-16 running the sgemm kernel.
 pub struct Chip {
+    /// The calibrated timing constants charged against this chip's runs.
     pub model: CalibratedModel,
+    /// The µ-kernel geometry the memory map was laid out for.
     pub geom: KernelGeometry,
+    /// Per-core state (local memory + kernel buffer handles), 16 entries.
     pub cores: Vec<CoreState>,
+    /// The 32 MB shared DRAM window.
     pub hcram: HcRam,
+    /// HC-RAM segment handles for the kernel's shared buffers.
     pub segs: ChipSegments,
+    /// The mesh-wide barrier device.
     pub barrier: Barrier,
+    /// Run statistics feeding the timing model.
     pub stats: SimStats,
 }
 

@@ -18,16 +18,19 @@ pub struct DmaStats {
 }
 
 impl DmaStats {
+    /// Charge one HC-RAM → local transfer of `bytes`.
     pub fn record_in(&mut self, bytes: usize) {
         self.in_bytes += bytes as u64;
         self.transfers += 1;
     }
 
+    /// Charge one local → HC-RAM transfer of `bytes`.
     pub fn record_out(&mut self, bytes: usize) {
         self.out_bytes += bytes as u64;
         self.transfers += 1;
     }
 
+    /// Fold another run's DMA accounting into this one.
     pub fn merge(&mut self, other: &DmaStats) {
         self.in_bytes += other.in_bytes;
         self.out_bytes += other.out_bytes;

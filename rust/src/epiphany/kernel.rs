@@ -41,9 +41,11 @@ pub enum Command {
 }
 
 impl Command {
+    /// Whether the command clears the accumulators before computing.
     pub fn clears(self) -> bool {
         matches!(self, Command::ClearAccumulate | Command::ClearSend)
     }
+    /// Whether the command writes the results back to HC-RAM afterwards.
     pub fn sends(self) -> bool {
         matches!(self, Command::AccumulateSend | Command::ClearSend)
     }
@@ -94,6 +96,7 @@ impl KernelGeometry {
         CORES
     }
 
+    /// Check the divisibility constraints the kernel's slicing relies on.
     pub fn validate(&self) -> Result<()> {
         ensure!(
             self.m > 0 && self.m % 32 == 0,

@@ -19,8 +19,11 @@ pub const STACK_CTRL_BYTES: usize = 2 * 1024;
 /// A named region inside a core's local memory.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Region {
+    /// Human-readable region label (Fig. 3 names).
     pub name: &'static str,
+    /// Byte offset of the region's start.
     pub offset: usize,
+    /// Region size in bytes.
     pub bytes: usize,
 }
 
@@ -80,10 +83,12 @@ impl LocalMemory {
         &self.regions
     }
 
+    /// Read access to a buffer's elements.
     pub fn buf(&self, id: BufId) -> &[f32] {
         &self.buffers[id.0]
     }
 
+    /// Write access to a buffer's elements.
     pub fn buf_mut(&mut self, id: BufId) -> &mut [f32] {
         &mut self.buffers[id.0]
     }
@@ -137,6 +142,7 @@ pub struct HcRam {
 }
 
 impl HcRam {
+    /// A fresh, empty 32 MB window.
     pub fn new() -> Self {
         HcRam { data: vec![0.0; HCRAM_BYTES / 4], segments: Vec::new(), cursor: 0 }
     }
@@ -152,26 +158,31 @@ impl HcRam {
         Ok(seg)
     }
 
+    /// Copy `data` into the start of a segment (host `e_write` path).
     pub fn write(&mut self, seg: HcSeg, data: &[f32]) {
         assert!(data.len() <= seg.len, "segment overflow");
         self.data[seg.offset..seg.offset + data.len()].copy_from_slice(data);
     }
 
+    /// Copy the start of a segment into `out` (host `e_read` path).
     pub fn read(&self, seg: HcSeg, out: &mut [f32]) {
         assert!(out.len() <= seg.len, "segment overflow");
         out.copy_from_slice(&self.data[seg.offset..seg.offset + out.len()]);
     }
 
+    /// Borrow `len` elements of a segment starting at `start`.
     pub fn slice(&self, seg: HcSeg, start: usize, len: usize) -> &[f32] {
         assert!(start + len <= seg.len);
         &self.data[seg.offset + start..seg.offset + start + len]
     }
 
+    /// Mutably borrow `len` elements of a segment starting at `start`.
     pub fn slice_mut(&mut self, seg: HcSeg, start: usize, len: usize) -> &mut [f32] {
         assert!(start + len <= seg.len);
         &mut self.data[seg.offset + start..seg.offset + start + len]
     }
 
+    /// Bytes currently allocated to segments.
     pub fn used_bytes(&self) -> usize {
         self.cursor * 4
     }
@@ -192,7 +203,9 @@ impl Default for HcRam {
 /// Handle to an HC-RAM segment (element offsets).
 #[derive(Clone, Copy, Debug)]
 pub struct HcSeg {
+    /// Segment start, in f32 elements from the window base.
     pub offset: usize,
+    /// Segment length, in f32 elements.
     pub len: usize,
 }
 

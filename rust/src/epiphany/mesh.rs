@@ -15,7 +15,9 @@ use super::{CORES, MESH_COLS};
 /// Core coordinates on the mesh.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Coord {
+    /// Mesh row (0..4).
     pub row: usize,
+    /// Mesh column (0..4).
     pub col: usize,
 }
 
@@ -78,6 +80,7 @@ impl MeshStats {
         self.max_hops = self.max_hops.max(h);
     }
 
+    /// Fold another run's mesh accounting into this one.
     pub fn merge(&mut self, other: &MeshStats) {
         self.byte_hops += other.byte_hops;
         self.bytes += other.bytes;

@@ -19,6 +19,10 @@
 //! 32 KB local memory per core in four 8 KB banks, eMesh NoC with
 //! single-cycle neighbour stores, 32 MB host↔chip shared DRAM (HC-RAM)
 //! reached through the Zynq FPGA e-link.
+//!
+//! A [`crate::host::pool::ChipPool`] can boot many of these chips side
+//! by side, each behind its own service loop; how the stack shards work
+//! across them is drawn in `docs/ARCHITECTURE.md`.
 
 pub mod barrier;
 pub mod chip;
@@ -31,13 +35,15 @@ pub mod timing;
 
 /// Number of eCores on the Epiphany-16 (the paper's `CORES`).
 pub const CORES: usize = 16;
-/// Mesh geometry: 4 rows × 4 columns.
+/// Mesh rows (4×4 grid).
 pub const MESH_ROWS: usize = 4;
+/// Mesh columns (4×4 grid).
 pub const MESH_COLS: usize = 4;
 /// Core clock (Parallella-16: 600 MHz).
 pub const CORE_HZ: f64 = 600.0e6;
 /// Local memory per core (32 KB in four 8 KB banks).
 pub const LOCAL_MEM_BYTES: usize = 32 * 1024;
+/// One local-memory bank (8 KB; bank conflicts are the §3.4 concern).
 pub const BANK_BYTES: usize = 8 * 1024;
 /// Shared DRAM window visible to both host and chip (HC-RAM).
 pub const HCRAM_BYTES: usize = 32 * 1024 * 1024;

@@ -27,7 +27,9 @@ fn do_mult(acc: &mut [f32; 32], scalar: f32, column: &[f32]) {
 /// Result of a subMatmul call: cycles burned per the assembly model.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SubMatmulStats {
+    /// Cycles burned, per the assembly model.
     pub cycles: u64,
+    /// Multiply-accumulate operations performed.
     pub macs: u64,
 }
 

@@ -44,6 +44,7 @@ pub struct EHal {
 }
 
 impl EHal {
+    /// A closed driver handle pricing its calls with `model`.
     pub fn new(model: CalibratedModel) -> Self {
         EHal { state: DevState::Closed, model, init_count: 0, overhead_s: 0.0 }
     }
@@ -74,6 +75,7 @@ impl EHal {
         Ok(())
     }
 
+    /// Whether the device is currently initialized.
     pub fn is_open(&self) -> bool {
         matches!(self.state, DevState::Open(_))
     }
@@ -85,6 +87,7 @@ impl EHal {
         }
     }
 
+    /// The booted chip; errs when the device is closed.
     pub fn chip(&self) -> Result<&Chip> {
         match &self.state {
             DevState::Open(c) => Ok(c),

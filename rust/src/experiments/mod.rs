@@ -25,6 +25,7 @@ pub enum ExperimentScale {
 }
 
 impl ExperimentScale {
+    /// `Full` when `BENCH_FULL=1` is set, `Quick` otherwise.
     pub fn from_env() -> Self {
         if std::env::var("BENCH_FULL").ok().as_deref() == Some("1") {
             ExperimentScale::Full

@@ -18,12 +18,16 @@ use anyhow::Result;
 /// benches.
 #[derive(Clone, Debug)]
 pub struct Check {
+    /// What is being compared (a table row/cell label).
     pub name: String,
+    /// The paper's reported value.
     pub paper: f64,
+    /// This reproduction's value.
     pub ours: f64,
 }
 
 impl Check {
+    /// ours / paper — 1.0 is a perfect reproduction.
     pub fn ratio(&self) -> f64 {
         self.ours / self.paper
     }
@@ -31,7 +35,9 @@ impl Check {
 
 /// Output of one table reproduction.
 pub struct TableResult {
+    /// The rendered table text (what the CLI prints).
     pub rendered: String,
+    /// The paper-vs-ours comparisons the tests assert on.
     pub checks: Vec<Check>,
 }
 

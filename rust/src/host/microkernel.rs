@@ -24,12 +24,16 @@ use std::time::Instant;
 
 /// Who does the heavy part of the calculations.
 pub enum UkrBackend {
+    /// The functional Epiphany simulator behind an e-hal handle.
     Simulator(EHal),
+    /// AOT jax+pallas artifacts through PJRT.
     Pjrt(GemmExecutor),
+    /// Naive host loop (baseline).
     HostRef,
 }
 
 impl UkrBackend {
+    /// Short backend label for reports and errors.
     pub fn name(&self) -> &'static str {
         match self {
             UkrBackend::Simulator(_) => "simulator",
@@ -52,12 +56,16 @@ pub struct UkrOutput {
 
 /// The micro-kernel: fixed (m, n) tile, arbitrary K.
 pub struct InnerMicroKernel {
+    /// The engine computing the tile products.
     pub backend: UkrBackend,
+    /// Calibrated timing constants for the projection.
     pub model: CalibratedModel,
+    /// The fixed (m, n, KSUB, NSUB) tile geometry.
     pub geom: KernelGeometry,
 }
 
 impl InnerMicroKernel {
+    /// Wrap a backend; boots the simulator's e-hal once if needed.
     pub fn new(backend: UkrBackend, model: CalibratedModel, geom: KernelGeometry) -> Result<Self> {
         let mut ukr = InnerMicroKernel { backend, model, geom };
         if let UkrBackend::Simulator(hal) = &mut ukr.backend {

@@ -9,11 +9,13 @@
 //! is charged by the calibrated model (Table 2 − Table 1).
 
 pub mod microkernel;
+pub mod pool;
 pub mod projection;
 pub mod service;
 pub mod shm;
 
 pub use microkernel::{InnerMicroKernel, UkrBackend, UkrOutput};
+pub use pool::{ChipPool, ShardPolicy};
 pub use projection::{Projection, ProjectionParams};
 pub use service::{ServiceHandle, ServiceRequest, ServiceResponse};
 pub use shm::{HhRam, Semaphore};

@@ -1,0 +1,204 @@
+//! The chip pool: N independent simulated Epiphany chips behind one BLAS.
+//!
+//! The paper's platform has exactly one Epiphany-16, and §4 shows the
+//! full-problem numbers stalling on the host↔chip transfer path rather
+//! than on the chip itself. The first scaling axis past that ceiling is
+//! *more chips*: each [`ServiceHandle`] in a [`ChipPool`] owns its own
+//! HH-RAM window, service loop and simulator state (`SimStats`), so
+//! level-3 traffic sharded across the pool crosses N independent IPC
+//! boundaries concurrently instead of funneling through one.
+//!
+//! A pool of one is the degenerate plan and behaves bit-identically to
+//! the original single-chip backend — the shard executor in
+//! [`crate::blis::Blas`] runs the exact same tile loop on the one chip.
+//! How a gemm is split across the pool is the [`ShardPolicy`]'s call;
+//! see `docs/ARCHITECTURE.md` for the full data-flow picture.
+
+use super::service::{ServiceBackend, ServiceHandle};
+use crate::epiphany::kernel::KernelGeometry;
+use crate::epiphany::timing::CalibratedModel;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// How level-3 work is split across the chips of a [`ChipPool`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ShardPolicy {
+    /// SUMMA-style column-panel sharding: the gemm's `jc` column tiles
+    /// are split into contiguous, balanced ranges — one per chip — and
+    /// the shards execute concurrently. With one chip (or one column
+    /// tile) this degenerates to the original serial tile loop.
+    #[default]
+    ColumnPanels,
+    /// Every tile of the operation goes to the given chip. This is what
+    /// the coordinator's per-chip batcher workers use, and what a wire
+    /// client's shard-hint flag requests.
+    Pinned(usize),
+}
+
+/// N independent simulated Epiphany chips, each behind its own resident
+/// service ([`ServiceHandle`]) with a private HH-RAM window and semaphore
+/// pair.
+///
+/// The pool also keeps two per-chip gauges: *in-flight shards* (work
+/// currently executing, behind [`ChipPool::least_loaded`] — for embedders
+/// scheduling directly against the pool) and *total µ-kernel crossings*
+/// (lifetime service calls, [`ChipPool::crossings`] — the shard-balance
+/// evidence the tests and stats reports read). The network coordinator's
+/// [`Batcher`](crate::coordinator::batcher::Batcher) schedules with its
+/// own queue-aware gauge instead, since queued-but-undrained jobs are
+/// invisible to the pool.
+pub struct ChipPool {
+    chips: Vec<ServiceHandle>,
+    in_flight: Vec<AtomicUsize>,
+    crossings: Vec<AtomicU64>,
+}
+
+impl ChipPool {
+    /// Boot `n` chips of the given backend. Each chip performs its own
+    /// one-time eSDK init inside its own service thread (the per-process
+    /// re-init limit is per chip, so pools of any size are safe).
+    pub fn spawn(
+        n: usize,
+        backend: ServiceBackend,
+        model: CalibratedModel,
+        geom: KernelGeometry,
+    ) -> Result<ChipPool> {
+        ensure!(n >= 1, "a chip pool needs at least one chip, got {n}");
+        let mut chips = Vec::with_capacity(n);
+        for _ in 0..n {
+            chips.push(ServiceHandle::spawn(backend, model.clone(), geom)?);
+        }
+        Ok(ChipPool::from_chips(chips))
+    }
+
+    /// Wrap one already-booted service as a pool of one (the degenerate
+    /// plan; bit-identical to the pre-pool single-chip backend).
+    pub fn single(svc: ServiceHandle) -> ChipPool {
+        ChipPool::from_chips(vec![svc])
+    }
+
+    fn from_chips(chips: Vec<ServiceHandle>) -> ChipPool {
+        let n = chips.len();
+        ChipPool {
+            chips,
+            in_flight: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            crossings: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Number of chips in the pool.
+    pub fn len(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// Whether the pool is empty (never true for a spawned pool; the
+    /// constructor requires at least one chip).
+    pub fn is_empty(&self) -> bool {
+        self.chips.is_empty()
+    }
+
+    /// The service handle of chip `i`. Panics if `i >= len()` — callers
+    /// route through a validated shard plan.
+    pub fn chip(&self, i: usize) -> &ServiceHandle {
+        &self.chips[i]
+    }
+
+    /// The µ-kernel geometry (identical across the pool; read from chip 0).
+    pub fn geometry(&self) -> KernelGeometry {
+        self.chips[0].geometry()
+    }
+
+    /// Index of the chip with the least work: fewest in-flight shards,
+    /// ties broken by lifetime crossings, then by lowest index
+    /// (deterministic).
+    pub fn least_loaded(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_key = (usize::MAX, u64::MAX);
+        for i in 0..self.chips.len() {
+            let key = (
+                self.in_flight[i].load(Ordering::Relaxed),
+                self.crossings[i].load(Ordering::Relaxed),
+            );
+            if key < best_key {
+                best_key = key;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Lifetime µ-kernel crossings per chip — the shard-balance evidence
+    /// the tests and the coordinator's stats report read.
+    pub fn crossings(&self) -> Vec<u64> {
+        self.crossings.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Mark a shard as executing on chip `i` (paired with [`Self::exit`]).
+    pub(crate) fn enter(&self, i: usize) {
+        self.in_flight[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark a shard on chip `i` as finished after `calls` µ-kernel
+    /// crossings.
+    pub(crate) fn exit(&self, i: usize, calls: u64) {
+        self.crossings[i].fetch_add(calls, Ordering::Relaxed);
+        self.in_flight[i].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(n: usize) -> ChipPool {
+        ChipPool::spawn(
+            n,
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spawn_rejects_zero() {
+        assert!(ChipPool::spawn(
+            0,
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pool_boots_independent_chips() {
+        let p = pool(3);
+        assert_eq!(p.len(), 3);
+        assert!(!p.is_empty());
+        assert_eq!(p.crossings(), vec![0, 0, 0]);
+        // Each chip serves its own round trip through its own HH-RAM.
+        let g = p.geometry();
+        for i in 0..p.len() {
+            let a = vec![1.0f32; g.m * 4];
+            let b = vec![1.0f32; 4 * g.n];
+            let c = vec![0.0f32; g.m * g.n];
+            let params = crate::host::projection::ProjectionParams::kernel_service(4);
+            let (out, _) = p.chip(i).sgemm(1.0, &a, &b, 0.0, &c, params).unwrap();
+            assert_eq!(out.len(), g.m * g.n);
+            assert!((out[0] - 4.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn least_loaded_tracks_gauges() {
+        let p = pool(2);
+        assert_eq!(p.least_loaded(), 0, "empty pool: lowest index wins");
+        p.enter(0);
+        assert_eq!(p.least_loaded(), 1, "chip 0 busy");
+        p.exit(0, 5);
+        // In-flight equal again; crossings break the tie toward chip 1.
+        assert_eq!(p.least_loaded(), 1);
+        assert_eq!(p.crossings(), vec![5, 0]);
+    }
+}

@@ -12,10 +12,15 @@ use crate::epiphany::timing::{CalibratedModel, WalkClass};
 /// Inputs to a µ-kernel-call projection.
 #[derive(Clone, Copy, Debug)]
 pub struct ProjectionParams {
+    /// Tile rows (192 in the paper).
     pub m: usize,
+    /// Tile columns (256 in the paper).
     pub n: usize,
+    /// Contraction depth of the call.
     pub k: usize,
+    /// Panel depth per Epiphany Task (64 in the paper).
     pub ksub: usize,
+    /// Columns finalized per core per Column Iteration (4 in the paper).
     pub nsub: usize,
     /// Upload walk class of the A panel (contig unless op(A) = T).
     pub class_a: WalkClass,
@@ -72,6 +77,7 @@ pub struct Projection {
 }
 
 impl Projection {
+    /// Flop rate of an (m, n, k) gemm against the projected total time.
     pub fn gflops(&self, m: usize, n: usize, k: usize) -> f64 {
         2.0 * m as f64 * n as f64 * k as f64 / self.total_s / 1e9
     }

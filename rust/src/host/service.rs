@@ -32,26 +32,34 @@ pub enum ServiceBackend {
     HostRef,
 }
 
-/// A request crossing the HH-RAM boundary.
+/// A request crossing the HH-RAM boundary. The scalar arguments ride the
+/// mailbox; the `[A | B | C]` panel payload is staged in HH-RAM by the
+/// caller before the request is sent.
+#[allow(missing_docs)] // fields are the classic alpha/beta/k gemm scalars
 pub enum ServiceRequest {
+    /// One f32 µ-kernel call (the accelerated sgemm tile).
     Sgemm {
         alpha: f32,
         beta: f32,
         k: usize,
         params: ProjectionParams,
     },
+    /// One "false dgemm" call (f64 payload, f32 compute).
     FalseDgemm {
         alpha: f64,
         beta: f64,
         k: usize,
         params: ProjectionParams,
     },
+    /// Stop the service loop.
     Shutdown,
 }
 
 /// The service's answer (payload travels back through HH-RAM).
 pub struct ServiceResponse {
+    /// Wall-clock seconds the service spent on the call.
     pub wall_s: f64,
+    /// Projected-Parallella timing breakdown from the calibrated model.
     pub projection: Projection,
 }
 
@@ -63,9 +71,10 @@ struct Mailbox {
 pub struct ServiceHandle {
     mailbox: Mailbox,
     shm: Arc<HhRam>,
-    /// Semaphores are part of the faithful IPC surface (used by the shm
-    /// tests and the coordinator's backpressure).
+    /// Request semaphore — part of the faithful IPC surface (used by the
+    /// shm tests and the coordinator's backpressure).
     pub sem_request: Semaphore,
+    /// Completion semaphore (posted by the service after staging results).
     pub sem_done: Semaphore,
     /// Serializes the client side of one HH-RAM exchange (stage → signal →
     /// reply → collect). There is exactly one staging region (§3.2), so
@@ -156,6 +165,7 @@ impl ServiceHandle {
         })
     }
 
+    /// The µ-kernel geometry this service was booted with.
     pub fn geometry(&self) -> KernelGeometry {
         self.geom
     }

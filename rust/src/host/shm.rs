@@ -15,6 +15,7 @@ pub struct Semaphore {
 }
 
 impl Semaphore {
+    /// A semaphore with the given initial count.
     pub fn new(initial: usize) -> Self {
         Semaphore { inner: Arc::new((Mutex::new(initial), Condvar::new())) }
     }
@@ -62,6 +63,7 @@ pub struct HhRam {
 }
 
 impl HhRam {
+    /// An empty staging region behind a shared handle.
     pub fn new() -> Arc<Self> {
         Arc::new(HhRam {
             f32_data: Mutex::new(Vec::new()),
@@ -109,6 +111,7 @@ impl HhRam {
         std::mem::take(&mut *d)
     }
 
+    /// Stage an f64 payload (caller side of the IPC).
     pub fn write_f64(&self, payload: &[f64]) {
         let mut d = self.f64_data.lock().unwrap();
         d.clear();
@@ -116,12 +119,14 @@ impl HhRam {
         *self.traffic_bytes.lock().unwrap() += (payload.len() * 8) as u64;
     }
 
+    /// Drain the staged f64 payload (service side).
     pub fn take_f64(&self) -> Vec<f64> {
         let mut d = self.f64_data.lock().unwrap();
         *self.traffic_bytes.lock().unwrap() += (d.len() * 8) as u64;
         std::mem::take(&mut *d)
     }
 
+    /// Total bytes moved through the region so far.
     pub fn traffic(&self) -> u64 {
         *self.traffic_bytes.lock().unwrap()
     }

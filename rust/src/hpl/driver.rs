@@ -11,12 +11,16 @@ use anyhow::Result;
 /// HPL.dat-style configuration (single node, 1×1 grid).
 #[derive(Clone, Copy, Debug)]
 pub struct HplConfig {
+    /// Problem order N.
     pub n: usize,
+    /// Block size NB.
     pub nb: usize,
     /// Process grid — fixed 1×1 in the paper's run; kept for config
     /// fidelity (validated).
     pub p: usize,
+    /// Process-grid columns (see `p`).
     pub q: usize,
+    /// Seed for the random system generator.
     pub seed: u64,
 }
 
@@ -41,6 +45,7 @@ impl HplConfig {
 /// Table 7's rows.
 #[derive(Clone, Copy, Debug)]
 pub struct HplResult {
+    /// The configuration that produced this row.
     pub config: HplConfig,
     /// Projected-Parallella seconds (Table 7 "Time").
     pub projected_s: f64,
@@ -48,7 +53,9 @@ pub struct HplResult {
     pub projected_gflops: f64,
     /// Wall-clock on this machine.
     pub wall_s: f64,
+    /// Both residual flavours (Table 7's check rows).
     pub residual: HplResidual,
+    /// The factorization's timing/flop breakdown.
     pub lu: LuReport,
 }
 

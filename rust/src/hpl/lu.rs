@@ -25,10 +25,12 @@ pub struct LuReport {
     pub wall_s: f64,
     /// gemm flops (accelerated) and host flops.
     pub gemm_flops: f64,
+    /// Flops done in unaccelerated host work (panels, trsm).
     pub host_flops: f64,
 }
 
 impl LuReport {
+    /// Projected seconds, accelerated + host work combined.
     pub fn total_projected_s(&self) -> f64 {
         self.gemm_projected_s + self.host_projected_s
     }

@@ -10,6 +10,7 @@ use crate::linalg::{inf_norm, Mat};
 /// ε used by HPL's double-precision check (2⁻⁵³, as the paper's footnote).
 pub const HPL_EPS: f64 = 1.1102230246251565e-16;
 
+/// Both residual flavours HPL's check reports.
 #[derive(Clone, Copy, Debug)]
 pub struct HplResidual {
     /// The HPL-normalized value (Table 7 row: ~2.1e10 for the paper's run,

@@ -101,6 +101,9 @@
     clippy::type_complexity,
     clippy::map_entry
 )]
+// Every public item carries documentation; the CI docs job turns rustdoc
+// warnings (this lint included) into errors so the surface can't rot.
+#![warn(missing_docs)]
 
 pub mod blis;
 pub mod coordinator;
@@ -118,6 +121,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::blis::{Blas, BlasLibrary, BlasOp, Dtype, Ticket, Trans};
     pub use crate::epiphany::timing::CalibratedModel;
+    pub use crate::host::pool::{ChipPool, ShardPolicy};
     pub use crate::linalg::{Mat, MatMut, MatRef};
     pub use crate::platform::{BackendKind, Platform, PlatformBuilder};
 }

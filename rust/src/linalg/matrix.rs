@@ -53,19 +53,23 @@ impl<T: Real> Mat<T> {
         m
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element `(i, j)`.
     #[inline(always)]
     pub fn get(&self, i: usize, j: usize) -> T {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i + j * self.rows]
     }
 
+    /// Store `v` at `(i, j)`.
     #[inline(always)]
     pub fn set(&mut self, i: usize, j: usize, v: T) {
         debug_assert!(i < self.rows && j < self.cols);
@@ -76,6 +80,7 @@ impl<T: Real> Mat<T> {
     pub fn as_slice(&self) -> &[T] {
         &self.data
     }
+    /// The raw column-major buffer, mutably.
     pub fn as_mut_slice(&mut self) -> &mut [T] {
         &mut self.data
     }
@@ -169,15 +174,19 @@ impl<'a, T: Real> MatRef<'a, T> {
         MatRef { rows, cols, rs: 1, cs: lda as isize, data, offset: 0 }
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
+    /// Element step between consecutive rows of a column.
     pub fn row_stride(&self) -> isize {
         self.rs
     }
+    /// Element step between consecutive columns of a row.
     pub fn col_stride(&self) -> isize {
         self.cs
     }
@@ -189,6 +198,7 @@ impl<'a, T: Real> MatRef<'a, T> {
         self.rs == 1
     }
 
+    /// Element `(i, j)`.
     #[inline(always)]
     pub fn get(&self, i: usize, j: usize) -> T {
         debug_assert!(i < self.rows && j < self.cols);
@@ -249,19 +259,24 @@ impl<'a, T: Real> MatMut<'a, T> {
         MatMut { rows, cols, rs: 1, cs: lda as isize, data, offset: 0 }
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
+    /// Element step between consecutive rows of a column.
     pub fn row_stride(&self) -> isize {
         self.rs
     }
+    /// Element step between consecutive columns of a row.
     pub fn col_stride(&self) -> isize {
         self.cs
     }
 
+    /// Element `(i, j)`.
     #[inline(always)]
     pub fn get(&self, i: usize, j: usize) -> T {
         debug_assert!(i < self.rows && j < self.cols);
@@ -269,6 +284,7 @@ impl<'a, T: Real> MatMut<'a, T> {
         self.data[idx as usize]
     }
 
+    /// Store `v` at `(i, j)`.
     #[inline(always)]
     pub fn set(&mut self, i: usize, j: usize, v: T) {
         debug_assert!(i < self.rows && j < self.cols);
@@ -276,6 +292,7 @@ impl<'a, T: Real> MatMut<'a, T> {
         self.data[idx as usize] = v;
     }
 
+    /// Apply `f` to element `(i, j)` in place.
     #[inline(always)]
     pub fn update(&mut self, i: usize, j: usize, f: impl FnOnce(T) -> T) {
         let v = self.get(i, j);
@@ -331,6 +348,7 @@ impl<'a, T: Real> MatMut<'a, T> {
         }
     }
 
+    /// Set every element to `v`.
     pub fn fill(&mut self, v: T) {
         for j in 0..self.cols {
             for i in 0..self.rows {

@@ -11,11 +11,13 @@ pub struct XorShiftRng {
 }
 
 impl XorShiftRng {
+    /// Seeded generator (any seed, including 0, is fine).
     pub fn new(seed: u64) -> Self {
         // Avoid the all-zero fixed point.
         XorShiftRng { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) }
     }
 
+    /// The next raw 64-bit sample.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;

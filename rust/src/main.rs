@@ -1,9 +1,9 @@
 //! `parallella-blas` CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   serve [--addr HOST:PORT] [--backend pjrt|sim|hostref]
+//!   serve [--addr HOST:PORT] [--backend pjrt|sim|hostref] [--chips N]
 //!         run the L3 BLAS network service until a Shutdown frame arrives
-//!   sgemm [--m M] [--n N] [--k K] [--ta n|t] [--tb n|t] [--backend ...]
+//!   sgemm [--m M] [--n N] [--k K] [--ta n|t] [--tb n|t] [--chips N]
 //!         one accelerated gemm with the wall/projected/paper report
 //!   hpl   [--n N] [--nb NB]
 //!         the HPL Linpack run (paper Table 7 shape)
@@ -104,14 +104,17 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "serve" => {
             let (_, sb) = backend_of(&args)?;
+            let chips = args.usize("chips", 1)?.max(1);
             let cfg = ServerConfig {
                 addr: args.get("addr").unwrap_or("127.0.0.1:7700").to_string(),
                 backend: sb,
                 batch: Default::default(),
+                chips,
             };
             let srv = BlasServer::start(cfg)?;
             println!(
-                "parallella-blas serving on {} (send a Shutdown frame or Ctrl-C to stop)",
+                "parallella-blas serving on {} with {chips} chip(s) \
+                 (send a Shutdown frame or Ctrl-C to stop)",
                 srv.addr()
             );
             // Park the main thread; the accept loop owns the work.
@@ -124,9 +127,10 @@ fn main() -> Result<()> {
             let m = args.usize("m", 192)?;
             let n = args.usize("n", 256)?;
             let k = args.usize("k", 4096)?;
+            let chips = args.usize("chips", 1)?;
             let ta = trans_of(args.get("ta"))?;
             let tb = trans_of(args.get("tb"))?;
-            let plat = Platform::builder().backend(bk).build()?;
+            let plat = Platform::builder().backend(bk).chips(chips).build()?;
             let a =
                 if ta.is_trans() { Mat::<f32>::randn(k, m, 1) } else { Mat::<f32>::randn(m, k, 1) };
             let b =
@@ -134,11 +138,12 @@ fn main() -> Result<()> {
             let mut c = Mat::<f32>::zeros(m, n);
             let rep = plat.blas().sgemm(ta, tb, 1.0, a.view(), b.view(), 0.0, &mut c)?;
             println!(
-                "sgemm {}{} {m}x{n}x{k} [{:?}]: calls={} wall={:.4}s ({:.2} GF) \
+                "sgemm {}{} {m}x{n}x{k} [{:?} x{} chip(s)]: calls={} wall={:.4}s ({:.2} GF) \
                  projected={:.4}s ({:.3} GF)",
                 ta.code(),
                 tb.code(),
                 plat.backend,
+                rep.chips,
                 rep.calls,
                 rep.wall_s,
                 rep.wall_gflops(),
@@ -197,8 +202,9 @@ fn print_help() {
          usage: parallella-blas <command> [flags]\n\
          \n\
          commands:\n\
-         \u{20} serve   [--addr H:P] [--backend sim|pjrt|hostref]   run the network BLAS service\n\
-         \u{20} sgemm   [--m --n --k --ta --tb --backend]           one gemm + report\n\
+         \u{20} serve   [--addr H:P] [--backend sim|pjrt|hostref] [--chips N]\n\
+         \u{20}                                                     run the network BLAS service\n\
+         \u{20} sgemm   [--m --n --k --ta --tb --backend --chips]   one gemm + report\n\
          \u{20} hpl     [--n --nb --backend]                        HPL Linpack run\n\
          \u{20} table   <1..7> [--full]                             regenerate a paper table\n\
          \u{20} memmap                                              print the Fig-3 memory map\n\

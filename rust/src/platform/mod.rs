@@ -1,10 +1,11 @@
-//! Top-level handle: boot the service with a chosen backend and hand out
+//! Top-level handle: boot a chip pool with a chosen backend and hand out
 //! the generated BLAS — the "library object" a downstream user holds.
 
 use crate::blis::{Blas, BlasLibrary};
 use crate::epiphany::kernel::KernelGeometry;
 use crate::epiphany::timing::CalibratedModel;
-use crate::host::service::{ServiceBackend, ServiceHandle};
+use crate::host::pool::{ChipPool, ShardPolicy};
+use crate::host::service::ServiceBackend;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -36,48 +37,86 @@ pub struct PlatformBuilder {
     backend: BackendKind,
     model: CalibratedModel,
     geom: KernelGeometry,
+    chips: usize,
+    policy: ShardPolicy,
 }
 
 impl PlatformBuilder {
+    /// Select the compute engine (simulator by default).
     pub fn backend(mut self, b: BackendKind) -> Self {
         self.backend = b;
         self
     }
 
+    /// Override the calibrated timing model.
     pub fn model(mut self, m: CalibratedModel) -> Self {
         self.model = m;
         self
     }
 
+    /// Override the µ-kernel geometry.
     pub fn geometry(mut self, g: KernelGeometry) -> Self {
         self.geom = g;
         self
     }
 
+    /// Boot `n` simulated Epiphany chips instead of one; level-3 gemms
+    /// shard across them per the [`ShardPolicy`]. Values below 1 are
+    /// treated as 1 (the degenerate plan, bit-identical to single-chip).
+    pub fn chips(mut self, n: usize) -> Self {
+        self.chips = n.max(1);
+        self
+    }
+
+    /// How level-3 work splits across the pool (default:
+    /// [`ShardPolicy::ColumnPanels`]).
+    pub fn shard_policy(mut self, p: ShardPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Boot the pool and instantiate the BLAS over it.
     pub fn build(self) -> Result<Platform> {
-        let svc = ServiceHandle::spawn(self.backend.service(), self.model.clone(), self.geom)?;
-        Ok(Platform { blas: Arc::new(Blas::new(svc)), model: self.model, backend: self.backend })
+        let pool =
+            ChipPool::spawn(self.chips, self.backend.service(), self.model.clone(), self.geom)?;
+        Ok(Platform {
+            blas: Arc::new(Blas::with_pool(pool, self.policy)),
+            model: self.model,
+            backend: self.backend,
+        })
     }
 }
 
 /// A booted Parallella-BLAS stack: resident service + generated BLAS.
 pub struct Platform {
     blas: Arc<Blas>,
+    /// The calibrated timing model the pool was booted with.
     pub model: CalibratedModel,
+    /// Which engine computes the heavy part.
     pub backend: BackendKind,
 }
 
 impl Platform {
+    /// Start configuring a stack (simulator backend, one chip,
+    /// column-panel sharding by default).
     pub fn builder() -> PlatformBuilder {
         PlatformBuilder {
             backend: BackendKind::Simulator,
             model: CalibratedModel::default(),
             geom: KernelGeometry::paper(),
+            chips: 1,
+            policy: ShardPolicy::default(),
         }
     }
 
+    /// The generated BLAS over this platform's chip pool.
     pub fn blas(&self) -> &Blas {
         &self.blas
+    }
+
+    /// Number of chips in the booted pool.
+    pub fn chips(&self) -> usize {
+        self.blas.chips()
     }
 
     /// A shared handle to the descriptor core — what
@@ -112,5 +151,19 @@ mod tests {
             Trans::N, Trans::N, 1.0, a.cast::<f64>().view(), b.cast::<f64>().view(), 0.0, &mut want,
         );
         assert!(max_scaled_err(c.view(), want.view()) < 1e-5);
+    }
+
+    #[test]
+    fn pooled_platform_matches_single_chip() {
+        let p1 = Platform::builder().build().unwrap();
+        let p4 = Platform::builder().chips(4).build().unwrap();
+        assert_eq!((p1.chips(), p4.chips()), (1, 4));
+        let a = Mat::<f32>::randn(100, 50, 1);
+        let b = Mat::<f32>::randn(50, 600, 2); // 3 column tiles to shard
+        let mut c1 = Mat::<f32>::zeros(100, 600);
+        let mut c4 = Mat::<f32>::zeros(100, 600);
+        p1.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c1).unwrap();
+        p4.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c4).unwrap();
+        assert_eq!(c1.as_slice(), c4.as_slice(), "pooled gemm must be bit-identical");
     }
 }

@@ -20,6 +20,7 @@ mod imp {
 
     /// A compiled sgemm/false-dgemm artifact.
     pub struct SgemmArtifact {
+        /// The manifest entry this executable was compiled from.
         pub entry: ArtifactEntry,
         exe: xla::PjRtLoadedExecutable,
     }
@@ -33,8 +34,9 @@ mod imp {
         client: xla::PjRtClient,
         registry: ArtifactRegistry,
         cache: HashMap<String, SgemmArtifact>,
-        /// µ-kernel tile dims (fixed per instantiation, 192 × 256 in the paper).
+        /// µ-kernel tile rows (fixed per instantiation, 192 in the paper).
         pub m: usize,
+        /// µ-kernel tile columns (256 in the paper).
         pub n: usize,
     }
 
@@ -50,6 +52,7 @@ mod imp {
             Self::new(ArtifactRegistry::discover()?, 192, 256)
         }
 
+        /// The artifact manifest this executor serves from.
         pub fn registry(&self) -> &ArtifactRegistry {
             &self.registry
         }
@@ -240,6 +243,7 @@ mod imp {
 
     /// Stub of the compiled-artifact handle (`pjrt` feature off).
     pub struct SgemmArtifact {
+        /// The manifest entry the artifact would be compiled from.
         pub entry: ArtifactEntry,
     }
 
@@ -248,35 +252,44 @@ mod imp {
     /// every call site compiling.
     pub struct GemmExecutor {
         registry: ArtifactRegistry,
+        /// µ-kernel tile rows (fixed per instantiation, 192 in the paper).
         pub m: usize,
+        /// µ-kernel tile columns (256 in the paper).
         pub n: usize,
     }
 
     impl GemmExecutor {
+        /// Always fails: this build has no PJRT runtime.
         pub fn new(_registry: ArtifactRegistry, _m: usize, _n: usize) -> Result<Self> {
             Err(unavailable("GemmExecutor::new"))
         }
 
+        /// Always fails: this build has no PJRT runtime.
         pub fn discover() -> Result<Self> {
             Err(unavailable("GemmExecutor::discover"))
         }
 
+        /// The artifact manifest this executor would serve from.
         pub fn registry(&self) -> &ArtifactRegistry {
             &self.registry
         }
 
+        /// Always fails: this build has no PJRT runtime.
         pub fn warmup(&mut self) -> Result<usize> {
             Err(unavailable("GemmExecutor::warmup"))
         }
 
+        /// Always fails: this build has no PJRT runtime.
         pub fn artifact(&mut self, name: &str) -> Result<&SgemmArtifact> {
             bail!("artifact {name:?} unavailable: built without the `pjrt` feature")
         }
 
+        /// Stub: no artifacts, so the plan is always empty.
         pub fn plan_k(&self, _k_total: usize) -> Vec<(usize, bool)> {
             Vec::new()
         }
 
+        /// Always fails: this build has no PJRT runtime.
         pub fn sgemm_call(
             &mut self,
             _k: usize,
@@ -289,6 +302,7 @@ mod imp {
             Err(unavailable("GemmExecutor::sgemm_call"))
         }
 
+        /// Always fails: this build has no PJRT runtime.
         pub fn false_dgemm_call(
             &mut self,
             _k: usize,
@@ -301,6 +315,7 @@ mod imp {
             Err(unavailable("GemmExecutor::false_dgemm_call"))
         }
 
+        /// Always fails: this build has no PJRT runtime.
         pub fn sgemm_arbitrary_k(
             &mut self,
             _k_total: usize,

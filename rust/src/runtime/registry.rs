@@ -7,12 +7,15 @@ use std::path::{Path, PathBuf};
 /// One row of the manifest.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// Artifact name, e.g. `sgemm_inner_k64`.
     pub name: String,
     /// Reduction depth the artifact was lowered for.
     pub k: usize,
     /// "f32" (sgemm) or "f64" (false dgemm).
     pub dtype: String,
+    /// Path of the HLO text file.
     pub path: PathBuf,
+    /// Content digest recorded by the AOT exporter.
     pub digest: String,
 }
 
@@ -73,10 +76,12 @@ impl ArtifactRegistry {
         Self::load(&crate_root)
     }
 
+    /// Every manifest row.
     pub fn entries(&self) -> &[ArtifactEntry] {
         &self.entries
     }
 
+    /// Look an artifact up by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
         self.entries.iter().find(|e| e.name == name)
     }

@@ -11,14 +11,20 @@ use std::time::Instant;
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// What was measured.
     pub name: String,
+    /// Timed iterations (after warmup).
     pub iters: usize,
+    /// Fastest sample, seconds.
     pub min_s: f64,
+    /// Median sample, seconds.
     pub median_s: f64,
+    /// Mean sample, seconds.
     pub mean_s: f64,
 }
 
 impl Measurement {
+    /// One human-readable report line.
     pub fn summary(&self) -> String {
         format!(
             "{:<40} iters={:<3} min={:.6}s median={:.6}s mean={:.6}s",
@@ -34,6 +40,7 @@ pub struct BenchRun {
 }
 
 impl BenchRun {
+    /// Default harness: 1 warmup + 5 iters, or 0 + 1 under `BENCH_QUICK=1`.
     pub fn new() -> Self {
         if std::env::var("BENCH_QUICK").ok().as_deref() == Some("1") {
             BenchRun { warmup: 0, iters: 1 }
@@ -42,6 +49,7 @@ impl BenchRun {
         }
     }
 
+    /// Explicit warmup/iteration counts.
     pub fn with_iters(warmup: usize, iters: usize) -> Self {
         BenchRun { warmup, iters }
     }

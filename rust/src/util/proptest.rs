@@ -10,7 +10,9 @@ use crate::linalg::XorShiftRng;
 /// Configuration for a property run.
 #[derive(Clone, Copy)]
 pub struct Config {
+    /// How many generated cases to run.
     pub cases: usize,
+    /// Base seed; each case derives its own stream from it.
     pub seed: u64,
 }
 

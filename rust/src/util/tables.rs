@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A titled table with the given column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -17,12 +18,14 @@ impl Table {
         }
     }
 
+    /// Append one row (arity must match the headers).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Render to aligned plain text.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -51,6 +54,7 @@ impl Table {
         out
     }
 
+    /// Render and print to stdout.
     pub fn print(&self) {
         println!("{}", self.render());
     }

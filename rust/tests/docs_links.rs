@@ -1,0 +1,90 @@
+//! Documentation link checker: the architecture doc and the README can't
+//! rot silently. Every relative markdown link in `README.md` and
+//! `docs/*.md` must resolve to a real file, and every backticked repo
+//! path `docs/ARCHITECTURE.md` cross-references must exist. CI runs this
+//! as part of the docs job.
+
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn md_files() -> Vec<PathBuf> {
+    let mut files = vec![repo_root().join("README.md")];
+    if let Ok(rd) = std::fs::read_dir(repo_root().join("docs")) {
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.extension().map(|x| x == "md").unwrap_or(false) {
+                files.push(p);
+            }
+        }
+    }
+    files
+}
+
+/// Extract `](target)` markdown link targets.
+fn links(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find("](") {
+        rest = &rest[pos + 2..];
+        match rest.find(')') {
+            Some(end) => {
+                out.push(rest[..end].to_string());
+                rest = &rest[end + 1..];
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+#[test]
+fn markdown_links_resolve() {
+    let mut checked = 0usize;
+    for file in md_files() {
+        let text = std::fs::read_to_string(&file).unwrap();
+        let dir = file.parent().unwrap().to_path_buf();
+        for link in links(&text) {
+            // External URLs, in-page anchors and GitHub-virtual paths
+            // (the CI badge's ../../actions) are out of scope.
+            if link.starts_with("http://")
+                || link.starts_with("https://")
+                || link.starts_with('#')
+                || link.contains("actions/")
+            {
+                continue;
+            }
+            let path = link.split('#').next().unwrap();
+            if path.is_empty() {
+                continue;
+            }
+            let target = dir.join(path);
+            assert!(target.exists(), "{}: broken relative link `{link}`", file.display());
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "expected at least one relative link across README.md and docs/");
+}
+
+#[test]
+fn architecture_doc_cross_references_exist() {
+    let doc = repo_root().join("docs/ARCHITECTURE.md");
+    let text = std::fs::read_to_string(&doc).expect("docs/ARCHITECTURE.md must exist");
+    let mut checked = 0usize;
+    // Every backticked repo-relative path the doc mentions must exist —
+    // the paper-section → module cross-reference table stays truthful.
+    for token in text.split('`').skip(1).step_by(2) {
+        let is_path = token.starts_with("rust/")
+            || token.starts_with("python/")
+            || token.starts_with("docs/")
+            || token.starts_with("examples/");
+        if is_path && !token.contains(' ') && !token.contains('\n') {
+            let p = repo_root().join(token);
+            assert!(p.exists(), "ARCHITECTURE.md references a missing path `{token}`");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 10, "the module cross-reference table should name repo paths ({checked})");
+}

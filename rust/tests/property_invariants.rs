@@ -134,7 +134,13 @@ fn rand_request(
             let (a, b) = (rand_tensor(rng, dtype, am * an), rand_tensor(rng, dtype, bm * bn));
             let c = rand_tensor(rng, dtype, m * n);
             let (alpha, beta) = scalars(rng, dtype);
-            Request::Gemm(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c })
+            // A random shard hint (including none, and including values
+            // past the flag nibble's ceiling of 14) must round-trip too.
+            let shard_hint = match rng.next_below(20) {
+                0 => None,
+                h => Some(h - 1),
+            };
+            Request::Gemm(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c, shard_hint })
         }
         Opcode::Gemv => {
             let ta = trans_of(rng);
@@ -167,6 +173,9 @@ fn requests_equal(a: &Request, b: &Request) -> bool {
                 && x.tb == y.tb
                 && (x.m, x.n, x.k) == (y.m, y.n, y.k)
                 && (x.alpha, x.beta) == (y.alpha, y.beta)
+                // The flag nibble saturates hints at 14 by design, so the
+                // round-trip identity holds on the *encoded* hint.
+                && x.shard_hint.map(|h| h.min(14)) == y.shard_hint.map(|h| h.min(14))
                 && x.a == y.a
                 && x.b == y.b
                 && x.c == y.c

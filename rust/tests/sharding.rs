@@ -1,0 +1,153 @@
+//! Whole-stack tests of the multi-chip sharded backend: a `ChipPool(N)`
+//! must be **bit-identical** to the single-chip backend (same panels,
+//! same µ-kernel math — only the jc column ranges move between chips),
+//! shards must actually spread across the pool, and the coordinator's
+//! per-chip scheduling (least-loaded + wire shard hints) must stay
+//! correct under concurrent clients.
+
+use parallella_blas::blis::level3::gemm_host;
+use parallella_blas::coordinator::server::{BlasClient, BlasServer};
+use parallella_blas::coordinator::{Request, Response, ServerConfig};
+use parallella_blas::linalg::max_scaled_err;
+use parallella_blas::prelude::*;
+
+fn oracle(ta: Trans, tb: Trans, a: &Mat<f32>, b: &Mat<f32>, c0: &Mat<f32>) -> Mat<f64> {
+    let op_a = if ta.is_trans() { a.transposed() } else { a.clone() };
+    let op_b = if tb.is_trans() { b.transposed() } else { b.clone() };
+    let mut want = Mat::<f64>::zeros(op_a.rows(), op_b.cols());
+    gemm_host(
+        Trans::N,
+        Trans::N,
+        1.5,
+        op_a.cast::<f64>().view(),
+        op_b.cast::<f64>().view(),
+        0.0,
+        &mut want,
+    );
+    for j in 0..want.cols() {
+        for i in 0..want.rows() {
+            let v = want.get(i, j) - 0.5 * c0.get(i, j) as f64;
+            want.set(i, j, v);
+        }
+    }
+    want
+}
+
+#[test]
+fn pool_sizes_agree_bitwise_and_with_reference() {
+    // 900 columns = 4 jc tiles: pools of 1, 2, 3 and 4 chips cover every
+    // plan shape (even split, ragged split, more tiles than chips).
+    let (m, n, k) = (200, 900, 96);
+    let plats: Vec<Platform> =
+        (1..=4).map(|chips| Platform::builder().chips(chips).build().unwrap()).collect();
+    for (ta, tb) in [(Trans::N, Trans::N), (Trans::T, Trans::N), (Trans::N, Trans::T)] {
+        let a = if ta.is_trans() { Mat::<f32>::randn(k, m, 1) } else { Mat::<f32>::randn(m, k, 1) };
+        let b = if tb.is_trans() { Mat::<f32>::randn(n, k, 2) } else { Mat::<f32>::randn(k, n, 2) };
+        let c0 = Mat::<f32>::randn(m, n, 3);
+        let want = oracle(ta, tb, &a, &b, &c0);
+        let mut results = Vec::new();
+        for plat in &plats {
+            let mut c = c0.clone();
+            let rep = plat.blas().sgemm(ta, tb, 1.5, a.view(), b.view(), -0.5, &mut c).unwrap();
+            assert_eq!(rep.calls, 8, "2 ic × 4 jc tiles");
+            let e = max_scaled_err(c.view(), want.view());
+            assert!(e < 1e-5, "chips={} {}{} err {e}", plat.chips(), ta.code(), tb.code());
+            results.push(c);
+        }
+        for (i, c) in results.iter().enumerate().skip(1) {
+            assert_eq!(
+                results[0].as_slice(),
+                c.as_slice(),
+                "ChipPool({}) diverged from single chip on {}{}",
+                i + 1,
+                ta.code(),
+                tb.code()
+            );
+        }
+    }
+}
+
+#[test]
+fn false_dgemm_shards_bitwise_too() {
+    let (m, n, k) = (192, 600, 64); // 3 jc tiles
+    let a = Mat::<f64>::randn(m, k, 10);
+    let b = Mat::<f64>::randn(k, n, 11);
+    let c0 = Mat::<f64>::randn(m, n, 12);
+    let p1 = Platform::builder().build().unwrap();
+    let p3 = Platform::builder().chips(3).build().unwrap();
+    let mut c_single = c0.clone();
+    let mut c_pooled = c0.clone();
+    p1.blas().dgemm_false(Trans::N, Trans::N, 1.0, a.view(), b.view(), 1.0, &mut c_single).unwrap();
+    p3.blas().dgemm_false(Trans::N, Trans::N, 1.0, a.view(), b.view(), 1.0, &mut c_pooled).unwrap();
+    assert_eq!(c_single.as_slice(), c_pooled.as_slice());
+}
+
+#[test]
+fn shards_spread_and_report_aggregates() {
+    let plat = Platform::builder().chips(4).build().unwrap();
+    let (m, n, k) = (192, 1024, 64); // exactly 4 jc tiles, one per chip
+    let a = Mat::<f32>::randn(m, k, 20);
+    let b = Mat::<f32>::randn(k, n, 21);
+    let mut c = Mat::<f32>::zeros(m, n);
+    let rep = plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+    assert_eq!(rep.calls, 4);
+    assert_eq!(rep.chips, 4);
+    assert!(rep.projected_s > 0.0 && rep.wall_s > 0.0);
+    assert_eq!(plat.blas().pool().crossings(), vec![1, 1, 1, 1]);
+}
+
+#[test]
+fn sharded_server_concurrent_clients_with_and_without_hints() {
+    let srv = BlasServer::start(ServerConfig { chips: 4, ..Default::default() }).unwrap();
+    let addr = srv.addr();
+    let mut handles = Vec::new();
+    for t in 0..4i64 {
+        handles.push(std::thread::spawn(move || {
+            let mut cli = BlasClient::connect(addr).unwrap();
+            for i in 0..3i64 {
+                let (m, n, k) = (32, 16, 24);
+                let a = Mat::<f32>::randn(m, k, (t * 100 + i) as u64);
+                let b = Mat::<f32>::randn(k, n, (t * 100 + i + 1) as u64);
+                let mut req = Request::sgemm(
+                    Trans::N,
+                    Trans::N,
+                    m,
+                    n,
+                    k,
+                    1.0,
+                    0.0,
+                    a.as_slice().to_vec(),
+                    b.as_slice().to_vec(),
+                    vec![0.0; m * n],
+                );
+                if i % 2 == 0 {
+                    // Half the traffic pins a chip, half lets the router
+                    // pick the least-loaded queue.
+                    req = req.with_shard_hint(t as usize);
+                }
+                let out = Mat::from_col_major(m, n, &cli.call(&req).unwrap().into_f32().unwrap());
+                let mut want = Mat::<f64>::zeros(m, n);
+                gemm_host(
+                    Trans::N,
+                    Trans::N,
+                    1.0,
+                    a.cast::<f64>().view(),
+                    b.cast::<f64>().view(),
+                    0.0,
+                    &mut want,
+                );
+                assert!(max_scaled_err(out.view(), want.view()) < 1e-5);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(srv.metrics.requests() >= 12);
+    // Stats must expose the per-chip execution labels.
+    let mut cli = BlasClient::connect(addr).unwrap();
+    match cli.call(&Request::Stats).unwrap() {
+        Response::OkText(s) => assert!(s.contains("chip0_gemms="), "{s}"),
+        other => panic!("{other:?}"),
+    }
+}
