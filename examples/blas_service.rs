@@ -1,5 +1,6 @@
 //! The L3 coordinator as a network service: start the TCP BLAS server,
-//! drive it with concurrent clients, print the metrics report.
+//! drive it with concurrent wire-v2 pipelined clients, print the typed
+//! metrics report.
 //!
 //!     cargo run --release --example blas_service
 
@@ -22,12 +23,19 @@ fn main() -> anyhow::Result<()> {
     for client_id in 0..4u64 {
         let weights = weights.clone();
         handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
-            let mut cli = BlasClient::connect(addr)?;
+            // Wire v2: keep 4 requests in flight per connection instead
+            // of paying a full round trip each.
+            let mut cli = BlasClient::connect_v2(addr)?;
+            let n = 64;
             let t0 = std::time::Instant::now();
+            let mut window = std::collections::VecDeque::new();
             for i in 0..8 {
-                let n = 64;
+                while window.len() >= 4 {
+                    let p: parallella_blas::coordinator::Pending = window.pop_front().unwrap();
+                    anyhow::ensure!(p.wait()?.into_f32()?.len() == m * n);
+                }
                 let b = Mat::<f32>::randn(k, n, 1000 + client_id * 100 + i);
-                let resp = cli.call(&Request::sgemm(
+                window.push_back(cli.submit(&Request::sgemm(
                     Trans::N,
                     Trans::N,
                     m,
@@ -38,8 +46,10 @@ fn main() -> anyhow::Result<()> {
                     weights.clone(),
                     b.as_slice().to_vec(),
                     vec![0.0; m * n],
-                ))?;
-                anyhow::ensure!(resp.into_f32()?.len() == m * n);
+                ))?);
+            }
+            while let Some(p) = window.pop_front() {
+                anyhow::ensure!(p.wait()?.into_f32()?.len() == m * n);
             }
             Ok(t0.elapsed().as_secs_f64())
         }));
@@ -49,10 +59,12 @@ fn main() -> anyhow::Result<()> {
         println!("client {i}: 8 requests in {secs:.3}s");
     }
 
-    // Pull the metrics report through the wire protocol.
+    // Pull the typed metrics report through the wire protocol (a v1
+    // no-hello client: old clients keep working against the v2 server).
     let mut cli = BlasClient::connect(addr)?;
-    if let Response::OkText(stats) = cli.call(&Request::Stats)? {
+    if let Response::Stats(stats) = cli.call(&Request::Stats)? {
         println!("server stats: {stats}");
+        println!("batched executions: {}", stats.batched);
     }
     println!(
         "p50 latency: {:.4}s  p99: {:.4}s",

@@ -8,12 +8,22 @@
 //! pool, the same serving-style stream against 1 vs 4 chips. Clients
 //! spread chip affinity with wire shard hints, so each chip's batcher
 //! coalesces its own queue.
+//!
+//! The wire-v2 section measures the connections × in-flight-depth
+//! matrix: sliding-window pipelined sessions against the same server,
+//! quantifying what correlation-id pipelining buys over the
+//! one-request-per-round-trip v1 wire.
+//!
+//! All sections are also written machine-readable to
+//! `BENCH_coordinator.json` at the repo root.
 
 use parallella_blas::blis::Trans;
 use parallella_blas::coordinator::server::{BlasClient, BlasServer};
 use parallella_blas::coordinator::{Request, ServerConfig};
 use parallella_blas::linalg::{Mat, XorShiftRng};
+use parallella_blas::util::bench::write_bench_json;
 use parallella_blas::util::tables::Table;
+use std::collections::VecDeque;
 use std::time::Instant;
 
 struct Workload {
@@ -77,6 +87,56 @@ fn run(w: &Workload) -> (f64, f64, f64, u64) {
         srv.metrics.latency_quantile(0.99),
         srv.metrics.requests(),
     )
+}
+
+/// One cell of the pipelining matrix: `connections` v2 sessions, each
+/// keeping `depth` requests in flight with a sliding window (shared
+/// weight matrix, so the batcher can coalesce whatever lands together).
+fn run_pipelined(connections: usize, depth: usize, reqs_per_conn: usize) -> (f64, f64, f64) {
+    let srv = BlasServer::start(ServerConfig::default()).expect("server boots");
+    let addr = srv.addr();
+    let (m, n, k) = (96usize, 64usize, 128usize);
+    let shared = Mat::<f32>::randn(m, k, 1).as_slice().to_vec();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..connections {
+        let shared = shared.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut cli = BlasClient::connect_v2(addr).unwrap();
+            let mut rng = XorShiftRng::new(c as u64 + 41);
+            let mut window = VecDeque::new();
+            for _ in 0..reqs_per_conn {
+                while window.len() >= depth {
+                    let p = window.pop_front().unwrap();
+                    assert_eq!(p.wait().unwrap().into_f32().unwrap().len(), m * n);
+                }
+                let b: Vec<f32> = (0..k * n).map(|_| rng.next_unit() as f32).collect();
+                let req = Request::sgemm(
+                    Trans::N,
+                    Trans::N,
+                    m,
+                    n,
+                    k,
+                    1.0,
+                    0.0,
+                    shared.clone(),
+                    b,
+                    vec![0.0; m * n],
+                );
+                window.push_back(cli.submit(&req).unwrap());
+            }
+            while let Some(p) = window.pop_front() {
+                assert_eq!(p.wait().unwrap().into_f32().unwrap().len(), m * n);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let total = (connections * reqs_per_conn) as f64;
+    (total / elapsed, srv.metrics.latency_quantile(0.5), srv.metrics.latency_quantile(0.99))
 }
 
 fn main() {
@@ -169,4 +229,55 @@ fn main() {
          service loop and batcher queue; level-3 streams drain concurrently)",
         rates[1] / rates[0]
     );
+
+    // Wire-v2 pipelining: connections × in-flight-depth matrix.
+    let mut pipeline = Table::new(
+        "Wire-v2 pipelining (m=96, n=64, k=128, shared A)",
+        &["connections", "depth", "req/s", "p50 s", "p99 s"],
+    );
+    let reqs_per_conn = 8 * scale;
+    let mut cells = Vec::new();
+    for connections in [1usize, 4] {
+        for depth in [1usize, 8] {
+            let (rps, p50, p99) = run_pipelined(connections, depth, reqs_per_conn);
+            pipeline.row(&[
+                connections.to_string(),
+                depth.to_string(),
+                format!("{rps:.1}"),
+                format!("{p50:.4}"),
+                format!("{p99:.4}"),
+            ]);
+            cells.push((connections, depth, rps, p50, p99));
+        }
+    }
+    pipeline.print();
+    let rate_of = |conns: usize, depth: usize| {
+        cells.iter().find(|c| c.0 == conns && c.1 == depth).map(|c| c.2).unwrap_or(0.0)
+    };
+    let depth_speedup = rate_of(1, 8) / rate_of(1, 1);
+    println!(
+        "depth-8 vs depth-1 on one connection: {depth_speedup:.2}x (the window keeps the\n\
+         batcher fed and coalescing instead of idling a full RTT between requests)\n"
+    );
+
+    // Machine-readable artifact for the perf trajectory.
+    let matrix_json: Vec<String> = cells
+        .iter()
+        .map(|(c, d, rps, p50, p99)| {
+            format!(
+                "{{\"connections\":{c},\"depth\":{d},\"req_s\":{rps:.3},\
+                 \"p50_s\":{p50:.6},\"p99_s\":{p99:.6}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"bench\":\"coordinator_throughput\",\"quick\":{quick},\
+         \"workloads\":{},\"pool_scaling\":{},\"pipelining\":[{}],\
+         \"depth8_over_depth1\":{depth_speedup:.3}}}",
+        t.to_json(),
+        scaling.to_json(),
+        matrix_json.join(",")
+    );
+    let path = write_bench_json("coordinator", &json).expect("write bench json");
+    println!("wrote {}", path.display());
 }

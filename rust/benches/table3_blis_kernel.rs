@@ -16,4 +16,7 @@ fn main() {
             c.ratio()
         );
     }
+    let path = parallella_blas::util::bench::write_bench_json("table3", &t.to_json("table3"))
+        .expect("write bench json");
+    println!("wrote {}", path.display());
 }

@@ -16,4 +16,7 @@ fn main() {
             c.ratio()
         );
     }
+    let path = parallella_blas::util::bench::write_bench_json("table5", &t.to_json("table5"))
+        .expect("write bench json");
+    println!("wrote {}", path.display());
 }

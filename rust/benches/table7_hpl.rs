@@ -16,4 +16,7 @@ fn main() {
             c.ratio()
         );
     }
+    let path = parallella_blas::util::bench::write_bench_json("table7", &t.to_json("table7"))
+        .expect("write bench json");
+    println!("wrote {}", path.display());
 }

@@ -125,9 +125,15 @@ pub fn coalesce_plan(jobs: &[(CoalesceKey, usize)], max_cols: usize) -> Vec<(usi
     plan
 }
 
+/// Completion callback invoked exactly once per submitted job, from the
+/// executing chip's worker thread — the batcher's async spine. The
+/// channel-returning [`Batcher::submit`]/[`Batcher::submit_to`] are thin
+/// shims over it.
+pub type Completion = Box<dyn FnOnce(Result<Vec<f32>>) + Send + 'static>;
+
 struct Queued {
     job: GemmJob,
-    reply: mpsc::Sender<Result<Vec<f32>>>,
+    reply: Completion,
 }
 
 struct Shared {
@@ -191,14 +197,29 @@ impl Batcher {
     /// here). The index is reduced modulo the pool size, so any hint a
     /// client sends is routable.
     pub fn submit_to(&self, chip: usize, job: GemmJob) -> mpsc::Receiver<Result<Vec<f32>>> {
-        let shard = &self.shards[chip % self.shards.len()];
         let (tx, rx) = mpsc::channel();
+        self.submit_with(
+            Some(chip),
+            job,
+            Box::new(move |r| {
+                let _ = tx.send(r);
+            }),
+        );
+        rx
+    }
+
+    /// Submit a job with a completion callback instead of a channel — the
+    /// pipelined server's path: no thread parks waiting on a receiver,
+    /// the worker drives the response write directly. `chip: None` picks
+    /// the least-loaded queue; `Some` pins (reduced modulo the pool).
+    pub fn submit_with(&self, chip: Option<usize>, job: GemmJob, done: Completion) {
+        let chip = chip.unwrap_or_else(|| self.least_loaded());
+        let shard = &self.shards[chip % self.shards.len()];
         {
             let mut q = shard.queue.lock().unwrap();
-            q.push_back(Queued { job, reply: tx });
+            q.push_back(Queued { job, reply: done });
         }
         shard.cv.notify_one();
-        rx
     }
 
     /// The chip with the least pending work — queued jobs *plus* jobs its
@@ -277,33 +298,42 @@ fn worker_loop(
         }
         // Coalesce adjacent same-key jobs and execute each group pinned
         // to this worker's chip; the active gauge drains as groups finish.
+        // Group boundaries are planned first (the key carries only a
+        // 64-bit hash of A; bytewise A equality is confirmed before a
+        // merge so a hash collision can never execute one client's job
+        // with another client's weights — inequality splits the run;
+        // results stay correct either way), then `drained` is consumed
+        // group by group: each FnOnce completion fires exactly once.
         let keys: Vec<(CoalesceKey, usize)> =
             drained.iter().map(|x| (x.job.key(), x.job.n)).collect();
+        let mut group_lens: Vec<usize> = Vec::new();
         for (start, end) in coalesce_plan(&keys, policy.max_cols) {
-            // The key carries only a 64-bit hash of A; confirm bytewise A
-            // equality before merging so a hash collision can never
-            // execute one client's job with another client's weights.
-            // (Inequality splits the run; results stay correct either way.)
             let mut s = start;
             for i in start + 1..=end {
                 if i < end && drained[i].job.a == drained[s].job.a {
                     continue;
                 }
-                let group = &drained[s..i];
-                execute_group(&blas, chip, group, &metrics);
-                if group.len() > 1 {
-                    metrics.record_batched(group.len());
-                }
-                shared.active.fetch_sub(group.len(), Ordering::SeqCst);
+                group_lens.push(i - s);
                 s = i;
             }
+        }
+        let mut rest = drained;
+        for len in group_lens {
+            let tail = rest.split_off(len);
+            let group = std::mem::replace(&mut rest, tail);
+            let glen = group.len();
+            execute_group(&blas, chip, group, &metrics);
+            if glen > 1 {
+                metrics.record_batched(glen);
+            }
+            shared.active.fetch_sub(glen, Ordering::SeqCst);
         }
     }
 }
 
 /// Run one (possibly coalesced) group on `chip` and fan the results back
-/// out to each job's reply channel.
-fn execute_group(blas: &Blas, chip: usize, group: &[Queued], metrics: &Metrics) {
+/// out through each job's completion callback.
+fn execute_group(blas: &Blas, chip: usize, group: Vec<Queued>, metrics: &Metrics) {
     let first = &group[0].job;
     let (m, k) = (first.m, first.k);
     let cols: usize = group.iter().map(|q| q.job.n).sum();
@@ -316,7 +346,7 @@ fn execute_group(blas: &Blas, chip: usize, group: &[Queued], metrics: &Metrics) 
         let a_view = MatRef::from_col_major(ar, ac, ar, a_stored);
         let mut c_cat = Mat::<f32>::zeros(m, cols);
         let mut j0 = 0usize;
-        for q in group {
+        for q in &group {
             let job = &q.job;
             for j in 0..job.n {
                 for i in 0..m {
@@ -330,7 +360,7 @@ fn execute_group(blas: &Blas, chip: usize, group: &[Queued], metrics: &Metrics) 
             // stored n×k each; stack rows.
             let mut mcat = Mat::<f32>::zeros(cols, k);
             let mut r0 = 0usize;
-            for q in group {
+            for q in &group {
                 let job = &q.job;
                 for j in 0..k {
                     for i in 0..job.n {
@@ -344,7 +374,7 @@ fn execute_group(blas: &Blas, chip: usize, group: &[Queued], metrics: &Metrics) 
             // stored k×n each; stack columns.
             let mut mcat = Mat::<f32>::zeros(k, cols);
             let mut c0 = 0usize;
-            for q in group {
+            for q in &group {
                 let job = &q.job;
                 for j in 0..job.n {
                     for i in 0..k {
@@ -375,7 +405,7 @@ fn execute_group(blas: &Blas, chip: usize, group: &[Queued], metrics: &Metrics) 
         // Split back per job.
         let mut outs = Vec::with_capacity(group.len());
         let mut j0 = 0usize;
-        for q in group {
+        for q in &group {
             let job = &q.job;
             let mut out = vec![0.0f32; m * job.n];
             for j in 0..job.n {
@@ -391,14 +421,14 @@ fn execute_group(blas: &Blas, chip: usize, group: &[Queued], metrics: &Metrics) 
 
     match result {
         Ok(outs) => {
-            for (q, out) in group.iter().zip(outs) {
-                let _ = q.reply.send(Ok(out));
+            for (q, out) in group.into_iter().zip(outs) {
+                (q.reply)(Ok(out));
             }
         }
         Err(e) => {
             metrics.record_error();
             for q in group {
-                let _ = q.reply.send(Err(anyhow!("{e:#}")));
+                (q.reply)(Err(anyhow!("{e:#}")));
             }
         }
     }
@@ -505,6 +535,26 @@ mod tests {
         let g2 = Mat::from_col_major(64, 16, &rx2.recv().unwrap().unwrap());
         assert!(max_scaled_err(g1.view(), w1.view()) < 1e-5);
         assert!(max_scaled_err(g2.view(), w2.view()) < 1e-5);
+    }
+
+    #[test]
+    fn callback_submission_fires_once_with_result() {
+        let (b, _) = batcher();
+        let j = job(32, 8, 16, 77, None);
+        let want = oracle(&j);
+        let (tx, rx) = std::sync::mpsc::channel();
+        b.submit_with(
+            None,
+            j,
+            Box::new(move |r| {
+                tx.send(r).unwrap();
+            }),
+        );
+        let got = Mat::from_col_major(32, 8, &rx.recv().unwrap().unwrap());
+        assert!(max_scaled_err(got.view(), want.view()) < 1e-5);
+        // The sender moved into the FnOnce and dropped with it: a second
+        // recv observing disconnection proves single invocation.
+        assert!(rx.recv().is_err());
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! The client side of the coordinator wire: blocking v1 calls and
+//! pipelined v2 sessions.
+//!
+//! [`BlasClient::connect`] speaks wire v1 — every [`call`] writes one
+//! frame and blocks for its reply, exactly as before. ([`call`] is now
+//! a thin shim over the session API, so both wire versions share one
+//! code path.)
+//!
+//! [`BlasClient::connect_v2`] opens with `Hello{2}`; if the server
+//! acks v2, the session upgrades to correlation-id framing and
+//! [`submit`] becomes available: it writes the request and returns a
+//! [`Pending`] ticket immediately, so many requests ride the socket
+//! concurrently. [`Pending::wait`] claims the matching response —
+//! tickets can be waited in any order, because a shared session reader
+//! parks responses by correlation id until their ticket shows up.
+//! [`drain`] blocks until every outstanding response has landed.
+//!
+//! Against an old server the hello negotiates down and the client
+//! transparently stays on v1 (`submit` then reports an error rather
+//! than corrupting the wire).
+//!
+//! [`call`]: BlasClient::call
+//! [`submit`]: BlasClient::submit
+//! [`drain`]: BlasClient::drain
+
+use super::protocol::{read_frame, write_frame, Request, Response, PROTOCOL_V1, PROTOCOL_V2};
+use anyhow::{ensure, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
+
+/// Demultiplexes v2 responses: whoever waits pumps the socket, and
+/// frames for other tickets are parked in `completed` until claimed.
+struct SessionReader {
+    stream: TcpStream,
+    in_flight: HashSet<u32>,
+    completed: HashMap<u32, Response>,
+}
+
+impl SessionReader {
+    /// Read exactly one response frame and file it by correlation id.
+    fn pump_one(&mut self) -> Result<()> {
+        let body = read_frame(&mut self.stream)?;
+        let (cid, resp) = Response::decode_v2(&body)?;
+        self.in_flight.remove(&cid);
+        self.completed.insert(cid, resp);
+        Ok(())
+    }
+}
+
+/// A ticket for one in-flight v2 request.
+///
+/// Consume it with [`Pending::wait`]; tickets may be waited in any
+/// order. A dropped ticket's response is still read off the socket by
+/// later waits (or [`BlasClient::drain`]) and discarded — dropping a
+/// ticket never desynchronizes the session.
+pub struct Pending {
+    reader: Arc<Mutex<SessionReader>>,
+    cid: u32,
+}
+
+impl Pending {
+    /// The correlation id this ticket was submitted under.
+    pub fn correlation_id(&self) -> u32 {
+        self.cid
+    }
+
+    /// Block until this request's response lands and return it.
+    ///
+    /// Server-side failures (including `DeadlineExceeded` and
+    /// `TooManyInFlight`) come back as `Ok(Response::Err(..))`; a Rust
+    /// `Err` means the session itself broke (socket or codec failure).
+    pub fn wait(self) -> Result<Response> {
+        loop {
+            let mut r = self.reader.lock().unwrap();
+            if let Some(resp) = r.completed.remove(&self.cid) {
+                return Ok(resp);
+            }
+            r.pump_one()?;
+        }
+    }
+}
+
+/// A blocking TCP client for [`super::server::BlasServer`].
+pub struct BlasClient {
+    stream: TcpStream,
+    reader: Arc<Mutex<SessionReader>>,
+    version: u32,
+    next_cid: u32,
+}
+
+impl BlasClient {
+    /// Connect speaking wire v1 (no hello): one request, one response.
+    /// Works against every server version.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<BlasClient> {
+        let stream = TcpStream::connect(addr).context("connecting to blas server")?;
+        BlasClient::from_stream(stream, PROTOCOL_V1)
+    }
+
+    /// Connect and negotiate wire v2 with a `Hello` exchange. If the
+    /// server only speaks v1 (old server, or it negotiated down), the
+    /// returned client transparently stays on v1.
+    pub fn connect_v2(addr: impl ToSocketAddrs) -> Result<BlasClient> {
+        let mut stream = TcpStream::connect(addr).context("connecting to blas server")?;
+        write_frame(&mut stream, &Request::Hello { version: PROTOCOL_V2 }.encode())?;
+        let body = read_frame(&mut stream)?;
+        let version = match Response::decode(&body)? {
+            Response::OkText(ack) if ack == format!("hello v{PROTOCOL_V2}") => PROTOCOL_V2,
+            // Anything else — an older ack, or an error from a server
+            // that predates hello — means we stay on v1.
+            _ => PROTOCOL_V1,
+        };
+        BlasClient::from_stream(stream, version)
+    }
+
+    fn from_stream(stream: TcpStream, version: u32) -> Result<BlasClient> {
+        let read_half = stream.try_clone().context("cloning client stream")?;
+        Ok(BlasClient {
+            stream,
+            reader: Arc::new(Mutex::new(SessionReader {
+                stream: read_half,
+                in_flight: HashSet::new(),
+                completed: HashMap::new(),
+            })),
+            version,
+            next_cid: 1,
+        })
+    }
+
+    /// The wire version this session negotiated ([`PROTOCOL_V1`] or
+    /// [`PROTOCOL_V2`]).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Submit a request on a v2 session without waiting; the returned
+    /// [`Pending`] claims the response later. Errors on v1 sessions.
+    pub fn submit(&mut self, req: &Request) -> Result<Pending> {
+        self.submit_with_deadline(req, None)
+    }
+
+    /// [`submit`](BlasClient::submit) with an optional per-request
+    /// deadline budget in milliseconds; a request the server cannot
+    /// answer within it gets a `DeadlineExceeded` error response.
+    pub fn submit_with_deadline(
+        &mut self,
+        req: &Request,
+        deadline_ms: Option<u32>,
+    ) -> Result<Pending> {
+        ensure!(
+            self.version >= PROTOCOL_V2,
+            "submit() needs a v2 session; connect with connect_v2"
+        );
+        let cid = self.next_cid;
+        self.next_cid = self.next_cid.wrapping_add(1);
+        self.reader.lock().unwrap().in_flight.insert(cid);
+        write_frame(&mut self.stream, &req.encode_v2(cid, deadline_ms))?;
+        Ok(Pending { reader: Arc::clone(&self.reader), cid })
+    }
+
+    /// Block until every outstanding response has landed (including
+    /// those of dropped tickets). A no-op on v1 sessions.
+    pub fn drain(&mut self) -> Result<()> {
+        loop {
+            let mut r = self.reader.lock().unwrap();
+            if r.in_flight.is_empty() {
+                return Ok(());
+            }
+            r.pump_one()?;
+        }
+    }
+
+    /// One blocking request → response round trip.
+    ///
+    /// On a v1 session this writes and reads the classic frames; on a
+    /// v2 session it is a shim over submit-then-wait, so calls may be
+    /// freely mixed with pipelined submissions.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        if self.version >= PROTOCOL_V2 {
+            return self.submit(req)?.wait();
+        }
+        write_frame(&mut self.stream, &req.encode())?;
+        let body = read_frame(&mut self.stream)?;
+        Response::decode(&body)
+    }
+
+    /// Raw access to the underlying socket (used by failure-injection
+    /// tests to write malformed bytes).
+    pub fn stream_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+}

@@ -11,6 +11,9 @@ const BUCKETS: usize = 30;
 struct Inner {
     requests: u64,
     errors: u64,
+    io_errors: u64,
+    deadline_exceeded: u64,
+    rejected_in_flight: u64,
     gemm_requests: u64,
     gemv_requests: u64,
     batched: u64,
@@ -20,6 +23,82 @@ struct Inner {
     started: Option<Instant>,
     /// Batch executions per chip (index = chip id; grown on demand).
     chip_gemms: Vec<u64>,
+}
+
+/// A typed snapshot of the service counters — the `Stats` opcode's
+/// payload since wire v2 (previously a formatted string).
+///
+/// The [`std::fmt::Display`] impl renders the classic `key=value` report
+/// line, so text consumers (the CLI, log scrapers) keep working.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsReport {
+    /// Completed requests (gemm + gemv).
+    pub requests: u64,
+    /// Failed requests.
+    pub errors: u64,
+    /// Read-side I/O failures (mid-frame disconnects, oversized frames).
+    pub io_errors: u64,
+    /// Requests that missed their per-request deadline.
+    pub deadline_exceeded: u64,
+    /// Requests bounced because a connection's in-flight window was full.
+    pub rejected_in_flight: u64,
+    /// Completed gemm requests.
+    pub gemm_requests: u64,
+    /// Completed gemv requests.
+    pub gemv_requests: u64,
+    /// Jobs that executed as part of a coalesced batch.
+    pub batched: u64,
+    /// Seconds since the metrics sink was created.
+    pub uptime_s: f64,
+    /// Mean request latency in seconds.
+    pub mean_latency_s: f64,
+    /// Total flops / uptime, in Gflop/s.
+    pub achieved_gflops: f64,
+    /// Median latency (histogram bucket upper bound, seconds).
+    pub p50_s: f64,
+    /// 99th-percentile latency (histogram bucket upper bound, seconds).
+    pub p99_s: f64,
+    /// Jobs queued across every chip's batcher queue when sampled (filled
+    /// in by the router; a bare [`Metrics::snapshot`] reports 0).
+    pub queue_depth: u64,
+    /// Batch executions per chip (index = chip id).
+    pub chip_gemms: Vec<u64>,
+}
+
+impl StatsReport {
+    /// Batch executions recorded on `chip` (0 for chips never seen).
+    pub fn gemms_on(&self, chip: usize) -> u64 {
+        self.chip_gemms.get(chip).copied().unwrap_or(0)
+    }
+}
+
+impl std::fmt::Display for StatsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} errors={} gemm={} gemv={} batched={} uptime_s={:.1} \
+             mean_latency_s={:.6} achieved_gflops={:.3} queue_depth={} io_errors={} \
+             deadline_exceeded={} rejected_in_flight={} p50_s={:.6} p99_s={:.6}",
+            self.requests,
+            self.errors,
+            self.gemm_requests,
+            self.gemv_requests,
+            self.batched,
+            self.uptime_s,
+            self.mean_latency_s,
+            self.achieved_gflops,
+            self.queue_depth,
+            self.io_errors,
+            self.deadline_exceeded,
+            self.rejected_in_flight,
+            self.p50_s,
+            self.p99_s,
+        )?;
+        for (i, c) in self.chip_gemms.iter().enumerate() {
+            write!(f, " chip{i}_gemms={c}")?;
+        }
+        Ok(())
+    }
 }
 
 /// Thread-safe metrics sink.
@@ -55,6 +134,23 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Record a read-side I/O failure (mid-frame disconnect, oversized
+    /// length prefix) — distinct from protocol errors, which get an error
+    /// *response*; an I/O failure kills the connection.
+    pub fn record_io_error(&self) {
+        self.inner.lock().unwrap().io_errors += 1;
+    }
+
+    /// Record a request that missed its per-request deadline.
+    pub fn record_deadline_exceeded(&self) {
+        self.inner.lock().unwrap().deadline_exceeded += 1;
+    }
+
+    /// Record a request bounced by a full in-flight window.
+    pub fn record_rejected_in_flight(&self) {
+        self.inner.lock().unwrap().rejected_in_flight += 1;
+    }
+
     /// Record that `n` jobs executed as one coalesced batch.
     pub fn record_batched(&self, n: usize) {
         self.inner.lock().unwrap().batched += n as u64;
@@ -78,6 +174,21 @@ impl Metrics {
         self.inner.lock().unwrap().requests
     }
 
+    /// Read-side I/O failures recorded.
+    pub fn io_errors(&self) -> u64 {
+        self.inner.lock().unwrap().io_errors
+    }
+
+    /// Requests that missed their deadline.
+    pub fn deadline_exceeded(&self) -> u64 {
+        self.inner.lock().unwrap().deadline_exceeded
+    }
+
+    /// Requests bounced by a full in-flight window.
+    pub fn rejected_in_flight(&self) -> u64 {
+        self.inner.lock().unwrap().rejected_in_flight
+    }
+
     /// Per-chip batch-execution counts (empty until a chip executes).
     pub fn chip_requests(&self) -> Vec<u64> {
         self.inner.lock().unwrap().chip_gemms.clone()
@@ -93,46 +204,61 @@ impl Metrics {
     /// * `q` outside `[0, 1]` is clamped, so `q <= 0` returns the
     ///   smallest occupied bucket bound and `q >= 1` the largest.
     pub fn latency_quantile(&self, q: f64) -> f64 {
-        let m = self.inner.lock().unwrap();
-        let total: u64 = m.latency_us.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 0.0 };
-        let target = ((q * total as f64).ceil() as u64).max(1);
-        let mut seen = 0u64;
-        for (i, &c) in m.latency_us.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return (1u64 << i) as f64 / 1e6; // bucket upper bound in s
-            }
-        }
-        (1u64 << (BUCKETS - 1)) as f64 / 1e6
+        quantile_from(&self.inner.lock().unwrap().latency_us, q)
     }
 
-    /// Human-readable report (the `Stats` opcode's payload), with one
-    /// `chipN_gemms` label per chip that has executed work.
-    pub fn report(&self) -> String {
+    /// A typed snapshot of every counter (the `Stats` opcode's payload).
+    /// `queue_depth` is 0 here — only the router can see the batcher.
+    pub fn snapshot(&self) -> StatsReport {
         let m = self.inner.lock().unwrap();
         let uptime = m.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-        let mean_lat = if m.requests > 0 { m.total_latency_s / m.requests as f64 } else { 0.0 };
-        let mut line = format!(
-            "requests={} errors={} gemm={} gemv={} batched={} uptime_s={:.1} \
-             mean_latency_s={:.6} achieved_gflops={:.3}",
-            m.requests,
-            m.errors,
-            m.gemm_requests,
-            m.gemv_requests,
-            m.batched,
-            uptime,
-            mean_lat,
-            if uptime > 0.0 { m.flops / uptime / 1e9 } else { 0.0 },
-        );
-        for (i, c) in m.chip_gemms.iter().enumerate() {
-            line.push_str(&format!(" chip{i}_gemms={c}"));
+        StatsReport {
+            requests: m.requests,
+            errors: m.errors,
+            io_errors: m.io_errors,
+            deadline_exceeded: m.deadline_exceeded,
+            rejected_in_flight: m.rejected_in_flight,
+            gemm_requests: m.gemm_requests,
+            gemv_requests: m.gemv_requests,
+            batched: m.batched,
+            uptime_s: uptime,
+            mean_latency_s: if m.requests > 0 {
+                m.total_latency_s / m.requests as f64
+            } else {
+                0.0
+            },
+            achieved_gflops: if uptime > 0.0 { m.flops / uptime / 1e9 } else { 0.0 },
+            p50_s: quantile_from(&m.latency_us, 0.5),
+            p99_s: quantile_from(&m.latency_us, 0.99),
+            queue_depth: 0,
+            chip_gemms: m.chip_gemms.clone(),
         }
-        line
     }
+
+    /// Human-readable report line, with one `chipN_gemms` label per chip
+    /// that has executed work (the rendering of [`Metrics::snapshot`]).
+    pub fn report(&self) -> String {
+        self.snapshot().to_string()
+    }
+}
+
+/// The quantile read shared by [`Metrics::latency_quantile`] and
+/// [`Metrics::snapshot`]; see `latency_quantile` for the edge policy.
+fn quantile_from(hist: &[u64; BUCKETS], q: f64) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 0.0 };
+    let target = ((q * total as f64).ceil() as u64).max(1);
+    let mut seen = 0u64;
+    for (i, &c) in hist.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return (1u64 << i) as f64 / 1e6; // bucket upper bound in s
+        }
+    }
+    (1u64 << (BUCKETS - 1)) as f64 / 1e6
 }
 
 impl Default for Metrics {
@@ -204,6 +330,42 @@ mod tests {
         // Non-finite q reads as 0.
         assert_eq!(m.latency_quantile(f64::NAN), lo);
         assert_eq!(m.latency_quantile(f64::INFINITY), lo);
+    }
+
+    #[test]
+    fn snapshot_mirrors_report_line() {
+        let m = Metrics::new();
+        m.record_request(RequestKind::Gemm, 0.001, 1e6);
+        m.record_error();
+        m.record_io_error();
+        m.record_deadline_exceeded();
+        m.record_rejected_in_flight();
+        m.record_chip_request(0);
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.io_errors, 1);
+        assert_eq!(snap.deadline_exceeded, 1);
+        assert_eq!(snap.rejected_in_flight, 1);
+        assert_eq!(snap.gemms_on(0), 1);
+        assert_eq!(snap.gemms_on(7), 0, "unseen chips read as 0");
+        assert!(snap.p50_s > 0.0 && snap.p50_s <= snap.p99_s);
+        // The rendered line keeps every legacy label plus the new ones.
+        let line = snap.to_string();
+        for label in [
+            "requests=1",
+            "errors=1",
+            "gemm=1",
+            "io_errors=1",
+            "deadline_exceeded=1",
+            "rejected_in_flight=1",
+            "queue_depth=0",
+            "p50_s=",
+            "p99_s=",
+            "chip0_gemms=1",
+        ] {
+            assert!(line.contains(label), "missing {label}: {line}");
+        }
     }
 
     #[test]

@@ -9,30 +9,43 @@
 //! queue + worker per chip, least-loaded placement by default, and a wire
 //! shard hint for clients that want chip affinity. This module provides:
 //!
-//! * [`protocol`] — a compact binary wire protocol: one frame header
-//!   `[len][opcode][dtype][flags]` and one payload codec shared by every
-//!   opcode × dtype (dtype-tagged descriptor structs, not per-precision
-//!   enum variants); the `flags` nibble carries the shard hint;
+//! * [`protocol`] — a compact binary wire protocol: v1 frames
+//!   `[len][opcode][dtype][flags]` and, after a `Hello` negotiation,
+//!   v2 frames that add a correlation id (and optional deadline budget)
+//!   so responses can return out of order; one payload codec shared by
+//!   every opcode × dtype; incremental framing via
+//!   [`protocol::FrameAccumulator`];
 //! * [`batcher`]  — per-chip FIFO + shape-coalescing batchers (requests
 //!   with the same (op, K-class) batch their HH-RAM crossings, pinned to
-//!   their queue's chip);
+//!   their queue's chip), completion-callback driven;
 //! * [`router`]   — dispatch: level-3 sgemm/false-dgemm to a chip queue
-//!   (hinted or least-loaded), level-1/2 to a host worker pool;
-//! * [`server`]   — a threaded TCP accept loop;
+//!   (hinted or least-loaded), level-1/2 to a host worker pool; the
+//!   async path ([`Router::dispatch_async`]) never parks a thread on a
+//!   batched gemm;
+//! * [`server`]   — a threaded TCP accept loop; v2 connections are
+//!   pipelined (bounded in-flight window, per-request deadlines,
+//!   out-of-order writer) and drain gracefully on stop;
+//! * [`client`]   — blocking v1 calls and pipelined v2 sessions
+//!   ([`BlasClient::submit`] → [`Pending::wait`]);
 //! * [`metrics`]  — counters + latency histograms + per-chip execution
-//!   counts, `/stats`-style report.
+//!   counts, rendered from a typed [`StatsReport`].
 //!
 //! The full map — layers, wire grammar, and the sharded data flow — is
 //! drawn in `docs/ARCHITECTURE.md`.
 
 pub mod batcher;
+pub mod client;
 pub mod metrics;
 pub mod protocol;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
-pub use protocol::{GemmWire, GemvWire, Opcode, Request, Response, Tensor};
+pub use client::{BlasClient, Pending};
+pub use metrics::{Metrics, StatsReport};
+pub use protocol::{
+    FrameAccumulator, GemmWire, GemvWire, Opcode, Request, Response, Tensor, PROTOCOL_V1,
+    PROTOCOL_V2,
+};
 pub use router::Router;
 pub use server::{BlasServer, ServerConfig};

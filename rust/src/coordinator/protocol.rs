@@ -30,10 +30,54 @@
 //! Gemv payload: `[u8 ta][u32 m][u32 n][u32 incx][u32 incy]
 //! [scalar alpha][scalar beta][A][x][y]` with classic BLAS vector
 //! strides; stored vector length is `(len-1)*inc + 1`.
+//!
+//! # Wire v2: correlation ids and pipelining
+//!
+//! A client that opens with a `Hello{version}` exchange (in v1 framing)
+//! upgrades the connection to **v2**, which inserts a correlation id
+//! after the flags byte on every subsequent frame, both directions:
+//!
+//! ```text
+//! [u32 len][u8 tag][u8 dtype][u8 flags][u32 correlation_id][payload]
+//! ```
+//!
+//! Requests on a v2 connection may additionally set [`FLAG_DEADLINE`]
+//! (bit 4 of `flags`), in which case a `u32 deadline_ms` budget follows
+//! the correlation id. v2 responses may arrive **out of order**; the
+//! correlation id is how a pipelined client matches them back up
+//! ([`Request::encode_v2`] / [`Response::decode_v2`]). Clients that
+//! never say hello keep the v1 framing above, bit for bit.
+//!
+//! Incremental framing for the server's read loop lives in
+//! [`FrameAccumulator`]: bytes go in as they arrive, complete frame
+//! bodies come out, and a hostile length prefix is rejected before any
+//! allocation happens.
 
+use super::metrics::StatsReport;
 use crate::blis::{Dtype, Trans};
 use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
+
+/// Wire protocol version 1: `[len][tag][dtype][flags][payload]` frames,
+/// strictly request → response per connection.
+pub const PROTOCOL_V1: u32 = 1;
+
+/// Wire protocol version 2: v1 plus a correlation id on every frame,
+/// optional per-request deadlines, and out-of-order responses.
+pub const PROTOCOL_V2: u32 = 2;
+
+/// `flags` bit 4 on a v2 request: a `u32 deadline_ms` follows the
+/// correlation id. Rejected on v1 frames (the bit is reserved there).
+pub const FLAG_DEADLINE: u8 = 0x10;
+
+/// Hard ceiling on a frame's length prefix, both directions — a hostile
+/// 4 GiB prefix must die before the body is allocated. Servers default
+/// to the tighter [`DEFAULT_MAX_FRAME_LEN`].
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// The server's default accepted frame cap (256 MiB — a paper-scale
+/// sgemm frame is a few MiB).
+pub const DEFAULT_MAX_FRAME_LEN: usize = 1 << 28;
 
 /// Operation codes (request tags). 1–15 are routed compute ops, 16+ are
 /// control ops with empty payloads.
@@ -49,6 +93,10 @@ pub enum Opcode {
     Stats = 17,
     /// Stop the server; empty payload.
     Shutdown = 18,
+    /// Version negotiation (`[u32 version]` payload). Sent as the first
+    /// frame of a connection, in v1 framing; the server's text reply
+    /// names the agreed version and the connection upgrades from there.
+    Hello = 19,
 }
 
 impl Opcode {
@@ -60,13 +108,21 @@ impl Opcode {
             16 => Opcode::Ping,
             17 => Opcode::Stats,
             18 => Opcode::Shutdown,
+            19 => Opcode::Hello,
             _ => bail!("unknown opcode {v}"),
         })
     }
 
     /// Every opcode (the property suite's round-trip sweep).
-    pub fn all() -> [Opcode; 5] {
-        [Opcode::Gemm, Opcode::Gemv, Opcode::Ping, Opcode::Stats, Opcode::Shutdown]
+    pub fn all() -> [Opcode; 6] {
+        [
+            Opcode::Gemm,
+            Opcode::Gemv,
+            Opcode::Ping,
+            Opcode::Stats,
+            Opcode::Shutdown,
+            Opcode::Hello,
+        ]
     }
 }
 
@@ -243,15 +299,23 @@ pub enum Request {
     Stats,
     /// Stop the server.
     Shutdown,
+    /// Version negotiation; must be the first frame on a connection.
+    Hello {
+        /// The highest wire version the client speaks.
+        version: u32,
+    },
 }
 
-/// A response frame: a dtype-tagged tensor, text, or an error.
+/// A response frame: a dtype-tagged tensor, text, typed stats, or an
+/// error.
 #[derive(Clone, Debug)]
 pub enum Response {
     /// Success with a tensor payload (the updated C or y).
     Ok(Tensor),
-    /// Success with a text payload (pong, stats report, bye).
+    /// Success with a text payload (pong, hello ack, bye).
     OkText(String),
+    /// Success with the typed stats snapshot (`Stats` requests).
+    Stats(StatsReport),
     /// A recoverable server-side error, as text.
     Err(String),
 }
@@ -301,6 +365,10 @@ impl FrameWriter {
     }
 
     fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
@@ -379,6 +447,10 @@ impl<'a> FrameReader<'a> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
     /// A scalar at the frame dtype's width, widened to f64 (exact).
     fn scalar(&mut self) -> Result<f64> {
         Ok(match self.dtype {
@@ -436,6 +508,7 @@ impl Request {
             Request::Ping => Opcode::Ping,
             Request::Stats => Opcode::Stats,
             Request::Shutdown => Opcode::Shutdown,
+            Request::Hello { .. } => Opcode::Hello,
         }
     }
 
@@ -449,17 +522,38 @@ impl Request {
         }
     }
 
-    /// Encode into a frame (including the length prefix). One code path
-    /// for every opcode × dtype; gemm frames carry the shard hint in the
-    /// `flags` byte.
+    /// Encode into a v1 frame (including the length prefix). One code
+    /// path for every opcode × dtype; gemm frames carry the shard hint in
+    /// the `flags` byte.
     pub fn encode(&self) -> Vec<u8> {
-        let flags = match self {
+        self.encode_with(None, None)
+    }
+
+    /// Encode into a v2 frame: the correlation id follows the flags byte,
+    /// and a deadline budget (in ms) rides behind it when given (setting
+    /// [`FLAG_DEADLINE`]). Only valid on a hello-upgraded connection.
+    pub fn encode_v2(&self, correlation_id: u32, deadline_ms: Option<u32>) -> Vec<u8> {
+        self.encode_with(Some(correlation_id), deadline_ms)
+    }
+
+    fn encode_with(&self, cid: Option<u32>, deadline_ms: Option<u32>) -> Vec<u8> {
+        let mut flags = match self {
             Request::Gemm(g) => g.flags(),
             _ => 0,
         };
+        if cid.is_some() && deadline_ms.is_some() {
+            flags |= FLAG_DEADLINE;
+        }
         let mut w = FrameWriter::with_flags(self.opcode() as u8, self.dtype(), flags);
+        if let Some(c) = cid {
+            w.u32(c);
+            if let Some(d) = deadline_ms {
+                w.u32(d);
+            }
+        }
         match self {
             Request::Ping | Request::Stats | Request::Shutdown => {}
+            Request::Hello { version } => w.u32(*version),
             Request::Gemm(g) => {
                 w.u8(trans_code(g.ta));
                 w.u8(trans_code(g.tb));
@@ -488,21 +582,45 @@ impl Request {
         w.finish()
     }
 
-    /// Decode a frame body (without the length prefix). The same generic
-    /// routine serves every dtype; payload sizes are derived from the
-    /// header dims and validated.
+    /// Decode a v1 frame body (without the length prefix). The same
+    /// generic routine serves every dtype; payload sizes are derived from
+    /// the header dims and validated.
     pub fn decode(body: &[u8]) -> Result<Request> {
+        let (_, _, req) = Request::decode_with(body, false)?;
+        Ok(req)
+    }
+
+    /// Decode a v2 frame body: returns the correlation id, the optional
+    /// deadline budget (ms), and the request.
+    pub fn decode_v2(body: &[u8]) -> Result<(u32, Option<u32>, Request)> {
+        Request::decode_with(body, true)
+    }
+
+    fn decode_with(body: &[u8], v2: bool) -> Result<(u32, Option<u32>, Request)> {
         let (tag, flags, mut r) = FrameReader::new(body)?;
         let opcode = Opcode::from_u8(tag)?;
-        if opcode == Opcode::Gemm {
-            ensure!(flags & 0xF0 == 0, "reserved high flag bits must be 0, got {flags:#04x}");
-        } else {
-            ensure!(flags == 0, "flags byte must be 0 on a non-gemm frame, got {flags:#04x}");
+        // Flag policy: gemm owns the shard-hint nibble; v2 frames may set
+        // FLAG_DEADLINE; everything else is reserved and must be 0.
+        let mut allowed = if opcode == Opcode::Gemm { 0x0Fu8 } else { 0 };
+        if v2 {
+            allowed |= FLAG_DEADLINE;
         }
+        ensure!(
+            flags & !allowed == 0,
+            "reserved flag bits must be 0 on this frame, got {flags:#04x}"
+        );
+        let (cid, deadline_ms) = if v2 {
+            let cid = r.u32()?;
+            let d = if flags & FLAG_DEADLINE != 0 { Some(r.u32()?) } else { None };
+            (cid, d)
+        } else {
+            (0, None)
+        };
         let req = match opcode {
             Opcode::Ping => Request::Ping,
             Opcode::Stats => Request::Stats,
             Opcode::Shutdown => Request::Shutdown,
+            Opcode::Hello => Request::Hello { version: r.u32()? },
             Opcode::Gemm => {
                 let shard_hint =
                     if flags & 0x0F == 0 { None } else { Some((flags & 0x0F) as usize - 1) };
@@ -533,7 +651,7 @@ impl Request {
             }
         };
         r.finish()?;
-        Ok(req)
+        Ok((cid, deadline_ms, req))
     }
 
     // -- generated-style constructors (what clients actually type) --
@@ -712,42 +830,110 @@ fn trim_gemv<T>(
 const STATUS_OK: u8 = 0;
 const STATUS_TEXT: u8 = 1;
 const STATUS_ERR: u8 = 2;
+const STATUS_STATS: u8 = 3;
 
 impl Response {
-    /// Encode with the same frame header as requests; the payload of an
-    /// `Ok` tensor is raw elements (count implied by the frame length).
+    /// Encode into a v1 frame with the same header shape as requests; the
+    /// payload of an `Ok` tensor is raw elements (count implied by the
+    /// frame length).
     pub fn encode(&self) -> Vec<u8> {
-        match self {
-            Response::Ok(t) => {
-                let mut w = FrameWriter::new(STATUS_OK, t.dtype());
-                w.tensor(t);
-                w.finish()
-            }
-            Response::OkText(s) => {
-                let mut w = FrameWriter::new(STATUS_TEXT, Dtype::F32);
-                w.bytes(s.as_bytes());
-                w.finish()
-            }
-            Response::Err(e) => {
-                let mut w = FrameWriter::new(STATUS_ERR, Dtype::F32);
-                w.bytes(e.as_bytes());
-                w.finish()
-            }
-        }
+        self.encode_with(None)
     }
 
-    /// Decode a response frame body (without the length prefix).
+    /// Encode into a v2 frame tagged with the request's correlation id —
+    /// what lets a pipelined client match out-of-order completions.
+    pub fn encode_v2(&self, correlation_id: u32) -> Vec<u8> {
+        self.encode_with(Some(correlation_id))
+    }
+
+    fn encode_with(&self, cid: Option<u32>) -> Vec<u8> {
+        let (tag, dtype) = match self {
+            Response::Ok(t) => (STATUS_OK, t.dtype()),
+            Response::OkText(_) => (STATUS_TEXT, Dtype::F32),
+            Response::Stats(_) => (STATUS_STATS, Dtype::F64),
+            Response::Err(_) => (STATUS_ERR, Dtype::F32),
+        };
+        let mut w = FrameWriter::new(tag, dtype);
+        if let Some(c) = cid {
+            w.u32(c);
+        }
+        match self {
+            Response::Ok(t) => w.tensor(t),
+            Response::OkText(s) => w.bytes(s.as_bytes()),
+            Response::Err(e) => w.bytes(e.as_bytes()),
+            Response::Stats(s) => {
+                w.u64(s.requests);
+                w.u64(s.errors);
+                w.u64(s.io_errors);
+                w.u64(s.deadline_exceeded);
+                w.u64(s.rejected_in_flight);
+                w.u64(s.gemm_requests);
+                w.u64(s.gemv_requests);
+                w.u64(s.batched);
+                w.scalar(s.uptime_s);
+                w.scalar(s.mean_latency_s);
+                w.scalar(s.achieved_gflops);
+                w.scalar(s.p50_s);
+                w.scalar(s.p99_s);
+                w.u64(s.queue_depth);
+                w.u32(s.chip_gemms.len() as u32);
+                for c in &s.chip_gemms {
+                    w.u64(*c);
+                }
+            }
+        }
+        w.finish()
+    }
+
+    /// Decode a v1 response frame body (without the length prefix).
     pub fn decode(body: &[u8]) -> Result<Response> {
+        let (_, resp) = Response::decode_with(body, false)?;
+        Ok(resp)
+    }
+
+    /// Decode a v2 response frame body: correlation id plus response.
+    pub fn decode_v2(body: &[u8]) -> Result<(u32, Response)> {
+        Response::decode_with(body, true)
+    }
+
+    fn decode_with(body: &[u8], v2: bool) -> Result<(u32, Response)> {
         let (tag, flags, mut r) = FrameReader::new(body)?;
         ensure!(flags == 0, "flags byte must be 0 on a response frame, got {flags:#04x}");
+        let cid = if v2 { r.u32()? } else { 0 };
         let resp = match tag {
             STATUS_OK => Response::Ok(r.rest_tensor()?),
             STATUS_TEXT => Response::OkText(String::from_utf8_lossy(r.rest_bytes()).into_owned()),
             STATUS_ERR => Response::Err(String::from_utf8_lossy(r.rest_bytes()).into_owned()),
+            STATUS_STATS => {
+                let mut s = StatsReport {
+                    requests: r.u64()?,
+                    errors: r.u64()?,
+                    io_errors: r.u64()?,
+                    deadline_exceeded: r.u64()?,
+                    rejected_in_flight: r.u64()?,
+                    gemm_requests: r.u64()?,
+                    gemv_requests: r.u64()?,
+                    batched: r.u64()?,
+                    uptime_s: r.scalar()?,
+                    mean_latency_s: r.scalar()?,
+                    achieved_gflops: r.scalar()?,
+                    p50_s: r.scalar()?,
+                    p99_s: r.scalar()?,
+                    queue_depth: r.u64()?,
+                    chip_gemms: Vec::new(),
+                };
+                let nchips = r.u32()? as usize;
+                ensure!(nchips <= 4096, "implausible chip count {nchips} in stats frame");
+                s.chip_gemms.reserve(nchips);
+                for _ in 0..nchips {
+                    s.chip_gemms.push(r.u64()?);
+                }
+                Response::Stats(s)
+            }
             other => bail!("bad response status {other}"),
         };
         r.finish()?;
-        Ok(resp)
+        Ok((cid, resp))
     }
 
     /// Unwrap an f32 tensor payload, turning server errors into `Err`.
@@ -755,6 +941,7 @@ impl Response {
         match self {
             Response::Ok(t) => t.into_f32(),
             Response::OkText(s) => bail!("expected f32 payload, got text {s:?}"),
+            Response::Stats(_) => bail!("expected f32 payload, got stats"),
             Response::Err(e) => bail!("server error: {e}"),
         }
     }
@@ -764,8 +951,62 @@ impl Response {
         match self {
             Response::Ok(t) => t.into_f64(),
             Response::OkText(s) => bail!("expected f64 payload, got text {s:?}"),
+            Response::Stats(_) => bail!("expected f64 payload, got stats"),
             Response::Err(e) => bail!("server error: {e}"),
         }
+    }
+}
+
+/// Incremental frame assembly for a streamed read loop: feed raw bytes
+/// in with [`FrameAccumulator::extend`], pull complete frame bodies out
+/// with [`FrameAccumulator::try_frame`] — `Ok(None)` until a full frame
+/// has landed, so a dribbling client costs buffering, not a blocked
+/// thread mid-`read_exact`. The length prefix is validated against the
+/// cap **before** any body allocation.
+pub struct FrameAccumulator {
+    buf: Vec<u8>,
+    max_len: usize,
+}
+
+impl FrameAccumulator {
+    /// An empty accumulator that rejects frames longer than `max_len`
+    /// body bytes (see [`DEFAULT_MAX_FRAME_LEN`]).
+    pub fn new(max_len: usize) -> FrameAccumulator {
+        FrameAccumulator { buf: Vec::new(), max_len }
+    }
+
+    /// Append bytes as they arrived off the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame body, `Ok(None)` if more bytes are
+    /// needed, or an error for a hostile/corrupt length prefix (shorter
+    /// than a frame header, or beyond the cap).
+    pub fn try_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        ensure!(len >= 3, "frame length {len} shorter than its own header");
+        ensure!(len <= self.max_len, "frame length {len} exceeds the cap {}", self.max_len);
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let body = self.buf[4..4 + len].to_vec();
+        self.buf.drain(..4 + len);
+        Ok(Some(body))
+    }
+
+    /// Whether a partial frame (or prefix) is still buffered — an EOF
+    /// with `has_partial()` is a mid-frame disconnect, not a clean close.
+    pub fn has_partial(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Bytes currently buffered.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
     }
 }
 
@@ -774,7 +1015,7 @@ pub fn read_frame(stream: &mut impl Read) -> Result<Vec<u8>> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len > 1 << 30 {
+    if len > MAX_FRAME_LEN {
         bail!("frame too large: {len}");
     }
     let mut body = vec![0u8; len];
@@ -902,12 +1143,33 @@ mod tests {
         }
     }
 
+    fn sample_stats() -> StatsReport {
+        StatsReport {
+            requests: 7,
+            errors: 1,
+            io_errors: 2,
+            deadline_exceeded: 3,
+            rejected_in_flight: 4,
+            gemm_requests: 5,
+            gemv_requests: 2,
+            batched: 6,
+            uptime_s: 1.5,
+            mean_latency_s: 0.001,
+            achieved_gflops: 2.25,
+            p50_s: 0.0005,
+            p99_s: 0.004,
+            queue_depth: 9,
+            chip_gemms: vec![3, 0, 2],
+        }
+    }
+
     #[test]
     fn response_variants_round_trip() {
         for resp in [
             Response::Ok(Tensor::F32(vec![1.0, 2.0])),
             Response::Ok(Tensor::F64(vec![3.0])),
             Response::OkText("pong".into()),
+            Response::Stats(sample_stats()),
             Response::Err("boom".into()),
         ] {
             let frame = resp.encode();
@@ -915,10 +1177,100 @@ mod tests {
             match (&resp, &back) {
                 (Response::Ok(a), Response::Ok(b)) => assert_eq!(a, b),
                 (Response::OkText(a), Response::OkText(b)) => assert_eq!(a, b),
+                (Response::Stats(a), Response::Stats(b)) => assert_eq!(a, b),
                 (Response::Err(a), Response::Err(b)) => assert_eq!(a, b),
                 _ => panic!("variant changed in round trip"),
             }
         }
+    }
+
+    #[test]
+    fn hello_round_trip_in_v1_framing() {
+        let frame = Request::Hello { version: PROTOCOL_V2 }.encode();
+        assert_eq!(frame[4], Opcode::Hello as u8);
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::Hello { version } => assert_eq!(version, PROTOCOL_V2),
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_correlation_id_rides_every_frame() {
+        // Requests: cid (and optional deadline) sit between flags and
+        // payload; the payload bytes decode identically to v1.
+        let req = tiny_sgemm().with_shard_hint(2);
+        let frame = req.encode_v2(0xDEAD_BEEF, None);
+        assert_eq!(&frame[7..11], &0xDEAD_BEEFu32.to_le_bytes());
+        let (cid, deadline, back) = Request::decode_v2(&frame[4..]).unwrap();
+        assert_eq!((cid, deadline), (0xDEAD_BEEF, None));
+        match back {
+            Request::Gemm(g) => assert_eq!(g.shard_hint, Some(2)),
+            other => panic!("wrong decode: {other:?}"),
+        }
+        // With a deadline, FLAG_DEADLINE is set and the budget follows.
+        let frame = Request::Ping.encode_v2(7, Some(250));
+        assert_eq!(frame[6] & FLAG_DEADLINE, FLAG_DEADLINE);
+        let (cid, deadline, back) = Request::decode_v2(&frame[4..]).unwrap();
+        assert_eq!((cid, deadline), (7, Some(250)));
+        assert!(matches!(back, Request::Ping));
+        // Responses: cid right after the header, any variant.
+        for resp in [
+            Response::Ok(Tensor::F32(vec![1.0])),
+            Response::Stats(sample_stats()),
+            Response::Err("late".into()),
+        ] {
+            let frame = resp.encode_v2(41);
+            let (cid, _) = Response::decode_v2(&frame[4..]).unwrap();
+            assert_eq!(cid, 41);
+        }
+    }
+
+    #[test]
+    fn v1_decoder_rejects_deadline_flag() {
+        // FLAG_DEADLINE is a v2-only bit: the v1 path must keep treating
+        // it as reserved, or a v2 frame could silently misparse as v1.
+        let frame = Request::Ping.encode_v2(1, Some(10));
+        assert!(Request::decode(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn frame_accumulator_dribble_and_coalesce() {
+        let f1 = Request::Ping.encode();
+        let f2 = tiny_sgemm().encode();
+        // 1-byte dribble across both frames: exactly two frames pop out,
+        // each only once its last byte has landed.
+        let mut acc = FrameAccumulator::new(MAX_FRAME_LEN);
+        let all: Vec<u8> = f1.iter().chain(f2.iter()).copied().collect();
+        let mut got = Vec::new();
+        for (i, b) in all.iter().enumerate() {
+            acc.extend(&[*b]);
+            while let Some(body) = acc.try_frame().unwrap() {
+                got.push((i, body));
+            }
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, f1.len() - 1, "frame 1 completes on its last byte");
+        assert_eq!(got[0].1, &f1[4..]);
+        assert_eq!(got[1].1, &f2[4..]);
+        assert!(!acc.has_partial());
+        // Two frames in one read coalesce: both pop out back to back.
+        let mut acc = FrameAccumulator::new(MAX_FRAME_LEN);
+        acc.extend(&all);
+        assert_eq!(acc.try_frame().unwrap().unwrap(), &f1[4..]);
+        assert_eq!(acc.try_frame().unwrap().unwrap(), &f2[4..]);
+        assert!(acc.try_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_accumulator_rejects_hostile_length() {
+        // A 4 GiB-ish length prefix dies at the prefix, before any body
+        // allocation — and a sub-header length is just as dead.
+        let mut acc = FrameAccumulator::new(DEFAULT_MAX_FRAME_LEN);
+        acc.extend(&u32::MAX.to_le_bytes());
+        assert!(acc.try_frame().is_err());
+        let mut acc = FrameAccumulator::new(DEFAULT_MAX_FRAME_LEN);
+        acc.extend(&1u32.to_le_bytes());
+        assert!(acc.try_frame().is_err(), "length below header size");
     }
 
     #[test]

@@ -8,10 +8,10 @@
 
 use super::batcher::{Batcher, GemmJob};
 use super::metrics::{Metrics, RequestKind};
-use super::protocol::{GemvWire, Request, Response, Tensor};
+use super::protocol::{GemmWire, GemvWire, Request, Response, Tensor};
 use crate::blis::{Blas, Dtype, GemvOp};
 use crate::linalg::{Mat, MatRef, Real};
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
 
 /// The router: shared by all connection threads.
@@ -45,24 +45,86 @@ impl Router {
         }
     }
 
+    /// Handle one request asynchronously: `done` fires exactly once with
+    /// the response — possibly on another thread, possibly after this
+    /// call returned. The pipelined server's path. f32 gemms ride the
+    /// batcher's completion callbacks, so no thread parks per request;
+    /// every other class runs on a short-lived worker thread (bounded by
+    /// the connection's in-flight window).
+    pub fn dispatch_async(
+        self: &Arc<Self>,
+        req: Request,
+        done: Box<dyn FnOnce(Response) + Send + 'static>,
+    ) {
+        match req {
+            Request::Gemm(g) if g.dtype() == Dtype::F32 => {
+                if let Err(e) = validate_gemm(&g) {
+                    self.metrics.record_error();
+                    done(Response::Err(format!("{e:#}")));
+                    return;
+                }
+                let hint = g.shard_hint;
+                let job = match (g.a.into_f32(), g.b.into_f32(), g.c.into_f32()) {
+                    (Ok(a), Ok(b), Ok(c)) => GemmJob {
+                        ta: g.ta,
+                        tb: g.tb,
+                        m: g.m,
+                        n: g.n,
+                        k: g.k,
+                        alpha: g.alpha as f32,
+                        beta: g.beta as f32,
+                        a,
+                        b,
+                        c,
+                    },
+                    _ => {
+                        self.metrics.record_error();
+                        done(Response::Err("mixed dtypes in gemm descriptor".into()));
+                        return;
+                    }
+                };
+                self.batcher.submit_with(
+                    hint,
+                    job,
+                    Box::new(move |r| match r {
+                        Ok(v) => done(Response::Ok(Tensor::F32(v))),
+                        Err(e) => done(Response::Err(format!("{e:#}"))),
+                    }),
+                );
+            }
+            other => {
+                // f64 gemm / gemv / control: the blocking handle() on a
+                // short-lived thread. A spawn failure (fd/thread
+                // exhaustion) drops `done` un-invoked; the connection
+                // writer detects the dropped completion and errors the
+                // request out rather than hanging.
+                let router = Arc::clone(self);
+                let _ = std::thread::Builder::new()
+                    .name("blas-req".into())
+                    .spawn(move || done(router.handle(other)));
+            }
+        }
+    }
+
     fn dispatch(&self, req: Request) -> Result<Response> {
         match req {
             Request::Ping => Ok(Response::OkText("pong".into())),
-            Request::Stats => Ok(Response::OkText(format!(
-                "{} queue_depth={}",
-                self.metrics.report(),
-                self.batcher.depth()
-            ))),
+            Request::Stats => {
+                let mut rep = self.metrics.snapshot();
+                rep.queue_depth = self.batcher.depth() as u64;
+                Ok(Response::Stats(rep))
+            }
             Request::Shutdown => Ok(Response::OkText("bye".into())),
+            Request::Hello { .. } => {
+                // Version negotiation is a connection-level exchange; the
+                // server answers it before routing. Reaching here means a
+                // client sent hello mid-stream.
+                bail!("hello must be the first frame on a connection")
+            }
             Request::Gemm(g) => {
-                // Wire-decoded frames are size-checked already; guard
-                // hand-built descriptors so both arms err, not panic (a
-                // panic in the batcher worker would wedge the f32 queue).
+                validate_gemm(&g)?;
                 let (ar, ac) = if g.ta.is_trans() { (g.k, g.m) } else { (g.m, g.k) };
                 let (br, bc) = if g.tb.is_trans() { (g.n, g.k) } else { (g.k, g.n) };
-                ensure!(g.a.len() == ar * ac, "gemm A payload {} != {ar}x{ac}", g.a.len());
-                ensure!(g.b.len() == br * bc, "gemm B payload {} != {br}x{bc}", g.b.len());
-                ensure!(g.c.len() == g.m * g.n, "gemm C payload {} != m·n", g.c.len());
                 match g.dtype() {
                     // f32: the serving-style traffic class — route to a
                     // per-chip Epiphany batcher queue (coalescing + FIFO).
@@ -174,13 +236,26 @@ impl Router {
     }
 }
 
+/// Validate a gemm descriptor's payload sizes. Wire-decoded frames are
+/// size-checked already; this guards hand-built descriptors so both
+/// dispatch paths err, not panic (a panic in the batcher worker would
+/// wedge the f32 queue).
+fn validate_gemm(g: &GemmWire) -> Result<()> {
+    let (ar, ac) = if g.ta.is_trans() { (g.k, g.m) } else { (g.m, g.k) };
+    let (br, bc) = if g.tb.is_trans() { (g.n, g.k) } else { (g.k, g.n) };
+    ensure!(g.a.len() == ar * ac, "gemm A payload {} != {ar}x{ac}", g.a.len());
+    ensure!(g.b.len() == br * bc, "gemm B payload {} != {br}x{bc}", g.b.len());
+    ensure!(g.c.len() == g.m * g.n, "gemm C payload {} != m·n", g.c.len());
+    Ok(())
+}
+
 /// Route classification used by tests and docs.
 pub fn route_of(req: &Request) -> &'static str {
     match req {
         Request::Gemm(g) if g.dtype() == Dtype::F32 => "epiphany-queue",
         Request::Gemm(_) => "epiphany-direct",
         Request::Gemv(_) => "host-pool",
-        Request::Ping | Request::Stats | Request::Shutdown => "control",
+        Request::Ping | Request::Stats | Request::Shutdown | Request::Hello { .. } => "control",
     }
 }
 
@@ -346,6 +421,80 @@ mod tests {
         let y = resp.into_f32().unwrap();
         assert_eq!(y[0], 21.0);
         assert_eq!(y[3], 43.0);
+    }
+
+    #[test]
+    fn stats_response_is_typed() {
+        let r = router();
+        let _ = r.handle(Request::Ping);
+        match r.handle(Request::Stats) {
+            Response::Stats(s) => {
+                assert_eq!(s.queue_depth, 0, "drained between requests");
+                // And the rendered line keeps the legacy labels.
+                assert!(s.to_string().contains("requests="));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_mid_stream_is_an_error() {
+        let r = router();
+        assert!(matches!(r.handle(Request::Hello { version: 2 }), Response::Err(_)));
+        assert_eq!(route_of(&Request::Hello { version: 2 }), "control");
+    }
+
+    #[test]
+    fn dispatch_async_fires_completions_for_every_class() {
+        let r = Arc::new(router());
+        let (m, n, k) = (32, 16, 24);
+        let a = Mat::<f32>::randn(m, k, 50);
+        let b = Mat::<f32>::randn(k, n, 51);
+        let sgemm = Request::sgemm(
+            Trans::N,
+            Trans::N,
+            m,
+            n,
+            k,
+            1.0,
+            0.0,
+            a.as_slice().to_vec(),
+            b.as_slice().to_vec(),
+            vec![0.0; m * n],
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        for (tag, req) in [(0u8, sgemm.clone()), (1, Request::Ping), (2, sgemm)] {
+            let tx = tx.clone();
+            r.dispatch_async(
+                req,
+                Box::new(move |resp| {
+                    tx.send((tag, resp)).unwrap();
+                }),
+            );
+        }
+        drop(tx);
+        let mut got: Vec<(u8, Response)> = rx.iter().collect();
+        assert_eq!(got.len(), 3, "every completion fired exactly once");
+        got.sort_by_key(|(t, _)| *t);
+        let mut want = Mat::<f64>::zeros(m, n);
+        crate::blis::level3::gemm_host(
+            Trans::N,
+            Trans::N,
+            1.0,
+            a.cast::<f64>().view(),
+            b.cast::<f64>().view(),
+            0.0,
+            &mut want,
+        );
+        for (tag, resp) in got {
+            match tag {
+                1 => assert!(matches!(resp, Response::OkText(s) if s == "pong")),
+                _ => {
+                    let out = Mat::from_col_major(m, n, &resp.into_f32().unwrap());
+                    assert!(max_scaled_err(out.view(), want.view()) < 1e-5);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,20 +1,51 @@
 //! The TCP front end: accept loop + per-connection threads over the
 //! router. (std::net blocking I/O with a thread per connection — the
 //! request path stays pure rust, no async runtime is available offline.)
+//!
+//! Connections start in wire **v1**: strictly request → response, one
+//! frame at a time, framed incrementally through a
+//! [`FrameAccumulator`] so a dribbling client can't wedge its thread
+//! mid-read. A client that opens with `Hello{version}` upgrades to
+//! **v2** ([`super::protocol`]'s correlation-id framing), which splits
+//! the connection into a reader and a writer thread:
+//!
+//! * the reader admits up to [`ServerConfig::max_in_flight`] requests
+//!   into the connection's window (beyond it: a `TooManyInFlight` error
+//!   response, without execution) and hands them to
+//!   [`Router::dispatch_async`];
+//! * completions land on the writer via a channel and are written
+//!   **out of order**, tagged by correlation id;
+//! * a request carrying a deadline budget that expires before its
+//!   completion gets a `DeadlineExceeded` error; the late result is
+//!   abandoned safely when it eventually lands.
+//!
+//! Shutdown drains gracefully: [`BlasServer::stop`] stops accepting,
+//! shuts the read half of every live connection (its reader sees a
+//! clean EOF and stops admitting), waits for the writers to flush every
+//! in-flight response, and joins every connection thread — nothing
+//! leaks.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::protocol::{read_frame, write_frame, Request, Response};
+use super::protocol::{
+    write_frame, FrameAccumulator, Request, Response, DEFAULT_MAX_FRAME_LEN, PROTOCOL_V1,
+    PROTOCOL_V2,
+};
 use super::router::Router;
 use crate::blis::Blas;
 use crate::epiphany::kernel::KernelGeometry;
 use crate::epiphany::timing::CalibratedModel;
 use crate::host::pool::{ChipPool, ShardPolicy};
 use crate::host::service::ServiceBackend;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub use super::client::{BlasClient, Pending};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -28,6 +59,13 @@ pub struct ServerConfig {
     /// Simulated Epiphany chips to boot (each with its own service loop
     /// and HH-RAM window; values below 1 are treated as 1).
     pub chips: usize,
+    /// Per-connection pipelining window on v2 connections: at most this
+    /// many requests admitted concurrently; beyond it the server answers
+    /// `TooManyInFlight` without executing (values below 1 read as 1).
+    pub max_in_flight: usize,
+    /// Largest accepted frame body in bytes — a hostile length prefix
+    /// dies before any allocation.
+    pub max_frame_len: usize,
 }
 
 impl Default for ServerConfig {
@@ -39,8 +77,24 @@ impl Default for ServerConfig {
             backend: ServiceBackend::Simulator,
             batch: BatchPolicy::default(),
             chips: 1,
+            max_in_flight: 32,
+            max_frame_len: DEFAULT_MAX_FRAME_LEN,
         }
     }
+}
+
+/// The per-connection knobs, copied out of [`ServerConfig`].
+#[derive(Clone, Copy)]
+struct ConnLimits {
+    max_in_flight: usize,
+    max_frame_len: usize,
+}
+
+/// A live connection as the accept loop tracks it: the stream half used
+/// to interrupt its reader on stop, and the thread to join.
+struct ConnEntry {
+    stream: TcpStream,
+    join: std::thread::JoinHandle<()>,
 }
 
 /// A running BLAS server.
@@ -48,6 +102,7 @@ pub struct BlasServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<ConnEntry>>>,
     /// The server's metrics sink (shared with the router and batchers).
     pub metrics: Arc<Metrics>,
 }
@@ -66,12 +121,18 @@ impl BlasServer {
         let metrics = Arc::new(Metrics::new());
         let batcher = Batcher::spawn(Arc::clone(&blas), config.batch, Arc::clone(&metrics));
         let router = Arc::new(Router::new(blas, batcher, Arc::clone(&metrics)));
+        let limits = ConnLimits {
+            max_in_flight: config.max_in_flight.max(1),
+            max_frame_len: config.max_frame_len.max(64),
+        };
 
         let listener = TcpListener::bind(&config.addr)
             .with_context(|| format!("binding {}", config.addr))?;
         let local_addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop_accept = Arc::clone(&stop);
+        let conns: Arc<Mutex<Vec<ConnEntry>>> = Arc::new(Mutex::new(Vec::new()));
+        let conns_accept = Arc::clone(&conns);
 
         let accept_thread = std::thread::Builder::new().name("blas-accept".into()).spawn(move || {
             for conn in listener.incoming() {
@@ -80,20 +141,37 @@ impl BlasServer {
                 }
                 match conn {
                     Ok(stream) => {
+                        let registry_half = match stream.try_clone() {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
                         let router = Arc::clone(&router);
                         let stop_conn = Arc::clone(&stop_accept);
-                        let _ = std::thread::Builder::new().name("blas-conn".into()).spawn(
+                        let spawned = std::thread::Builder::new().name("blas-conn".into()).spawn(
                             move || {
-                                let _ = serve_connection(stream, &router, &stop_conn);
+                                let _ = serve_connection(stream, router, stop_conn, limits);
                             },
                         );
+                        if let Ok(join) = spawned {
+                            let mut cs = conns_accept.lock().unwrap();
+                            // Prune finished threads so the registry
+                            // tracks live connections, not history.
+                            cs.retain(|c| !c.join.is_finished());
+                            cs.push(ConnEntry { stream: registry_half, join });
+                        }
                     }
                     Err(_) => break,
                 }
             }
         })?;
 
-        Ok(BlasServer { local_addr, stop, accept_thread: Some(accept_thread), metrics })
+        Ok(BlasServer {
+            local_addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+            metrics,
+        })
     }
 
     /// The bound listen address (resolves port 0 to the real port).
@@ -101,13 +179,22 @@ impl BlasServer {
         self.local_addr
     }
 
-    /// Stop accepting and join the accept thread.
+    /// Graceful drain: stop accepting, interrupt every live connection's
+    /// reader (shut its read half — a clean EOF, so in-flight responses
+    /// still flush), and join every connection thread.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Nudge the blocking accept with a throwaway connection.
         let _ = TcpStream::connect(self.local_addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        let entries: Vec<ConnEntry> = self.conns.lock().unwrap().drain(..).collect();
+        for e in &entries {
+            let _ = e.stream.shutdown(std::net::Shutdown::Read);
+        }
+        for e in entries {
+            let _ = e.join.join();
         }
     }
 }
@@ -118,61 +205,354 @@ impl Drop for BlasServer {
     }
 }
 
+/// What the v1 frame handler tells the read loop to do next.
+enum V1Flow {
+    Continue,
+    Upgrade,
+    Close,
+}
+
+/// Serve a connection's v1 phase. Returns `Ok(())` only on a clean
+/// close; read-side failures (mid-frame EOF, hostile length prefixes,
+/// socket errors) bump the `io_errors` metric and return the error.
 fn serve_connection(
     mut stream: TcpStream,
-    router: &Router,
-    stop: &AtomicBool,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    limits: ConnLimits,
 ) -> Result<()> {
+    let metrics = Arc::clone(&router.metrics);
+    let mut acc = FrameAccumulator::new(limits.max_frame_len);
+    let mut buf = vec![0u8; 64 * 1024];
     loop {
-        let body = match read_frame(&mut stream) {
-            Ok(b) => b,
-            Err(_) => return Ok(()), // client closed
-        };
-        let req = match Request::decode(&body) {
-            Ok(r) => r,
+        loop {
+            let body = match acc.try_frame() {
+                Ok(Some(b)) => b,
+                Ok(None) => break,
+                Err(e) => {
+                    // Hostile or corrupt length prefix: answer once, then
+                    // kill the connection (resync is impossible).
+                    metrics.record_io_error();
+                    let _ = write_frame(&mut stream, &Response::Err(format!("{e:#}")).encode());
+                    return Err(e);
+                }
+            };
+            match handle_v1_frame(&body, &mut stream, &router, &stop)? {
+                V1Flow::Continue => {}
+                V1Flow::Upgrade => return serve_v2(stream, acc, router, stop, limits),
+                V1Flow::Close => return Ok(()),
+            }
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                if acc.has_partial() {
+                    metrics.record_io_error();
+                    bail!(
+                        "connection closed mid-frame ({} bytes buffered)",
+                        acc.pending_bytes()
+                    );
+                }
+                return Ok(()); // clean close
+            }
+            Ok(n) => acc.extend(&buf[..n]),
             Err(e) => {
-                write_frame(&mut stream, &Response::Err(format!("{e:#}")).encode())?;
-                continue;
+                metrics.record_io_error();
+                return Err(e.into());
+            }
+        }
+    }
+}
+
+fn handle_v1_frame(
+    body: &[u8],
+    stream: &mut TcpStream,
+    router: &Arc<Router>,
+    stop: &AtomicBool,
+) -> Result<V1Flow> {
+    let req = match Request::decode(body) {
+        Ok(r) => r,
+        Err(e) => {
+            write_frame(stream, &Response::Err(format!("{e:#}")).encode())?;
+            return Ok(V1Flow::Continue);
+        }
+    };
+    match req {
+        Request::Hello { version } => {
+            // Negotiate down to what both sides speak; the ack names the
+            // agreed version so old clients can tell what they got.
+            let v = version.clamp(PROTOCOL_V1, PROTOCOL_V2);
+            write_frame(stream, &Response::OkText(format!("hello v{v}")).encode())?;
+            Ok(if v >= PROTOCOL_V2 { V1Flow::Upgrade } else { V1Flow::Continue })
+        }
+        Request::Shutdown => {
+            write_frame(stream, &Response::OkText("bye".into()).encode())?;
+            stop.store(true, Ordering::SeqCst);
+            // Nudge the accept loop so it observes the flag promptly.
+            if let Ok(addr) = stream.local_addr() {
+                let _ = TcpStream::connect(addr);
+            }
+            Ok(V1Flow::Close)
+        }
+        other => {
+            let resp = router.handle(other);
+            write_frame(stream, &resp.encode())?;
+            Ok(V1Flow::Continue)
+        }
+    }
+}
+
+/// What the reader hands the writer thread.
+enum WriterMsg {
+    /// Completion for an admitted correlation id.
+    Done(u32, Response),
+    /// Write through immediately (rejections, decode errors, bye).
+    Direct(u32, Response),
+    /// Reader is done: drain the in-flight window, then exit.
+    Eof,
+}
+
+/// Deadline bookkeeping for the admitted window, shared between the
+/// reader (admission) and the writer (completion/expiry).
+type InFlightMap = Arc<Mutex<HashMap<u32, Option<Instant>>>>;
+
+/// Serve a connection's v2 phase: pipelined reader + out-of-order
+/// writer. `acc` carries whatever bytes arrived coalesced behind the
+/// hello frame.
+fn serve_v2(
+    mut stream: TcpStream,
+    mut acc: FrameAccumulator,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    limits: ConnLimits,
+) -> Result<()> {
+    let metrics = Arc::clone(&router.metrics);
+    let write_half = stream.try_clone().context("cloning stream for the writer")?;
+    let in_flight: InFlightMap = Arc::new(Mutex::new(HashMap::new()));
+    let (tx, rx) = mpsc::channel::<WriterMsg>();
+    let writer = {
+        let in_flight = Arc::clone(&in_flight);
+        let metrics = Arc::clone(&metrics);
+        std::thread::Builder::new()
+            .name("blas-conn-writer".into())
+            .spawn(move || writer_loop(write_half, rx, in_flight, metrics))
+            .context("spawning connection writer")?
+    };
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut result: Result<()> = Ok(());
+    'read: loop {
+        loop {
+            let body = match acc.try_frame() {
+                Ok(Some(b)) => b,
+                Ok(None) => break,
+                Err(e) => {
+                    metrics.record_io_error();
+                    let _ = tx.send(WriterMsg::Direct(0, Response::Err(format!("{e:#}"))));
+                    result = Err(e);
+                    break 'read;
+                }
+            };
+            // Salvage the correlation id even from undecodable frames so
+            // the client can match the error back to a request.
+            let cid_guess = if body.len() >= 7 {
+                u32::from_le_bytes(body[3..7].try_into().unwrap())
+            } else {
+                0
+            };
+            let (cid, deadline_ms, req) = match Request::decode_v2(&body) {
+                Ok(t) => t,
+                Err(e) => {
+                    let _ =
+                        tx.send(WriterMsg::Direct(cid_guess, Response::Err(format!("{e:#}"))));
+                    continue;
+                }
+            };
+            match req {
+                Request::Hello { .. } => {
+                    let _ = tx.send(WriterMsg::Direct(
+                        cid,
+                        Response::Err("hello already negotiated on this connection".into()),
+                    ));
+                }
+                Request::Shutdown => {
+                    let _ = tx.send(WriterMsg::Direct(cid, Response::OkText("bye".into())));
+                    stop.store(true, Ordering::SeqCst);
+                    if let Ok(addr) = stream.local_addr() {
+                        let _ = TcpStream::connect(addr);
+                    }
+                    break 'read; // drain in-flight, then close
+                }
+                other => {
+                    // Admission control under one short lock; execution
+                    // happens outside it.
+                    let admitted = {
+                        let mut infl = in_flight.lock().unwrap();
+                        if infl.len() >= limits.max_in_flight {
+                            metrics.record_rejected_in_flight();
+                            Err(format!(
+                                "TooManyInFlight: window of {} pipelined requests is full",
+                                limits.max_in_flight
+                            ))
+                        } else {
+                            match infl.entry(cid) {
+                                std::collections::hash_map::Entry::Occupied(_) => {
+                                    Err(format!("correlation id {cid} is already in flight"))
+                                }
+                                std::collections::hash_map::Entry::Vacant(slot) => {
+                                    slot.insert(deadline_ms.map(|ms| {
+                                        Instant::now() + Duration::from_millis(ms as u64)
+                                    }));
+                                    Ok(())
+                                }
+                            }
+                        }
+                    };
+                    match admitted {
+                        Err(msg) => {
+                            let _ = tx.send(WriterMsg::Direct(cid, Response::Err(msg)));
+                        }
+                        Ok(()) => {
+                            let tx = tx.clone();
+                            router.dispatch_async(
+                                other,
+                                Box::new(move |resp| {
+                                    let _ = tx.send(WriterMsg::Done(cid, resp));
+                                }),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                if acc.has_partial() {
+                    metrics.record_io_error();
+                    result = Err(anyhow!(
+                        "connection closed mid-frame ({} bytes buffered)",
+                        acc.pending_bytes()
+                    ));
+                }
+                break;
+            }
+            Ok(n) => acc.extend(&buf[..n]),
+            Err(e) => {
+                metrics.record_io_error();
+                result = Err(e.into());
+                break;
+            }
+        }
+    }
+    // Graceful drain: the writer flushes every admitted response (or its
+    // deadline error) before exiting; only then does the thread die.
+    let _ = tx.send(WriterMsg::Eof);
+    drop(tx);
+    let _ = writer.join();
+    result
+}
+
+/// The v2 writer: completions out, tagged by correlation id, in
+/// whatever order they land; overdue deadlines expired proactively.
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<WriterMsg>,
+    in_flight: InFlightMap,
+    metrics: Arc<Metrics>,
+) {
+    let mut draining = false;
+    loop {
+        if draining && in_flight.lock().unwrap().is_empty() {
+            return;
+        }
+        // Sleep until the next message or the nearest deadline.
+        let next_deadline: Option<Instant> =
+            in_flight.lock().unwrap().values().copied().flatten().min();
+        let timeout = match next_deadline {
+            Some(t) => t.saturating_duration_since(Instant::now()),
+            None => Duration::from_millis(200),
+        };
+        let msg = if timeout.is_zero() {
+            None // a deadline is already due: expire before blocking
+        } else {
+            match rx.recv_timeout(timeout) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Every sender is gone with requests still admitted:
+                    // their completions were dropped (worker spawn
+                    // failure). Error them out rather than hang.
+                    let orphans: Vec<u32> =
+                        in_flight.lock().unwrap().drain().map(|(c, _)| c).collect();
+                    for cid in orphans {
+                        let resp =
+                            Response::Err(format!("request {cid} was dropped by the server"));
+                        let _ = write_frame(&mut stream, &resp.encode_v2(cid));
+                    }
+                    return;
+                }
             }
         };
-        if matches!(req, Request::Shutdown) {
-            write_frame(&mut stream, &Response::OkText("bye".into()).encode())?;
-            stop.store(true, Ordering::SeqCst);
-            return Ok(());
+        match msg {
+            Some(WriterMsg::Done(cid, resp)) => {
+                // A cid no longer in the map already expired and was
+                // answered with DeadlineExceeded: the late result is
+                // abandoned safely, nothing hits the socket twice.
+                if let Some(deadline) = in_flight.lock().unwrap().remove(&cid) {
+                    let resp = if deadline.is_some_and(|d| Instant::now() >= d) {
+                        metrics.record_deadline_exceeded();
+                        deadline_response(cid)
+                    } else {
+                        resp
+                    };
+                    if write_frame(&mut stream, &resp.encode_v2(cid)).is_err() {
+                        metrics.record_io_error();
+                        return;
+                    }
+                }
+            }
+            Some(WriterMsg::Direct(cid, resp)) => {
+                if write_frame(&mut stream, &resp.encode_v2(cid)).is_err() {
+                    metrics.record_io_error();
+                    return;
+                }
+            }
+            Some(WriterMsg::Eof) => draining = true,
+            None => {
+                // Expire every overdue request now.
+                let now = Instant::now();
+                let due: Vec<u32> = {
+                    let mut infl = in_flight.lock().unwrap();
+                    let due: Vec<u32> = infl
+                        .iter()
+                        .filter(|(_, d)| d.is_some_and(|t| now >= t))
+                        .map(|(c, _)| *c)
+                        .collect();
+                    for c in &due {
+                        infl.remove(c);
+                    }
+                    due
+                };
+                for cid in due {
+                    metrics.record_deadline_exceeded();
+                    if write_frame(&mut stream, &deadline_response(cid).encode_v2(cid)).is_err() {
+                        metrics.record_io_error();
+                        return;
+                    }
+                }
+            }
         }
-        let resp = router.handle(req);
-        write_frame(&mut stream, &resp.encode())?;
     }
 }
 
-/// Minimal client for examples/tests.
-pub struct BlasClient {
-    stream: TcpStream,
-}
-
-impl BlasClient {
-    /// Open a connection to a running [`BlasServer`].
-    pub fn connect(addr: std::net::SocketAddr) -> Result<BlasClient> {
-        Ok(BlasClient { stream: TcpStream::connect(addr)? })
-    }
-
-    /// One synchronous request/response round trip.
-    pub fn call(&mut self, req: &Request) -> Result<Response> {
-        write_frame(&mut self.stream, &req.encode())?;
-        let body = read_frame(&mut self.stream)?;
-        Response::decode(&body)
-    }
-
-    /// Raw stream access (failure-injection tests hand-roll bad frames).
-    pub fn stream_mut(&mut self) -> &mut TcpStream {
-        &mut self.stream
-    }
+/// The error a request that missed its budget gets back.
+fn deadline_response(cid: u32) -> Response {
+    Response::Err(format!("DeadlineExceeded: request {cid} missed its deadline"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::blis::Trans;
+    use crate::coordinator::protocol::read_frame;
     use crate::linalg::{max_scaled_err, Mat};
 
     fn server() -> BlasServer {
@@ -306,11 +686,14 @@ mod tests {
             let out = Mat::from_col_major(m, n, &cli.call(&req).unwrap().into_f32().unwrap());
             assert!(max_scaled_err(out.view(), want.view()) < 1e-5, "hint {chip}");
         }
-        // Both chips executed work, and the stats report labels them.
+        // Both chips executed work; the typed report carries the counts
+        // and its rendering keeps the per-chip labels.
         match cli.call(&Request::Stats).unwrap() {
-            Response::OkText(s) => {
-                assert!(s.contains("chip0_gemms="), "{s}");
-                assert!(s.contains("chip1_gemms="), "{s}");
+            Response::Stats(s) => {
+                assert!(s.gemms_on(0) >= 1, "{s}");
+                assert!(s.gemms_on(1) >= 1, "{s}");
+                assert!(s.to_string().contains("chip0_gemms="), "{s}");
+                assert!(s.to_string().contains("chip1_gemms="), "{s}");
             }
             other => panic!("{other:?}"),
         }
@@ -322,9 +705,10 @@ mod tests {
         let mut cli = BlasClient::connect(srv.addr()).unwrap();
         let _ = cli.call(&Request::Ping).unwrap();
         match cli.call(&Request::Stats).unwrap() {
-            Response::OkText(s) => {
-                assert!(s.contains("requests="), "{s}");
-                assert!(s.contains("queue_depth="), "{s}");
+            Response::Stats(s) => {
+                let line = s.to_string();
+                assert!(line.contains("requests="), "{line}");
+                assert!(line.contains("queue_depth="), "{line}");
             }
             other => panic!("{other:?}"),
         }
@@ -337,14 +721,139 @@ mod tests {
         // Hand-roll a garbage frame.
         use std::io::Write;
         let body = [99u8, 1, 2, 3];
-        cli.stream.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
-        cli.stream.write_all(&body).unwrap();
-        let resp_body = super::read_frame(&mut cli.stream).unwrap();
+        cli.stream_mut().write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        cli.stream_mut().write_all(&body).unwrap();
+        let resp_body = read_frame(cli.stream_mut()).unwrap();
         assert!(matches!(Response::decode(&resp_body).unwrap(), Response::Err(_)));
         // Connection still usable.
         match cli.call(&Request::Ping).unwrap() {
             Response::OkText(s) => assert_eq!(s, "pong"),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn v2_session_pipelines_out_of_order_waits() {
+        let srv = server();
+        let mut cli = BlasClient::connect_v2(srv.addr()).unwrap();
+        assert_eq!(cli.version(), PROTOCOL_V2);
+        let mut pendings = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..4u64 {
+            let (m, n, k) = (32, 16, 24);
+            let a = Mat::<f32>::randn(m, k, 900 + i);
+            let b = Mat::<f32>::randn(k, n, 901 + i);
+            let mut want = Mat::<f64>::zeros(m, n);
+            crate::blis::level3::gemm_host(
+                Trans::N,
+                Trans::N,
+                1.0,
+                a.cast::<f64>().view(),
+                b.cast::<f64>().view(),
+                0.0,
+                &mut want,
+            );
+            wants.push(want);
+            let req = Request::sgemm(
+                Trans::N,
+                Trans::N,
+                m,
+                n,
+                k,
+                1.0,
+                0.0,
+                a.as_slice().to_vec(),
+                b.as_slice().to_vec(),
+                vec![0.0; m * n],
+            );
+            pendings.push(cli.submit(&req).unwrap());
+        }
+        // Wait in reverse submission order: correlation ids must route
+        // each response to its own request.
+        for (pending, want) in pendings.into_iter().rev().zip(wants.into_iter().rev()) {
+            let out = pending.wait().unwrap().into_f32().unwrap();
+            let out = Mat::from_col_major(32, 16, &out);
+            assert!(max_scaled_err(out.view(), want.view()) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn deadline_zero_is_exceeded_and_ticket_abandoned() {
+        let srv = server();
+        let mut cli = BlasClient::connect_v2(srv.addr()).unwrap();
+        let (m, n, k) = (32, 16, 24);
+        let a = Mat::<f32>::randn(m, k, 70);
+        let b = Mat::<f32>::randn(k, n, 71);
+        let req = Request::sgemm(
+            Trans::N,
+            Trans::N,
+            m,
+            n,
+            k,
+            1.0,
+            0.0,
+            a.as_slice().to_vec(),
+            b.as_slice().to_vec(),
+            vec![0.0; m * n],
+        );
+        // A 0 ms budget expires before any gemm can complete.
+        let p = cli.submit_with_deadline(&req, Some(0)).unwrap();
+        match p.wait().unwrap() {
+            Response::Err(e) => assert!(e.contains("DeadlineExceeded"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        // The connection survives the abandoned ticket and still serves.
+        match cli.call(&Request::Ping).unwrap() {
+            Response::OkText(s) => assert_eq!(s, "pong"),
+            other => panic!("{other:?}"),
+        }
+        assert!(srv.metrics.deadline_exceeded() >= 1);
+    }
+
+    #[test]
+    fn in_flight_window_rejects_beyond_depth() {
+        let srv = BlasServer::start(ServerConfig { max_in_flight: 1, ..Default::default() })
+            .unwrap();
+        let mut cli = BlasClient::connect_v2(srv.addr()).unwrap();
+        // One expensive gemm holds the window...
+        let (m, n, k) = (192, 64, 2048);
+        let a = Mat::<f32>::randn(m, k, 80);
+        let b = Mat::<f32>::randn(k, n, 81);
+        let big = Request::sgemm(
+            Trans::N,
+            Trans::N,
+            m,
+            n,
+            k,
+            1.0,
+            0.0,
+            a.as_slice().to_vec(),
+            b.as_slice().to_vec(),
+            vec![0.0; m * n],
+        );
+        let p1 = cli.submit(&big).unwrap();
+        // ...so the next submit bounces with TooManyInFlight.
+        let p2 = cli.submit(&Request::Ping).unwrap();
+        match p2.wait().unwrap() {
+            Response::Err(e) => assert!(e.contains("TooManyInFlight"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        // The admitted request still completes fine.
+        assert_eq!(p1.wait().unwrap().into_f32().unwrap().len(), m * n);
+        assert!(srv.metrics.rejected_in_flight() >= 1);
+    }
+
+    #[test]
+    fn stop_drains_live_connections() {
+        let mut srv = server();
+        let cli = BlasClient::connect(srv.addr()).unwrap();
+        let cli2 = BlasClient::connect_v2(srv.addr()).unwrap();
+        // Give the accept loop a beat to register both connections.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        srv.stop();
+        // stop() returns only after every connection thread joined; the
+        // clients observe closed sockets rather than leaked threads.
+        drop(cli);
+        drop(cli2);
     }
 }

@@ -41,6 +41,34 @@ pub struct TableResult {
     pub checks: Vec<Check>,
 }
 
+impl TableResult {
+    /// Machine-readable JSON for the bench artifacts
+    /// (`BENCH_<name>.json` at the repo root): the rendered text plus
+    /// every paper-vs-ours check with its ratio.
+    pub fn to_json(&self, name: &str) -> String {
+        let num = |v: f64| if v.is_finite() { format!("{v}") } else { "null".to_string() };
+        let checks: Vec<String> = self
+            .checks
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"name\":{},\"paper\":{},\"ours\":{},\"ratio\":{}}}",
+                    crate::util::tables::json_string(&c.name),
+                    num(c.paper),
+                    num(c.ours),
+                    num(c.ratio())
+                )
+            })
+            .collect();
+        format!(
+            "{{\"table\":{},\"rendered\":{},\"checks\":[{}]}}",
+            crate::util::tables::json_string(name),
+            crate::util::tables::json_string(&self.rendered),
+            checks.join(",")
+        )
+    }
+}
+
 fn blas(backend: ServiceBackend) -> Result<Blas> {
     Ok(Blas::new(ServiceHandle::spawn(
         backend,

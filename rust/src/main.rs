@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   serve [--addr HOST:PORT] [--backend pjrt|sim|hostref] [--chips N]
+//!         [--max-in-flight W] [--max-frame-len B]
 //!         run the L3 BLAS network service until a Shutdown frame arrives
+//!   client [--addr HOST:PORT] [--reqs N] [--depth D] [--m --n --k]
+//!         drive a serve instance with D-deep pipelined sgemms (wire v2)
 //!   sgemm [--m M] [--n N] [--k K] [--ta n|t] [--tb n|t] [--chips N]
 //!         one accelerated gemm with the wall/projected/paper report
 //!   hpl   [--n N] [--nb NB]
@@ -18,7 +21,7 @@
 use anyhow::{bail, Context, Result};
 use parallella_blas::blis::Trans;
 use parallella_blas::coordinator::server::BlasServer;
-use parallella_blas::coordinator::ServerConfig;
+use parallella_blas::coordinator::{BlasClient, Request, ServerConfig, PROTOCOL_V2};
 use parallella_blas::epiphany::kernel::KernelGeometry;
 use parallella_blas::epiphany::timing::CalibratedModel;
 use parallella_blas::epiphany::Chip;
@@ -105,15 +108,20 @@ fn main() -> Result<()> {
         "serve" => {
             let (_, sb) = backend_of(&args)?;
             let chips = args.usize("chips", 1)?.max(1);
+            let defaults = ServerConfig::default();
             let cfg = ServerConfig {
                 addr: args.get("addr").unwrap_or("127.0.0.1:7700").to_string(),
                 backend: sb,
                 batch: Default::default(),
                 chips,
+                max_in_flight: args.usize("max-in-flight", defaults.max_in_flight)?,
+                max_frame_len: args.usize("max-frame-len", defaults.max_frame_len)?,
             };
+            let window = cfg.max_in_flight;
             let srv = BlasServer::start(cfg)?;
             println!(
-                "parallella-blas serving on {} with {chips} chip(s) \
+                "parallella-blas serving on {} with {chips} chip(s), \
+                 {window} in-flight per connection \
                  (send a Shutdown frame or Ctrl-C to stop)",
                 srv.addr()
             );
@@ -121,6 +129,58 @@ fn main() -> Result<()> {
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
+        }
+        "client" => {
+            let addr = args.get("addr").unwrap_or("127.0.0.1:7700").to_string();
+            let reqs = args.usize("reqs", 64)?.max(1);
+            let depth = args.usize("depth", 8)?.max(1);
+            let m = args.usize("m", 96)?;
+            let n = args.usize("n", 64)?;
+            let k = args.usize("k", 96)?;
+            let mut cli = BlasClient::connect_v2(&*addr)
+                .with_context(|| format!("connecting to {addr}"))?;
+            if cli.version() < PROTOCOL_V2 {
+                println!("server only speaks wire v1; falling back to serial calls");
+            }
+            let a = Mat::<f32>::randn(m, k, 1);
+            let b = Mat::<f32>::randn(k, n, 2);
+            let req = Request::sgemm(
+                Trans::N,
+                Trans::N,
+                m,
+                n,
+                k,
+                1.0,
+                0.0,
+                a.as_slice().to_vec(),
+                b.as_slice().to_vec(),
+                vec![0.0; m * n],
+            );
+            let t0 = std::time::Instant::now();
+            if cli.version() >= PROTOCOL_V2 {
+                // Sliding window: keep `depth` requests on the wire.
+                let mut window = std::collections::VecDeque::new();
+                for _ in 0..reqs {
+                    while window.len() >= depth {
+                        let _ = window.pop_front().unwrap().wait()?.into_f32()?;
+                    }
+                    window.push_back(cli.submit(&req)?);
+                }
+                while let Some(p) = window.pop_front() {
+                    let _ = p.wait()?.into_f32()?;
+                }
+            } else {
+                for _ in 0..reqs {
+                    let _ = cli.call(&req)?.into_f32()?;
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let gflops = 2.0 * (m * n * k * reqs) as f64 / dt / 1e9;
+            println!(
+                "client: {reqs} sgemm {m}x{n}x{k} at depth {depth}: \
+                 {dt:.3}s ({:.1} req/s, {gflops:.3} GF)",
+                reqs as f64 / dt
+            );
         }
         "sgemm" => {
             let (bk, _) = backend_of(&args)?;
@@ -203,7 +263,9 @@ fn print_help() {
          \n\
          commands:\n\
          \u{20} serve   [--addr H:P] [--backend sim|pjrt|hostref] [--chips N]\n\
-         \u{20}                                                     run the network BLAS service\n\
+         \u{20}         [--max-in-flight W] [--max-frame-len B]     run the network BLAS service\n\
+         \u{20} client  [--addr H:P] [--reqs N] [--depth D] [--m --n --k]\n\
+         \u{20}                                                     pipelined v2 load generator\n\
          \u{20} sgemm   [--m --n --k --ta --tb --backend --chips]   one gemm + report\n\
          \u{20} hpl     [--n --nb --backend]                        HPL Linpack run\n\
          \u{20} table   <1..7> [--full]                             regenerate a paper table\n\

@@ -6,7 +6,18 @@
 //! for the paper-table comparisons (the projected-Parallella numbers come
 //! from the calibrated model, not from wall-clock).
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+/// Write a bench's machine-readable output to `BENCH_<name>.json` at the
+/// repository root (the roadmap's perf-trajectory input) and return the
+/// path. The caller provides already-serialized JSON; content is written
+/// atomically enough for CI (single write).
+pub fn write_bench_json(name: &str, json: &str) -> std::io::Result<PathBuf> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{json}\n"))?;
+    Ok(path)
+}
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]

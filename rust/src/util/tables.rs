@@ -58,6 +58,42 @@ impl Table {
     pub fn print(&self) {
         println!("{}", self.render());
     }
+
+    /// Render to a machine-readable JSON object
+    /// `{"title": .., "headers": [..], "rows": [[..], ..]}` (hand-rolled:
+    /// no serde offline).
+    pub fn to_json(&self) -> String {
+        let cells = |row: &[String]| {
+            let quoted: Vec<String> = row.iter().map(|c| json_string(c)).collect();
+            format!("[{}]", quoted.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| cells(r)).collect();
+        format!(
+            "{{\"title\":{},\"headers\":{},\"rows\":[{}]}}",
+            json_string(&self.title),
+            cells(&self.headers),
+            rows.join(",")
+        )
+    }
+}
+
+/// Quote + escape `s` as a JSON string literal.
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Format a float like the paper's GFLOPS columns.
@@ -95,6 +131,17 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(&["x".into()]);
+    }
+
+    #[test]
+    fn json_rendering_escapes_and_nests() {
+        let mut t = Table::new("T \"q\"", &["a", "b"]);
+        t.row(&["x\n".into(), "1".into()]);
+        let j = t.to_json();
+        assert_eq!(
+            j,
+            "{\"title\":\"T \\\"q\\\"\",\"headers\":[\"a\",\"b\"],\"rows\":[[\"x\\n\",\"1\"]]}"
+        );
     }
 
     #[test]

@@ -89,7 +89,28 @@ fn server_survives_malformed_and_oversized_frames() {
         cli.stream_mut().write_all(&[1u8, 2, 3]).unwrap();
         drop(cli);
     }
-    // 3. Server still serves new clients correctly afterwards.
+    // 3. Hostile 4 GiB length prefix: refused before any allocation, with
+    //    an error response, then the connection is dropped (no resync is
+    //    possible once framing is corrupt).
+    {
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        cli.stream_mut().write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let body = read_frame(cli.stream_mut()).unwrap();
+        match Response::decode(&body).unwrap() {
+            Response::Err(e) => assert!(e.contains("frame length"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        assert!(read_frame(cli.stream_mut()).is_err(), "server must drop the connection");
+    }
+    // 4. Read-side failures were counted, not swallowed (mid-frame
+    //    disconnect + hostile prefix). The disconnect lands on another
+    //    thread, so poll briefly.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while srv.metrics.io_errors() < 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(srv.metrics.io_errors() >= 2, "io_errors = {}", srv.metrics.io_errors());
+    // 5. Server still serves new clients correctly afterwards.
     let mut cli = BlasClient::connect(srv.addr()).unwrap();
     match cli.call(&Request::Ping).unwrap() {
         Response::OkText(s) => assert_eq!(s, "pong"),

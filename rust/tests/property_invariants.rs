@@ -11,7 +11,8 @@
 use parallella_blas::blis::packing::{pack_a, pack_b, pack_c, unpack_c};
 use parallella_blas::blis::Trans;
 use parallella_blas::coordinator::protocol::{
-    strided_len, GemmWire, GemvWire, Opcode, Request, Response, Tensor,
+    strided_len, FrameAccumulator, GemmWire, GemvWire, Opcode, Request, Response, Tensor,
+    PROTOCOL_V1, PROTOCOL_V2,
 };
 use parallella_blas::epiphany::mesh::{ring_core, ring_pos};
 use parallella_blas::epiphany::CORES;
@@ -127,6 +128,9 @@ fn rand_request(
         Opcode::Ping => Request::Ping,
         Opcode::Stats => Request::Stats,
         Opcode::Shutdown => Request::Shutdown,
+        Opcode::Hello => {
+            Request::Hello { version: PROTOCOL_V1 + rng.next_below(3) as u32 }
+        }
         Opcode::Gemm => {
             let (ta, tb) = (trans_of(rng), trans_of(rng));
             let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
@@ -168,6 +172,7 @@ fn requests_equal(a: &Request, b: &Request) -> bool {
         (Request::Ping, Request::Ping)
         | (Request::Stats, Request::Stats)
         | (Request::Shutdown, Request::Shutdown) => true,
+        (Request::Hello { version: a }, Request::Hello { version: b }) => a == b,
         (Request::Gemm(x), Request::Gemm(y)) => {
             x.ta == y.ta
                 && x.tb == y.tb
@@ -242,6 +247,102 @@ fn prop_protocol_round_trip_random() {
                 Ok(back) => requests_equal(&req, &back),
                 Err(_) => false,
             }
+        },
+    );
+}
+
+#[test]
+fn prop_v2_round_trip_cid_and_deadline() {
+    // encode_v2 → decode_v2 identity: the correlation id and optional
+    // deadline budget ride every frame unchanged, payload untouched.
+    forall(
+        Config { cases: 40, seed: 0x51D },
+        |rng| {
+            let m = 1 + rng.next_below(6);
+            let n = 1 + rng.next_below(6);
+            let k = 1 + rng.next_below(6);
+            let op = [Opcode::Gemm, Opcode::Gemv, Opcode::Ping, Opcode::Stats][rng.next_below(4)];
+            let cid = rng.next_u64() as u32;
+            let deadline = match rng.next_below(3) {
+                0 => None,
+                d => Some(d as u32 * 500),
+            };
+            (op, m, n, k, cid, deadline, rng.next_u64())
+        },
+        |&(op, m, n, k, cid, deadline, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let req = rand_request(&mut rng, op, Dtype::F32, m, n, k);
+            let frame = req.encode_v2(cid, deadline);
+            match Request::decode_v2(&frame[4..]) {
+                Ok((c, d, back)) => c == cid && d == deadline && requests_equal(&req, &back),
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_frame_accumulator_every_split_boundary() {
+    // Concatenate a few frames and cut the byte stream at EVERY possible
+    // boundary: the accumulator must yield identical frame bodies no
+    // matter where the reads split.
+    let frames = [
+        Request::Hello { version: PROTOCOL_V2 }.encode(),
+        Request::Ping.encode(),
+        Request::Stats.encode(),
+    ];
+    let stream: Vec<u8> = frames.iter().flatten().copied().collect();
+    let want: Vec<Vec<u8>> = frames.iter().map(|f| f[4..].to_vec()).collect();
+    for cut in 0..=stream.len() {
+        let mut acc = FrameAccumulator::new(1 << 20);
+        let mut got = Vec::new();
+        acc.extend(&stream[..cut]);
+        while let Some(body) = acc.try_frame().unwrap() {
+            got.push(body);
+        }
+        acc.extend(&stream[cut..]);
+        while let Some(body) = acc.try_frame().unwrap() {
+            got.push(body);
+        }
+        assert_eq!(got, want, "cut at byte {cut}");
+        assert!(!acc.has_partial(), "cut at byte {cut} left residue");
+    }
+}
+
+#[test]
+fn prop_frame_accumulator_dribble_equals_coalesced() {
+    // A 1-byte-at-a-time dribble and a single coalesced write must parse
+    // to the same frames, for random gemm/gemv payloads in v2 framing.
+    forall(
+        Config { cases: 20, seed: 0xACC },
+        |rng| {
+            (1 + rng.next_below(5), 1 + rng.next_below(5), 1 + rng.next_below(5), rng.next_u64())
+        },
+        |&(m, n, k, seed)| {
+            let mut rng = XorShiftRng::new(seed);
+            let frames: Vec<Vec<u8>> = (0..3usize)
+                .map(|i| {
+                    let op = [Opcode::Gemm, Opcode::Gemv, Opcode::Ping][i % 3];
+                    rand_request(&mut rng, op, Dtype::F32, m, n, k).encode_v2(i as u32, None)
+                })
+                .collect();
+            let want: Vec<Vec<u8>> = frames.iter().map(|f| f[4..].to_vec()).collect();
+            let stream: Vec<u8> = frames.iter().flatten().copied().collect();
+            let mut dribbled = Vec::new();
+            let mut acc = FrameAccumulator::new(1 << 24);
+            for b in &stream {
+                acc.extend(std::slice::from_ref(b));
+                while let Some(body) = acc.try_frame().unwrap() {
+                    dribbled.push(body);
+                }
+            }
+            let mut coalesced = Vec::new();
+            let mut acc2 = FrameAccumulator::new(1 << 24);
+            acc2.extend(&stream);
+            while let Some(body) = acc2.try_frame().unwrap() {
+                coalesced.push(body);
+            }
+            dribbled == want && coalesced == want && !acc.has_partial() && !acc2.has_partial()
         },
     );
 }

@@ -147,7 +147,10 @@ fn sharded_server_concurrent_clients_with_and_without_hints() {
     // Stats must expose the per-chip execution labels.
     let mut cli = BlasClient::connect(addr).unwrap();
     match cli.call(&Request::Stats).unwrap() {
-        Response::OkText(s) => assert!(s.contains("chip0_gemms="), "{s}"),
+        Response::Stats(s) => {
+            assert!(s.gemms_on(0) + s.gemms_on(1) + s.gemms_on(2) >= 1, "{s}");
+            assert!(s.to_string().contains("chip0_gemms="), "{s}");
+        }
         other => panic!("{other:?}"),
     }
 }
