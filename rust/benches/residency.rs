@@ -1,0 +1,161 @@
+//! Operand-residency bench: what the packed-A panel cache and the wire
+//! buffer pool buy on a serving-style workload (one weight matrix, many
+//! requests).
+//!
+//! Two sections, both written machine-readable to `BENCH_residency.json`:
+//!
+//! * repeated same-A sgemm with the cache off vs on — seconds per pass
+//!   (the hit speedup) and caller-thread allocations per pass (the
+//!   pack-side allocations a verified hit avoids);
+//! * frame decode with the shared wire pool disabled vs enabled —
+//!   allocations per decoded frame body.
+//!
+//! Allocations are counted by a thread-local counting `GlobalAlloc`, so
+//! service-thread noise never pollutes the caller-side numbers.
+
+use parallella_blas::blis::Trans;
+use parallella_blas::coordinator::FrameAccumulator;
+use parallella_blas::linalg::Mat;
+use parallella_blas::mem::BufferPool;
+use parallella_blas::platform::Platform;
+use parallella_blas::util::bench::write_bench_json;
+use parallella_blas::util::tables::Table;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Instant;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Passes every call to the system allocator, counting allocations per
+/// thread on the way.
+struct CountingAlloc;
+
+// SAFETY: delegates verbatim to `System`; the counter bump cannot
+// allocate (const-initialised thread-local `Cell`).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+/// Repeated same-A sgemm against one platform. Returns (seconds/pass,
+/// caller-thread allocations/pass, panel hits, panel misses) over the
+/// timed passes (one untimed warm pass populates the cache).
+fn run_gemm(cache_bytes: usize, passes: usize) -> (f64, f64, u64, u64) {
+    let plat = Platform::builder().panel_cache_bytes(cache_bytes).build().unwrap();
+    let (m, n, k) = (192usize, 64usize, 256usize);
+    let a = Mat::<f32>::randn(m, k, 1);
+    let b = Mat::<f32>::randn(k, n, 2);
+    let mut c = Mat::<f32>::zeros(m, n);
+    plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+    let a0 = allocs();
+    let t0 = Instant::now();
+    for _ in 0..passes {
+        plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64() / passes as f64;
+    let da = (allocs() - a0) as f64 / passes as f64;
+    let (hits, misses) = match plat.blas().panel_cache() {
+        Some(cache) => {
+            let s = cache.stats();
+            (s.hits, s.misses)
+        }
+        None => (0, 0),
+    };
+    (dt, da, hits, misses)
+}
+
+/// Decode `frames` 16 KiB frames through a [`FrameAccumulator`] whose
+/// wire pool retains `retained` free buffers (0 = pooling off: every
+/// frame body is a fresh allocation). Returns allocations per frame on
+/// the decoding thread.
+fn run_frames(retained: usize, frames: usize) -> f64 {
+    let pool = Arc::new(BufferPool::<u8>::new(retained));
+    let mut acc = FrameAccumulator::with_pool(1 << 20, pool);
+    let body = vec![7u8; 16 * 1024];
+    let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&body);
+    acc.extend(&frame);
+    drop(acc.try_frame().unwrap()); // warm: seed the pool / the buffers
+    let a0 = allocs();
+    for _ in 0..frames {
+        acc.extend(&frame);
+        let b = acc.try_frame().unwrap().expect("one whole frame buffered");
+        std::hint::black_box(b.len());
+    }
+    (allocs() - a0) as f64 / frames as f64
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let (passes, frames) = if quick { (2, 64) } else { (8, 512) };
+
+    let mut t = Table::new(
+        "Panel cache: repeated same-A sgemm (192x64x256, simulator)",
+        &["cache", "s/pass", "allocs/pass", "panel hits", "panel misses"],
+    );
+    let (t_off, a_off, _, _) = run_gemm(0, passes);
+    t.row(&[
+        "off".into(),
+        format!("{t_off:.6}"),
+        format!("{a_off:.1}"),
+        "-".into(),
+        "-".into(),
+    ]);
+    let (t_on, a_on, hits, misses) = run_gemm(64 << 20, passes);
+    t.row(&[
+        "on".into(),
+        format!("{t_on:.6}"),
+        format!("{a_on:.1}"),
+        hits.to_string(),
+        misses.to_string(),
+    ]);
+    t.print();
+    let speedup = t_off / t_on;
+    println!(
+        "cache-hit speedup: {speedup:.2}x; caller-thread allocations/request \
+         {a_off:.1} -> {a_on:.1}\n(the hit serves the resident packed panel as a \
+         shared Arc: no pack, no pack-side allocation)\n"
+    );
+
+    let mut ft = Table::new(
+        "Wire pool: 16 KiB frame decode",
+        &["pool", "allocs/frame"],
+    );
+    let f_off = run_frames(0, frames);
+    ft.row(&["off (retain 0)".into(), format!("{f_off:.2}")]);
+    let f_on = run_frames(8, frames);
+    ft.row(&["on (retain 8)".into(), format!("{f_on:.2}")]);
+    ft.print();
+    println!(
+        "pooled frame bodies recycle the previous frame's capacity \
+         ({f_off:.2} -> {f_on:.2} allocs/frame)\n"
+    );
+
+    let json = format!(
+        "{{\"bench\":\"residency\",\"quick\":{quick},\"gemm\":{},\
+         \"frame_decode\":{},\"hit_speedup\":{speedup:.3},\
+         \"allocs_per_request_off\":{a_off:.1},\"allocs_per_request_on\":{a_on:.1},\
+         \"panel_hits\":{hits},\"panel_misses\":{misses},\
+         \"frame_allocs_unpooled\":{f_off:.2},\"frame_allocs_pooled\":{f_on:.2}}}",
+        t.to_json(),
+        ft.to_json(),
+    );
+    let path = write_bench_json("residency", &json).expect("write bench json");
+    println!("wrote {}", path.display());
+}

@@ -14,13 +14,14 @@
 //! single-chip result is bit-identical to the pre-pool backend.
 
 use super::op::{BlasOp, Element, Route, Ticket};
-use super::packing::{pack_a, pack_b, pack_c, unpack_c};
+use super::packing::{pack_a, pack_b_into, pack_c_into, unpack_c};
 use super::params::{BlisContext, Trans};
 use crate::epiphany::timing::WalkClass;
 use crate::host::pool::{ChipPool, ShardPolicy};
 use crate::host::projection::ProjectionParams;
 use crate::host::service::ServiceHandle;
 use crate::linalg::{Mat, MatMut, MatRef};
+use crate::mem::{hash_operand, PanelCache};
 use anyhow::{anyhow, ensure, Result};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -120,6 +121,7 @@ pub struct Blas {
     pub ctx: BlisContext,
     /// Cumulative accounting ledger.
     pub stats: Mutex<BlasStats>,
+    panel_cache: Option<Arc<PanelCache>>,
 }
 
 impl Blas {
@@ -137,7 +139,23 @@ impl Blas {
             policy,
             ctx: BlisContext { mr: g.m, nr: g.n, kc: 0 },
             stats: Mutex::new(BlasStats::default()),
+            panel_cache: None,
         }
+    }
+
+    /// Enable the packed-A panel cache with the given byte budget, or
+    /// disable it with 0 — disabled is the default and keeps the gemm
+    /// driver bit-identical to the pre-cache code path (no hashing, no
+    /// lookups). See [`PanelCache`] for the keying and verify rules.
+    pub fn set_panel_cache(&mut self, budget_bytes: usize) {
+        self.panel_cache =
+            if budget_bytes == 0 { None } else { Some(Arc::new(PanelCache::new(budget_bytes))) };
+    }
+
+    /// The packed-A panel cache, when enabled (its hit/miss/eviction
+    /// counters feed the coordinator's `panel_*` stats).
+    pub fn panel_cache(&self) -> Option<&PanelCache> {
+        self.panel_cache.as_deref()
     }
 
     /// Chip 0's service handle (the whole service for a single-chip pool;
@@ -283,8 +301,24 @@ impl Blas {
         c: &mut Mat<T>,
     ) -> Result<GemmReport> {
         let mut view = c.view_mut();
-        let report =
-            self.gemm_view_with(ShardPolicy::Pinned(chip), ta, tb, alpha, a, b, beta, &mut view)?;
+        self.gemm_view_on(chip, ta, tb, alpha, a, b, beta, &mut view)
+    }
+
+    /// [`Blas::gemm_on`] over a borrowed C view — the batcher's pooled
+    /// staging path, where C lives in a recycled [`crate::mem::BufferPool`]
+    /// buffer rather than an owned `Mat`.
+    pub(crate) fn gemm_view_on<T: Element>(
+        &self,
+        chip: usize,
+        ta: Trans,
+        tb: Trans,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
+    ) -> Result<GemmReport> {
+        let report = self.gemm_view_with(ShardPolicy::Pinned(chip), ta, tb, alpha, a, b, beta, c)?;
         self.stats.lock().unwrap().gemm.merge(&report);
         Ok(report)
     }
@@ -369,13 +403,19 @@ impl Blas {
             ..Default::default()
         };
 
+        // Hash op(A) once per call when the panel cache is enabled (the
+        // per-tile cache keys all derive from it). With the cache off
+        // this is `None` and the driver runs the exact pre-cache path.
+        let a_hash = self.panel_cache.as_ref().map(|_| hash_operand(op_a));
+
         if plan.len() == 1 {
             // Degenerate plan: run serially on the calling thread — the
             // exact pre-pool code path (same timing ledger, and each
             // result tile streams straight back into C instead of being
             // buffered, so peak memory matches the old backend too).
             let (chip, lo, hi) = plan[0];
-            let shard_rep = self.run_shard_streaming(chip, op_a, op_b, alpha, beta, lo, hi, c)?;
+            let shard_rep =
+                self.run_shard_streaming(chip, op_a, op_b, alpha, beta, lo, hi, c, a_hash)?;
             report.calls = shard_rep.calls;
             report.projected_s = shard_rep.projected_s;
             report.wall_s = shard_rep.wall_s;
@@ -388,7 +428,9 @@ impl Blas {
                 let handles: Vec<_> = plan
                     .iter()
                     .map(|&(chip, lo, hi)| {
-                        s.spawn(move || self.run_shard(chip, op_a, op_b, c0, alpha, beta, lo, hi))
+                        s.spawn(move || {
+                            self.run_shard(chip, op_a, op_b, c0, alpha, beta, lo, hi, a_hash)
+                        })
                     })
                     .collect();
                 handles
@@ -452,10 +494,13 @@ impl Blas {
         mut tile: impl FnMut(usize, usize, usize, usize, &[T], WalkClass) -> Result<()>,
     ) -> Result<()> {
         let (mr, nr) = (self.ctx.mr, self.ctx.nr);
+        // One staging buffer for every B panel of the shard: the pack
+        // re-zeroes it per jc tile, so only the first tile allocates.
+        let mut b_panel: Vec<T> = Vec::new();
         for jc in jc_lo..jc_hi {
             let j0 = jc * nr;
             let cols = nr.min(n - j0);
-            let (b_panel, class_b) = pack_b(op_b, j0, cols, nr);
+            let class_b = pack_b_into(&mut b_panel, op_b, j0, cols, nr);
             for ic in 0..BlisContext::tiles(m, mr) {
                 let i0 = ic * mr;
                 let rows = mr.min(m - i0);
@@ -463,6 +508,19 @@ impl Blas {
             }
         }
         Ok(())
+    }
+
+    /// The tile-call residency context for one shard: the panel cache
+    /// (when enabled) with the operand hash and the owning chip.
+    fn residency_for(
+        &self,
+        chip: usize,
+        a_hash: Option<u64>,
+    ) -> Option<(&PanelCache, u64, usize)> {
+        match (&self.panel_cache, a_hash) {
+            (Some(cache), Some(h)) => Some((cache.as_ref(), h, chip)),
+            _ => None,
+        }
     }
 
     /// One shard: the serial tile loop over `jc_lo..jc_hi`, every
@@ -479,16 +537,20 @@ impl Blas {
         beta: T,
         jc_lo: usize,
         jc_hi: usize,
+        a_hash: Option<u64>,
     ) -> Result<(Vec<TileOut<T>>, GemmReport)> {
         let (m, n, k) = (c0.rows(), c0.cols(), op_a.cols());
         let (mr, nr) = (self.ctx.mr, self.ctx.nr);
         let svc = self.pool.chip(chip);
+        let residency = self.residency_for(chip, a_hash);
         let mut guard = PoolGuard::enter(&self.pool, chip);
         let mut tiles = Vec::new();
+        let mut c_scratch = Vec::new();
         let mut rep = GemmReport::default();
         self.for_each_tile(m, n, op_b, jc_lo, jc_hi, |i0, rows, j0, cols, b_p, class_b| {
             let data = tile_call(
-                svc, op_a, c0, b_p, class_b, alpha, beta, k, mr, nr, i0, rows, j0, cols, &mut rep,
+                svc, op_a, c0, b_p, class_b, alpha, beta, k, mr, nr, i0, rows, j0, cols, residency,
+                &mut c_scratch, &mut rep,
             )?;
             guard.calls += 1;
             tiles.push(TileOut { i0, j0, rows, cols, data });
@@ -511,11 +573,14 @@ impl Blas {
         jc_lo: usize,
         jc_hi: usize,
         c: &mut MatMut<'_, T>,
+        a_hash: Option<u64>,
     ) -> Result<GemmReport> {
         let (m, n, k) = (c.rows(), c.cols(), op_a.cols());
         let (mr, nr) = (self.ctx.mr, self.ctx.nr);
         let svc = self.pool.chip(chip);
+        let residency = self.residency_for(chip, a_hash);
         let mut guard = PoolGuard::enter(&self.pool, chip);
+        let mut c_scratch = Vec::new();
         let mut rep = GemmReport::default();
         self.for_each_tile(m, n, op_b, jc_lo, jc_hi, |i0, rows, j0, cols, b_p, cb| {
             let data = tile_call(
@@ -533,6 +598,8 @@ impl Blas {
                 rows,
                 j0,
                 cols,
+                residency,
+                &mut c_scratch,
                 &mut rep,
             )?;
             guard.calls += 1;
@@ -556,9 +623,18 @@ impl Blas {
     }
 }
 
-/// One µ-kernel tile call: pack the A panel and the C tile (B is packed
-/// once per jc tile by the caller), cross `svc`, and accumulate the
-/// crossing's timing into `rep`. Returns the padded result tile.
+/// The A panel one tile call reads: freshly packed and owned, or a
+/// shared resident panel served by the [`PanelCache`].
+enum APanel<T> {
+    Owned(Vec<T>),
+    Cached(Arc<Vec<T>>),
+}
+
+/// One µ-kernel tile call: stage the A panel (a verified [`PanelCache`]
+/// hit skips `pack_a` entirely) and the C tile (into the shard's reused
+/// `c_scratch` staging buffer; B is packed once per jc tile by the
+/// caller), cross `svc`, and accumulate the crossing's timing into
+/// `rep`. Returns the padded result tile.
 fn tile_call<T: Element>(
     svc: &ServiceHandle,
     op_a: MatRef<'_, T>,
@@ -574,15 +650,31 @@ fn tile_call<T: Element>(
     rows: usize,
     j0: usize,
     cols: usize,
+    residency: Option<(&PanelCache, u64, usize)>,
+    c_scratch: &mut Vec<T>,
     rep: &mut GemmReport,
 ) -> Result<Vec<T>> {
-    let (a_panel, class_a) = pack_a(op_a, i0, rows, mr);
-    let c_tile = pack_c(c_read, i0, j0, rows, cols, mr, nr);
+    let (staged, class_a) = match residency {
+        Some((cache, a_hash, chip)) => {
+            let (panel, class) = cache.get_or_pack(a_hash, chip, op_a, i0, rows, mr);
+            (APanel::Cached(panel), class)
+        }
+        None => {
+            let (panel, class) = pack_a(op_a, i0, rows, mr);
+            (APanel::Owned(panel), class)
+        }
+    };
+    let a_panel: &[T] = match &staged {
+        APanel::Owned(v) => v,
+        APanel::Cached(p) => p,
+    };
+    pack_c_into(c_scratch, c_read, i0, j0, rows, cols, mr, nr);
     let mut params = ProjectionParams::kernel_service(k);
     params.class_a = class_a;
     params.class_b = class_b;
     params.blis = true;
-    let (data, resp) = T::service_gemm(svc, alpha, &a_panel, b_panel, beta, &c_tile, params)?;
+    let (data, resp) =
+        T::service_gemm(svc, alpha, a_panel, b_panel, beta, c_scratch.as_slice(), params)?;
     rep.projected_s += resp.projection.total_s;
     rep.wall_s += resp.wall_s;
     rep.calls += 1;
@@ -754,6 +846,31 @@ mod tests {
             assert_eq!(r1.chips, 1);
             assert_eq!(r4.chips, 4);
         }
+    }
+
+    #[test]
+    fn panel_cache_on_matches_off_and_hits() {
+        // 200×300, K=100 → 2 row tiles × 2 column tiles: within one gemm
+        // the second jc tile re-reads both A panels, and the second gemm
+        // hits every tile. Results must stay bit-identical to cache-off.
+        let mut b_on = blas();
+        b_on.set_panel_cache(8 << 20);
+        let b_off = blas();
+        let (m, n, k) = (200, 300, 100);
+        let a = Mat::<f32>::randn(m, k, 40);
+        let b = Mat::<f32>::randn(k, n, 41);
+        let c0 = Mat::<f32>::randn(m, n, 42);
+        for pass in 0..2 {
+            let mut c_on = c0.clone();
+            let mut c_off = c0.clone();
+            b_on.sgemm(Trans::N, Trans::N, 1.5, a.view(), b.view(), -0.5, &mut c_on).unwrap();
+            b_off.sgemm(Trans::N, Trans::N, 1.5, a.view(), b.view(), -0.5, &mut c_off).unwrap();
+            assert_eq!(c_on.as_slice(), c_off.as_slice(), "pass {pass}");
+        }
+        let s = b_on.panel_cache().unwrap().stats();
+        assert_eq!((s.misses, s.hits), (2, 6), "2 first-sight packs, 6 resident hits");
+        assert_eq!(s.entries, 2);
+        assert!(b_off.panel_cache().is_none(), "cache defaults to off");
     }
 
     #[test]

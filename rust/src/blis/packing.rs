@@ -47,8 +47,25 @@ pub fn pack_b<T: Real>(
     cols: usize,
     n_tile: usize,
 ) -> (Vec<T>, WalkClass) {
+    let mut out = Vec::new();
+    let class = pack_b_into(&mut out, op_b, j0, cols, n_tile);
+    (out, class)
+}
+
+/// [`pack_b`] into a caller-owned staging buffer (cleared and re-zeroed
+/// to exactly `k × n_tile`), so the gemm driver can reuse one buffer's
+/// capacity across every `jc` column tile instead of allocating per
+/// panel. Same bytes, same walk class as [`pack_b`].
+pub fn pack_b_into<T: Real>(
+    out: &mut Vec<T>,
+    op_b: MatRef<'_, T>,
+    j0: usize,
+    cols: usize,
+    n_tile: usize,
+) -> WalkClass {
     let k = op_b.rows();
-    let mut out = vec![T::ZERO; k * n_tile];
+    out.clear();
+    out.resize(k * n_tile, T::ZERO);
     if op_b.col_stride() == 1 {
         // op(B) row-contiguous (i.e. B was transposed): each output row is
         // a memcpy from a row of op(B). op(B) = Bᵀ view has rs = ldb,
@@ -58,7 +75,7 @@ pub fn pack_b<T: Real>(
             let src = row_view.col_slice(l, j0, cols);
             out[l * n_tile..l * n_tile + cols].copy_from_slice(src);
         }
-        (out, WalkClass::Contig)
+        WalkClass::Contig
     } else {
         // Plain B: building row-major panels walks across columns
         // (StridedB cost class).
@@ -67,7 +84,7 @@ pub fn pack_b<T: Real>(
                 out[l * n_tile + j] = op_b.get(l, j0 + j);
             }
         }
-        (out, WalkClass::StridedB)
+        WalkClass::StridedB
     }
 }
 
@@ -81,7 +98,26 @@ pub fn pack_c<T: Real>(
     m_tile: usize,
     n_tile: usize,
 ) -> Vec<T> {
-    let mut out = vec![T::ZERO; m_tile * n_tile];
+    let mut out = Vec::new();
+    pack_c_into(&mut out, c, i0, j0, rows, cols, m_tile, n_tile);
+    out
+}
+
+/// [`pack_c`] into a caller-owned staging buffer (cleared and re-zeroed
+/// to exactly `m_tile × n_tile`), reused across a shard's tile loop so
+/// C staging stops allocating per micro-tile. Same bytes as [`pack_c`].
+pub fn pack_c_into<T: Real>(
+    out: &mut Vec<T>,
+    c: MatRef<'_, T>,
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+    m_tile: usize,
+    n_tile: usize,
+) {
+    out.clear();
+    out.resize(m_tile * n_tile, T::ZERO);
     if c.row_stride() == 1 {
         for j in 0..cols {
             let src = c.col_slice(j0 + j, i0, rows);
@@ -94,7 +130,6 @@ pub fn pack_c<T: Real>(
             }
         }
     }
-    out
 }
 
 /// Write the real region of a µ-kernel result tile back into C.
@@ -157,6 +192,25 @@ mod tests {
         let (panel_t, class_t) = pack_b(bt.t(), 2, 3, 4);
         assert_eq!(class_t, WalkClass::Contig);
         assert_eq!(&panel_t[0..4], &[2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn into_variants_match_and_reuse_capacity() {
+        let b = Mat::<f32>::from_fn(4, 6, |i, j| (10 * i + j) as f32);
+        let (want, want_class) = pack_b(b.view(), 2, 3, 4);
+        let mut buf = Vec::new();
+        let class = pack_b_into(&mut buf, b.view(), 2, 3, 4);
+        assert_eq!((buf.as_slice(), class), (want.as_slice(), want_class));
+        let cap = buf.capacity();
+        let class2 = pack_b_into(&mut buf, b.view(), 0, 3, 4);
+        assert_eq!(class2, want_class);
+        assert_eq!(buf.capacity(), cap, "re-pack must reuse the staging capacity");
+
+        let c0 = Mat::<f64>::from_fn(4, 4, |i, j| (i + 10 * j) as f64);
+        let want_c = pack_c(c0.view(), 1, 1, 2, 2, 3, 3);
+        let mut cbuf = vec![9.0f64]; // dirty, undersized: must be re-zeroed
+        pack_c_into(&mut cbuf, c0.view(), 1, 1, 2, 2, 3, 3);
+        assert_eq!(cbuf, want_c);
     }
 
     #[test]

@@ -21,7 +21,8 @@
 
 use super::metrics::Metrics;
 use crate::blis::{Blas, Trans};
-use crate::linalg::{Mat, MatRef};
+use crate::linalg::{MatMut, MatRef};
+use crate::mem::{BufferPool, PoolStats};
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -151,6 +152,10 @@ struct Shared {
 pub struct Batcher {
     shards: Vec<Arc<Shared>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Recycled staging buffers for the concatenated B/C operands every
+    /// worker builds per batch — shared across chips so a group-sized
+    /// allocation survives from one batch round to the next.
+    staging: Arc<BufferPool<f32>>,
     /// The batching knobs every worker applies.
     pub policy: BatchPolicy,
 }
@@ -160,6 +165,9 @@ impl Batcher {
     /// chip's queue and executes batches pinned to that chip.
     pub fn spawn(blas: Arc<Blas>, policy: BatchPolicy, metrics: Arc<Metrics>) -> Batcher {
         let chips = blas.chips().max(1);
+        // Two staging buffers (B and C concatenations) live per in-flight
+        // batch, one batch per chip — retain exactly that many.
+        let staging = Arc::new(BufferPool::new(2 * chips));
         let mut shards = Vec::with_capacity(chips);
         let mut workers = Vec::with_capacity(chips);
         for chip in 0..chips {
@@ -172,14 +180,21 @@ impl Batcher {
             let shared_w = Arc::clone(&shared);
             let blas_w = Arc::clone(&blas);
             let metrics_w = Arc::clone(&metrics);
+            let staging_w = Arc::clone(&staging);
             let worker = std::thread::Builder::new()
                 .name(format!("gemm-batcher-{chip}"))
-                .spawn(move || worker_loop(shared_w, blas_w, chip, policy, metrics_w))
+                .spawn(move || worker_loop(shared_w, blas_w, chip, policy, metrics_w, staging_w))
                 .expect("spawn batcher worker");
             shards.push(shared);
             workers.push(worker);
         }
-        Batcher { shards, workers, policy }
+        Batcher { shards, workers, staging, policy }
+    }
+
+    /// Counters of the shared staging pool (the batcher's contribution to
+    /// the report's `pool_recycled=` label).
+    pub fn staging_stats(&self) -> PoolStats {
+        self.staging.stats()
     }
 
     /// Number of per-chip queues (= chips in the BLAS pool).
@@ -273,6 +288,7 @@ fn worker_loop(
     chip: usize,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
+    staging: Arc<BufferPool<f32>>,
 ) {
     loop {
         // Wait for work on this chip's queue.
@@ -322,7 +338,7 @@ fn worker_loop(
             let tail = rest.split_off(len);
             let group = std::mem::replace(&mut rest, tail);
             let glen = group.len();
-            execute_group(&blas, chip, group, &metrics);
+            execute_group(&blas, chip, group, &metrics, &staging);
             if glen > 1 {
                 metrics.record_batched(glen);
             }
@@ -333,68 +349,77 @@ fn worker_loop(
 
 /// Run one (possibly coalesced) group on `chip` and fan the results back
 /// out through each job's completion callback.
-fn execute_group(blas: &Blas, chip: usize, group: Vec<Queued>, metrics: &Metrics) {
+fn execute_group(
+    blas: &Blas,
+    chip: usize,
+    group: Vec<Queued>,
+    metrics: &Metrics,
+    staging: &Arc<BufferPool<f32>>,
+) {
     let first = &group[0].job;
     let (m, k) = (first.m, first.k);
     let cols: usize = group.iter().map(|q| q.job.n).sum();
     let result: Result<Vec<Vec<f32>>> = (|| {
-        // Stack op(B) and C along n by concatenating stored columns.
+        // Stack op(B) and C along n by concatenating stored columns, into
+        // recycled staging buffers from the shared pool — a steady stream
+        // of batches stops paying two fresh allocations per crossing.
         // op(B) stored: tb=N ⇒ k×n col-major (concat natural); tb=T ⇒ n×k
-        // stored: concatenate along rows — handled by per-job views below.
+        // stored: concatenate along rows — handled by per-job copies below.
         let a_stored = &first.a;
         let (ar, ac) = if first.ta.is_trans() { (k, m) } else { (m, k) };
         let a_view = MatRef::from_col_major(ar, ac, ar, a_stored);
-        let mut c_cat = Mat::<f32>::zeros(m, cols);
+        let mut c_cat = staging.get(m * cols);
         let mut j0 = 0usize;
         for q in &group {
             let job = &q.job;
             for j in 0..job.n {
-                for i in 0..m {
-                    c_cat.set(i, j0 + j, job.c[j * m + i]);
-                }
+                let dst = (j0 + j) * m;
+                c_cat[dst..dst + m].copy_from_slice(&job.c[j * m..j * m + m]);
             }
             j0 += job.n;
         }
         // Build the concatenated op(B) as a stored matrix matching tb.
-        let b_cat_stored: Mat<f32> = if first.tb.is_trans() {
-            // stored n×k each; stack rows.
-            let mut mcat = Mat::<f32>::zeros(cols, k);
+        let b_cat = if first.tb.is_trans() {
+            // stored n×k each; stack rows into a cols×k buffer.
+            let mut buf = staging.get(cols * k);
             let mut r0 = 0usize;
             for q in &group {
                 let job = &q.job;
                 for j in 0..k {
                     for i in 0..job.n {
-                        mcat.set(r0 + i, j, job.b[j * job.n + i]);
+                        buf[j * cols + r0 + i] = job.b[j * job.n + i];
                     }
                 }
                 r0 += job.n;
             }
-            mcat
+            buf
         } else {
             // stored k×n each; stack columns.
-            let mut mcat = Mat::<f32>::zeros(k, cols);
+            let mut buf = staging.get(k * cols);
             let mut c0 = 0usize;
             for q in &group {
                 let job = &q.job;
                 for j in 0..job.n {
-                    for i in 0..k {
-                        mcat.set(i, c0 + j, job.b[j * k + i]);
-                    }
+                    let dst = (c0 + j) * k;
+                    buf[dst..dst + k].copy_from_slice(&job.b[j * k..j * k + k]);
                 }
                 c0 += job.n;
             }
-            mcat
+            buf
         };
+        let (br, bc) = if first.tb.is_trans() { (cols, k) } else { (k, cols) };
+        let b_view = MatRef::from_col_major(br, bc, br, &b_cat);
         let t0 = std::time::Instant::now();
-        let rep = blas.gemm_on(
+        let mut c_view = MatMut::from_col_major(m, cols, m, &mut c_cat);
+        let rep = blas.gemm_view_on(
             chip,
             first.ta,
             first.tb,
             first.alpha,
             a_view,
-            b_cat_stored.view(),
+            b_view,
             first.beta,
-            &mut c_cat,
+            &mut c_view,
         )?;
         metrics.record_request(
             super::metrics::RequestKind::Gemm,
@@ -402,17 +427,14 @@ fn execute_group(blas: &Blas, chip: usize, group: Vec<Queued>, metrics: &Metrics
             rep.flops,
         );
         metrics.record_chip_request(chip);
-        // Split back per job.
+        // Split back per job (owned Vecs handed to the completions; the
+        // staging buffers recycle on drop).
         let mut outs = Vec::with_capacity(group.len());
         let mut j0 = 0usize;
         for q in &group {
             let job = &q.job;
             let mut out = vec![0.0f32; m * job.n];
-            for j in 0..job.n {
-                for i in 0..m {
-                    out[j * m + i] = c_cat.get(i, j0 + j);
-                }
-            }
+            out.copy_from_slice(&c_cat[j0 * m..(j0 + job.n) * m]);
             outs.push(out);
             j0 += job.n;
         }
@@ -441,7 +463,7 @@ mod tests {
     use crate::epiphany::timing::CalibratedModel;
     use crate::host::pool::{ChipPool, ShardPolicy};
     use crate::host::service::{ServiceBackend, ServiceHandle};
-    use crate::linalg::max_scaled_err;
+    use crate::linalg::{max_scaled_err, Mat};
     use crate::util::proptest::{forall, Config};
 
     fn batcher() -> (Batcher, Arc<Metrics>) {
@@ -571,6 +593,21 @@ mod tests {
             let got = Mat::from_col_major(32, 8, &rx.recv().unwrap().unwrap());
             assert!(max_scaled_err(got.view(), want.view()) < 1e-5);
         }
+    }
+
+    #[test]
+    fn staging_pool_recycles_across_batches() {
+        let (b, _) = batcher();
+        for i in 0..3 {
+            let j = job(16, 4, 8, 400 + i, None);
+            let got = b.submit(j).recv().unwrap().unwrap();
+            assert_eq!(got.len(), 16 * 4);
+        }
+        // Each batch stages B and C once; after the first batch returns
+        // its buffers, later same-shape batches re-use them.
+        let s = b.staging_stats();
+        assert!(s.gets >= 6, "three batches stage twice each: {s:?}");
+        assert!(s.recycled >= 2, "staging buffers should recycle: {s:?}");
     }
 
     #[test]

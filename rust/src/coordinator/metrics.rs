@@ -48,6 +48,16 @@ pub struct StatsReport {
     pub gemv_requests: u64,
     /// Jobs that executed as part of a coalesced batch.
     pub batched: u64,
+    /// Packed-A panels served from the residency cache (filled in by the
+    /// router from [`crate::mem::PanelCache`]; 0 when the cache is off).
+    pub panel_hits: u64,
+    /// Packed-A panel cache misses (each one ran a `pack_a`).
+    pub panel_misses: u64,
+    /// Panels evicted to hold the cache under its byte budget.
+    pub panel_evictions: u64,
+    /// Buffer-pool gets served by a recycled allocation (wire bodies +
+    /// batcher staging; filled in by the router).
+    pub pool_recycled: u64,
     /// Seconds since the metrics sink was created.
     pub uptime_s: f64,
     /// Mean request latency in seconds.
@@ -78,7 +88,8 @@ impl std::fmt::Display for StatsReport {
             f,
             "requests={} errors={} gemm={} gemv={} batched={} uptime_s={:.1} \
              mean_latency_s={:.6} achieved_gflops={:.3} queue_depth={} io_errors={} \
-             deadline_exceeded={} rejected_in_flight={} p50_s={:.6} p99_s={:.6}",
+             deadline_exceeded={} rejected_in_flight={} panel_hits={} panel_misses={} \
+             panel_evictions={} pool_recycled={} p50_s={:.6} p99_s={:.6}",
             self.requests,
             self.errors,
             self.gemm_requests,
@@ -91,6 +102,10 @@ impl std::fmt::Display for StatsReport {
             self.io_errors,
             self.deadline_exceeded,
             self.rejected_in_flight,
+            self.panel_hits,
+            self.panel_misses,
+            self.panel_evictions,
+            self.pool_recycled,
             self.p50_s,
             self.p99_s,
         )?;
@@ -221,6 +236,12 @@ impl Metrics {
             gemm_requests: m.gemm_requests,
             gemv_requests: m.gemv_requests,
             batched: m.batched,
+            // Residency counters live with the cache/pools, not this sink;
+            // the router overlays them (like queue_depth) before replying.
+            panel_hits: 0,
+            panel_misses: 0,
+            panel_evictions: 0,
+            pool_recycled: 0,
             uptime_s: uptime,
             mean_latency_s: if m.requests > 0 {
                 m.total_latency_s / m.requests as f64
@@ -359,6 +380,10 @@ mod tests {
             "io_errors=1",
             "deadline_exceeded=1",
             "rejected_in_flight=1",
+            "panel_hits=0",
+            "panel_misses=0",
+            "panel_evictions=0",
+            "pool_recycled=0",
             "queue_depth=0",
             "p50_s=",
             "p99_s=",

@@ -55,8 +55,10 @@
 
 use super::metrics::StatsReport;
 use crate::blis::{Dtype, Trans};
+use crate::mem::{BufferPool, PoolVec};
 use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 /// Wire protocol version 1: `[len][tag][dtype][flags][payload]` frames,
 /// strictly request → response per connection.
@@ -870,6 +872,10 @@ impl Response {
                 w.u64(s.gemm_requests);
                 w.u64(s.gemv_requests);
                 w.u64(s.batched);
+                w.u64(s.panel_hits);
+                w.u64(s.panel_misses);
+                w.u64(s.panel_evictions);
+                w.u64(s.pool_recycled);
                 w.scalar(s.uptime_s);
                 w.scalar(s.mean_latency_s);
                 w.scalar(s.achieved_gflops);
@@ -914,6 +920,10 @@ impl Response {
                     gemm_requests: r.u64()?,
                     gemv_requests: r.u64()?,
                     batched: r.u64()?,
+                    panel_hits: r.u64()?,
+                    panel_misses: r.u64()?,
+                    panel_evictions: r.u64()?,
+                    pool_recycled: r.u64()?,
                     uptime_s: r.scalar()?,
                     mean_latency_s: r.scalar()?,
                     achieved_gflops: r.scalar()?,
@@ -962,17 +972,29 @@ impl Response {
 /// with [`FrameAccumulator::try_frame`] — `Ok(None)` until a full frame
 /// has landed, so a dribbling client costs buffering, not a blocked
 /// thread mid-`read_exact`. The length prefix is validated against the
-/// cap **before** any body allocation.
+/// cap **before** any body buffer is drawn, and each popped body is a
+/// [`PoolVec`] whose allocation recycles through a [`BufferPool`] when
+/// the router is done with it — a steady request stream stops paying
+/// one body allocation per frame.
 pub struct FrameAccumulator {
     buf: Vec<u8>,
     max_len: usize,
+    pool: Arc<BufferPool<u8>>,
 }
 
 impl FrameAccumulator {
     /// An empty accumulator that rejects frames longer than `max_len`
-    /// body bytes (see [`DEFAULT_MAX_FRAME_LEN`]).
+    /// body bytes (see [`DEFAULT_MAX_FRAME_LEN`]), recycling bodies
+    /// through a small private pool. Servers share one pool across
+    /// connections via [`FrameAccumulator::with_pool`].
     pub fn new(max_len: usize) -> FrameAccumulator {
-        FrameAccumulator { buf: Vec::new(), max_len }
+        FrameAccumulator::with_pool(max_len, Arc::new(BufferPool::new(8)))
+    }
+
+    /// Like [`FrameAccumulator::new`], but frame bodies are drawn from
+    /// (and, once dropped, returned to) the given shared pool.
+    pub fn with_pool(max_len: usize, pool: Arc<BufferPool<u8>>) -> FrameAccumulator {
+        FrameAccumulator { buf: Vec::new(), max_len, pool }
     }
 
     /// Append bytes as they arrived off the socket.
@@ -983,7 +1005,7 @@ impl FrameAccumulator {
     /// Pop the next complete frame body, `Ok(None)` if more bytes are
     /// needed, or an error for a hostile/corrupt length prefix (shorter
     /// than a frame header, or beyond the cap).
-    pub fn try_frame(&mut self) -> Result<Option<Vec<u8>>> {
+    pub fn try_frame(&mut self) -> Result<Option<PoolVec<u8>>> {
         if self.buf.len() < 4 {
             return Ok(None);
         }
@@ -993,7 +1015,8 @@ impl FrameAccumulator {
         if self.buf.len() < 4 + len {
             return Ok(None);
         }
-        let body = self.buf[4..4 + len].to_vec();
+        let mut body = self.pool.get(len);
+        body.copy_from_slice(&self.buf[4..4 + len]);
         self.buf.drain(..4 + len);
         Ok(Some(body))
     }
@@ -1153,6 +1176,10 @@ mod tests {
             gemm_requests: 5,
             gemv_requests: 2,
             batched: 6,
+            panel_hits: 11,
+            panel_misses: 4,
+            panel_evictions: 1,
+            pool_recycled: 8,
             uptime_s: 1.5,
             mean_latency_s: 0.001,
             achieved_gflops: 2.25,
@@ -1259,6 +1286,22 @@ mod tests {
         assert_eq!(acc.try_frame().unwrap().unwrap(), &f1[4..]);
         assert_eq!(acc.try_frame().unwrap().unwrap(), &f2[4..]);
         assert!(acc.try_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_accumulator_recycles_bodies_through_pool() {
+        let pool = Arc::new(BufferPool::<u8>::new(4));
+        let mut acc = FrameAccumulator::with_pool(MAX_FRAME_LEN, Arc::clone(&pool));
+        let f = tiny_sgemm().encode();
+        acc.extend(&f);
+        let first = acc.try_frame().unwrap().unwrap();
+        assert_eq!(first, &f[4..]);
+        drop(first); // body parks back in the shared pool
+        acc.extend(&f);
+        let second = acc.try_frame().unwrap().unwrap();
+        assert_eq!(second, &f[4..]);
+        let s = pool.stats();
+        assert_eq!((s.gets, s.recycled), (2, 1), "second body re-uses the first's allocation");
     }
 
     #[test]

@@ -11,6 +11,7 @@ use super::metrics::{Metrics, RequestKind};
 use super::protocol::{GemmWire, GemvWire, Request, Response, Tensor};
 use crate::blis::{Blas, Dtype, GemvOp};
 use crate::linalg::{Mat, MatRef, Real};
+use crate::mem::BufferPool;
 use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
 
@@ -18,6 +19,10 @@ use std::sync::Arc;
 pub struct Router {
     batcher: Batcher,
     blas: Arc<Blas>,
+    /// The server's shared wire-frame body pool, when one exists —
+    /// referenced here only so the `Stats` reply can fold its recycle
+    /// count into `pool_recycled=`.
+    wire_pool: Option<Arc<BufferPool<u8>>>,
     /// The metrics sink every dispatch records into.
     pub metrics: Arc<Metrics>,
 }
@@ -25,7 +30,14 @@ pub struct Router {
 impl Router {
     /// Assemble the dispatch stage over a BLAS pool and its batcher.
     pub fn new(blas: Arc<Blas>, batcher: Batcher, metrics: Arc<Metrics>) -> Router {
-        Router { batcher, blas, metrics }
+        Router { batcher, blas, wire_pool: None, metrics }
+    }
+
+    /// Let `Stats` replies account the server's shared wire-frame pool
+    /// alongside the batcher's staging pool.
+    pub fn with_wire_pool(mut self, pool: Arc<BufferPool<u8>>) -> Router {
+        self.wire_pool = Some(pool);
+        self
     }
 
     /// Total jobs queued across every chip's batcher queue.
@@ -112,6 +124,16 @@ impl Router {
             Request::Stats => {
                 let mut rep = self.metrics.snapshot();
                 rep.queue_depth = self.batcher.depth() as u64;
+                // Residency counters live with the cache/pools; overlay
+                // them here like queue_depth.
+                if let Some(cache) = self.blas.panel_cache() {
+                    let cs = cache.stats();
+                    rep.panel_hits = cs.hits;
+                    rep.panel_misses = cs.misses;
+                    rep.panel_evictions = cs.evictions;
+                }
+                rep.pool_recycled = self.batcher.staging_stats().recycled
+                    + self.wire_pool.as_ref().map_or(0, |p| p.recycled());
                 Ok(Response::Stats(rep))
             }
             Request::Shutdown => Ok(Response::OkText("bye".into())),
@@ -432,6 +454,54 @@ mod tests {
                 assert_eq!(s.queue_depth, 0, "drained between requests");
                 // And the rendered line keeps the legacy labels.
                 assert!(s.to_string().contains("requests="));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_surface_residency_counters() {
+        let svc = ServiceHandle::spawn(
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        let mut blas = Blas::new(svc);
+        blas.set_panel_cache(4 << 20);
+        let blas = Arc::new(blas);
+        let metrics = Arc::new(Metrics::new());
+        let batcher =
+            Batcher::spawn(Arc::clone(&blas), BatchPolicy::default(), Arc::clone(&metrics));
+        let r = Router::new(blas, batcher, metrics);
+        let (m, n, k) = (32, 8, 16);
+        let a = Mat::<f32>::randn(m, k, 9);
+        let b = Mat::<f32>::randn(k, n, 10);
+        let req = || {
+            Request::sgemm(
+                Trans::N,
+                Trans::N,
+                m,
+                n,
+                k,
+                1.0,
+                0.0,
+                a.as_slice().to_vec(),
+                b.as_slice().to_vec(),
+                vec![0.0; m * n],
+            )
+        };
+        // Same A twice: the first pass packs (miss), the second hits.
+        r.handle(req()).into_f32().unwrap();
+        r.handle(req()).into_f32().unwrap();
+        match r.handle(Request::Stats) {
+            Response::Stats(s) => {
+                assert!(s.panel_misses >= 1, "{s:?}");
+                assert!(s.panel_hits >= 1, "{s:?}");
+                assert!(s.pool_recycled >= 1, "staging recycles across batches: {s:?}");
+                let line = s.to_string();
+                assert!(line.contains("panel_hits="), "{line}");
+                assert!(line.contains("pool_recycled="), "{line}");
             }
             other => panic!("{other:?}"),
         }

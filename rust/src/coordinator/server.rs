@@ -37,6 +37,7 @@ use crate::epiphany::kernel::KernelGeometry;
 use crate::epiphany::timing::CalibratedModel;
 use crate::host::pool::{ChipPool, ShardPolicy};
 use crate::host::service::ServiceBackend;
+use crate::mem::BufferPool;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::io::Read;
@@ -66,6 +67,10 @@ pub struct ServerConfig {
     /// Largest accepted frame body in bytes — a hostile length prefix
     /// dies before any allocation.
     pub max_frame_len: usize,
+    /// Byte budget for the packed-A panel cache shared by the BLAS pool
+    /// (see [`crate::mem::PanelCache`]). 0 — the default — disables the
+    /// cache and keeps the gemm path bit-identical to a cacheless build.
+    pub panel_cache_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -79,6 +84,7 @@ impl Default for ServerConfig {
             chips: 1,
             max_in_flight: 32,
             max_frame_len: DEFAULT_MAX_FRAME_LEN,
+            panel_cache_bytes: 0,
         }
     }
 }
@@ -117,10 +123,19 @@ impl BlasServer {
             CalibratedModel::default(),
             KernelGeometry::paper(),
         )?;
-        let blas = Arc::new(Blas::with_pool(pool, ShardPolicy::ColumnPanels));
+        let mut blas = Blas::with_pool(pool, ShardPolicy::ColumnPanels);
+        blas.set_panel_cache(config.panel_cache_bytes);
+        let blas = Arc::new(blas);
         let metrics = Arc::new(Metrics::new());
         let batcher = Batcher::spawn(Arc::clone(&blas), config.batch, Arc::clone(&metrics));
-        let router = Arc::new(Router::new(blas, batcher, Arc::clone(&metrics)));
+        // One wire-body pool shared by every connection's accumulator, so
+        // frame allocations recycle across connections, not just within
+        // one; the router reads its counters for `pool_recycled=`.
+        let wire_pool = Arc::new(BufferPool::<u8>::new(32));
+        let router = Arc::new(
+            Router::new(blas, batcher, Arc::clone(&metrics))
+                .with_wire_pool(Arc::clone(&wire_pool)),
+        );
         let limits = ConnLimits {
             max_in_flight: config.max_in_flight.max(1),
             max_frame_len: config.max_frame_len.max(64),
@@ -147,9 +162,11 @@ impl BlasServer {
                         };
                         let router = Arc::clone(&router);
                         let stop_conn = Arc::clone(&stop_accept);
+                        let pool_conn = Arc::clone(&wire_pool);
                         let spawned = std::thread::Builder::new().name("blas-conn".into()).spawn(
                             move || {
-                                let _ = serve_connection(stream, router, stop_conn, limits);
+                                let _ =
+                                    serve_connection(stream, router, stop_conn, limits, pool_conn);
                             },
                         );
                         if let Ok(join) = spawned {
@@ -220,9 +237,10 @@ fn serve_connection(
     router: Arc<Router>,
     stop: Arc<AtomicBool>,
     limits: ConnLimits,
+    wire_pool: Arc<BufferPool<u8>>,
 ) -> Result<()> {
     let metrics = Arc::clone(&router.metrics);
-    let mut acc = FrameAccumulator::new(limits.max_frame_len);
+    let mut acc = FrameAccumulator::with_pool(limits.max_frame_len, wire_pool);
     let mut buf = vec![0u8; 64 * 1024];
     loop {
         loop {

@@ -113,6 +113,7 @@ pub mod experiments;
 pub mod host;
 pub mod hpl;
 pub mod linalg;
+pub mod mem;
 pub mod platform;
 pub mod runtime;
 pub mod util;

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   serve [--addr HOST:PORT] [--backend pjrt|sim|hostref] [--chips N]
-//!         [--max-in-flight W] [--max-frame-len B]
+//!         [--max-in-flight W] [--max-frame-len B] [--panel-cache-mb MB]
 //!         run the L3 BLAS network service until a Shutdown frame arrives
 //!   client [--addr HOST:PORT] [--reqs N] [--depth D] [--m --n --k]
 //!         drive a serve instance with D-deep pipelined sgemms (wire v2)
@@ -116,6 +116,7 @@ fn main() -> Result<()> {
                 chips,
                 max_in_flight: args.usize("max-in-flight", defaults.max_in_flight)?,
                 max_frame_len: args.usize("max-frame-len", defaults.max_frame_len)?,
+                panel_cache_bytes: args.usize("panel-cache-mb", 0)? << 20,
             };
             let window = cfg.max_in_flight;
             let srv = BlasServer::start(cfg)?;
@@ -263,7 +264,8 @@ fn print_help() {
          \n\
          commands:\n\
          \u{20} serve   [--addr H:P] [--backend sim|pjrt|hostref] [--chips N]\n\
-         \u{20}         [--max-in-flight W] [--max-frame-len B]     run the network BLAS service\n\
+         \u{20}         [--max-in-flight W] [--max-frame-len B]\n\
+         \u{20}         [--panel-cache-mb MB]                       run the network BLAS service\n\
          \u{20} client  [--addr H:P] [--reqs N] [--depth D] [--m --n --k]\n\
          \u{20}                                                     pipelined v2 load generator\n\
          \u{20} sgemm   [--m --n --k --ta --tb --backend --chips]   one gemm + report\n\

@@ -1,0 +1,34 @@
+//! Operand residency: the memory subsystem behind the zero-copy hot path.
+//!
+//! The paper's platform-level ceiling is data movement, not the chip
+//! (§4: the Epiphany reaches ~85% of peak inside the chip while the
+//! full Parallella stalls on host↔chip transfer). Serving traffic makes
+//! it worse: the shape is "one A, many B", yet every request used to
+//! re-pack A and every codec step allocated fresh `Vec`s. This module
+//! is the fix, in two cooperating pieces:
+//!
+//! * [`BufferPool`] / [`PoolVec`] — a thread-safe recycling pool for
+//!   byte and scalar staging buffers (wire frame bodies, batcher
+//!   concatenation staging). A [`PoolVec`] owns its buffer like a plain
+//!   `Vec` and returns it to the pool on drop, so steady-state traffic
+//!   stops allocating per frame/request.
+//! * [`PanelCache`] — a capacity-bounded LRU cache of *packed* A panels
+//!   keyed by `(hash, dims, dtype, transpose, chip)`. Every hit is
+//!   verified **bytewise** against the caller's operand (exactly like
+//!   the batcher's coalescing merge), so a 64-bit hash collision can
+//!   never serve another client's weights; repeated gemms against
+//!   resident weights skip `pack_a` entirely.
+//!
+//! Both pieces expose counters (`pool_recycled`, `panel_hits=`,
+//! `panel_misses=`, `panel_evictions=` on the stats wire opcode) and
+//! are disabled-by-default knobs: a panel-cache budget of 0 keeps the
+//! pre-residency code path bit-identical. See
+//! `docs/ARCHITECTURE.md` ("Operand residency & memory pools") for the
+//! keying and eviction rules, and the `residency` bench for the
+//! measured cache-hit speedup and allocations/request table.
+
+pub mod panels;
+pub mod pool;
+
+pub use panels::{hash_operand, PanelCache, PanelCacheStats, PanelKey};
+pub use pool::{BufferPool, PoolStats, PoolVec};

@@ -1,0 +1,369 @@
+//! The packed-A panel cache: operand residency for "one A, many B"
+//! serving traffic.
+//!
+//! Repeated gemms against the same weights used to re-run `pack_a` for
+//! every micro-tile of every request. This cache keeps the *packed*
+//! panels resident, keyed by `(hash, dims, dtype, transpose, chip)`,
+//! and hands back an `Arc` on a hit so the µ-kernel reads the cached
+//! panel with zero copies and zero allocations.
+//!
+//! Two rules, both pinned by tests:
+//!
+//! * **Bytewise verify on hit.** The 64-bit FNV-1a key hash is an
+//!   index, not a proof: before a cached panel is served, its live
+//!   region is compared element-by-element against the caller's
+//!   operand — exactly the batcher's coalescing-merge rule. A hash
+//!   collision therefore *misses* (and drops the stale entry) instead
+//!   of serving another client's weights.
+//! * **LRU by byte budget.** The cache never holds more than its
+//!   configured byte budget; inserting past it evicts
+//!   least-recently-used entries first (a budget of 0 disables the
+//!   cache entirely — the gemm driver then behaves bit-identically to
+//!   the pre-cache code path).
+
+use crate::blis::op::{Dtype, Element};
+use crate::blis::packing::pack_a;
+use crate::epiphany::timing::WalkClass;
+use crate::linalg::{MatRef, Real};
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a over the elements of an operand view, in pack order
+/// (column-major over `op(A)`). Elements hash via their `f64` widening
+/// bit pattern, so f32 and f64 operands with equal values still hash
+/// apart through [`PanelKey::dtype`].
+pub fn hash_operand<T: Real>(op_a: MatRef<'_, T>) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for l in 0..op_a.cols() {
+        for i in 0..op_a.rows() {
+            h ^= op_a.get(i, l).to_f64().to_bits();
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Cache key for one packed A panel: the operand hash plus everything
+/// that shapes the packed bytes ([`pack_a`]'s inputs) and the chip the
+/// panel is resident for.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PanelKey {
+    /// [`hash_operand`] of the full `op(A)` view.
+    pub a_hash: u64,
+    /// Chip in the [`ChipPool`](crate::host::pool::ChipPool) this panel
+    /// is resident for.
+    pub chip: usize,
+    /// First row of the panel's tile.
+    pub i0: usize,
+    /// Live rows in the tile (the rest is zero padding).
+    pub rows: usize,
+    /// Panel depth (`op(A)` columns).
+    pub k: usize,
+    /// Padded tile height (µ-kernel `mr`).
+    pub m_tile: usize,
+    /// Element dtype of the panel.
+    pub dtype: Dtype,
+    /// Whether the source walk was strided (transposed A) — decides the
+    /// packed walk class, so it is part of the identity.
+    pub strided: bool,
+}
+
+impl PanelKey {
+    /// The key for one micro-tile of `op_a` (rows `i0..i0+rows`, padded
+    /// to `m_tile`) packed for `chip`.
+    pub fn for_tile<T: Element>(
+        a_hash: u64,
+        chip: usize,
+        op_a: MatRef<'_, T>,
+        i0: usize,
+        rows: usize,
+        m_tile: usize,
+    ) -> PanelKey {
+        PanelKey {
+            a_hash,
+            chip,
+            i0,
+            rows,
+            k: op_a.cols(),
+            m_tile,
+            dtype: T::DTYPE,
+            strided: op_a.row_stride() != 1,
+        }
+    }
+}
+
+/// Counters describing a [`PanelCache`]'s behaviour.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanelCacheStats {
+    /// Bytewise-verified hits (pack skipped).
+    pub hits: u64,
+    /// Misses, including hash collisions rejected by the verify.
+    pub misses: u64,
+    /// Entries evicted to stay under the byte budget.
+    pub evictions: u64,
+    /// Bytes currently resident.
+    pub resident_bytes: u64,
+    /// Panels currently resident.
+    pub entries: u64,
+}
+
+struct Entry {
+    data: Arc<dyn Any + Send + Sync>,
+    class: WalkClass,
+    bytes: usize,
+    seq: u64,
+}
+
+struct Inner {
+    map: HashMap<PanelKey, Entry>,
+    bytes: usize,
+    seq: u64,
+}
+
+/// A capacity-bounded, LRU, bytewise-verified cache of packed A panels
+/// (see the module docs for the two rules it lives by).
+pub struct PanelCache {
+    inner: Mutex<Inner>,
+    budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PanelCache {
+    /// A cache bounded to `budget_bytes` of resident panels. A budget
+    /// of 0 never stores anything (every lookup misses).
+    pub fn new(budget_bytes: usize) -> PanelCache {
+        PanelCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), bytes: 0, seq: 0 }),
+            budget: budget_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Look up `key` and **verify the panel bytewise** against `op_a`
+    /// before serving it. Counts a hit only when the verify passes; a
+    /// mismatch (64-bit hash collision) drops the stale entry and
+    /// counts a miss, so wrong weights are never served. The hit path
+    /// performs no allocation — the panel returns as a shared `Arc`.
+    pub fn get_verified<T: Element>(
+        &self,
+        key: &PanelKey,
+        op_a: MatRef<'_, T>,
+    ) -> Option<(Arc<Vec<T>>, WalkClass)> {
+        let candidate = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.seq += 1;
+            let seq = inner.seq;
+            inner.map.get_mut(key).map(|e| {
+                e.seq = seq;
+                (Arc::clone(&e.data), e.class)
+            })
+        };
+        let Some((data, class)) = candidate else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        let verified =
+            data.downcast::<Vec<T>>().ok().filter(|panel| panel_matches(panel, op_a, key));
+        match verified {
+            Some(panel) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some((panel, class))
+            }
+            None => {
+                // Bytewise mismatch under a matching key: a 64-bit hash
+                // collision. Never serve it; drop the stale entry so the
+                // caller's re-pack takes its place.
+                self.remove(key);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly packed panel, evicting least-recently-used
+    /// entries until the byte budget holds. Panels larger than the
+    /// whole budget are not cached.
+    pub fn insert<T: Element>(&self, key: PanelKey, panel: Arc<Vec<T>>, class: WalkClass) {
+        let bytes = panel.len() * std::mem::size_of::<T>();
+        if bytes == 0 || bytes > self.budget {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.bytes;
+        }
+        while inner.bytes + bytes > self.budget {
+            let victim = match inner.map.iter().min_by_key(|(_, e)| e.seq) {
+                Some((k, _)) => k.clone(),
+                None => break,
+            };
+            if let Some(e) = inner.map.remove(&victim) {
+                inner.bytes -= e.bytes;
+            }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner.bytes += bytes;
+        inner.map.insert(key, Entry { data: panel, class, bytes, seq });
+    }
+
+    /// Serve one micro-tile's packed panel: a verified cache hit when
+    /// the panel is resident, otherwise [`pack_a`] + insert. This is
+    /// the gemm driver's `pack_a` replacement when the cache is on.
+    pub fn get_or_pack<T: Element>(
+        &self,
+        a_hash: u64,
+        chip: usize,
+        op_a: MatRef<'_, T>,
+        i0: usize,
+        rows: usize,
+        m_tile: usize,
+    ) -> (Arc<Vec<T>>, WalkClass) {
+        let key = PanelKey::for_tile::<T>(a_hash, chip, op_a, i0, rows, m_tile);
+        if let Some(hit) = self.get_verified(&key, op_a) {
+            return hit;
+        }
+        let (panel, class) = pack_a(op_a, i0, rows, m_tile);
+        let panel = Arc::new(panel);
+        self.insert::<T>(key, Arc::clone(&panel), class);
+        (panel, class)
+    }
+
+    /// Drop one entry (collision cleanup).
+    fn remove(&self, key: &PanelKey) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.map.remove(key) {
+            inner.bytes -= e.bytes;
+        }
+    }
+
+    /// Snapshot of the cache counters.
+    pub fn stats(&self) -> PanelCacheStats {
+        let inner = self.inner.lock().unwrap();
+        PanelCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: inner.bytes as u64,
+            entries: inner.map.len() as u64,
+        }
+    }
+}
+
+/// The bytewise verify: the panel's live region must equal what
+/// [`pack_a`] would produce from `op_a` right now (padding is a
+/// function of the key's dims, so only live elements are compared).
+fn panel_matches<T: Element>(panel: &[T], op_a: MatRef<'_, T>, key: &PanelKey) -> bool {
+    if panel.len() != key.m_tile * key.k
+        || key.k != op_a.cols()
+        || key.i0 + key.rows > op_a.rows()
+    {
+        return false;
+    }
+    for l in 0..key.k {
+        for i in 0..key.rows {
+            if panel[l * key.m_tile + i] != op_a.get(key.i0 + i, l) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn key_for(a: &Mat<f32>, i0: usize, rows: usize, m_tile: usize) -> PanelKey {
+        PanelKey::for_tile::<f32>(hash_operand(a.view()), 0, a.view(), i0, rows, m_tile)
+    }
+
+    #[test]
+    fn miss_pack_hit_round_trip() {
+        let cache = PanelCache::new(1 << 20);
+        let a = Mat::<f32>::randn(8, 6, 1);
+        let h = hash_operand(a.view());
+        let (p1, c1) = cache.get_or_pack::<f32>(h, 0, a.view(), 0, 8, 8);
+        let (p2, c2) = cache.get_or_pack::<f32>(h, 0, a.view(), 0, 8, 8);
+        assert_eq!(p1.as_slice(), p2.as_slice());
+        assert_eq!(c1, c2);
+        assert!(Arc::ptr_eq(&p1, &p2), "hit must serve the resident Arc, not a copy");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn collision_with_different_bytes_misses_and_replaces() {
+        // Same key (forged hash), different operand bytes: the verify
+        // must reject the resident panel rather than serve it.
+        let cache = PanelCache::new(1 << 20);
+        let a1 = Mat::<f32>::randn(4, 3, 7);
+        let a2 = Mat::<f32>::randn(4, 3, 8); // different values, same dims
+        let key = key_for(&a1, 0, 4, 4);
+        let (panel, class) = pack_a(a1.view(), 0, 4, 4);
+        cache.insert::<f32>(key.clone(), Arc::new(panel), class);
+        assert!(cache.get_verified::<f32>(&key, a2.view()).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        assert_eq!(s.entries, 0, "the colliding entry is dropped, not kept");
+    }
+
+    #[test]
+    fn lru_eviction_under_tiny_budget() {
+        // Budget fits exactly one 4×3 f32 panel (48 bytes).
+        let cache = PanelCache::new(48);
+        let a = Mat::<f32>::randn(4, 3, 1);
+        let b = Mat::<f32>::randn(4, 3, 2);
+        let ha = hash_operand(a.view());
+        let hb = hash_operand(b.view());
+        cache.get_or_pack::<f32>(ha, 0, a.view(), 0, 4, 4);
+        cache.get_or_pack::<f32>(hb, 0, b.view(), 0, 4, 4); // evicts a's panel
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 1);
+        assert!(s.resident_bytes <= 48);
+        // b is still resident → verified hit; a was evicted → miss.
+        cache.get_or_pack::<f32>(hb, 0, b.view(), 0, 4, 4);
+        assert_eq!(cache.stats().hits, 1);
+        cache.get_or_pack::<f32>(ha, 0, a.view(), 0, 4, 4);
+        assert_eq!(cache.stats().entries, 1, "budget holds exactly one panel");
+    }
+
+    #[test]
+    fn zero_budget_disables_storage() {
+        let cache = PanelCache::new(0);
+        let a = Mat::<f32>::randn(4, 3, 1);
+        let h = hash_operand(a.view());
+        cache.get_or_pack::<f32>(h, 0, a.view(), 0, 4, 4);
+        cache.get_or_pack::<f32>(h, 0, a.view(), 0, 4, 4);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.entries), (0, 0));
+        assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn chips_and_dtypes_key_apart() {
+        let cache = PanelCache::new(1 << 20);
+        let a32 = Mat::<f32>::randn(4, 3, 1);
+        let a64 = Mat::<f64>::randn(4, 3, 1);
+        let h32 = hash_operand(a32.view());
+        let h64 = hash_operand(a64.view());
+        cache.get_or_pack::<f32>(h32, 0, a32.view(), 0, 4, 4);
+        cache.get_or_pack::<f32>(h32, 1, a32.view(), 0, 4, 4); // other chip
+        cache.get_or_pack::<f64>(h64, 0, a64.view(), 0, 4, 4); // other dtype
+        assert_eq!(cache.stats().entries, 3);
+    }
+}

@@ -1,0 +1,237 @@
+//! A thread-safe buffer pool: `Vec` allocations recycled across wire
+//! frames and tile staging.
+//!
+//! The ownership idiom is the `bytes`-crate one — a handle that owns a
+//! buffer and gives it back to a shared pool when dropped — implemented
+//! with `Arc` + `Mutex` so the crate keeps its no-new-deps rule. A
+//! [`PoolVec`] dereferences to `Vec<T>`, so call sites that used to
+//! take a fresh `Vec` compile unchanged against a pooled buffer.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Counters describing how a [`BufferPool`] has been used.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers handed out ([`BufferPool::get`] calls).
+    pub gets: u64,
+    /// Gets served by re-using a previously returned buffer's capacity
+    /// (the allocation that did **not** happen).
+    pub recycled: u64,
+    /// Free buffers currently parked in the pool.
+    pub retained: u64,
+}
+
+/// A bounded free-list of `Vec<T>` buffers shared across threads.
+///
+/// [`BufferPool::get`] hands out a zero-initialised buffer of the
+/// requested length, preferring the capacity of a previously dropped
+/// [`PoolVec`]; at most `max_retained` free buffers are kept, so a
+/// burst can never pin unbounded memory.
+pub struct BufferPool<T> {
+    shelf: Mutex<Vec<Vec<T>>>,
+    max_retained: usize,
+    gets: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl<T> BufferPool<T> {
+    /// A pool retaining at most `max_retained` free buffers.
+    pub fn new(max_retained: usize) -> BufferPool<T> {
+        BufferPool {
+            shelf: Mutex::new(Vec::new()),
+            max_retained,
+            gets: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot of the pool counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            gets: self.gets.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            retained: self.shelf.lock().unwrap().len() as u64,
+        }
+    }
+
+    /// Gets that re-used a returned buffer (the `pool_recycled=` stat).
+    pub fn recycled(&self) -> u64 {
+        self.recycled.load(Ordering::Relaxed)
+    }
+
+    /// Park a buffer for re-use (called by [`PoolVec::drop`]; bounded
+    /// by `max_retained`, beyond which the buffer is simply freed).
+    fn put_back(&self, buf: Vec<T>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut shelf = self.shelf.lock().unwrap();
+        if shelf.len() < self.max_retained {
+            shelf.push(buf);
+        }
+    }
+}
+
+impl<T: Clone + Default> BufferPool<T> {
+    /// A zero-initialised buffer of exactly `len` elements, re-using a
+    /// parked buffer's capacity when one is large enough. Dropping the
+    /// returned [`PoolVec`] parks the buffer back here.
+    pub fn get(self: &Arc<Self>, len: usize) -> PoolVec<T> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        let reused = {
+            let mut shelf = self.shelf.lock().unwrap();
+            match shelf.iter().position(|b| b.capacity() >= len) {
+                Some(i) => Some(shelf.swap_remove(i)),
+                None => shelf.pop(),
+            }
+        };
+        let mut buf = match reused {
+            Some(b) => {
+                if b.capacity() >= len {
+                    self.recycled.fetch_add(1, Ordering::Relaxed);
+                }
+                b
+            }
+            None => Vec::with_capacity(len),
+        };
+        buf.clear();
+        buf.resize(len, T::default());
+        PoolVec { buf, pool: Some(Arc::clone(self)) }
+    }
+}
+
+/// An owned buffer on loan from a [`BufferPool`]: behaves like the
+/// `Vec<T>` it wraps (via `Deref`/`DerefMut`) and returns the
+/// allocation to its pool when dropped.
+pub struct PoolVec<T> {
+    buf: Vec<T>,
+    pool: Option<Arc<BufferPool<T>>>,
+}
+
+impl<T> PoolVec<T> {
+    /// Wrap a plain `Vec` with no backing pool (dropping it frees the
+    /// buffer normally). Useful for tests and default-constructed
+    /// paths.
+    pub fn detached(buf: Vec<T>) -> PoolVec<T> {
+        PoolVec { buf, pool: None }
+    }
+
+    /// Take the buffer out, detaching it from the pool (the allocation
+    /// is not returned).
+    pub fn into_vec(mut self) -> Vec<T> {
+        self.pool = None;
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl<T> Drop for PoolVec<T> {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put_back(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl<T> Deref for PoolVec<T> {
+    type Target = Vec<T>;
+    fn deref(&self) -> &Vec<T> {
+        &self.buf
+    }
+}
+
+impl<T> DerefMut for PoolVec<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        &mut self.buf
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for PoolVec<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.buf.fmt(f)
+    }
+}
+
+impl<T: PartialEq> PartialEq for PoolVec<T> {
+    fn eq(&self, other: &PoolVec<T>) -> bool {
+        self.buf == other.buf
+    }
+}
+
+impl<T: PartialEq> PartialEq<Vec<T>> for PoolVec<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        &self.buf == other
+    }
+}
+
+impl<T: PartialEq> PartialEq<PoolVec<T>> for Vec<T> {
+    fn eq(&self, other: &PoolVec<T>) -> bool {
+        self == &other.buf
+    }
+}
+
+impl<T: PartialEq> PartialEq<[T]> for PoolVec<T> {
+    fn eq(&self, other: &[T]) -> bool {
+        self.buf.as_slice() == other
+    }
+}
+
+impl<T: PartialEq> PartialEq<&[T]> for PoolVec<T> {
+    fn eq(&self, other: &&[T]) -> bool {
+        self.buf.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_allocates_then_recycles() {
+        let pool = Arc::new(BufferPool::<u8>::new(4));
+        {
+            let mut b = pool.get(16);
+            b[0] = 7;
+            assert_eq!(b.len(), 16);
+        } // dropped → parked
+        let b2 = pool.get(8);
+        assert_eq!(b2.len(), 8);
+        assert!(b2.iter().all(|&x| x == 0), "recycled buffers are re-zeroed");
+        let s = pool.stats();
+        assert_eq!((s.gets, s.recycled), (2, 1));
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let pool = Arc::new(BufferPool::<f32>::new(1));
+        let a = pool.get(4);
+        let b = pool.get(4);
+        drop(a);
+        drop(b); // second return exceeds max_retained → freed
+        assert_eq!(pool.stats().retained, 1);
+    }
+
+    #[test]
+    fn equality_with_plain_vecs_and_slices() {
+        let pool = Arc::new(BufferPool::<u8>::new(2));
+        let mut b = pool.get(3);
+        b.copy_from_slice(&[1, 2, 3]);
+        assert_eq!(b, vec![1u8, 2, 3]);
+        assert_eq!(b, &[1u8, 2, 3][..]);
+        assert_eq!(vec![1u8, 2, 3], b);
+        let detached = PoolVec::detached(vec![1u8, 2, 3]);
+        assert_eq!(b, detached);
+        assert_eq!(detached.into_vec(), vec![1u8, 2, 3]);
+    }
+
+    #[test]
+    fn too_small_parked_buffer_still_serves_without_recycle_credit() {
+        let pool = Arc::new(BufferPool::<u8>::new(4));
+        drop(pool.get(4));
+        let big = pool.get(1 << 12); // parked capacity is too small
+        assert_eq!(big.len(), 1 << 12);
+        assert_eq!(pool.stats().recycled, 0);
+    }
+}

@@ -39,6 +39,7 @@ pub struct PlatformBuilder {
     geom: KernelGeometry,
     chips: usize,
     policy: ShardPolicy,
+    panel_cache_bytes: usize,
 }
 
 impl PlatformBuilder {
@@ -75,12 +76,24 @@ impl PlatformBuilder {
         self
     }
 
+    /// Byte budget for the packed-A panel cache (see
+    /// [`crate::mem::PanelCache`]): repeated gemms over the same A skip
+    /// `pack_a` on verified hits. The default budget of 0 disables the
+    /// cache and keeps the gemm driver bit-identical to a cacheless
+    /// build — no hashing, no lookups.
+    pub fn panel_cache_bytes(mut self, budget: usize) -> Self {
+        self.panel_cache_bytes = budget;
+        self
+    }
+
     /// Boot the pool and instantiate the BLAS over it.
     pub fn build(self) -> Result<Platform> {
         let pool =
             ChipPool::spawn(self.chips, self.backend.service(), self.model.clone(), self.geom)?;
+        let mut blas = Blas::with_pool(pool, self.policy);
+        blas.set_panel_cache(self.panel_cache_bytes);
         Ok(Platform {
-            blas: Arc::new(Blas::with_pool(pool, self.policy)),
+            blas: Arc::new(blas),
             model: self.model,
             backend: self.backend,
         })
@@ -106,6 +119,7 @@ impl Platform {
             geom: KernelGeometry::paper(),
             chips: 1,
             policy: ShardPolicy::default(),
+            panel_cache_bytes: 0,
         }
     }
 
@@ -151,6 +165,24 @@ mod tests {
             Trans::N, Trans::N, 1.0, a.cast::<f64>().view(), b.cast::<f64>().view(), 0.0, &mut want,
         );
         assert!(max_scaled_err(c.view(), want.view()) < 1e-5);
+    }
+
+    #[test]
+    fn panel_cache_knob_is_bit_identical_and_hits() {
+        let plain = Platform::builder().build().unwrap();
+        let cached = Platform::builder().panel_cache_bytes(8 << 20).build().unwrap();
+        assert!(plain.blas().panel_cache().is_none(), "cache is off by default");
+        let a = Mat::<f32>::randn(100, 50, 3);
+        let b = Mat::<f32>::randn(50, 80, 4);
+        let mut c0 = Mat::<f32>::zeros(100, 80);
+        let mut c1 = Mat::<f32>::zeros(100, 80);
+        for _ in 0..2 {
+            plain.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c0).unwrap();
+            cached.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c1).unwrap();
+            assert_eq!(c0.as_slice(), c1.as_slice(), "cache on/off must be bit-identical");
+        }
+        let s = cached.blas().panel_cache().unwrap().stats();
+        assert!(s.hits >= 1, "second pass re-uses the packed panel: {s:?}");
     }
 
     #[test]
