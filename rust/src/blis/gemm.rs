@@ -415,7 +415,15 @@ impl Blas {
             // buffered, so peak memory matches the old backend too).
             let (chip, lo, hi) = plan[0];
             let shard_rep =
-                self.run_shard_streaming(chip, op_a, op_b, alpha, beta, lo, hi, c, a_hash)?;
+                match self.run_shard_streaming(chip, op_a, op_b, alpha, beta, lo, hi, c, a_hash) {
+                    Ok(rep) => rep,
+                    Err(e) => {
+                        // A failed service call means the chip (not the
+                        // operands) is the problem: stop routing to it.
+                        self.pool.mark_unhealthy(chip);
+                        return Err(e);
+                    }
+                };
             report.calls = shard_rep.calls;
             report.projected_s = shard_rep.projected_s;
             report.wall_s = shard_rep.wall_s;
@@ -439,8 +447,15 @@ impl Blas {
                     .collect()
             });
 
-        for result in shard_results {
-            let (tiles, shard_rep) = result?;
+        for (result, &(chip, _, _)) in shard_results.into_iter().zip(&plan) {
+            let (tiles, shard_rep) = match result {
+                Ok(r) => r,
+                Err(e) => {
+                    // Erroring or panicking shards condemn their chip.
+                    self.pool.mark_unhealthy(chip);
+                    return Err(e);
+                }
+            };
             report.calls += shard_rep.calls;
             report.projected_s = report.projected_s.max(shard_rep.projected_s);
             report.wall_s = report.wall_s.max(shard_rep.wall_s);
@@ -452,7 +467,13 @@ impl Blas {
     }
 
     /// Split `jc_tiles` column tiles into per-chip contiguous ranges
-    /// `(chip, jc_lo, jc_hi)` according to `policy`.
+    /// `(chip, jc_lo, jc_hi)` according to `policy`, planning over the
+    /// pool's *healthy* chips: `ColumnPanels` spreads shards across the
+    /// healthy set, and a `Pinned` target that has gone unhealthy
+    /// degrades to the least-loaded healthy chip (a pin is a locality
+    /// preference, not a law). With the whole pool down the plan covers
+    /// every chip anyway — execution then surfaces the chip error loudly
+    /// instead of refusing to plan.
     fn shard_plan(
         &self,
         policy: ShardPolicy,
@@ -462,15 +483,20 @@ impl Blas {
         match policy {
             ShardPolicy::Pinned(i) => {
                 ensure!(i < nchips, "pinned chip {i} out of range (pool has {nchips} chips)");
-                Ok(vec![(i, 0, jc_tiles)])
+                let chip = if self.pool.is_healthy(i) { i } else { self.pool.least_loaded() };
+                Ok(vec![(chip, 0, jc_tiles)])
             }
             ShardPolicy::ColumnPanels => {
-                let shards = nchips.min(jc_tiles).max(1);
+                let mut chips = self.pool.healthy_chips();
+                if chips.is_empty() {
+                    chips = (0..nchips).collect();
+                }
+                let shards = chips.len().min(jc_tiles).max(1);
                 let (base, extra) = (jc_tiles / shards, jc_tiles % shards);
                 let mut plan = Vec::with_capacity(shards);
                 let mut lo = 0usize;
-                for chip in 0..shards {
-                    let w = base + usize::from(chip < extra);
+                for (idx, &chip) in chips.iter().take(shards).enumerate() {
+                    let w = base + usize::from(idx < extra);
                     plan.push((chip, lo, lo + w));
                     lo += w;
                 }
@@ -900,5 +926,50 @@ mod tests {
         let mut c2 = Mat::<f32>::zeros(m, n);
         let r = blas.gemm_on(7, Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c2);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn shard_plan_routes_around_unhealthy_chips() {
+        let blas = blas_pool(3);
+        blas.pool().mark_unhealthy(1);
+        // ColumnPanels plans over the healthy chips only.
+        let plan = blas.shard_plan(ShardPolicy::ColumnPanels, 3).unwrap();
+        let chips: Vec<usize> = plan.iter().map(|&(c, _, _)| c).collect();
+        assert_eq!(chips, vec![0, 2], "unhealthy chip 1 skipped");
+        let tiles: usize = plan.iter().map(|&(_, lo, hi)| hi - lo).sum();
+        assert_eq!(tiles, 3, "every jc tile still covered");
+        // A pin on the unhealthy chip degrades to a healthy one.
+        let plan = blas.shard_plan(ShardPolicy::Pinned(1), 2).unwrap();
+        assert_eq!(plan.len(), 1);
+        assert_ne!(plan[0].0, 1, "pin degrades off the unhealthy chip");
+        // A pin on a healthy chip is honored.
+        assert_eq!(blas.shard_plan(ShardPolicy::Pinned(2), 2).unwrap(), vec![(2, 0, 2)]);
+        // Whole pool down: the plan covers every chip (execution will
+        // surface the chip error; planning never refuses).
+        blas.pool().mark_unhealthy(0);
+        blas.pool().mark_unhealthy(2);
+        let plan = blas.shard_plan(ShardPolicy::ColumnPanels, 3).unwrap();
+        assert_eq!(plan.len(), 3);
+        // Recovery: a healthy probe re-admits the chip to the planner.
+        blas.pool().mark_healthy(1);
+        let plan = blas.shard_plan(ShardPolicy::ColumnPanels, 3).unwrap();
+        assert_eq!(plan, vec![(1, 0, 3)]);
+    }
+
+    #[test]
+    fn failed_execution_marks_chip_unhealthy() {
+        let blas = blas_pool(2);
+        blas.pool().chip(0).fail_next_calls(usize::MAX);
+        let (m, n, k) = (64, 64, 32);
+        let a = Mat::<f32>::randn(m, k, 40);
+        let b = Mat::<f32>::randn(k, n, 41);
+        let mut c = Mat::<f32>::zeros(m, n);
+        let r = blas.gemm_on(0, Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c);
+        assert!(r.is_err());
+        assert!(!blas.pool().is_healthy(0), "the failing chip is condemned");
+        // The same call now routes around the dead chip and succeeds.
+        let mut c2 = Mat::<f32>::zeros(m, n);
+        blas.gemm_on(0, Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c2).unwrap();
+        assert!(blas.pool().crossings()[1] > 0, "chip 1 rescued the pinned call");
     }
 }

@@ -21,12 +21,15 @@
 
 use super::metrics::Metrics;
 use crate::blis::{Blas, Trans};
+use crate::host::pool::ChipPool;
 use crate::linalg::{MatMut, MatRef};
 use crate::mem::{BufferPool, PoolStats};
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 /// Batching knobs.
 #[derive(Clone, Copy, Debug)]
@@ -35,12 +38,24 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// Max columns after coalescing (bounds HH-RAM pressure).
     pub max_cols: usize,
+    /// Health deadline in milliseconds: a chip whose batch execution
+    /// exceeds this wall budget is marked unhealthy and its still-queued
+    /// jobs move to healthy chips. `0` disables the deadline (default).
+    pub health_deadline_ms: u64,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 16, max_cols: 4096 }
+        BatchPolicy { max_batch: 16, max_cols: 4096, health_deadline_ms: 0 }
     }
+}
+
+/// Poison-tolerant lock: a panic on some other thread must never take
+/// queue readers down with it. The guarded data (a job queue) stays
+/// structurally valid across a poisoning panic because every mutation is
+/// a single `push_back`/`pop_front`.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// One queued sgemm job (stored orientation, like the wire protocol).
@@ -132,9 +147,45 @@ pub fn coalesce_plan(jobs: &[(CoalesceKey, usize)], max_cols: usize) -> Vec<(usi
 /// shims over it.
 pub type Completion = Box<dyn FnOnce(Result<Vec<f32>>) + Send + 'static>;
 
+/// A completion that fires exactly once. Invoking [`ReplyOnce::fire`]
+/// consumes the callback; dropping it unfired answers the ticket with an
+/// error instead of letting it vanish — the unwind half of the worker's
+/// panic isolation: however a job dies, its submitter's `recv`/`wait`
+/// always returns.
+struct ReplyOnce {
+    inner: Option<Completion>,
+}
+
+impl ReplyOnce {
+    fn new(done: Completion) -> ReplyOnce {
+        ReplyOnce { inner: Some(done) }
+    }
+
+    fn fire(mut self, r: Result<Vec<f32>>) {
+        if let Some(done) = self.inner.take() {
+            done(r);
+        }
+    }
+}
+
+impl Drop for ReplyOnce {
+    fn drop(&mut self) {
+        if let Some(done) = self.inner.take() {
+            // Never let a panicking completion escalate a drop during an
+            // unwind into a process abort.
+            let _ = catch_unwind(AssertUnwindSafe(|| {
+                done(Err(anyhow!("batcher dropped the job before completion")));
+            }));
+        }
+    }
+}
+
 struct Queued {
     job: GemmJob,
-    reply: Completion,
+    reply: ReplyOnce,
+    /// Health-requeue budget already consumed; bounded by the pool size
+    /// so a job cannot ping-pong between dying chips forever.
+    attempts: u32,
 }
 
 struct Shared {
@@ -156,8 +207,23 @@ pub struct Batcher {
     /// worker builds per batch — shared across chips so a group-sized
     /// allocation survives from one batch round to the next.
     staging: Arc<BufferPool<f32>>,
+    /// The executor — kept so routing can consult the pool's chip-health
+    /// state ([`ChipPool`](crate::host::pool::ChipPool)).
+    blas: Arc<Blas>,
     /// The batching knobs every worker applies.
     pub policy: BatchPolicy,
+}
+
+/// Everything one worker thread needs: its own shard, every *other*
+/// shard (health requeues push a wounded chip's jobs onto healthy
+/// queues), and the shared executor/metrics/staging.
+struct WorkerCtx {
+    shards: Vec<Arc<Shared>>,
+    chip: usize,
+    blas: Arc<Blas>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    staging: Arc<BufferPool<f32>>,
 }
 
 impl Batcher {
@@ -168,27 +234,33 @@ impl Batcher {
         // Two staging buffers (B and C concatenations) live per in-flight
         // batch, one batch per chip — retain exactly that many.
         let staging = Arc::new(BufferPool::new(2 * chips));
-        let mut shards = Vec::with_capacity(chips);
+        let shards: Vec<Arc<Shared>> = (0..chips)
+            .map(|_| {
+                Arc::new(Shared {
+                    queue: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                    stop: AtomicBool::new(false),
+                    active: AtomicUsize::new(0),
+                })
+            })
+            .collect();
         let mut workers = Vec::with_capacity(chips);
         for chip in 0..chips {
-            let shared = Arc::new(Shared {
-                queue: Mutex::new(VecDeque::new()),
-                cv: Condvar::new(),
-                stop: AtomicBool::new(false),
-                active: AtomicUsize::new(0),
-            });
-            let shared_w = Arc::clone(&shared);
-            let blas_w = Arc::clone(&blas);
-            let metrics_w = Arc::clone(&metrics);
-            let staging_w = Arc::clone(&staging);
+            let ctx = WorkerCtx {
+                shards: shards.clone(),
+                chip,
+                blas: Arc::clone(&blas),
+                policy,
+                metrics: Arc::clone(&metrics),
+                staging: Arc::clone(&staging),
+            };
             let worker = std::thread::Builder::new()
                 .name(format!("gemm-batcher-{chip}"))
-                .spawn(move || worker_loop(shared_w, blas_w, chip, policy, metrics_w, staging_w))
+                .spawn(move || worker_loop(ctx))
                 .expect("spawn batcher worker");
-            shards.push(shared);
             workers.push(worker);
         }
-        Batcher { shards, workers, staging, policy }
+        Batcher { shards, workers, staging, blas, policy }
     }
 
     /// Counters of the shared staging pool (the batcher's contribution to
@@ -226,42 +298,48 @@ impl Batcher {
     /// Submit a job with a completion callback instead of a channel — the
     /// pipelined server's path: no thread parks waiting on a receiver,
     /// the worker drives the response write directly. `chip: None` picks
-    /// the least-loaded queue; `Some` pins (reduced modulo the pool).
+    /// the least-loaded healthy queue; `Some` pins (reduced modulo the
+    /// pool) — but a pin is a *preference*: an unhealthy target degrades
+    /// to the least-loaded healthy chip instead of feeding a dead one.
     pub fn submit_with(&self, chip: Option<usize>, job: GemmJob, done: Completion) {
-        let chip = chip.unwrap_or_else(|| self.least_loaded());
+        let chip = match chip {
+            Some(c) => {
+                let c = c % self.shards.len();
+                if self.blas.pool().is_healthy(c) {
+                    c
+                } else {
+                    self.least_loaded()
+                }
+            }
+            None => self.least_loaded(),
+        };
         let shard = &self.shards[chip % self.shards.len()];
         {
-            let mut q = shard.queue.lock().unwrap();
-            q.push_back(Queued { job, reply: done });
+            let mut q = relock(&shard.queue);
+            q.push_back(Queued { job, reply: ReplyOnce::new(done), attempts: 0 });
         }
         shard.cv.notify_one();
     }
 
-    /// The chip with the least pending work — queued jobs *plus* jobs its
-    /// worker has drained and is still executing, so a chip mid-batch is
-    /// not mistaken for idle. Lowest index wins ties (deterministic).
+    /// The healthy chip with the least pending work — queued jobs *plus*
+    /// jobs its worker has drained and is still executing, so a chip
+    /// mid-batch is not mistaken for idle. Unhealthy chips are skipped
+    /// unless every chip is down (then the scan degrades to the full pool
+    /// and the execution error surfaces loudly). Lowest index wins ties
+    /// (deterministic).
     pub fn least_loaded(&self) -> usize {
-        let mut best = 0usize;
-        let mut best_depth = usize::MAX;
-        for (i, s) in self.shards.iter().enumerate() {
-            let d = s.queue.lock().unwrap().len() + s.active.load(Ordering::SeqCst);
-            if d < best_depth {
-                best_depth = d;
-                best = i;
-            }
-        }
-        best
+        least_loaded_shard(&self.shards, self.blas.pool(), None, false).unwrap_or(0)
     }
 
     /// Total queued jobs across every chip queue (for backpressure).
     pub fn depth(&self) -> usize {
-        self.shards.iter().map(|s| s.queue.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| relock(&s.queue).len()).sum()
     }
 
     /// Queued jobs on one chip's queue. The index is reduced modulo the
     /// pool size, matching [`Batcher::submit_to`]'s routing.
     pub fn depth_of(&self, chip: usize) -> usize {
-        self.shards[chip % self.shards.len()].queue.lock().unwrap().len()
+        relock(&self.shards[chip % self.shards.len()].queue).len()
     }
 
     /// Stop every worker after it drains its queue, and join them.
@@ -282,26 +360,71 @@ impl Drop for Batcher {
     }
 }
 
-fn worker_loop(
-    shared: Arc<Shared>,
-    blas: Arc<Blas>,
-    chip: usize,
-    policy: BatchPolicy,
-    metrics: Arc<Metrics>,
-    staging: Arc<BufferPool<f32>>,
-) {
+/// The least-loaded shard by queued + active jobs, optionally restricted
+/// to healthy chips and optionally excluding one index (a wounded chip
+/// picking a target for its own requeued jobs). Lowest index wins ties.
+fn least_loaded_shard(
+    shards: &[Arc<Shared>],
+    pool: &ChipPool,
+    exclude: Option<usize>,
+    healthy_only: bool,
+) -> Option<usize> {
+    let pick = |healthy: bool| -> Option<usize> {
+        let mut best = None;
+        let mut best_depth = usize::MAX;
+        for (i, s) in shards.iter().enumerate() {
+            if Some(i) == exclude || (healthy && !pool.is_healthy(i)) {
+                continue;
+            }
+            let d = relock(&s.queue).len() + s.active.load(Ordering::SeqCst);
+            if d < best_depth {
+                best_depth = d;
+                best = Some(i);
+            }
+        }
+        best
+    };
+    if healthy_only {
+        pick(true)
+    } else {
+        // Prefer healthy chips, degrade to the full pool if none remain.
+        pick(true).or_else(|| pick(false))
+    }
+}
+
+/// Decrements the worker's active gauge by `n` on drop — on *every* exit
+/// path, so a panic anywhere in group execution can never leak drained
+/// jobs into the scheduler's view of the chip (the old inline decrement
+/// was skipped on unwind).
+struct ActiveGuard<'a> {
+    shared: &'a Shared,
+    n: usize,
+}
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.shared.active.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    let shared = Arc::clone(&ctx.shards[ctx.chip]);
+    let deadline = match ctx.policy.health_deadline_ms {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
     loop {
         // Wait for work on this chip's queue.
         let mut drained: Vec<Queued> = Vec::new();
         {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = relock(&shared.queue);
             while q.is_empty() && !shared.stop.load(Ordering::SeqCst) {
-                q = shared.cv.wait(q).unwrap();
+                q = shared.cv.wait(q).unwrap_or_else(PoisonError::into_inner);
             }
             if shared.stop.load(Ordering::SeqCst) && q.is_empty() {
                 return;
             }
-            for _ in 0..policy.max_batch {
+            for _ in 0..ctx.policy.max_batch {
                 match q.pop_front() {
                     Some(x) => drained.push(x),
                     None => break,
@@ -319,11 +442,12 @@ fn worker_loop(
         // merge so a hash collision can never execute one client's job
         // with another client's weights — inequality splits the run;
         // results stay correct either way), then `drained` is consumed
-        // group by group: each FnOnce completion fires exactly once.
+        // group by group: each completion fires exactly once however the
+        // group dies ([`ReplyOnce`]).
         let keys: Vec<(CoalesceKey, usize)> =
             drained.iter().map(|x| (x.job.key(), x.job.n)).collect();
         let mut group_lens: Vec<usize> = Vec::new();
-        for (start, end) in coalesce_plan(&keys, policy.max_cols) {
+        for (start, end) in coalesce_plan(&keys, ctx.policy.max_cols) {
             let mut s = start;
             for i in start + 1..=end {
                 if i < end && drained[i].job.a == drained[s].job.a {
@@ -338,28 +462,95 @@ fn worker_loop(
             let tail = rest.split_off(len);
             let group = std::mem::replace(&mut rest, tail);
             let glen = group.len();
-            execute_group(&blas, chip, group, &metrics, &staging);
-            if glen > 1 {
-                metrics.record_batched(glen);
+            let _gauge = ActiveGuard { shared: &shared, n: glen };
+            let t0 = Instant::now();
+            match execute_group(&ctx.blas, ctx.chip, group, &ctx.metrics, &ctx.staging) {
+                None => {
+                    if glen > 1 {
+                        ctx.metrics.record_batched(glen);
+                    }
+                    // A chip that answers, but slower than the health
+                    // budget, is wedging its queue: stop feeding it.
+                    if let Some(d) = deadline {
+                        if t0.elapsed() > d {
+                            wound_chip(&ctx, "health deadline exceeded");
+                        }
+                    }
+                }
+                Some((failed, err)) => {
+                    wound_chip(&ctx, &format!("{err:#}"));
+                    requeue(&ctx, failed, &err);
+                }
             }
-            shared.active.fetch_sub(glen, Ordering::SeqCst);
         }
     }
 }
 
+/// Mark this worker's chip unhealthy and move its still-queued jobs to
+/// healthy chips. Idempotent per incident (the queue drain is what makes
+/// a wounded chip stop wedging the work behind it).
+fn wound_chip(ctx: &WorkerCtx, why: &str) {
+    ctx.blas.pool().mark_unhealthy(ctx.chip);
+    let waiting: Vec<Queued> = relock(&ctx.shards[ctx.chip].queue).drain(..).collect();
+    if !waiting.is_empty() {
+        requeue(ctx, waiting, &anyhow!("chip {} unhealthy: {why}", ctx.chip));
+    }
+}
+
+/// Move jobs off a wounded chip onto the least-loaded healthy queue.
+/// A job whose retry budget is exhausted — or stranded when no healthy
+/// chip remains — answers its ticket with the error instead (degrade
+/// loudly, never hang).
+fn requeue(ctx: &WorkerCtx, jobs: Vec<Queued>, err: &anyhow::Error) {
+    let budget = ctx.shards.len() as u32;
+    for mut q in jobs {
+        q.attempts += 1;
+        let target = least_loaded_shard(&ctx.shards, ctx.blas.pool(), Some(ctx.chip), true);
+        match target {
+            Some(t) if q.attempts < budget => {
+                ctx.metrics.record_requeued();
+                let shard = &ctx.shards[t];
+                relock(&shard.queue).push_back(q);
+                shard.cv.notify_one();
+            }
+            _ => {
+                ctx.metrics.record_error();
+                q.reply.fire(Err(anyhow!(
+                    "job failed on chip {} and no healthy chip could take it: {err:#}",
+                    ctx.chip
+                )));
+            }
+        }
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
 /// Run one (possibly coalesced) group on `chip` and fan the results back
-/// out through each job's completion callback.
+/// out through each job's completion callback. The execution itself —
+/// including the host-side service call, the historical panic source —
+/// runs under `catch_unwind`, so a crashing chip unwinds into an error
+/// value here instead of killing the worker thread and poisoning the
+/// queue mutex. Returns `None` when every reply fired with a result, or
+/// the unfired group + error for the caller to requeue or fail.
 fn execute_group(
     blas: &Blas,
     chip: usize,
     group: Vec<Queued>,
     metrics: &Metrics,
     staging: &Arc<BufferPool<f32>>,
-) {
+) -> Option<(Vec<Queued>, anyhow::Error)> {
     let first = &group[0].job;
     let (m, k) = (first.m, first.k);
     let cols: usize = group.iter().map(|q| q.job.n).sum();
-    let result: Result<Vec<Vec<f32>>> = (|| {
+    let computed = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<Vec<f32>>> {
         // Stack op(B) and C along n by concatenating stored columns, into
         // recycled staging buffers from the shared pool — a steady stream
         // of batches stops paying two fresh allocations per crossing.
@@ -439,20 +630,22 @@ fn execute_group(
             j0 += job.n;
         }
         Ok(outs)
-    })();
+    }));
+    let result: Result<Vec<Vec<f32>>> = match computed {
+        Ok(r) => r,
+        Err(p) => {
+            Err(anyhow!("chip {chip} service call panicked: {}", panic_message(p.as_ref())))
+        }
+    };
 
     match result {
         Ok(outs) => {
             for (q, out) in group.into_iter().zip(outs) {
-                (q.reply)(Ok(out));
+                q.reply.fire(Ok(out));
             }
+            None
         }
-        Err(e) => {
-            metrics.record_error();
-            for q in group {
-                (q.reply)(Err(anyhow!("{e:#}")));
-            }
-        }
+        Err(e) => Some((group, e)),
     }
 }
 
@@ -642,6 +835,78 @@ mod tests {
         let got = b.submit_to(7, j).recv().unwrap().unwrap();
         let got = Mat::from_col_major(16, 4, &got);
         assert!(max_scaled_err(got.view(), want.view()) < 1e-5);
+    }
+
+    #[test]
+    fn panicking_job_answers_ticket_and_worker_survives() {
+        let (b, _) = batcher();
+        b.blas.pool().chip(0).panic_next_calls(1);
+        let j = job(32, 8, 16, 500, None);
+        let r = b.submit(j).recv().expect("ticket must be answered, not dropped");
+        assert!(r.is_err(), "panicked execution answers with an error");
+        assert!(!b.blas.pool().is_healthy(0), "the panicking chip is marked unhealthy");
+        // The worker thread survived the unwind and the queue mutex is
+        // not poisoned — readers and new submissions still work.
+        assert_eq!(b.depth(), 0);
+        b.blas.pool().chip(0).clear_faults();
+        b.blas.pool().probe(0).unwrap();
+        let j = job(32, 8, 16, 501, None);
+        let want = oracle(&j);
+        let got = Mat::from_col_major(32, 8, &b.submit(j).recv().unwrap().unwrap());
+        assert!(max_scaled_err(got.view(), want.view()) < 1e-5, "chip recovered after probe");
+    }
+
+    #[test]
+    fn wounded_chip_requeues_to_healthy_ones() {
+        let (b, metrics) = batcher_pool(2);
+        b.blas.pool().chip(1).fail_next_calls(usize::MAX);
+        let j = job(32, 8, 16, 600, None);
+        let want = oracle(&j);
+        // Pinned to the chip that is about to fail: the job must still
+        // complete — rescued by the healthy chip — with correct results.
+        let got = Mat::from_col_major(32, 8, &b.submit_to(1, j).recv().unwrap().unwrap());
+        assert!(max_scaled_err(got.view(), want.view()) < 1e-5, "job rescued on a healthy chip");
+        assert!(!b.blas.pool().is_healthy(1));
+        assert!(metrics.requeued() >= 1, "the rescue is counted");
+        // Pinning to an unhealthy chip is a preference: it degrades to a
+        // healthy queue without ever touching the dead chip again.
+        let j2 = job(32, 8, 16, 601, None);
+        let want2 = oracle(&j2);
+        let got2 = Mat::from_col_major(32, 8, &b.submit_to(1, j2).recv().unwrap().unwrap());
+        assert!(max_scaled_err(got2.view(), want2.view()) < 1e-5);
+    }
+
+    #[test]
+    fn whole_pool_down_fails_tickets_instead_of_hanging() {
+        let (b, metrics) = batcher_pool(2);
+        b.blas.pool().chip(0).fail_next_calls(usize::MAX);
+        b.blas.pool().chip(1).fail_next_calls(usize::MAX);
+        let j = job(32, 8, 16, 650, None);
+        let r = b.submit(j).recv().expect("ticket answered even with the whole pool down");
+        assert!(r.is_err());
+        assert!(metrics.errors() >= 1);
+        assert_eq!(b.blas.pool().healthy_chips(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn deadline_overrun_marks_chip_unhealthy() {
+        let pool = ChipPool::spawn(
+            2,
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        let blas = Arc::new(Blas::with_pool(pool, ShardPolicy::ColumnPanels));
+        let metrics = Arc::new(Metrics::new());
+        let policy = BatchPolicy { health_deadline_ms: 1, ..BatchPolicy::default() };
+        let b = Batcher::spawn(blas, policy, metrics);
+        // Big enough that real µ-kernel execution exceeds 1ms of wall.
+        let j = job(96, 96, 1024, 700, None);
+        let got = b.submit_to(0, j).recv().unwrap().unwrap();
+        assert_eq!(got.len(), 96 * 96, "the slow job itself still completes");
+        assert!(!b.blas.pool().is_healthy(0), "the overrun trips the health deadline");
+        assert!(b.blas.pool().is_healthy(1));
     }
 
     // ---- coalesce_plan property tests (the FIFO/batching invariants) ----

@@ -24,7 +24,7 @@
 //! [`drain`]: BlasClient::drain
 
 use super::protocol::{read_frame, write_frame, Request, Response, PROTOCOL_V1, PROTOCOL_V2};
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::{HashMap, HashSet};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::{Arc, Mutex};
@@ -153,8 +153,15 @@ impl BlasClient {
         );
         let cid = self.next_cid;
         self.next_cid = self.next_cid.wrapping_add(1);
+        // Register before writing (a response pumped by a concurrent
+        // waiter must find the cid known), but a failed write takes the
+        // registration back out — a phantom cid that no response will
+        // ever answer would wedge `drain()` forever.
         self.reader.lock().unwrap().in_flight.insert(cid);
-        write_frame(&mut self.stream, &req.encode_v2(cid, deadline_ms))?;
+        if let Err(e) = write_frame(&mut self.stream, &req.encode_v2(cid, deadline_ms)) {
+            self.reader.lock().unwrap().in_flight.remove(&cid);
+            return Err(e);
+        }
         Ok(Pending { reader: Arc::clone(&self.reader), cid })
     }
 
@@ -188,5 +195,60 @@ impl BlasClient {
     /// tests to write malformed bytes).
     pub fn stream_mut(&mut self) -> &mut TcpStream {
         &mut self.stream
+    }
+
+    /// Turn this v2 session into a live telemetry stream: send the
+    /// `Subscribe` opcode and return an iterator of JSON frames the
+    /// server pushes every telemetry period (the first frame is the
+    /// subscribe ack). Consumes the client — a subscribed connection
+    /// carries telemetry only; outstanding tickets are drained first so
+    /// no response is left competing with the stream.
+    pub fn subscribe(mut self) -> Result<TelemetryStream> {
+        ensure!(
+            self.version >= PROTOCOL_V2,
+            "subscribe() needs a v2 session; connect with connect_v2"
+        );
+        self.drain()?;
+        let cid = self.next_cid;
+        self.next_cid = self.next_cid.wrapping_add(1);
+        write_frame(&mut self.stream, &Request::Subscribe.encode_v2(cid, None))?;
+        Ok(TelemetryStream { client: self, cid })
+    }
+}
+
+/// A subscribed v2 session: yields the server's pushed telemetry frames
+/// (self-describing JSON, one object per frame) until the connection
+/// closes. Obtained from [`BlasClient::subscribe`].
+pub struct TelemetryStream {
+    client: BlasClient,
+    cid: u32,
+}
+
+impl TelemetryStream {
+    /// Block for the next telemetry frame and return its JSON text.
+    /// Errors when the connection closes or the server answers the
+    /// subscription with anything but a text frame.
+    pub fn next_frame(&mut self) -> Result<String> {
+        loop {
+            let mut r = self.client.reader.lock().unwrap();
+            if let Some(resp) = r.completed.remove(&self.cid) {
+                match resp {
+                    Response::OkText(json) => return Ok(json),
+                    Response::Err(e) => bail!("telemetry stream refused: {e}"),
+                    other => bail!("unexpected telemetry frame: {other:?}"),
+                }
+            }
+            r.pump_one()?;
+        }
+    }
+}
+
+impl Iterator for TelemetryStream {
+    type Item = Result<String>;
+
+    /// `Some(Err(..))` means the stream broke (connection closed, codec
+    /// failure); callers typically stop iterating there.
+    fn next(&mut self) -> Option<Result<String>> {
+        Some(self.next_frame())
     }
 }

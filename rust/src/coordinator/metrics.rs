@@ -17,6 +17,7 @@ struct Inner {
     gemm_requests: u64,
     gemv_requests: u64,
     batched: u64,
+    requeued: u64,
     flops: f64,
     latency_us: [u64; BUCKETS],
     total_latency_s: f64,
@@ -48,6 +49,10 @@ pub struct StatsReport {
     pub gemv_requests: u64,
     /// Jobs that executed as part of a coalesced batch.
     pub batched: u64,
+    /// Jobs moved off a wounded chip onto a healthy chip's queue by the
+    /// batcher's health requeue (failed groups being retried plus queued
+    /// jobs drained off an unhealthy chip).
+    pub requeued: u64,
     /// Packed-A panels served from the residency cache (filled in by the
     /// router from [`crate::mem::PanelCache`]; 0 when the cache is off).
     pub panel_hits: u64,
@@ -73,12 +78,28 @@ pub struct StatsReport {
     pub queue_depth: u64,
     /// Batch executions per chip (index = chip id).
     pub chip_gemms: Vec<u64>,
+    /// Health of every pool chip when sampled (`true` = healthy; filled
+    /// in by the router from the pool — a bare [`Metrics::snapshot`]
+    /// reports an empty vec, like `queue_depth`).
+    pub chip_health: Vec<bool>,
 }
 
 impl StatsReport {
     /// Batch executions recorded on `chip` (0 for chips never seen).
     pub fn gemms_on(&self, chip: usize) -> u64 {
         self.chip_gemms.get(chip).copied().unwrap_or(0)
+    }
+
+    /// Whether chip `i` was healthy when sampled (`true` for chips the
+    /// sampler could not see — absence of evidence is not a dead chip).
+    pub fn healthy_on(&self, chip: usize) -> bool {
+        self.chip_health.get(chip).copied().unwrap_or(true)
+    }
+
+    /// Number of chips marked unhealthy when sampled (the report line's
+    /// `unhealthy_chips=` label).
+    pub fn unhealthy_chips(&self) -> u64 {
+        self.chip_health.iter().filter(|&&h| !h).count() as u64
     }
 }
 
@@ -89,7 +110,8 @@ impl std::fmt::Display for StatsReport {
             "requests={} errors={} gemm={} gemv={} batched={} uptime_s={:.1} \
              mean_latency_s={:.6} achieved_gflops={:.3} queue_depth={} io_errors={} \
              deadline_exceeded={} rejected_in_flight={} panel_hits={} panel_misses={} \
-             panel_evictions={} pool_recycled={} p50_s={:.6} p99_s={:.6}",
+             panel_evictions={} pool_recycled={} p50_s={:.6} p99_s={:.6} requeued={} \
+             unhealthy_chips={}",
             self.requests,
             self.errors,
             self.gemm_requests,
@@ -108,9 +130,14 @@ impl std::fmt::Display for StatsReport {
             self.pool_recycled,
             self.p50_s,
             self.p99_s,
+            self.requeued,
+            self.unhealthy_chips(),
         )?;
         for (i, c) in self.chip_gemms.iter().enumerate() {
             write!(f, " chip{i}_gemms={c}")?;
+        }
+        for (i, h) in self.chip_health.iter().enumerate() {
+            write!(f, " chip{i}_healthy={}", u8::from(*h))?;
         }
         Ok(())
     }
@@ -171,6 +198,11 @@ impl Metrics {
         self.inner.lock().unwrap().batched += n as u64;
     }
 
+    /// Record one job moved off a wounded chip onto a healthy queue.
+    pub fn record_requeued(&self) {
+        self.inner.lock().unwrap().requeued += 1;
+    }
+
     /// Record one chip-pinned execution on `chip` (the counter behind the
     /// `chipN_gemms` report labels). Counts batcher groups and hinted
     /// direct gemms — an *unhinted* f64 gemm shards across the whole pool
@@ -187,6 +219,16 @@ impl Metrics {
     /// Total requests recorded.
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
+    }
+
+    /// Failed requests recorded.
+    pub fn errors(&self) -> u64 {
+        self.inner.lock().unwrap().errors
+    }
+
+    /// Health requeues recorded (jobs rescued off wounded chips).
+    pub fn requeued(&self) -> u64 {
+        self.inner.lock().unwrap().requeued
     }
 
     /// Read-side I/O failures recorded.
@@ -236,6 +278,7 @@ impl Metrics {
             gemm_requests: m.gemm_requests,
             gemv_requests: m.gemv_requests,
             batched: m.batched,
+            requeued: m.requeued,
             // Residency counters live with the cache/pools, not this sink;
             // the router overlays them (like queue_depth) before replying.
             panel_hits: 0,
@@ -253,6 +296,9 @@ impl Metrics {
             p99_s: quantile_from(&m.latency_us, 0.99),
             queue_depth: 0,
             chip_gemms: m.chip_gemms.clone(),
+            // Chip health lives with the pool, not this sink; the router
+            // overlays it (like queue_depth) before replying.
+            chip_health: Vec::new(),
         }
     }
 
@@ -362,14 +408,18 @@ mod tests {
         m.record_deadline_exceeded();
         m.record_rejected_in_flight();
         m.record_chip_request(0);
+        m.record_requeued();
         let snap = m.snapshot();
         assert_eq!(snap.requests, 1);
         assert_eq!(snap.errors, 1);
         assert_eq!(snap.io_errors, 1);
         assert_eq!(snap.deadline_exceeded, 1);
         assert_eq!(snap.rejected_in_flight, 1);
+        assert_eq!(snap.requeued, 1);
         assert_eq!(snap.gemms_on(0), 1);
         assert_eq!(snap.gemms_on(7), 0, "unseen chips read as 0");
+        assert!(snap.healthy_on(0), "unsampled health reads healthy");
+        assert_eq!(snap.unhealthy_chips(), 0);
         assert!(snap.p50_s > 0.0 && snap.p50_s <= snap.p99_s);
         // The rendered line keeps every legacy label plus the new ones.
         let line = snap.to_string();
@@ -387,10 +437,27 @@ mod tests {
             "queue_depth=0",
             "p50_s=",
             "p99_s=",
+            "requeued=1",
+            "unhealthy_chips=0",
             "chip0_gemms=1",
         ] {
             assert!(line.contains(label), "missing {label}: {line}");
         }
+    }
+
+    #[test]
+    fn chip_health_renders_and_counts() {
+        let snap = StatsReport {
+            chip_health: vec![true, false, true, false],
+            ..StatsReport::default()
+        };
+        assert_eq!(snap.unhealthy_chips(), 2);
+        assert!(!snap.healthy_on(1));
+        assert!(snap.healthy_on(2));
+        let line = snap.to_string();
+        assert!(line.contains("unhealthy_chips=2"), "{line}");
+        assert!(line.contains("chip1_healthy=0"), "{line}");
+        assert!(line.contains("chip2_healthy=1"), "{line}");
     }
 
     #[test]

@@ -17,14 +17,16 @@
 //!   [`protocol::FrameAccumulator`];
 //! * [`batcher`]  — per-chip FIFO + shape-coalescing batchers (requests
 //!   with the same (op, K-class) batch their HH-RAM crossings, pinned to
-//!   their queue's chip), completion-callback driven;
+//!   their queue's chip), completion-callback driven; workers are
+//!   panic-isolated and requeue a wounded chip's jobs onto healthy ones;
 //! * [`router`]   — dispatch: level-3 sgemm/false-dgemm to a chip queue
 //!   (hinted or least-loaded), level-1/2 to a host worker pool; the
 //!   async path ([`Router::dispatch_async`]) never parks a thread on a
 //!   batched gemm;
 //! * [`server`]   — a threaded TCP accept loop; v2 connections are
 //!   pipelined (bounded in-flight window, per-request deadlines,
-//!   out-of-order writer) and drain gracefully on stop;
+//!   out-of-order writer), can subscribe to periodic JSON telemetry
+//!   pushes, and drain gracefully on stop;
 //! * [`client`]   — blocking v1 calls and pipelined v2 sessions
 //!   ([`BlasClient::submit`] → [`Pending::wait`]);
 //! * [`metrics`]  — counters + latency histograms + per-chip execution
@@ -41,7 +43,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use client::{BlasClient, Pending};
+pub use client::{BlasClient, Pending, TelemetryStream};
 pub use metrics::{Metrics, StatsReport};
 pub use protocol::{
     FrameAccumulator, GemmWire, GemvWire, Opcode, Request, Response, Tensor, PROTOCOL_V1,

@@ -99,6 +99,12 @@ pub enum Opcode {
     /// frame of a connection, in v1 framing; the server's text reply
     /// names the agreed version and the connection upgrades from there.
     Hello = 19,
+    /// Subscribe this (v2) connection to the telemetry stream: the
+    /// server acks, then pushes a periodic self-describing JSON frame
+    /// (an `OkText` response under the reserved cid) with the live
+    /// [`StatsReport`] — per-chip health, queue depth, in-flight,
+    /// latency quantiles, panel-cache hits. Empty payload.
+    Subscribe = 20,
 }
 
 impl Opcode {
@@ -111,12 +117,13 @@ impl Opcode {
             17 => Opcode::Stats,
             18 => Opcode::Shutdown,
             19 => Opcode::Hello,
+            20 => Opcode::Subscribe,
             _ => bail!("unknown opcode {v}"),
         })
     }
 
     /// Every opcode (the property suite's round-trip sweep).
-    pub fn all() -> [Opcode; 6] {
+    pub fn all() -> [Opcode; 7] {
         [
             Opcode::Gemm,
             Opcode::Gemv,
@@ -124,6 +131,7 @@ impl Opcode {
             Opcode::Stats,
             Opcode::Shutdown,
             Opcode::Hello,
+            Opcode::Subscribe,
         ]
     }
 }
@@ -306,6 +314,8 @@ pub enum Request {
         /// The highest wire version the client speaks.
         version: u32,
     },
+    /// Subscribe this v2 connection to periodic JSON telemetry pushes.
+    Subscribe,
 }
 
 /// A response frame: a dtype-tagged tensor, text, typed stats, or an
@@ -511,6 +521,7 @@ impl Request {
             Request::Stats => Opcode::Stats,
             Request::Shutdown => Opcode::Shutdown,
             Request::Hello { .. } => Opcode::Hello,
+            Request::Subscribe => Opcode::Subscribe,
         }
     }
 
@@ -554,7 +565,7 @@ impl Request {
             }
         }
         match self {
-            Request::Ping | Request::Stats | Request::Shutdown => {}
+            Request::Ping | Request::Stats | Request::Shutdown | Request::Subscribe => {}
             Request::Hello { version } => w.u32(*version),
             Request::Gemm(g) => {
                 w.u8(trans_code(g.ta));
@@ -622,6 +633,7 @@ impl Request {
             Opcode::Ping => Request::Ping,
             Opcode::Stats => Request::Stats,
             Opcode::Shutdown => Request::Shutdown,
+            Opcode::Subscribe => Request::Subscribe,
             Opcode::Hello => Request::Hello { version: r.u32()? },
             Opcode::Gemm => {
                 let shard_hint =
@@ -882,9 +894,14 @@ impl Response {
                 w.scalar(s.p50_s);
                 w.scalar(s.p99_s);
                 w.u64(s.queue_depth);
+                w.u64(s.requeued);
                 w.u32(s.chip_gemms.len() as u32);
                 for c in &s.chip_gemms {
                     w.u64(*c);
+                }
+                w.u32(s.chip_health.len() as u32);
+                for h in &s.chip_health {
+                    w.u8(u8::from(*h));
                 }
             }
         }
@@ -930,13 +947,21 @@ impl Response {
                     p50_s: r.scalar()?,
                     p99_s: r.scalar()?,
                     queue_depth: r.u64()?,
+                    requeued: r.u64()?,
                     chip_gemms: Vec::new(),
+                    chip_health: Vec::new(),
                 };
                 let nchips = r.u32()? as usize;
                 ensure!(nchips <= 4096, "implausible chip count {nchips} in stats frame");
                 s.chip_gemms.reserve(nchips);
                 for _ in 0..nchips {
                     s.chip_gemms.push(r.u64()?);
+                }
+                let nhealth = r.u32()? as usize;
+                ensure!(nhealth <= 4096, "implausible health count {nhealth} in stats frame");
+                s.chip_health.reserve(nhealth);
+                for _ in 0..nhealth {
+                    s.chip_health.push(r.u8()? != 0);
                 }
                 Response::Stats(s)
             }
@@ -1186,7 +1211,9 @@ mod tests {
             p50_s: 0.0005,
             p99_s: 0.004,
             queue_depth: 9,
+            requeued: 2,
             chip_gemms: vec![3, 0, 2],
+            chip_health: vec![true, false, true],
         }
     }
 

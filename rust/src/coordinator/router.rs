@@ -134,9 +134,18 @@ impl Router {
                 }
                 rep.pool_recycled = self.batcher.staging_stats().recycled
                     + self.wire_pool.as_ref().map_or(0, |p| p.recycled());
+                // Chip health lives with the pool; overlay it the same way.
+                let pool = self.blas.pool();
+                rep.chip_health = (0..pool.len()).map(|i| pool.is_healthy(i)).collect();
                 Ok(Response::Stats(rep))
             }
             Request::Shutdown => Ok(Response::OkText("bye".into())),
+            Request::Subscribe => {
+                // Telemetry streaming is a connection-level concern; the
+                // pipelined server marks the connection subscribed before
+                // routing. Reaching here means a v1 client asked for it.
+                bail!("subscribe requires a pipelined v2 connection")
+            }
             Request::Hello { .. } => {
                 // Version negotiation is a connection-level exchange; the
                 // server answers it before routing. Reaching here means a
@@ -277,7 +286,11 @@ pub fn route_of(req: &Request) -> &'static str {
         Request::Gemm(g) if g.dtype() == Dtype::F32 => "epiphany-queue",
         Request::Gemm(_) => "epiphany-direct",
         Request::Gemv(_) => "host-pool",
-        Request::Ping | Request::Stats | Request::Shutdown | Request::Hello { .. } => "control",
+        Request::Ping
+        | Request::Stats
+        | Request::Shutdown
+        | Request::Subscribe
+        | Request::Hello { .. } => "control",
     }
 }
 
@@ -308,6 +321,7 @@ mod tests {
     #[test]
     fn routes_classified() {
         assert_eq!(route_of(&Request::Ping), "control");
+        assert_eq!(route_of(&Request::Subscribe), "control");
         let sgemm = Request::sgemm(
             Trans::N,
             Trans::N,
@@ -452,8 +466,10 @@ mod tests {
         match r.handle(Request::Stats) {
             Response::Stats(s) => {
                 assert_eq!(s.queue_depth, 0, "drained between requests");
+                assert_eq!(s.chip_health, vec![true], "pool health overlaid per chip");
                 // And the rendered line keeps the legacy labels.
                 assert!(s.to_string().contains("requests="));
+                assert!(s.to_string().contains("chip0_healthy=1"));
             }
             other => panic!("{other:?}"),
         }

@@ -26,7 +26,7 @@
 //! leaks.
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, StatsReport};
 use super::protocol::{
     write_frame, FrameAccumulator, Request, Response, DEFAULT_MAX_FRAME_LEN, PROTOCOL_V1,
     PROTOCOL_V2,
@@ -71,6 +71,16 @@ pub struct ServerConfig {
     /// (see [`crate::mem::PanelCache`]). 0 — the default — disables the
     /// cache and keeps the gemm path bit-identical to a cacheless build.
     pub panel_cache_bytes: usize,
+    /// Per-batch wall-clock budget in milliseconds: a chip whose group
+    /// execution overruns it is marked unhealthy and drained (the
+    /// `--health-deadline-ms` knob; overrides
+    /// [`BatchPolicy::health_deadline_ms`] when nonzero, 0 — the
+    /// default — leaves the policy's own value in force).
+    pub health_deadline_ms: u64,
+    /// Milliseconds between telemetry pushes on a subscribed v2
+    /// connection (the `Subscribe` opcode's stream cadence; values
+    /// below 10 read as 10).
+    pub telemetry_period_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -85,6 +95,8 @@ impl Default for ServerConfig {
             max_in_flight: 32,
             max_frame_len: DEFAULT_MAX_FRAME_LEN,
             panel_cache_bytes: 0,
+            health_deadline_ms: 0,
+            telemetry_period_ms: 200,
         }
     }
 }
@@ -94,6 +106,7 @@ impl Default for ServerConfig {
 struct ConnLimits {
     max_in_flight: usize,
     max_frame_len: usize,
+    telemetry_period: Duration,
 }
 
 /// A live connection as the accept loop tracks it: the stream half used
@@ -109,6 +122,7 @@ pub struct BlasServer {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     conns: Arc<Mutex<Vec<ConnEntry>>>,
+    blas: Arc<Blas>,
     /// The server's metrics sink (shared with the router and batchers).
     pub metrics: Arc<Metrics>,
 }
@@ -127,18 +141,23 @@ impl BlasServer {
         blas.set_panel_cache(config.panel_cache_bytes);
         let blas = Arc::new(blas);
         let metrics = Arc::new(Metrics::new());
-        let batcher = Batcher::spawn(Arc::clone(&blas), config.batch, Arc::clone(&metrics));
+        let mut batch = config.batch.clone();
+        if config.health_deadline_ms > 0 {
+            batch.health_deadline_ms = config.health_deadline_ms;
+        }
+        let batcher = Batcher::spawn(Arc::clone(&blas), batch, Arc::clone(&metrics));
         // One wire-body pool shared by every connection's accumulator, so
         // frame allocations recycle across connections, not just within
         // one; the router reads its counters for `pool_recycled=`.
         let wire_pool = Arc::new(BufferPool::<u8>::new(32));
         let router = Arc::new(
-            Router::new(blas, batcher, Arc::clone(&metrics))
+            Router::new(Arc::clone(&blas), batcher, Arc::clone(&metrics))
                 .with_wire_pool(Arc::clone(&wire_pool)),
         );
         let limits = ConnLimits {
             max_in_flight: config.max_in_flight.max(1),
             max_frame_len: config.max_frame_len.max(64),
+            telemetry_period: Duration::from_millis(config.telemetry_period_ms.max(10)),
         };
 
         let listener = TcpListener::bind(&config.addr)
@@ -187,6 +206,7 @@ impl BlasServer {
             stop,
             accept_thread: Some(accept_thread),
             conns,
+            blas,
             metrics,
         })
     }
@@ -194,6 +214,13 @@ impl BlasServer {
     /// The bound listen address (resolves port 0 to the real port).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.local_addr
+    }
+
+    /// A shared handle to the BLAS stack the server routes onto — the
+    /// chip pool behind it carries the health state (chaos tests use
+    /// this to arm per-chip fault injection and to probe recovery).
+    pub fn blas_handle(&self) -> Arc<Blas> {
+        Arc::clone(&self.blas)
     }
 
     /// Graceful drain: stop accepting, interrupt every live connection's
@@ -325,6 +352,8 @@ enum WriterMsg {
     Done(u32, Response),
     /// Write through immediately (rejections, decode errors, bye).
     Direct(u32, Response),
+    /// Start pushing telemetry frames under this correlation id.
+    Subscribe(u32),
     /// Reader is done: drain the in-flight window, then exit.
     Eof,
 }
@@ -350,9 +379,11 @@ fn serve_v2(
     let writer = {
         let in_flight = Arc::clone(&in_flight);
         let metrics = Arc::clone(&metrics);
+        let router = Arc::clone(&router);
+        let period = limits.telemetry_period;
         std::thread::Builder::new()
             .name("blas-conn-writer".into())
-            .spawn(move || writer_loop(write_half, rx, in_flight, metrics))
+            .spawn(move || writer_loop(write_half, rx, in_flight, metrics, router, period))
             .context("spawning connection writer")?
     };
     let mut buf = vec![0u8; 64 * 1024];
@@ -398,6 +429,12 @@ fn serve_v2(
                         let _ = TcpStream::connect(addr);
                     }
                     break 'read; // drain in-flight, then close
+                }
+                Request::Subscribe => {
+                    // The writer owns the stream from here on out: it
+                    // pushes a telemetry frame under this cid right away
+                    // (the subscribe ack) and then every period.
+                    let _ = tx.send(WriterMsg::Subscribe(cid));
                 }
                 other => {
                     // Admission control under one short lock; execution
@@ -469,22 +506,32 @@ fn serve_v2(
 }
 
 /// The v2 writer: completions out, tagged by correlation id, in
-/// whatever order they land; overdue deadlines expired proactively.
+/// whatever order they land; overdue deadlines expired proactively and
+/// — once a `Subscribe` lands — a telemetry frame pushed every period.
 fn writer_loop(
     mut stream: TcpStream,
     rx: mpsc::Receiver<WriterMsg>,
     in_flight: InFlightMap,
     metrics: Arc<Metrics>,
+    router: Arc<Router>,
+    period: Duration,
 ) {
     let mut draining = false;
+    let mut subscribed: Option<u32> = None;
+    let mut next_push = Instant::now();
     loop {
         if draining && in_flight.lock().unwrap().is_empty() {
             return;
         }
-        // Sleep until the next message or the nearest deadline.
+        // Sleep until the next message, the nearest deadline, or — on a
+        // subscribed connection — the next telemetry push.
         let next_deadline: Option<Instant> =
             in_flight.lock().unwrap().values().copied().flatten().min();
-        let timeout = match next_deadline {
+        let mut wake = next_deadline;
+        if subscribed.is_some() {
+            wake = Some(wake.map_or(next_push, |d| d.min(next_push)));
+        }
+        let timeout = match wake {
             Some(t) => t.saturating_duration_since(Instant::now()),
             None => Duration::from_millis(200),
         };
@@ -533,6 +580,10 @@ fn writer_loop(
                     return;
                 }
             }
+            Some(WriterMsg::Subscribe(cid)) => {
+                subscribed = Some(cid);
+                next_push = Instant::now(); // first frame is the ack
+            }
             Some(WriterMsg::Eof) => draining = true,
             None => {
                 // Expire every overdue request now.
@@ -558,7 +609,58 @@ fn writer_loop(
                 }
             }
         }
+        // Telemetry push, whatever woke us: the subscribed stream keeps
+        // its cadence even while completions flow.
+        if let Some(cid) = subscribed {
+            if Instant::now() >= next_push {
+                let rep = match router.handle(Request::Stats) {
+                    Response::Stats(s) => s,
+                    _ => StatsReport::default(),
+                };
+                let n = in_flight.lock().unwrap().len();
+                let frame = Response::OkText(telemetry_json(&rep, n)).encode_v2(cid);
+                if write_frame(&mut stream, &frame).is_err() {
+                    metrics.record_io_error();
+                    return;
+                }
+                next_push = Instant::now() + period;
+            }
+        }
     }
+}
+
+/// Render one self-describing telemetry frame: the same numbers the
+/// `Stats` opcode reports (with the router's pool/queue overlays), as a
+/// single JSON object per push — hand-rendered, since no JSON crate is
+/// available offline. `in_flight` is this connection's admitted window.
+fn telemetry_json(rep: &StatsReport, in_flight: usize) -> String {
+    let mut chips = String::new();
+    for (i, h) in rep.chip_health.iter().enumerate() {
+        if i > 0 {
+            chips.push(',');
+        }
+        chips.push_str(&format!(
+            "{{\"chip\":{i},\"healthy\":{h},\"gemms\":{}}}",
+            rep.gemms_on(i)
+        ));
+    }
+    format!(
+        "{{\"type\":\"telemetry\",\"uptime_s\":{:.3},\"requests\":{},\"errors\":{},\
+         \"requeued\":{},\"queue_depth\":{},\"in_flight\":{in_flight},\
+         \"mean_latency_s\":{:.6},\"p50_s\":{:.6},\"p99_s\":{:.6},\
+         \"panel_hits\":{},\"panel_misses\":{},\"unhealthy_chips\":{},\"chips\":[{chips}]}}",
+        rep.uptime_s,
+        rep.requests,
+        rep.errors,
+        rep.requeued,
+        rep.queue_depth,
+        rep.mean_latency_s,
+        rep.p50_s,
+        rep.p99_s,
+        rep.panel_hits,
+        rep.panel_misses,
+        rep.unhealthy_chips(),
+    )
 }
 
 /// The error a request that missed its budget gets back.
@@ -859,6 +961,63 @@ mod tests {
         // The admitted request still completes fine.
         assert_eq!(p1.wait().unwrap().into_f32().unwrap().len(), m * n);
         assert!(srv.metrics.rejected_in_flight() >= 1);
+    }
+
+    #[test]
+    fn subscribe_streams_telemetry_frames() {
+        let srv = BlasServer::start(ServerConfig {
+            chips: 2,
+            telemetry_period_ms: 20,
+            ..Default::default()
+        })
+        .unwrap();
+        // Seed the counters with one real gemm before subscribing.
+        let mut cli = BlasClient::connect_v2(srv.addr()).unwrap();
+        let (m, n, k) = (32, 16, 24);
+        let a = Mat::<f32>::randn(m, k, 60);
+        let b = Mat::<f32>::randn(k, n, 61);
+        cli.call(&Request::sgemm(
+            Trans::N,
+            Trans::N,
+            m,
+            n,
+            k,
+            1.0,
+            0.0,
+            a.as_slice().to_vec(),
+            b.as_slice().to_vec(),
+            vec![0.0; m * n],
+        ))
+        .unwrap()
+        .into_f32()
+        .unwrap();
+        let mut stream = cli.subscribe().unwrap();
+        for _ in 0..2 {
+            let frame = stream.next_frame().unwrap();
+            assert!(frame.contains("\"type\":\"telemetry\""), "{frame}");
+            assert!(frame.contains("\"requests\":1"), "{frame}");
+            assert!(frame.contains("\"unhealthy_chips\":0"), "{frame}");
+            assert!(frame.contains("\"chip\":1"), "both chips reported: {frame}");
+            assert!(frame.contains("\"healthy\":true"), "{frame}");
+        }
+        // The subscribed connection does not starve new ones: a fresh
+        // client still gets served while frames keep flowing.
+        let mut cli2 = BlasClient::connect(srv.addr()).unwrap();
+        match cli2.call(&Request::Ping).unwrap() {
+            Response::OkText(s) => assert_eq!(s, "pong"),
+            other => panic!("{other:?}"),
+        }
+        assert!(stream.next_frame().is_ok());
+    }
+
+    #[test]
+    fn subscribe_on_v1_is_an_error() {
+        let srv = server();
+        let mut cli = BlasClient::connect(srv.addr()).unwrap();
+        match cli.call(&Request::Subscribe).unwrap() {
+            Response::Err(e) => assert!(e.contains("v2"), "{e}"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

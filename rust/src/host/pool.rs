@@ -18,7 +18,7 @@ use super::service::{ServiceBackend, ServiceHandle};
 use crate::epiphany::kernel::KernelGeometry;
 use crate::epiphany::timing::CalibratedModel;
 use anyhow::{ensure, Result};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// How level-3 work is split across the chips of a [`ChipPool`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -51,6 +51,7 @@ pub struct ChipPool {
     chips: Vec<ServiceHandle>,
     in_flight: Vec<AtomicUsize>,
     crossings: Vec<AtomicU64>,
+    healthy: Vec<AtomicBool>,
 }
 
 impl ChipPool {
@@ -83,6 +84,7 @@ impl ChipPool {
             chips,
             in_flight: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             crossings: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            healthy: (0..n).map(|_| AtomicBool::new(true)).collect(),
         }
     }
 
@@ -108,23 +110,78 @@ impl ChipPool {
         self.chips[0].geometry()
     }
 
-    /// Index of the chip with the least work: fewest in-flight shards,
-    /// ties broken by lifetime crossings, then by lowest index
-    /// (deterministic).
+    /// Index of the healthy chip with the least work: fewest in-flight
+    /// shards, ties broken by lifetime crossings, then by lowest index
+    /// (deterministic). Unhealthy chips are skipped; if *every* chip is
+    /// unhealthy the scan degrades to the full pool rather than refusing
+    /// to place work (the call itself will then surface the error).
     pub fn least_loaded(&self) -> usize {
-        let mut best = 0usize;
+        self.least_loaded_among(true).or_else(|| self.least_loaded_among(false)).unwrap_or(0)
+    }
+
+    fn least_loaded_among(&self, healthy_only: bool) -> Option<usize> {
+        let mut best = None;
         let mut best_key = (usize::MAX, u64::MAX);
         for i in 0..self.chips.len() {
+            if healthy_only && !self.is_healthy(i) {
+                continue;
+            }
             let key = (
                 self.in_flight[i].load(Ordering::Relaxed),
                 self.crossings[i].load(Ordering::Relaxed),
             );
             if key < best_key {
                 best_key = key;
-                best = i;
+                best = Some(i);
             }
         }
         best
+    }
+
+    /// Whether chip `i` is currently marked healthy. Out-of-range indices
+    /// read as unhealthy (nothing should be routed to them).
+    pub fn is_healthy(&self, i: usize) -> bool {
+        self.healthy.get(i).map(|h| h.load(Ordering::Relaxed)).unwrap_or(false)
+    }
+
+    /// Mark chip `i` unhealthy: `least_loaded` and the shard planner stop
+    /// routing new work to it until a [`Self::mark_healthy`] probe
+    /// succeeds. Idempotent; returns `true` if this call flipped the
+    /// state (the chip was healthy before).
+    pub fn mark_unhealthy(&self, i: usize) -> bool {
+        match self.healthy.get(i) {
+            Some(h) => h.swap(false, Ordering::Relaxed),
+            None => false,
+        }
+    }
+
+    /// Re-admit chip `i` after a successful probe (e.g. a ping round
+    /// trip through its service thread). Idempotent.
+    pub fn mark_healthy(&self, i: usize) {
+        if let Some(h) = self.healthy.get(i) {
+            h.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Indices of the chips currently marked healthy, in order.
+    pub fn healthy_chips(&self) -> Vec<usize> {
+        (0..self.chips.len()).filter(|&i| self.is_healthy(i)).collect()
+    }
+
+    /// Indices of the chips currently marked unhealthy, in order — what
+    /// the stats report exposes as `unhealthy_chips`.
+    pub fn unhealthy_chips(&self) -> Vec<usize> {
+        (0..self.chips.len()).filter(|&i| !self.is_healthy(i)).collect()
+    }
+
+    /// Probe chip `i` with a real round trip through its service thread
+    /// and re-admit it on success. A dead service thread keeps the chip
+    /// unhealthy and returns the probe error.
+    pub fn probe(&self, i: usize) -> Result<()> {
+        ensure!(i < self.chips.len(), "probe of chip {i} out of range (pool has {})", self.len());
+        self.chips[i].ping()?;
+        self.mark_healthy(i);
+        Ok(())
     }
 
     /// Lifetime µ-kernel crossings per chip — the shard-balance evidence
@@ -200,5 +257,39 @@ mod tests {
         // In-flight equal again; crossings break the tie toward chip 1.
         assert_eq!(p.least_loaded(), 1);
         assert_eq!(p.crossings(), vec![5, 0]);
+    }
+
+    #[test]
+    fn health_state_routes_around_bad_chips() {
+        let p = pool(3);
+        assert_eq!(p.healthy_chips(), vec![0, 1, 2]);
+        assert!(p.unhealthy_chips().is_empty());
+        assert!(p.mark_unhealthy(0), "first mark flips the state");
+        assert!(!p.mark_unhealthy(0), "second mark is idempotent");
+        assert!(!p.is_healthy(0));
+        assert_eq!(p.least_loaded(), 1, "unhealthy chip is skipped");
+        assert_eq!(p.unhealthy_chips(), vec![0]);
+        p.mark_unhealthy(1);
+        p.mark_unhealthy(2);
+        // Whole pool down: degrade to the full scan instead of refusing
+        // to place (the call itself surfaces the chip error).
+        assert_eq!(p.least_loaded(), 0);
+        p.probe(1).unwrap();
+        assert_eq!(p.healthy_chips(), vec![1]);
+        assert_eq!(p.least_loaded(), 1);
+        assert!(p.probe(9).is_err(), "probe is range-checked");
+        assert!(!p.is_healthy(9), "out-of-range chips read unhealthy");
+    }
+
+    #[test]
+    fn probe_fails_while_faults_armed() {
+        let p = pool(2);
+        p.chip(1).fail_next_calls(usize::MAX);
+        p.mark_unhealthy(1);
+        assert!(p.probe(1).is_err());
+        assert!(!p.is_healthy(1), "a failed probe must not re-admit");
+        p.chip(1).clear_faults();
+        p.probe(1).unwrap();
+        assert!(p.is_healthy(1));
     }
 }

@@ -14,7 +14,8 @@ use crate::epiphany::kernel::KernelGeometry;
 use crate::epiphany::timing::CalibratedModel;
 use crate::esdk::EHal;
 use crate::runtime::GemmExecutor;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -51,6 +52,8 @@ pub enum ServiceRequest {
         k: usize,
         params: ProjectionParams,
     },
+    /// Liveness probe: a mailbox round trip with no HH-RAM exchange.
+    Ping,
     /// Stop the service loop.
     Shutdown,
 }
@@ -84,6 +87,12 @@ pub struct ServiceHandle {
     ipc_lock: Mutex<()>,
     join: Option<JoinHandle<()>>,
     geom: KernelGeometry,
+    /// Fault injection (chaos tests): the next N entries into this handle
+    /// return an error before touching HH-RAM. `usize::MAX` ≈ a dead chip.
+    fault_errors: AtomicUsize,
+    /// Fault injection: the next N entries panic on the *caller's* thread,
+    /// modelling a crash inside the host-side service call.
+    fault_panics: AtomicUsize,
 }
 
 impl ServiceHandle {
@@ -138,6 +147,14 @@ impl ServiceHandle {
                     if matches!(req, ServiceRequest::Shutdown) {
                         break;
                     }
+                    if matches!(req, ServiceRequest::Ping) {
+                        // No HH-RAM exchange; just prove the loop is alive.
+                        let _ = reply.send(Ok(ServiceResponse {
+                            wall_s: 0.0,
+                            projection: Projection::default(),
+                        }));
+                        continue;
+                    }
                     // Consume the caller's request semaphore (the paper's
                     // "passes the control to the service process").
                     sem_req_t.wait();
@@ -162,7 +179,57 @@ impl ServiceHandle {
             ipc_lock: Mutex::new(()),
             join: Some(join),
             geom,
+            fault_errors: AtomicUsize::new(0),
+            fault_panics: AtomicUsize::new(0),
         })
+    }
+
+    /// Consume one pending injected fault, if any. Error faults take
+    /// priority over panic faults when both are armed.
+    fn check_fault(&self) -> Result<()> {
+        if take_one(&self.fault_errors) {
+            bail!("injected fault: chip service call failed");
+        }
+        if take_one(&self.fault_panics) {
+            panic!("injected fault: chip service call panicked");
+        }
+        Ok(())
+    }
+
+    /// Arm fault injection: the next `n` entries into this handle (gemm
+    /// calls and pings alike) fail with an error, as a crashed or wedged
+    /// chip would. `usize::MAX` keeps the chip down until
+    /// [`Self::clear_faults`].
+    pub fn fail_next_calls(&self, n: usize) {
+        self.fault_errors.store(n, Ordering::SeqCst);
+    }
+
+    /// Arm fault injection: the next `n` entries into this handle panic on
+    /// the calling thread — the failure mode that used to poison the
+    /// batcher queue mutex.
+    pub fn panic_next_calls(&self, n: usize) {
+        self.fault_panics.store(n, Ordering::SeqCst);
+    }
+
+    /// Disarm all pending injected faults (the chip "comes back").
+    pub fn clear_faults(&self) {
+        self.fault_errors.store(0, Ordering::SeqCst);
+        self.fault_panics.store(0, Ordering::SeqCst);
+    }
+
+    /// Liveness probe: a mailbox round trip through the service thread
+    /// with no HH-RAM exchange. Errors if the thread is gone or a fault
+    /// is armed — the health probe path in
+    /// [`ChipPool`](crate::host::pool::ChipPool) builds on this.
+    pub fn ping(&self) -> Result<()> {
+        self.check_fault()?;
+        let (rtx, rrx) = mpsc::channel();
+        self.mailbox
+            .req
+            .send((ServiceRequest::Ping, rtx))
+            .map_err(|_| anyhow!("service thread gone"))?;
+        rrx.recv().map_err(|_| anyhow!("service thread dropped reply"))??;
+        Ok(())
     }
 
     /// The µ-kernel geometry this service was booted with.
@@ -183,6 +250,7 @@ impl ServiceHandle {
         c_in: &[f32],
         mut params: ProjectionParams,
     ) -> Result<(Vec<f32>, ServiceResponse)> {
+        self.check_fault()?;
         params.ipc = true;
         let k = a_panel.len() / self.geom.m;
         let _ipc = self.ipc_lock.lock().unwrap();
@@ -211,6 +279,7 @@ impl ServiceHandle {
         c_in: &[f64],
         mut params: ProjectionParams,
     ) -> Result<(Vec<f64>, ServiceResponse)> {
+        self.check_fault()?;
         params.ipc = true;
         params.dgemm = true;
         let k = a_panel.len() / self.geom.m;
@@ -246,6 +315,19 @@ impl Drop for ServiceHandle {
     }
 }
 
+/// Consume one armed fault from `counter`: decrements if non-zero
+/// (`usize::MAX` is sticky — a chip that stays down) and reports whether
+/// a fault fired.
+fn take_one(counter: &AtomicUsize) -> bool {
+    counter
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| match v {
+            0 => None,
+            usize::MAX => Some(usize::MAX),
+            v => Some(v - 1),
+        })
+        .is_ok()
+}
+
 /// Service-thread body for one request. Returns None on shutdown.
 fn serve_one(
     ukr: &mut InnerMicroKernel,
@@ -254,6 +336,11 @@ fn serve_one(
 ) -> Option<Result<ServiceResponse>> {
     match req {
         ServiceRequest::Shutdown => None,
+        // Pings are answered in the service loop itself (no HH-RAM); this
+        // arm only keeps the match total if one ever lands here.
+        ServiceRequest::Ping => {
+            Some(Ok(ServiceResponse { wall_s: 0.0, projection: Projection::default() }))
+        }
         ServiceRequest::Sgemm { alpha, beta, k, params } => {
             let (m, n) = (ukr.geom.m, ukr.geom.n);
             let payload = shm.take_f32();
@@ -355,6 +442,45 @@ mod tests {
             let e = max_scaled_err(got.view(), want.view());
             assert!(e < 1e-5, "call {i} err {e}");
         }
+    }
+
+    #[test]
+    fn ping_and_fault_injection() {
+        let svc = service(ServiceBackend::Simulator);
+        svc.ping().unwrap();
+        svc.fail_next_calls(2);
+        assert!(svc.ping().is_err());
+        assert!(svc.ping().is_err());
+        svc.ping().unwrap(); // counter drained
+        svc.fail_next_calls(usize::MAX);
+        assert!(svc.ping().is_err());
+        assert!(svc.ping().is_err(), "usize::MAX stays armed");
+        svc.clear_faults();
+        svc.ping().unwrap();
+        // Panic faults fire on the caller's thread, not the service's.
+        svc.panic_next_calls(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| svc.ping()));
+        assert!(r.is_err(), "armed panic fault must unwind the caller");
+        svc.ping().unwrap();
+    }
+
+    #[test]
+    fn injected_error_reaches_sgemm_callers() {
+        let svc = service(ServiceBackend::Simulator);
+        let g = svc.geometry();
+        svc.fail_next_calls(1);
+        let r = svc.sgemm(
+            1.0,
+            &vec![0.0f32; g.m * 4],
+            &vec![0.0f32; 4 * g.n],
+            0.0,
+            &vec![0.0f32; g.m * g.n],
+            ProjectionParams::kernel_service(4),
+        );
+        assert!(format!("{:#}", r.unwrap_err()).contains("injected fault"));
+        // The handle still serves once the fault is consumed.
+        let (got, want) = call(&svc, 32, 90);
+        assert!(max_scaled_err(got.view(), want.view()) < 1e-5);
     }
 
     #[test]

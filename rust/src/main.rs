@@ -3,9 +3,13 @@
 //! Subcommands:
 //!   serve [--addr HOST:PORT] [--backend pjrt|sim|hostref] [--chips N]
 //!         [--max-in-flight W] [--max-frame-len B] [--panel-cache-mb MB]
+//!         [--health-deadline-ms MS] [--telemetry-period-ms MS]
 //!         run the L3 BLAS network service until a Shutdown frame arrives
 //!   client [--addr HOST:PORT] [--reqs N] [--depth D] [--m --n --k]
 //!         drive a serve instance with D-deep pipelined sgemms (wire v2)
+//!   client --watch [--addr HOST:PORT] [--frames N]
+//!         subscribe to the server's telemetry stream and print one JSON
+//!         frame per line (N = 0, the default, streams until killed)
 //!   sgemm [--m M] [--n N] [--k K] [--ta n|t] [--tb n|t] [--chips N]
 //!         one accelerated gemm with the wall/projected/paper report
 //!   hpl   [--n N] [--nb NB]
@@ -117,6 +121,10 @@ fn main() -> Result<()> {
                 max_in_flight: args.usize("max-in-flight", defaults.max_in_flight)?,
                 max_frame_len: args.usize("max-frame-len", defaults.max_frame_len)?,
                 panel_cache_bytes: args.usize("panel-cache-mb", 0)? << 20,
+                health_deadline_ms: args.usize("health-deadline-ms", 0)? as u64,
+                telemetry_period_ms: args
+                    .usize("telemetry-period-ms", defaults.telemetry_period_ms as usize)?
+                    as u64,
             };
             let window = cfg.max_in_flight;
             let srv = BlasServer::start(cfg)?;
@@ -133,6 +141,23 @@ fn main() -> Result<()> {
         }
         "client" => {
             let addr = args.get("addr").unwrap_or("127.0.0.1:7700").to_string();
+            if args.has("watch") {
+                // Live telemetry: subscribe and print one JSON frame per
+                // line until --frames is exhausted (0 = until killed).
+                let frames = args.usize("frames", 0)?;
+                let cli = BlasClient::connect_v2(&*addr)
+                    .with_context(|| format!("connecting to {addr}"))?;
+                if cli.version() < PROTOCOL_V2 {
+                    bail!("--watch needs a v2 server (this one only speaks v1)");
+                }
+                let mut stream = cli.subscribe()?;
+                let mut seen = 0usize;
+                while frames == 0 || seen < frames {
+                    println!("{}", stream.next_frame()?);
+                    seen += 1;
+                }
+                return Ok(());
+            }
             let reqs = args.usize("reqs", 64)?.max(1);
             let depth = args.usize("depth", 8)?.max(1);
             let m = args.usize("m", 96)?;
@@ -264,10 +289,12 @@ fn print_help() {
          \n\
          commands:\n\
          \u{20} serve   [--addr H:P] [--backend sim|pjrt|hostref] [--chips N]\n\
-         \u{20}         [--max-in-flight W] [--max-frame-len B]\n\
-         \u{20}         [--panel-cache-mb MB]                       run the network BLAS service\n\
+         \u{20}         [--max-in-flight W] [--max-frame-len B] [--panel-cache-mb MB]\n\
+         \u{20}         [--health-deadline-ms MS] [--telemetry-period-ms MS]\n\
+         \u{20}                                                     run the network BLAS service\n\
          \u{20} client  [--addr H:P] [--reqs N] [--depth D] [--m --n --k]\n\
          \u{20}                                                     pipelined v2 load generator\n\
+         \u{20} client  --watch [--addr H:P] [--frames N]           stream live telemetry JSON\n\
          \u{20} sgemm   [--m --n --k --ta --tb --backend --chips]   one gemm + report\n\
          \u{20} hpl     [--n --nb --backend]                        HPL Linpack run\n\
          \u{20} table   <1..7> [--full]                             regenerate a paper table\n\

@@ -145,6 +145,20 @@ impl Platform {
     pub fn library(&self) -> BlasLibrary {
         BlasLibrary::new(Arc::clone(&self.blas))
     }
+
+    /// Indices of the pool's chips currently marked healthy. A chip
+    /// leaves this set when a service call on it errors, panics, or
+    /// overruns the batcher's health deadline; it returns after a
+    /// successful [`Platform::probe_chip`].
+    pub fn healthy_chips(&self) -> Vec<usize> {
+        self.blas.pool().healthy_chips()
+    }
+
+    /// Probe chip `i` with a real service-thread round trip and re-admit
+    /// it on success (see [`crate::host::pool::ChipPool::probe`]).
+    pub fn probe_chip(&self, i: usize) -> Result<()> {
+        self.blas.pool().probe(i)
+    }
 }
 
 #[cfg(test)]
@@ -183,6 +197,17 @@ mod tests {
         }
         let s = cached.blas().panel_cache().unwrap().stats();
         assert!(s.hits >= 1, "second pass re-uses the packed panel: {s:?}");
+    }
+
+    #[test]
+    fn health_surface_forwards_to_pool() {
+        let p = Platform::builder().chips(2).build().unwrap();
+        assert_eq!(p.healthy_chips(), vec![0, 1]);
+        p.blas().pool().mark_unhealthy(1);
+        assert_eq!(p.healthy_chips(), vec![0]);
+        p.probe_chip(1).unwrap();
+        assert_eq!(p.healthy_chips(), vec![0, 1]);
+        assert!(p.probe_chip(5).is_err(), "probe is range-checked");
     }
 
     #[test]

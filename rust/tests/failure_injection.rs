@@ -149,19 +149,133 @@ fn hpl_singular_input_reported() {
         .backend(parallella_blas::platform::BackendKind::Simulator)
         .build()
         .unwrap();
-    // Rank-deficient matrix: column 3 duplicated.
+    // Exactly rank-1: A[i][j] = u[i]·v[j] with u a power of two and v a
+    // small integer. Every elimination quantity is then exact in f64
+    // (the multipliers are power-of-two ratios, the products small
+    // integers), so column 1's tail reduces to exactly 0.0 and the zero
+    // pivot fires deterministically — no rounding escape hatch, no
+    // conditional assert.
     let n = 64;
-    let mut a = Mat::<f64>::randn(n, n, 9);
-    for i in 0..n {
-        let v = a.get(i, 3);
-        a.set(i, 7, v);
+    let mut a = Mat::<f64>::zeros(n, n);
+    for j in 0..n {
+        for i in 0..n {
+            let u = (1u32 << (i % 5)) as f64;
+            let v = (1 + j % 7) as f64;
+            a.set(i, j, u * v);
+        }
     }
-    let err = parallella_blas::hpl::lu::lu_factor_blocked(plat.blas(), &mut a, 32);
-    // Exactly singular after elimination → error; f64 rounding may let it
-    // squeak through as near-singular, in which case pivots stay finite.
-    if let Err(e) = err {
-        assert!(format!("{e:#}").contains("singular"));
+    let err =
+        parallella_blas::hpl::lu::lu_factor_blocked(plat.blas(), &mut a, 32).unwrap_err();
+    assert!(format!("{err:#}").contains("singular"), "{err:#}");
+}
+
+#[test]
+fn chip_death_mid_stream_is_survived() {
+    // The ISSUE's acceptance scenario: one chip of a 4-chip pool dies
+    // mid-stream. Every ticket must still complete, the rescued results
+    // must be bit-identical to a healthy run, the stats report must show
+    // the unhealthy chip and the requeue counter, and the coordinator
+    // must keep serving new connections.
+    let srv = BlasServer::start(ServerConfig { chips: 4, ..Default::default() }).unwrap();
+    let blas = srv.blas_handle();
+    let (m, n, k) = (32, 16, 24);
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| {
+            let a = Mat::<f32>::randn(m, k, 300 + i);
+            let b = Mat::<f32>::randn(k, n, 400 + i);
+            Request::sgemm(
+                Trans::N,
+                Trans::N,
+                m,
+                n,
+                k,
+                1.0,
+                0.0,
+                a.as_slice().to_vec(),
+                b.as_slice().to_vec(),
+                vec![0.0; m * n],
+            )
+        })
+        .collect();
+    // Healthy pass first: the bit-identity reference (every chip of the
+    // pool computes the same simulator dataflow, so which chip rescues a
+    // job must not change a single bit).
+    let mut cli = BlasClient::connect_v2(srv.addr()).unwrap();
+    let healthy: Vec<Vec<f32>> =
+        reqs.iter().map(|r| cli.call(r).unwrap().into_f32().unwrap()).collect();
+    // Kill chip 2: every service call on it now fails. Pin the whole
+    // pipelined stream at it — the first group dies mid-execution, the
+    // batcher wounds the chip, requeues, and later submissions degrade
+    // to healthy chips.
+    blas.pool().chip(2).fail_next_calls(usize::MAX);
+    let pending: Vec<_> = reqs
+        .iter()
+        .map(|r| cli.submit(&r.clone().with_shard_hint(2)).unwrap())
+        .collect();
+    // Zero lost tickets: every wait returns, and with a rescued (not
+    // errored) result.
+    let rescued: Vec<Vec<f32>> =
+        pending.into_iter().map(|p| p.wait().unwrap().into_f32().unwrap()).collect();
+    assert_eq!(rescued, healthy, "rescued results must be bit-identical");
+    // The report names the wounded chip and counts the rescues.
+    match cli.call(&Request::Stats).unwrap() {
+        Response::Stats(s) => {
+            assert!(!s.healthy_on(2), "{s}");
+            assert_eq!(s.unhealthy_chips(), 1, "{s}");
+            assert!(s.requeued >= 1, "{s}");
+            assert!(s.to_string().contains("chip2_healthy=0"), "{s}");
+        }
+        other => panic!("{other:?}"),
     }
+    // The coordinator keeps serving brand-new connections.
+    let mut cli2 = BlasClient::connect_v2(srv.addr()).unwrap();
+    let again = cli2.call(&reqs[0]).unwrap().into_f32().unwrap();
+    assert_eq!(again, healthy[0]);
+    // Probe recovery: clear the fault, ping the chip back in.
+    blas.pool().chip(2).clear_faults();
+    blas.pool().probe(2).unwrap();
+    match cli2.call(&Request::Stats).unwrap() {
+        Response::Stats(s) => assert_eq!(s.unhealthy_chips(), 0, "{s}"),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn failed_submit_leaves_no_phantom_ticket() {
+    // Regression: a submit whose frame never reached the wire used to
+    // register its correlation id anyway, so drain() waited forever for
+    // a response that could not exist.
+    let srv = BlasServer::start(ServerConfig::default()).unwrap();
+    let mut cli = BlasClient::connect_v2(srv.addr()).unwrap();
+    match cli.call(&Request::Ping).unwrap() {
+        Response::OkText(s) => assert_eq!(s, "pong"),
+        other => panic!("{other:?}"),
+    }
+    // Kill the write half mid-session: the next submit cannot be sent.
+    cli.stream_mut().shutdown(std::net::Shutdown::Write).unwrap();
+    assert!(cli.submit(&Request::Ping).is_err(), "write on a dead socket must error");
+    // No phantom cid: nothing is in flight, so drain returns at once.
+    cli.drain().unwrap();
+}
+
+#[test]
+fn telemetry_frame_captured_for_ci() {
+    // Capture one pushed telemetry frame to disk; CI validates it with
+    // `python3 -m json.tool` (the frame is hand-rendered JSON — prove it
+    // parses outside this crate, not just that our own asserts like it).
+    let srv = BlasServer::start(ServerConfig {
+        chips: 2,
+        telemetry_period_ms: 20,
+        ..Default::default()
+    })
+    .unwrap();
+    let cli = BlasClient::connect_v2(srv.addr()).unwrap();
+    let mut stream = cli.subscribe().unwrap();
+    let frame = stream.next_frame().unwrap();
+    assert!(frame.starts_with('{') && frame.ends_with('}'), "{frame}");
+    assert!(frame.contains("\"type\":\"telemetry\""), "{frame}");
+    std::fs::create_dir_all("target").unwrap();
+    std::fs::write("target/telemetry-frame.json", &frame).unwrap();
 }
 
 #[test]

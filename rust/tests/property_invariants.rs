@@ -128,6 +128,7 @@ fn rand_request(
         Opcode::Ping => Request::Ping,
         Opcode::Stats => Request::Stats,
         Opcode::Shutdown => Request::Shutdown,
+        Opcode::Subscribe => Request::Subscribe,
         Opcode::Hello => {
             Request::Hello { version: PROTOCOL_V1 + rng.next_below(3) as u32 }
         }
@@ -171,7 +172,8 @@ fn requests_equal(a: &Request, b: &Request) -> bool {
     match (a, b) {
         (Request::Ping, Request::Ping)
         | (Request::Stats, Request::Stats)
-        | (Request::Shutdown, Request::Shutdown) => true,
+        | (Request::Shutdown, Request::Shutdown)
+        | (Request::Subscribe, Request::Subscribe) => true,
         (Request::Hello { version: a }, Request::Hello { version: b }) => a == b,
         (Request::Gemm(x), Request::Gemm(y)) => {
             x.ta == y.ta
