@@ -1,0 +1,110 @@
+"""im2col lowering of a convolution layer to batched small gemm.
+
+Python twin of ``rust/src/workloads/conv.rs`` — same conventions, same
+index math, so the two sides can validate each other:
+
+* images are NHWC (``batch x h x w x c_in``), filters are HWIO
+  (``kh x kw x c_in x c_out``); padding is "valid", stride 1;
+* the patch matrix of one image is ``out_h*out_w x kh*kw*c_in`` with
+  row ``oy*out_w + ox`` and column ``(ky*kw + kx)*c_in + ci``;
+* the filter bank flattens to ``kh*kw*c_in x c_out``;
+* the convolution is then one ``patches @ filters`` gemm per image —
+  exactly the ``GemmBatchOp`` traffic shape the rust side fans across
+  the chip pool.
+
+The core lowering is pure numpy (always available offline).
+``pad_to_microkernel`` additionally zero-pads the lowered operands to
+the AOT artifact's µ-kernel tile (192 x 256, K multiples of KSUB) so the
+jax+pallas path can execute the same gemm; it needs no jax itself.
+"""
+
+import numpy as np
+
+try:  # the kernel constants live next to the pallas kernel (jax import)
+    from .kernels.epiphany_gemm import KSUB, M_UKR, N_UKR
+except Exception:  # pragma: no cover - jax unavailable; paper constants
+    M_UKR, N_UKR, KSUB = 192, 256, 64
+
+
+def out_hw(h, w, kh, kw):
+    """Valid-padding stride-1 output spatial dims."""
+    if kh > h or kw > w:
+        raise ValueError(f"kernel {kh}x{kw} does not fit input {h}x{w}")
+    return h + 1 - kh, w + 1 - kw
+
+
+def im2col(image, kh, kw):
+    """Patch matrix of one HWC image: ``out_h*out_w x kh*kw*c_in``.
+
+    Row ``oy*out_w + ox`` holds the receptive field of output pixel
+    (oy, ox), flattened in (ky, kx, ci) order — the rust layout.
+    """
+    h, w, c_in = image.shape
+    ho, wo = out_hw(h, w, kh, kw)
+    patches = np.empty((ho * wo, kh * kw * c_in), dtype=image.dtype)
+    for oy in range(ho):
+        for ox in range(wo):
+            patches[oy * wo + ox, :] = image[oy : oy + kh, ox : ox + kw, :].reshape(-1)
+    return patches
+
+
+def filter_matrix(filters):
+    """HWIO filter bank as a ``kh*kw*c_in x c_out`` matrix."""
+    kh, kw, c_in, c_out = filters.shape
+    return filters.reshape(kh * kw * c_in, c_out)
+
+
+def conv2d_via_batch(batch, filters):
+    """The lowered convolution: one small gemm per image.
+
+    batch: (n, h, w, c_in) NHWC; filters: (kh, kw, c_in, c_out) HWIO.
+    Returns (n, out_h*out_w, c_out) — the stacked per-image gemm results,
+    matching the rust ``conv2d_via_batch`` output item-for-item.
+    """
+    kh, kw = filters.shape[:2]
+    fmat = filter_matrix(filters)
+    return np.stack([im2col(img, kh, kw) @ fmat for img in batch])
+
+
+def conv2d_reference(batch, filters):
+    """Direct f64-accumulated convolution — the oracle."""
+    n, h, w, c_in = batch.shape
+    kh, kw, _, c_out = filters.shape
+    ho, wo = out_hw(h, w, kh, kw)
+    x = batch.astype(np.float64)
+    f = filters.astype(np.float64)
+    out = np.zeros((n, ho * wo, c_out))
+    for oy in range(ho):
+        for ox in range(wo):
+            window = x[:, oy : oy + kh, ox : ox + kw, :].reshape(n, -1)
+            out[:, oy * wo + ox, :] = window @ f.reshape(-1, c_out)
+    return out
+
+
+def pad_to_microkernel(patches, fmat, m_ukr=None, n_ukr=None, ksub=None):
+    """Zero-pad a lowered (patches, filters) pair to µ-kernel multiples.
+
+    The artifact executes (m_ukr x K) @ (K x n_ukr) tiles with K a
+    multiple of KSUB; small conv gemms rarely land on those multiples,
+    so this pads rows of `patches` to m_ukr, columns of `fmat` to n_ukr,
+    and the shared K dim to a KSUB multiple. Returns
+    ``(patches_p, fmat_p, (rows, cols))`` where (rows, cols) crops the
+    padded product back: ``(patches_p @ fmat_p)[:rows, :cols]`` equals
+    ``patches @ fmat`` exactly (zero padding contributes zero).
+    """
+    m_ukr = M_UKR if m_ukr is None else m_ukr
+    n_ukr = N_UKR if n_ukr is None else n_ukr
+    ksub = KSUB if ksub is None else ksub
+    rows, k = patches.shape
+    k2, cols = fmat.shape
+    if k != k2:
+        raise ValueError(f"K mismatch: patches {k} vs filters {k2}")
+
+    def up(v, unit):
+        return ((v + unit - 1) // unit) * unit
+
+    patches_p = np.zeros((up(rows, m_ukr), up(k, ksub)), dtype=patches.dtype)
+    patches_p[:rows, :k] = patches
+    fmat_p = np.zeros((up(k, ksub), up(cols, n_ukr)), dtype=fmat.dtype)
+    fmat_p[:k, :cols] = fmat
+    return patches_p, fmat_p, (rows, cols)

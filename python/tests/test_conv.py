@@ -1,0 +1,73 @@
+"""im2col lowering tests: the numpy twin of rust/src/workloads/conv.rs.
+
+Pure numpy — these run even where jax is absent, because the lowering
+itself (and its layout contract with the rust side) has no jax in it.
+"""
+
+import numpy as np
+import pytest
+
+from compile import conv
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def test_lowered_conv_matches_direct_reference():
+    batch = rand((3, 8, 8, 4), 0)
+    filters = rand((3, 3, 4, 5), 1)
+    got = conv.conv2d_via_batch(batch, filters)
+    want = conv.conv2d_reference(batch, filters)
+    assert got.shape == (3, 36, 5)
+    np.testing.assert_allclose(got.astype(np.float64), want, rtol=1e-4, atol=1e-4)
+
+
+def test_one_by_one_kernel_is_pointwise_matmul():
+    batch = rand((2, 4, 5, 3), 2)
+    filters = rand((1, 1, 3, 7), 3)
+    got = conv.conv2d_via_batch(batch, filters)
+    want = batch.reshape(2, 20, 3) @ filters.reshape(3, 7)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_patch_layout_matches_rust_contract():
+    # Entry (p, q) of the patch matrix must be
+    # image[oy+ky, ox+kx, ci] with p = oy*out_w + ox and
+    # q = (ky*kw + kx)*c_in + ci — the exact index math of
+    # rust/src/workloads/conv.rs::im2col.
+    image = rand((5, 6, 2), 4)
+    kh, kw = 3, 2
+    patches = conv.im2col(image, kh, kw)
+    ho, wo = conv.out_hw(5, 6, kh, kw)
+    c_in = 2
+    assert patches.shape == (ho * wo, kh * kw * c_in)
+    for p in range(patches.shape[0]):
+        oy, ox = divmod(p, wo)
+        for q in range(patches.shape[1]):
+            ky, kx = divmod(q // c_in, kw)
+            ci = q % c_in
+            assert patches[p, q] == image[oy + ky, ox + kx, ci]
+
+
+def test_oversized_kernel_rejected():
+    with pytest.raises(ValueError):
+        conv.out_hw(2, 2, 3, 3)
+
+
+def test_microkernel_padding_preserves_the_product():
+    batch = rand((1, 10, 10, 3), 5)
+    filters = rand((3, 3, 3, 4), 6)
+    patches = conv.im2col(batch[0], 3, 3)
+    fmat = conv.filter_matrix(filters)
+    patches_p, fmat_p, (rows, cols) = conv.pad_to_microkernel(patches, fmat)
+    # Padded dims are µ-kernel multiples …
+    assert patches_p.shape[0] % conv.M_UKR == 0
+    assert fmat_p.shape[1] % conv.N_UKR == 0
+    assert patches_p.shape[1] % conv.KSUB == 0
+    assert patches_p.shape[1] == fmat_p.shape[0]
+    # … and cropping the padded product recovers the small gemm (zero
+    # padding contributes zero; only BLAS summation order may differ).
+    got = (patches_p @ fmat_p)[:rows, :cols]
+    np.testing.assert_allclose(got, patches @ fmat, rtol=2e-6, atol=2e-6)

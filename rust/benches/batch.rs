@@ -1,0 +1,103 @@
+//! Batched-gemm bench: what the `GemmBatch` opcode buys over one frame
+//! per item. The same set of small square sgemms goes over a live
+//! server twice — first as `count` single `Gemm` frames, then as one
+//! `GemmBatch` frame whose items fan across the chip pool — on pools of
+//! 1 and 4 chips, across an items × item-size matrix.
+//!
+//! Written machine-readable to `BENCH_batch.json`.
+
+use parallella_blas::blis::Trans;
+use parallella_blas::coordinator::server::{BlasClient, BlasServer};
+use parallella_blas::coordinator::{GemmWire, Request, ServerConfig};
+use parallella_blas::linalg::Mat;
+use parallella_blas::util::bench::write_bench_json;
+use parallella_blas::util::tables::Table;
+use std::time::Instant;
+
+/// `count` independent s×s×s f32 items (C starts zeroed, β = 0).
+fn items(count: usize, s: usize) -> Vec<GemmWire> {
+    (0..count)
+        .map(|i| {
+            let seed = 900 + i as u64 * 3;
+            GemmWire::f32(
+                Trans::N,
+                Trans::N,
+                s,
+                s,
+                s,
+                1.0,
+                0.0,
+                Mat::<f32>::randn(s, s, seed).as_slice().to_vec(),
+                Mat::<f32>::randn(s, s, seed + 1).as_slice().to_vec(),
+                vec![0.0f32; s * s],
+            )
+        })
+        .collect()
+}
+
+/// Wall seconds for (one frame per item, one batch frame) against a
+/// fresh `chips`-pool server; the two paths see identical payloads.
+fn run(chips: usize, count: usize, s: usize) -> (f64, f64) {
+    let srv = BlasServer::start(ServerConfig { chips, ..Default::default() }).unwrap();
+    let mut cli = BlasClient::connect(srv.addr()).unwrap();
+    let its = items(count, s);
+    // One untimed call warms the service threads and code paths.
+    cli.call(&Request::Gemm(its[0].clone())).unwrap().into_f32().unwrap();
+    let t0 = Instant::now();
+    for g in &its {
+        cli.call(&Request::Gemm(g.clone())).unwrap().into_f32().unwrap();
+    }
+    let singles = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    cli.call(&Request::gemm_batch(its.clone())).unwrap().into_f32().unwrap();
+    let batch = t0.elapsed().as_secs_f64();
+    (singles, batch)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").ok().as_deref() == Some("1");
+    let counts: &[usize] = if quick { &[8] } else { &[16, 64] };
+    let sizes: &[usize] = if quick { &[16] } else { &[16, 32] };
+
+    let mut t = Table::new(
+        "Batched small gemm over the wire (f32 square items, per-frame vs one GemmBatch)",
+        &["chips", "items", "size", "singles s", "batch s", "speedup", "batch items/s"],
+    );
+    let mut cells = Vec::new();
+    for &chips in &[1usize, 4] {
+        for &count in counts {
+            for &s in sizes {
+                let (singles, batch) = run(chips, count, s);
+                let speedup = singles / batch.max(1e-12);
+                let rate = count as f64 / batch.max(1e-12);
+                t.row(&[
+                    chips.to_string(),
+                    count.to_string(),
+                    format!("{s}x{s}x{s}"),
+                    format!("{singles:.6}"),
+                    format!("{batch:.6}"),
+                    format!("{speedup:.2}x"),
+                    format!("{rate:.0}"),
+                ]);
+                cells.push(format!(
+                    "{{\"chips\":{chips},\"items\":{count},\"size\":{s},\
+                     \"singles_s\":{singles:.6},\"batch_s\":{batch:.6},\
+                     \"speedup\":{speedup:.3},\"batch_items_per_s\":{rate:.1}}}"
+                ));
+            }
+        }
+    }
+    t.print();
+    println!(
+        "one GemmBatch frame amortizes framing + dispatch over every item \
+         and fans the items across the pool's least-loaded healthy chips\n"
+    );
+
+    let json = format!(
+        "{{\"bench\":\"batch\",\"quick\":{quick},\"table\":{},\"cells\":[{}]}}",
+        t.to_json(),
+        cells.join(",")
+    );
+    let path = write_bench_json("batch", &json).expect("write bench json");
+    println!("wrote {}", path.display());
+}

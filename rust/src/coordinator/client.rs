@@ -23,7 +23,9 @@
 //! [`submit`]: BlasClient::submit
 //! [`drain`]: BlasClient::drain
 
-use super::protocol::{read_frame, write_frame, Request, Response, PROTOCOL_V1, PROTOCOL_V2};
+use super::protocol::{
+    read_frame, read_frame_or_eof, write_frame, Request, Response, PROTOCOL_V1, PROTOCOL_V2,
+};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::{HashMap, HashSet};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -45,6 +47,21 @@ impl SessionReader {
         self.in_flight.remove(&cid);
         self.completed.insert(cid, resp);
         Ok(())
+    }
+
+    /// [`pump_one`](Self::pump_one), but a clean frame-boundary EOF (the
+    /// server stopped and drained) returns `Ok(false)` instead of an
+    /// error; `Ok(true)` means one frame was filed. EOF mid-frame is
+    /// still an error.
+    fn pump_one_or_eof(&mut self) -> Result<bool> {
+        let body = match read_frame_or_eof(&mut self.stream)? {
+            Some(b) => b,
+            None => return Ok(false),
+        };
+        let (cid, resp) = Response::decode_v2(&body)?;
+        self.in_flight.remove(&cid);
+        self.completed.insert(cid, resp);
+        Ok(true)
     }
 }
 
@@ -226,19 +243,35 @@ pub struct TelemetryStream {
 
 impl TelemetryStream {
     /// Block for the next telemetry frame and return its JSON text.
-    /// Errors when the connection closes or the server answers the
-    /// subscription with anything but a text frame.
+    /// Errors when the connection closes — even cleanly — or the server
+    /// answers the subscription with anything but a text frame. Prefer
+    /// [`try_next_frame`](Self::try_next_frame) when a clean server stop
+    /// is an expected end-of-stream, not a failure.
     pub fn next_frame(&mut self) -> Result<String> {
+        match self.try_next_frame()? {
+            Some(json) => Ok(json),
+            None => bail!("telemetry stream closed"),
+        }
+    }
+
+    /// Block for the next telemetry frame: `Ok(Some(json))` on a frame,
+    /// `Ok(None)` when the server closed the connection cleanly at a
+    /// frame boundary (its stop-drain sends EOF to subscribers), `Err`
+    /// only on real I/O or codec failures. The `client --watch` loop
+    /// exits 0 on `Ok(None)` and nonzero on `Err`.
+    pub fn try_next_frame(&mut self) -> Result<Option<String>> {
         loop {
             let mut r = self.client.reader.lock().unwrap();
             if let Some(resp) = r.completed.remove(&self.cid) {
                 match resp {
-                    Response::OkText(json) => return Ok(json),
+                    Response::OkText(json) => return Ok(Some(json)),
                     Response::Err(e) => bail!("telemetry stream refused: {e}"),
                     other => bail!("unexpected telemetry frame: {other:?}"),
                 }
             }
-            r.pump_one()?;
+            if !r.pump_one_or_eof()? {
+                return Ok(None);
+            }
         }
     }
 }
@@ -246,9 +279,10 @@ impl TelemetryStream {
 impl Iterator for TelemetryStream {
     type Item = Result<String>;
 
-    /// `Some(Err(..))` means the stream broke (connection closed, codec
-    /// failure); callers typically stop iterating there.
+    /// `None` on a clean server-side close (stop-drain EOF);
+    /// `Some(Err(..))` means the stream actually broke (mid-frame cut,
+    /// codec failure) — callers typically stop iterating there.
     fn next(&mut self) -> Option<Result<String>> {
-        Some(self.next_frame())
+        self.try_next_frame().transpose()
     }
 }

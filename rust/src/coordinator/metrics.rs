@@ -7,6 +7,11 @@ use std::time::Instant;
 /// Log-scaled latency histogram (µs buckets: 1, 2, 4, ... ~17 min).
 const BUCKETS: usize = 30;
 
+/// Distinct [`RequestKind`] latency streams (Gemm, Gemv, Batch, Solve,
+/// Other) — one histogram each, so a 400-item batch's latency can't
+/// skew the single-gemm quantiles.
+const KINDS: usize = 5;
+
 #[derive(Default)]
 struct Inner {
     requests: u64,
@@ -16,10 +21,15 @@ struct Inner {
     rejected_in_flight: u64,
     gemm_requests: u64,
     gemv_requests: u64,
+    batch_requests: u64,
+    solve_requests: u64,
     batched: u64,
     requeued: u64,
     flops: f64,
+    /// The combined latency histogram, all kinds (legacy quantiles).
     latency_us: [u64; BUCKETS],
+    /// Per-kind latency histograms, indexed by [`RequestKind::index`].
+    kind_latency_us: [[u64; BUCKETS]; KINDS],
     total_latency_s: f64,
     started: Option<Instant>,
     /// Batch executions per chip (index = chip id; grown on demand).
@@ -47,6 +57,11 @@ pub struct StatsReport {
     pub gemm_requests: u64,
     /// Completed gemv requests.
     pub gemv_requests: u64,
+    /// Completed gemm-batch requests (each counted once, however many
+    /// items it carried).
+    pub batch_requests: u64,
+    /// Completed iterative-refinement solve requests.
+    pub solve_requests: u64,
     /// Jobs that executed as part of a coalesced batch.
     pub batched: u64,
     /// Jobs moved off a wounded chip onto a healthy chip's queue by the
@@ -73,6 +88,15 @@ pub struct StatsReport {
     pub p50_s: f64,
     /// 99th-percentile latency (histogram bucket upper bound, seconds).
     pub p99_s: f64,
+    /// p99 latency of the single-gemm stream alone (0 if none ran) —
+    /// per-opcode streams keep a 400-item batch from skewing this.
+    pub gemm_p99_s: f64,
+    /// p99 latency of the gemv stream alone (0 if none ran).
+    pub gemv_p99_s: f64,
+    /// p99 latency of the gemm-batch stream alone (0 if none ran).
+    pub batch_p99_s: f64,
+    /// p99 latency of the solve stream alone (0 if none ran).
+    pub solve_p99_s: f64,
     /// Jobs queued across every chip's batcher queue when sampled (filled
     /// in by the router; a bare [`Metrics::snapshot`] reports 0).
     pub queue_depth: u64,
@@ -107,15 +131,18 @@ impl std::fmt::Display for StatsReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "requests={} errors={} gemm={} gemv={} batched={} uptime_s={:.1} \
+            "requests={} errors={} gemm={} gemv={} batch={} solve={} batched={} uptime_s={:.1} \
              mean_latency_s={:.6} achieved_gflops={:.3} queue_depth={} io_errors={} \
              deadline_exceeded={} rejected_in_flight={} panel_hits={} panel_misses={} \
-             panel_evictions={} pool_recycled={} p50_s={:.6} p99_s={:.6} requeued={} \
+             panel_evictions={} pool_recycled={} p50_s={:.6} p99_s={:.6} gemm_p99_s={:.6} \
+             gemv_p99_s={:.6} batch_p99_s={:.6} solve_p99_s={:.6} requeued={} \
              unhealthy_chips={}",
             self.requests,
             self.errors,
             self.gemm_requests,
             self.gemv_requests,
+            self.batch_requests,
+            self.solve_requests,
             self.batched,
             self.uptime_s,
             self.mean_latency_s,
@@ -130,6 +157,10 @@ impl std::fmt::Display for StatsReport {
             self.pool_recycled,
             self.p50_s,
             self.p99_s,
+            self.gemm_p99_s,
+            self.gemv_p99_s,
+            self.batch_p99_s,
+            self.solve_p99_s,
             self.requeued,
             self.unhealthy_chips(),
         )?;
@@ -162,6 +193,8 @@ impl Metrics {
         match kind {
             RequestKind::Gemm => m.gemm_requests += 1,
             RequestKind::Gemv => m.gemv_requests += 1,
+            RequestKind::Batch => m.batch_requests += 1,
+            RequestKind::Solve => m.solve_requests += 1,
             RequestKind::Other => {}
         }
         m.flops += flops;
@@ -169,6 +202,7 @@ impl Metrics {
         let us = (latency_s * 1e6).max(1.0);
         let bucket = (us.log2() as usize).min(BUCKETS - 1);
         m.latency_us[bucket] += 1;
+        m.kind_latency_us[kind.index()][bucket] += 1;
     }
 
     /// Record a failed request.
@@ -264,6 +298,13 @@ impl Metrics {
         quantile_from(&self.inner.lock().unwrap().latency_us, q)
     }
 
+    /// [`Metrics::latency_quantile`] restricted to one request kind's
+    /// latency stream — a 400-item batch never lands in the single-gemm
+    /// histogram, so quantiles here are shape-honest. Same edge policy.
+    pub fn latency_quantile_of(&self, kind: RequestKind, q: f64) -> f64 {
+        quantile_from(&self.inner.lock().unwrap().kind_latency_us[kind.index()], q)
+    }
+
     /// A typed snapshot of every counter (the `Stats` opcode's payload).
     /// `queue_depth` is 0 here — only the router can see the batcher.
     pub fn snapshot(&self) -> StatsReport {
@@ -277,6 +318,8 @@ impl Metrics {
             rejected_in_flight: m.rejected_in_flight,
             gemm_requests: m.gemm_requests,
             gemv_requests: m.gemv_requests,
+            batch_requests: m.batch_requests,
+            solve_requests: m.solve_requests,
             batched: m.batched,
             requeued: m.requeued,
             // Residency counters live with the cache/pools, not this sink;
@@ -294,6 +337,10 @@ impl Metrics {
             achieved_gflops: if uptime > 0.0 { m.flops / uptime / 1e9 } else { 0.0 },
             p50_s: quantile_from(&m.latency_us, 0.5),
             p99_s: quantile_from(&m.latency_us, 0.99),
+            gemm_p99_s: quantile_from(&m.kind_latency_us[RequestKind::Gemm.index()], 0.99),
+            gemv_p99_s: quantile_from(&m.kind_latency_us[RequestKind::Gemv.index()], 0.99),
+            batch_p99_s: quantile_from(&m.kind_latency_us[RequestKind::Batch.index()], 0.99),
+            solve_p99_s: quantile_from(&m.kind_latency_us[RequestKind::Solve.index()], 0.99),
             queue_depth: 0,
             chip_gemms: m.chip_gemms.clone(),
             // Chip health lives with the pool, not this sink; the router
@@ -341,8 +388,25 @@ pub enum RequestKind {
     Gemm,
     /// Level-2 gemv (host compute).
     Gemv,
+    /// Batched small-gemm fan-out (one request, many items).
+    Batch,
+    /// Mixed-precision iterative-refinement solve.
+    Solve,
     /// Anything else (control ops).
     Other,
+}
+
+impl RequestKind {
+    /// Index of this kind's latency histogram in the per-kind array.
+    fn index(self) -> usize {
+        match self {
+            RequestKind::Gemm => 0,
+            RequestKind::Gemv => 1,
+            RequestKind::Batch => 2,
+            RequestKind::Solve => 3,
+            RequestKind::Other => 4,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -437,12 +501,48 @@ mod tests {
             "queue_depth=0",
             "p50_s=",
             "p99_s=",
+            "gemm_p99_s=",
+            "gemv_p99_s=",
+            "batch_p99_s=",
+            "solve_p99_s=",
+            "batch=0",
+            "solve=0",
             "requeued=1",
             "unhealthy_chips=0",
             "chip0_gemms=1",
         ] {
             assert!(line.contains(label), "missing {label}: {line}");
         }
+    }
+
+    #[test]
+    fn per_kind_quantiles_isolated() {
+        let m = Metrics::new();
+        // Fast single gemms and one slow 400-item batch: the combined p99
+        // is dragged up by the batch, the gemm stream's is not.
+        for _ in 0..99 {
+            m.record_request(RequestKind::Gemm, 1e-5, 1e3);
+        }
+        m.record_request(RequestKind::Batch, 2.0, 4e8);
+        m.record_request(RequestKind::Solve, 0.5, 1e6);
+        let gemm_p99 = m.latency_quantile_of(RequestKind::Gemm, 0.99);
+        let batch_p99 = m.latency_quantile_of(RequestKind::Batch, 0.99);
+        assert!(gemm_p99 < 1e-3, "batch latency leaked into gemm stream: {gemm_p99}");
+        // The histogram reports power-of-two bucket bounds, so a 2 s
+        // sample reads back as the 2^20 µs bucket (~1.05 s).
+        assert!(batch_p99 >= 1.0, "batch stream lost its own sample: {batch_p99}");
+        let snap = m.snapshot();
+        assert_eq!(snap.batch_requests, 1);
+        assert_eq!(snap.solve_requests, 1);
+        assert_eq!(snap.gemm_p99_s, gemm_p99);
+        assert_eq!(snap.batch_p99_s, batch_p99);
+        assert!(snap.solve_p99_s >= 0.25);
+        assert!(
+            snap.p99_s >= snap.gemm_p99_s,
+            "combined p99 should see the slow tail the gemm stream hides"
+        );
+        // A kind that never ran reads 0, same as the combined empty edge.
+        assert_eq!(m.latency_quantile_of(RequestKind::Other, 0.99), 0.0);
     }
 
     #[test]

@@ -20,9 +20,10 @@
 //!   their queue's chip), completion-callback driven; workers are
 //!   panic-isolated and requeue a wounded chip's jobs onto healthy ones;
 //! * [`router`]   — dispatch: level-3 sgemm/false-dgemm to a chip queue
-//!   (hinted or least-loaded), level-1/2 to a host worker pool; the
-//!   async path ([`Router::dispatch_async`]) never parks a thread on a
-//!   batched gemm;
+//!   (hinted or least-loaded), level-1/2 to a host worker pool, gemm
+//!   *batches* fanned item-by-item across the queues, refined solves to
+//!   the [`crate::workloads`] driver; the async path
+//!   ([`Router::dispatch_async`]) never parks a thread on a batched gemm;
 //! * [`server`]   — a threaded TCP accept loop; v2 connections are
 //!   pipelined (bounded in-flight window, per-request deadlines,
 //!   out-of-order writer), can subscribe to periodic JSON telemetry
@@ -46,8 +47,8 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use client::{BlasClient, Pending, TelemetryStream};
 pub use metrics::{Metrics, StatsReport};
 pub use protocol::{
-    FrameAccumulator, GemmWire, GemvWire, Opcode, Request, Response, Tensor, PROTOCOL_V1,
-    PROTOCOL_V2,
+    FrameAccumulator, GemmBatchWire, GemmWire, GemvWire, Opcode, Request, Response, SolveWire,
+    Tensor, PROTOCOL_V1, PROTOCOL_V2,
 };
 pub use router::Router;
 pub use server::{BlasServer, ServerConfig};

@@ -31,6 +31,21 @@
 //! [scalar alpha][scalar beta][A][x][y]` with classic BLAS vector
 //! strides; stored vector length is `(len-1)*inc + 1`.
 //!
+//! GemmBatch payload: `[u32 count]` followed by `count` gemm payloads
+//! back to back (each exactly the Gemm layout above, all at the frame
+//! dtype). The shard-hint nibble applies to the **whole batch** (the
+//! server fans unhinted items across least-loaded healthy chips);
+//! per-item hints do not travel. The response is one `Ok` tensor: the
+//! updated C buffers concatenated in item order.
+//!
+//! Solve payload (mixed-precision iterative refinement, see
+//! [`crate::workloads::refine`]): `[u8 kind][u32 n][u32 nb]
+//! [u32 max_iters][scalar tol][A n·n][b n]` with `kind` 0 = LU,
+//! 1 = Cholesky. The server factorizes in the f32-class compute path,
+//! refines against a true-f64 residual, and answers the solution vector
+//! as an `Ok` tensor (or a typed refinement error as `Err`). Solve
+//! frames must travel at dtype f64.
+//!
 //! # Wire v2: correlation ids and pipelining
 //!
 //! A client that opens with a `Hello{version}` exchange (in v1 framing)
@@ -56,6 +71,7 @@
 use super::metrics::StatsReport;
 use crate::blis::{Dtype, Trans};
 use crate::mem::{BufferPool, PoolVec};
+use crate::workloads::refine::Factorization;
 use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
 use std::sync::Arc;
@@ -89,6 +105,12 @@ pub enum Opcode {
     Gemm = 1,
     /// Level-2 gemv (host-routed).
     Gemv = 2,
+    /// A batch of small gemms executed as one request, fanned across the
+    /// chip pool (Epiphany-routed; the shard hint pins the whole batch).
+    GemmBatch = 3,
+    /// Mixed-precision iterative-refinement solve (f32-class factorize,
+    /// f64 residual; Epiphany-routed via the false-dgemm updates).
+    Solve = 4,
     /// Liveness check; empty payload.
     Ping = 16,
     /// Ask for the metrics report; empty payload.
@@ -113,6 +135,8 @@ impl Opcode {
         Ok(match v {
             1 => Opcode::Gemm,
             2 => Opcode::Gemv,
+            3 => Opcode::GemmBatch,
+            4 => Opcode::Solve,
             16 => Opcode::Ping,
             17 => Opcode::Stats,
             18 => Opcode::Shutdown,
@@ -123,10 +147,12 @@ impl Opcode {
     }
 
     /// Every opcode (the property suite's round-trip sweep).
-    pub fn all() -> [Opcode; 7] {
+    pub fn all() -> [Opcode; 9] {
         [
             Opcode::Gemm,
             Opcode::Gemv,
+            Opcode::GemmBatch,
+            Opcode::Solve,
             Opcode::Ping,
             Opcode::Stats,
             Opcode::Shutdown,
@@ -243,10 +269,146 @@ impl GemmWire {
 
     /// The `flags` byte this descriptor encodes to.
     fn flags(&self) -> u8 {
-        match self.shard_hint {
-            None => 0,
-            Some(chip) => chip.min(14) as u8 + 1,
+        shard_hint_flags(self.shard_hint)
+    }
+
+    /// An f32 gemm item (buffers trimmed to the exact stored sizes) —
+    /// the unit clients push into [`Request::gemm_batch`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn f32(
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        mut a: Vec<f32>,
+        mut b: Vec<f32>,
+        mut c: Vec<f32>,
+    ) -> GemmWire {
+        trim_gemm(ta, tb, m, n, k, &mut a, &mut b, &mut c);
+        GemmWire {
+            ta,
+            tb,
+            m,
+            n,
+            k,
+            alpha: alpha as f64,
+            beta: beta as f64,
+            a: Tensor::F32(a),
+            b: Tensor::F32(b),
+            c: Tensor::F32(c),
+            shard_hint: None,
         }
+    }
+
+    /// An f64 gemm item (false-dgemm server-side), trimmed like
+    /// [`GemmWire::f32`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn f64(
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        mut a: Vec<f64>,
+        mut b: Vec<f64>,
+        mut c: Vec<f64>,
+    ) -> GemmWire {
+        trim_gemm(ta, tb, m, n, k, &mut a, &mut b, &mut c);
+        GemmWire {
+            ta,
+            tb,
+            m,
+            n,
+            k,
+            alpha,
+            beta,
+            a: Tensor::F64(a),
+            b: Tensor::F64(b),
+            c: Tensor::F64(c),
+            shard_hint: None,
+        }
+    }
+}
+
+/// The `flags` nibble encoding of a chip-affinity hint.
+fn shard_hint_flags(hint: Option<usize>) -> u8 {
+    match hint {
+        None => 0,
+        Some(chip) => chip.min(14) as u8 + 1,
+    }
+}
+
+/// A batch of small gemms traveling as one frame: hundreds of tiny
+/// matmuls per request is the traffic shape the Epiphany architecture
+/// wins on (resident operands, no per-request round trip). Every item
+/// must share one dtype; the response is one `Ok` tensor holding the
+/// updated C buffers concatenated in item order.
+#[derive(Clone, Debug)]
+pub struct GemmBatchWire {
+    /// The gemm items, executed independently and answered in order.
+    /// Per-item `shard_hint`s do **not** travel — the batch-level hint
+    /// below pins the whole batch; unhinted batches fan least-loaded.
+    pub items: Vec<GemmWire>,
+    /// Chip-affinity hint for the whole batch, carried in the frame's
+    /// `flags` nibble exactly like a single gemm's hint.
+    pub shard_hint: Option<usize>,
+}
+
+impl GemmBatchWire {
+    /// The element dtype shared by every item (empty batches are
+    /// rejected by the codec; an empty in-memory value reads as f32).
+    pub fn dtype(&self) -> Dtype {
+        self.items.first().map_or(Dtype::F32, |g| g.dtype())
+    }
+
+    /// The `flags` byte this descriptor encodes to.
+    fn flags(&self) -> u8 {
+        shard_hint_flags(self.shard_hint)
+    }
+
+    /// Total logical C elements across the batch — the length of the
+    /// concatenated response tensor.
+    pub fn out_len(&self) -> usize {
+        self.items.iter().map(|g| g.m * g.n).sum()
+    }
+}
+
+/// Mixed-precision iterative-refinement solve descriptor: factorize
+/// `A` once in the f32-class compute path (LU or Cholesky, trailing
+/// updates via false dgemm), then refine `A·x = b` against a true-f64
+/// residual until the HPL-scaled residual meets `tolerance`. See
+/// [`crate::workloads::refine`] for the loop and its typed errors.
+#[derive(Clone, Debug)]
+pub struct SolveWire {
+    /// Which factorization to use (0 = LU on the wire, 1 = Cholesky —
+    /// the latter requires symmetric positive-definite input).
+    pub factorization: Factorization,
+    /// Matrix order (A is n×n col-major, b has n entries).
+    pub n: usize,
+    /// Blocked-factorization panel width (0 picks the server default).
+    pub nb: usize,
+    /// Refinement iteration cap (0 picks the server default).
+    pub max_iters: usize,
+    /// Convergence target on the HPL-scaled residual (≤ 0 picks the
+    /// server default, the HPL pass criterion of 16).
+    pub tolerance: f64,
+    /// The coefficient matrix, col-major n×n.
+    pub a: Tensor,
+    /// The right-hand side, n entries.
+    pub b: Tensor,
+}
+
+impl SolveWire {
+    /// The element dtype of the descriptor's tensors (the router only
+    /// accepts f64 — the refinement contract is a double-precision
+    /// answer).
+    pub fn dtype(&self) -> Dtype {
+        self.a.dtype()
     }
 }
 
@@ -303,6 +465,10 @@ pub enum Request {
     Gemm(GemmWire),
     /// Level-2 gemv (host-routed).
     Gemv(GemvWire),
+    /// A batch of small gemms fanned across the chip pool.
+    GemmBatch(GemmBatchWire),
+    /// Mixed-precision iterative-refinement solve.
+    Solve(SolveWire),
     /// Liveness check.
     Ping,
     /// Ask for the metrics report.
@@ -517,6 +683,8 @@ impl Request {
         match self {
             Request::Gemm(_) => Opcode::Gemm,
             Request::Gemv(_) => Opcode::Gemv,
+            Request::GemmBatch(_) => Opcode::GemmBatch,
+            Request::Solve(_) => Opcode::Solve,
             Request::Ping => Opcode::Ping,
             Request::Stats => Opcode::Stats,
             Request::Shutdown => Opcode::Shutdown,
@@ -531,6 +699,8 @@ impl Request {
         match self {
             Request::Gemm(g) => g.dtype(),
             Request::Gemv(g) => g.dtype(),
+            Request::GemmBatch(b) => b.dtype(),
+            Request::Solve(s) => s.dtype(),
             _ => Dtype::F32,
         }
     }
@@ -552,6 +722,7 @@ impl Request {
     fn encode_with(&self, cid: Option<u32>, deadline_ms: Option<u32>) -> Vec<u8> {
         let mut flags = match self {
             Request::Gemm(g) => g.flags(),
+            Request::GemmBatch(b) => b.flags(),
             _ => 0,
         };
         if cid.is_some() && deadline_ms.is_some() {
@@ -567,17 +738,21 @@ impl Request {
         match self {
             Request::Ping | Request::Stats | Request::Shutdown | Request::Subscribe => {}
             Request::Hello { version } => w.u32(*version),
-            Request::Gemm(g) => {
-                w.u8(trans_code(g.ta));
-                w.u8(trans_code(g.tb));
-                w.u32(g.m as u32);
-                w.u32(g.n as u32);
-                w.u32(g.k as u32);
-                w.scalar(g.alpha);
-                w.scalar(g.beta);
-                w.tensor(&g.a);
-                w.tensor(&g.b);
-                w.tensor(&g.c);
+            Request::Gemm(g) => write_gemm_payload(&mut w, g),
+            Request::GemmBatch(b) => {
+                w.u32(b.items.len() as u32);
+                for g in &b.items {
+                    write_gemm_payload(&mut w, g);
+                }
+            }
+            Request::Solve(s) => {
+                w.u8(factorization_code(s.factorization));
+                w.u32(s.n as u32);
+                w.u32(s.nb as u32);
+                w.u32(s.max_iters as u32);
+                w.scalar(s.tolerance);
+                w.tensor(&s.a);
+                w.tensor(&s.b);
             }
             Request::Gemv(g) => {
                 w.u8(trans_code(g.ta));
@@ -612,9 +787,10 @@ impl Request {
     fn decode_with(body: &[u8], v2: bool) -> Result<(u32, Option<u32>, Request)> {
         let (tag, flags, mut r) = FrameReader::new(body)?;
         let opcode = Opcode::from_u8(tag)?;
-        // Flag policy: gemm owns the shard-hint nibble; v2 frames may set
-        // FLAG_DEADLINE; everything else is reserved and must be 0.
-        let mut allowed = if opcode == Opcode::Gemm { 0x0Fu8 } else { 0 };
+        // Flag policy: gemm and gemm-batch own the shard-hint nibble; v2
+        // frames may set FLAG_DEADLINE; everything else is reserved 0.
+        let mut allowed =
+            if matches!(opcode, Opcode::Gemm | Opcode::GemmBatch) { 0x0Fu8 } else { 0 };
         if v2 {
             allowed |= FLAG_DEADLINE;
         }
@@ -636,19 +812,31 @@ impl Request {
             Opcode::Subscribe => Request::Subscribe,
             Opcode::Hello => Request::Hello { version: r.u32()? },
             Opcode::Gemm => {
-                let shard_hint =
-                    if flags & 0x0F == 0 { None } else { Some((flags & 0x0F) as usize - 1) };
-                let ta = trans_from(r.u8()?)?;
-                let tb = trans_from(r.u8()?)?;
-                let (m, n, k) = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
-                let alpha = r.scalar()?;
-                let beta = r.scalar()?;
-                let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
-                let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
-                let a = r.tensor(am * an)?;
-                let b = r.tensor(bm * bn)?;
-                let c = r.tensor(m * n)?;
-                Request::Gemm(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c, shard_hint })
+                let mut g = read_gemm_payload(&mut r)?;
+                g.shard_hint = hint_from_flags(flags);
+                Request::Gemm(g)
+            }
+            Opcode::GemmBatch => {
+                let count = r.u32()? as usize;
+                ensure!(count >= 1, "gemm batch must carry at least one item");
+                ensure!(count <= 65_536, "implausible batch count {count}");
+                // Every item reads at the frame dtype — one batch, one
+                // precision, by construction.
+                let mut items = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    items.push(read_gemm_payload(&mut r)?);
+                }
+                Request::GemmBatch(GemmBatchWire { items, shard_hint: hint_from_flags(flags) })
+            }
+            Opcode::Solve => {
+                let factorization = factorization_from(r.u8()?)?;
+                let n = r.u32()? as usize;
+                let nb = r.u32()? as usize;
+                let max_iters = r.u32()? as usize;
+                let tolerance = r.scalar()?;
+                let a = r.tensor(n * n)?;
+                let b = r.tensor(n)?;
+                Request::Solve(SolveWire { factorization, n, nb, max_iters, tolerance, a, b })
             }
             Opcode::Gemv => {
                 let ta = trans_from(r.u8()?)?;
@@ -734,15 +922,51 @@ impl Request {
         })
     }
 
-    /// Pin a gemm request to a chip's queue via the frame's shard-hint
-    /// flag nibble (no-op on non-gemm requests). Hints above 14 encode
-    /// as 14 — the nibble's ceiling — and the server reduces the index
-    /// modulo its pool size either way.
+    /// Pin a gemm or gemm-batch request to a chip's queue via the
+    /// frame's shard-hint flag nibble (no-op on other requests). Hints
+    /// above 14 encode as 14 — the nibble's ceiling — and the server
+    /// reduces the index modulo its pool size either way.
     pub fn with_shard_hint(mut self, chip: usize) -> Request {
-        if let Request::Gemm(g) = &mut self {
-            g.shard_hint = Some(chip.min(14));
+        match &mut self {
+            Request::Gemm(g) => g.shard_hint = Some(chip.min(14)),
+            Request::GemmBatch(b) => b.shard_hint = Some(chip.min(14)),
+            _ => {}
         }
         self
+    }
+
+    /// A batched-gemm request: build items with [`GemmWire::f32`] /
+    /// [`GemmWire::f64`] (all one dtype). Unhinted, the server fans the
+    /// items across its least-loaded healthy chips; chain
+    /// [`Request::with_shard_hint`] to pin the whole batch.
+    pub fn gemm_batch(items: Vec<GemmWire>) -> Request {
+        Request::GemmBatch(GemmBatchWire { items, shard_hint: None })
+    }
+
+    /// A mixed-precision iterative-refinement solve request (f64 in,
+    /// f64 out; the factorization runs in the f32-class compute path).
+    /// Zero `nb`/`max_iters` and a non-positive `tolerance` pick the
+    /// server-side defaults.
+    pub fn solve(
+        factorization: Factorization,
+        n: usize,
+        nb: usize,
+        max_iters: usize,
+        tolerance: f64,
+        mut a: Vec<f64>,
+        mut b: Vec<f64>,
+    ) -> Request {
+        a.truncate(n * n);
+        b.truncate(n);
+        Request::Solve(SolveWire {
+            factorization,
+            n,
+            nb,
+            max_iters,
+            tolerance,
+            a: Tensor::F64(a),
+            b: Tensor::F64(b),
+        })
     }
 
     /// f32 gemv request with classic vector strides.
@@ -802,6 +1026,63 @@ impl Request {
             y: Tensor::F64(y),
         })
     }
+}
+
+/// Write one gemm payload (shared by the Gemm frame and every
+/// GemmBatch item — the "single payload codec" rule).
+fn write_gemm_payload(w: &mut FrameWriter, g: &GemmWire) {
+    w.u8(trans_code(g.ta));
+    w.u8(trans_code(g.tb));
+    w.u32(g.m as u32);
+    w.u32(g.n as u32);
+    w.u32(g.k as u32);
+    w.scalar(g.alpha);
+    w.scalar(g.beta);
+    w.tensor(&g.a);
+    w.tensor(&g.b);
+    w.tensor(&g.c);
+}
+
+/// Read one gemm payload (shard hint left `None`; the Gemm frame arm
+/// overlays the flags nibble afterwards, batch items never carry one).
+fn read_gemm_payload(r: &mut FrameReader<'_>) -> Result<GemmWire> {
+    let ta = trans_from(r.u8()?)?;
+    let tb = trans_from(r.u8()?)?;
+    let (m, n, k) = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+    let alpha = r.scalar()?;
+    let beta = r.scalar()?;
+    let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
+    let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
+    let a = r.tensor(am * an)?;
+    let b = r.tensor(bm * bn)?;
+    let c = r.tensor(m * n)?;
+    Ok(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c, shard_hint: None })
+}
+
+/// Decode the flags nibble back into a chip-affinity hint.
+fn hint_from_flags(flags: u8) -> Option<usize> {
+    if flags & 0x0F == 0 {
+        None
+    } else {
+        Some((flags & 0x0F) as usize - 1)
+    }
+}
+
+/// The wire byte for a refinement factorization kind.
+fn factorization_code(f: Factorization) -> u8 {
+    match f {
+        Factorization::Lu => 0,
+        Factorization::Cholesky => 1,
+    }
+}
+
+/// Decode a factorization kind byte.
+fn factorization_from(v: u8) -> Result<Factorization> {
+    Ok(match v {
+        0 => Factorization::Lu,
+        1 => Factorization::Cholesky,
+        _ => bail!("bad factorization code {v}"),
+    })
 }
 
 /// Trim gemm buffers to the exact stored sizes the codec carries.
@@ -903,6 +1184,14 @@ impl Response {
                 for h in &s.chip_health {
                     w.u8(u8::from(*h));
                 }
+                // Per-opcode accounting rides appended (same-version
+                // clients ship together; field order is the contract).
+                w.u64(s.batch_requests);
+                w.u64(s.solve_requests);
+                w.scalar(s.gemm_p99_s);
+                w.scalar(s.gemv_p99_s);
+                w.scalar(s.batch_p99_s);
+                w.scalar(s.solve_p99_s);
             }
         }
         w.finish()
@@ -950,6 +1239,12 @@ impl Response {
                     requeued: r.u64()?,
                     chip_gemms: Vec::new(),
                     chip_health: Vec::new(),
+                    batch_requests: 0,
+                    solve_requests: 0,
+                    gemm_p99_s: 0.0,
+                    gemv_p99_s: 0.0,
+                    batch_p99_s: 0.0,
+                    solve_p99_s: 0.0,
                 };
                 let nchips = r.u32()? as usize;
                 ensure!(nchips <= 4096, "implausible chip count {nchips} in stats frame");
@@ -963,6 +1258,12 @@ impl Response {
                 for _ in 0..nhealth {
                     s.chip_health.push(r.u8()? != 0);
                 }
+                s.batch_requests = r.u64()?;
+                s.solve_requests = r.u64()?;
+                s.gemm_p99_s = r.scalar()?;
+                s.gemv_p99_s = r.scalar()?;
+                s.batch_p99_s = r.scalar()?;
+                s.solve_p99_s = r.scalar()?;
                 Response::Stats(s)
             }
             other => bail!("bad response status {other}"),
@@ -1069,6 +1370,38 @@ pub fn read_frame(stream: &mut impl Read) -> Result<Vec<u8>> {
     let mut body = vec![0u8; len];
     stream.read_exact(&mut body)?;
     Ok(body)
+}
+
+/// [`read_frame`], but a connection that closes cleanly *between* frames
+/// (EOF before the first byte of the length prefix) reads as `Ok(None)`
+/// instead of an error. EOF *inside* a frame — a mid-prefix or mid-body
+/// cut — is still the I/O error it always was. This is how a telemetry
+/// subscriber tells "the server stopped and drained" (exit 0) from "the
+/// wire broke under us" (exit nonzero).
+pub fn read_frame_or_eof(stream: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = match stream.read(&mut len_buf[got..]) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        };
+        if n == 0 {
+            if got == 0 {
+                return Ok(None); // clean frame-boundary EOF
+            }
+            bail!("connection closed mid-frame ({got} of 4 prefix bytes)");
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_LEN {
+        bail!("frame too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok(Some(body))
 }
 
 /// Write one frame (already encoded with its prefix).
@@ -1214,6 +1547,12 @@ mod tests {
             requeued: 2,
             chip_gemms: vec![3, 0, 2],
             chip_health: vec![true, false, true],
+            batch_requests: 4,
+            solve_requests: 1,
+            gemm_p99_s: 0.003,
+            gemv_p99_s: 0.0002,
+            batch_p99_s: 0.012,
+            solve_p99_s: 0.08,
         }
     }
 
@@ -1357,6 +1696,91 @@ mod tests {
 
     fn tiny_sgemm() -> Request {
         Request::sgemm(Trans::N, Trans::N, 1, 1, 1, 1.0, 0.0, vec![1.0], vec![1.0], vec![0.0])
+    }
+
+    #[test]
+    fn gemm_batch_round_trip() {
+        // Ragged per-item dims (and a transposed item) through one frame.
+        let items = vec![
+            GemmWire::f32(Trans::N, Trans::N, 2, 3, 4, 1.0, 0.0, vec![1.0; 8], vec![2.0; 12],
+                vec![0.0; 6]),
+            GemmWire::f32(Trans::T, Trans::N, 3, 1, 2, 0.5, 1.0, vec![3.0; 6], vec![4.0; 2],
+                vec![5.0; 3]),
+        ];
+        let req = Request::gemm_batch(items);
+        let frame = req.encode();
+        assert_eq!(frame[4], Opcode::GemmBatch as u8);
+        assert_eq!(frame[6], 0, "unhinted batch keeps flags 0");
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::GemmBatch(b) => {
+                assert_eq!(b.items.len(), 2);
+                assert_eq!(b.shard_hint, None);
+                assert_eq!(b.out_len(), 6 + 3);
+                assert_eq!((b.items[0].m, b.items[0].n, b.items[0].k), (2, 3, 4));
+                assert_eq!(b.items[1].ta, Trans::T);
+                assert_eq!(b.items[1].a.as_f32().unwrap(), &[3.0; 6]);
+                assert_eq!(b.items[1].c.as_f32().unwrap(), &[5.0; 3]);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gemm_batch_hint_rides_the_flags_byte() {
+        let items =
+            vec![GemmWire::f64(Trans::N, Trans::N, 1, 1, 1, 1.0, 0.0, vec![1.0], vec![1.0],
+                vec![0.0])];
+        let frame = Request::gemm_batch(items).with_shard_hint(3).encode();
+        assert_eq!(frame[6], 4, "flags nibble is chip + 1");
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::GemmBatch(b) => {
+                assert_eq!(b.shard_hint, Some(3));
+                assert_eq!(b.dtype(), Dtype::F64);
+                // Per-item hints never travel.
+                assert_eq!(b.items[0].shard_hint, None);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_gemm_batch_rejected() {
+        let frame = Request::gemm_batch(Vec::new()).encode();
+        assert!(Request::decode(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn solve_round_trip() {
+        let n = 3usize;
+        let req = Request::solve(
+            Factorization::Cholesky,
+            n,
+            64,
+            12,
+            16.0,
+            (0..n * n).map(|v| v as f64).collect(),
+            vec![1.0; n],
+        );
+        let frame = req.encode();
+        assert_eq!(frame[4], Opcode::Solve as u8);
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::Solve(s) => {
+                assert!(matches!(s.factorization, Factorization::Cholesky));
+                assert_eq!((s.n, s.nb, s.max_iters), (3, 64, 12));
+                assert_eq!(s.tolerance, 16.0);
+                assert_eq!(s.dtype(), Dtype::F64);
+                assert_eq!(s.a.len(), 9);
+                assert_eq!(s.b.as_f64().unwrap(), &[1.0; 3]);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        // The LU kind takes the other wire byte.
+        let frame =
+            Request::solve(Factorization::Lu, 1, 0, 0, 0.0, vec![2.0], vec![3.0]).encode();
+        match Request::decode(&frame[4..]).unwrap() {
+            Request::Solve(s) => assert!(matches!(s.factorization, Factorization::Lu)),
+            other => panic!("wrong decode: {other:?}"),
+        }
     }
 
     #[test]

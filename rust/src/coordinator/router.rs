@@ -8,10 +8,11 @@
 
 use super::batcher::{Batcher, GemmJob};
 use super::metrics::{Metrics, RequestKind};
-use super::protocol::{GemmWire, GemvWire, Request, Response, Tensor};
+use super::protocol::{GemmBatchWire, GemmWire, GemvWire, Request, Response, SolveWire, Tensor};
 use crate::blis::{Blas, Dtype, GemvOp};
 use crate::linalg::{Mat, MatRef, Real};
 use crate::mem::BufferPool;
+use crate::workloads::refine::{solve_refined, RefinePolicy};
 use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
 
@@ -214,6 +215,8 @@ impl Router {
                     }
                 }
             }
+            Request::GemmBatch(b) => self.exec_gemm_batch(b),
+            Request::Solve(s) => self.exec_solve(s),
             // Host-side level-2 (the unaccelerated class; §4.3): descriptor
             // dispatch through `Blas::execute`, which owns validation and
             // the host-ledger accounting — one instantiation per dtype.
@@ -239,6 +242,119 @@ impl Router {
                 Ok(Response::Ok(out))
             }
         }
+    }
+
+    /// The gemm-batch route: fan the items across the chip pool and
+    /// concatenate the updated C's in item order. Semantics are exactly a
+    /// loop of single gemms (conformance asserts bit-identity), but the
+    /// request is accounted once as [`RequestKind::Batch`] so its
+    /// end-to-end latency lands in its own quantile stream.
+    ///
+    /// f32 items all enter their batcher queues *before* the first result
+    /// is awaited, so independent items run concurrently on a multi-chip
+    /// pool. A batch-level shard hint pins every item to one chip (the
+    /// pin degrades to a preference if that chip is wounded, like single
+    /// gemms); unhinted items each pick the least-loaded healthy queue.
+    fn exec_gemm_batch(&self, batch: GemmBatchWire) -> Result<Response> {
+        let t0 = std::time::Instant::now();
+        for g in &batch.items {
+            validate_gemm(g)?;
+        }
+        let total_flops: f64 =
+            batch.items.iter().map(|g| 2.0 * g.m as f64 * g.n as f64 * g.k as f64).sum();
+        let out_len = batch.out_len();
+        let resp = match batch.dtype() {
+            Dtype::F32 => {
+                let mut pending = Vec::with_capacity(batch.items.len());
+                for g in batch.items {
+                    let job = GemmJob {
+                        ta: g.ta,
+                        tb: g.tb,
+                        m: g.m,
+                        n: g.n,
+                        k: g.k,
+                        alpha: g.alpha as f32,
+                        beta: g.beta as f32,
+                        a: g.a.into_f32()?,
+                        b: g.b.into_f32()?,
+                        c: g.c.into_f32()?,
+                    };
+                    pending.push(match batch.shard_hint {
+                        Some(chip) => self.batcher.submit_to(chip, job),
+                        None => self.batcher.submit(job),
+                    });
+                }
+                let mut out = Vec::with_capacity(out_len);
+                for rx in pending {
+                    out.extend(rx.recv().map_err(|_| anyhow::anyhow!("batcher gone"))??);
+                }
+                Response::Ok(Tensor::F32(out))
+            }
+            Dtype::F64 => {
+                // Rare (HPL-class) traffic: run each item directly, like
+                // single f64 gemms — hinted items pin a chip, unhinted
+                // ones shard per the pool's policy.
+                let mut out = Vec::with_capacity(out_len);
+                for g in batch.items {
+                    let (ar, ac) = if g.ta.is_trans() { (g.k, g.m) } else { (g.m, g.k) };
+                    let (br, bc) = if g.tb.is_trans() { (g.n, g.k) } else { (g.k, g.n) };
+                    let a = g.a.into_f64()?;
+                    let b = g.b.into_f64()?;
+                    let a_v = MatRef::from_col_major(ar, ac, ar, &a);
+                    let b_v = MatRef::from_col_major(br, bc, br, &b);
+                    let mut c_m = Mat::from_col_major(g.m, g.n, g.c.as_f64()?);
+                    match batch.shard_hint {
+                        Some(chip) => {
+                            let chip = chip % self.blas.chips();
+                            self.blas
+                                .gemm_on(chip, g.ta, g.tb, g.alpha, a_v, b_v, g.beta, &mut c_m)?;
+                            self.metrics.record_chip_request(chip);
+                        }
+                        None => {
+                            self.blas
+                                .dgemm_false(g.ta, g.tb, g.alpha, a_v, b_v, g.beta, &mut c_m)?;
+                        }
+                    }
+                    out.extend_from_slice(c_m.as_slice());
+                }
+                Response::Ok(Tensor::F64(out))
+            }
+        };
+        self.metrics.record_request(RequestKind::Batch, t0.elapsed().as_secs_f64(), total_flops);
+        Ok(resp)
+    }
+
+    /// The solve route: mixed-precision iterative refinement over the
+    /// wire. The factorization's O(n³) trailing updates run through the
+    /// accelerated (f32-class) gemm path; the O(n²) residual stays f64.
+    /// Zero `nb`/`max_iters` or a non-positive `tolerance` pick the
+    /// [`RefinePolicy`] defaults. Divergence and non-convergence come
+    /// back as error responses carrying the typed error's message.
+    fn exec_solve(&self, s: SolveWire) -> Result<Response> {
+        let t0 = std::time::Instant::now();
+        ensure!(s.dtype() == Dtype::F64, "solve requires f64 payloads (the refined precision)");
+        let a = s.a.into_f64()?;
+        let b = s.b.into_f64()?;
+        ensure!(a.len() == s.n * s.n, "solve A payload {} != n² = {}", a.len(), s.n * s.n);
+        ensure!(b.len() == s.n, "solve b payload {} != n = {}", b.len(), s.n);
+        let a = Mat::from_col_major(s.n, s.n, &a);
+        let mut policy = RefinePolicy::default();
+        if s.nb > 0 {
+            policy.nb = s.nb;
+        }
+        if s.max_iters > 0 {
+            policy.max_iters = s.max_iters;
+        }
+        if s.tolerance > 0.0 {
+            policy.tolerance = s.tolerance;
+        }
+        let (x, rep) = solve_refined(&self.blas, &a, &b, s.factorization, &policy)?;
+        self.metrics.record_request(
+            RequestKind::Solve,
+            t0.elapsed().as_secs_f64(),
+            rep.factor.gemm_flops + rep.factor.host_flops,
+        );
+        Ok(Response::Ok(Tensor::F64(x)))
     }
 
     /// The dtype-generic gemv route: wrap the wire payload in a
@@ -285,6 +401,8 @@ pub fn route_of(req: &Request) -> &'static str {
     match req {
         Request::Gemm(g) if g.dtype() == Dtype::F32 => "epiphany-queue",
         Request::Gemm(_) => "epiphany-direct",
+        Request::GemmBatch(b) if b.dtype() == Dtype::F32 => "epiphany-queue",
+        Request::GemmBatch(_) | Request::Solve(_) => "epiphany-direct",
         Request::Gemv(_) => "host-pool",
         Request::Ping
         | Request::Stats
@@ -351,6 +469,110 @@ mod tests {
         let gemv =
             Request::sgemv(Trans::N, 1, 1, 1.0, vec![1.0], vec![1.0], 1, 0.0, vec![0.0], 1);
         assert_eq!(route_of(&gemv), "host-pool");
+        use crate::coordinator::protocol::GemmWire;
+        let batch32 = Request::gemm_batch(vec![GemmWire::f32(
+            Trans::N,
+            Trans::N,
+            1,
+            1,
+            1,
+            1.0,
+            0.0,
+            vec![1.0],
+            vec![1.0],
+            vec![0.0],
+        )]);
+        assert_eq!(route_of(&batch32), "epiphany-queue");
+        let batch64 = Request::gemm_batch(vec![GemmWire::f64(
+            Trans::N,
+            Trans::N,
+            1,
+            1,
+            1,
+            1.0,
+            0.0,
+            vec![1.0],
+            vec![1.0],
+            vec![0.0],
+        )]);
+        assert_eq!(route_of(&batch64), "epiphany-direct");
+        let solve = Request::solve(
+            crate::workloads::Factorization::Lu,
+            1,
+            0,
+            0,
+            0.0,
+            vec![1.0],
+            vec![1.0],
+        );
+        assert_eq!(route_of(&solve), "epiphany-direct");
+    }
+
+    #[test]
+    fn gemm_batch_through_router_matches_single_gemms() {
+        let r = router();
+        let (m, n, k) = (16, 12, 8);
+        let items: Vec<_> = (0..5)
+            .map(|i| {
+                let a = Mat::<f32>::randn(m, k, 60 + i);
+                let b = Mat::<f32>::randn(k, n, 70 + i);
+                crate::coordinator::protocol::GemmWire::f32(
+                    Trans::N,
+                    Trans::N,
+                    m,
+                    n,
+                    k,
+                    1.0,
+                    0.0,
+                    a.as_slice().to_vec(),
+                    b.as_slice().to_vec(),
+                    vec![0.0; m * n],
+                )
+            })
+            .collect();
+        // Reference: the same items as single wire gemms, in order.
+        let mut want: Vec<f32> = Vec::new();
+        for g in &items {
+            let resp = r.handle(Request::Gemm(g.clone()));
+            want.extend(resp.into_f32().unwrap());
+        }
+        let got = r.handle(Request::gemm_batch(items)).into_f32().unwrap();
+        assert_eq!(got, want, "batch must be bit-identical to the loop of singles");
+        match r.handle(Request::Stats) {
+            Response::Stats(s) => {
+                assert_eq!(s.batch_requests, 1, "one batch = one Batch-kind request");
+                assert!(s.batch_p99_s > 0.0, "batch latency lands in its own stream");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn solve_through_router_reaches_hpl_tolerance() {
+        let r = router();
+        let n = 64;
+        let mut rng = crate::linalg::XorShiftRng::new(77);
+        let mut a = Mat::<f64>::from_fn(n, n, |_, _| rng.next_unit());
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64);
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.next_unit()).collect();
+        let resp = r.handle(Request::solve(
+            crate::workloads::Factorization::Lu,
+            n,
+            0,
+            0,
+            0.0,
+            a.as_slice().to_vec(),
+            b.clone(),
+        ));
+        let x = resp.into_f64().unwrap();
+        let res = crate::hpl::residual::hpl_residual(&a, &x, &b);
+        assert!(res.hpl_scaled <= 16.0, "wire solve residual {}", res.hpl_scaled);
+        match r.handle(Request::Stats) {
+            Response::Stats(s) => assert_eq!(s.solve_requests, 1),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //!   framework ([`blis`]), the host-side service-process architecture and
 //!   sgemm inner micro-kernel ([`host`]), a functional + timing simulator of
 //!   the Epiphany-16 coprocessor ([`epiphany`]), an eSDK-like driver API
-//!   ([`esdk`]), an HPL Linpack substrate ([`hpl`]), and a threaded BLAS
-//!   network service ([`coordinator`]).
+//!   ([`esdk`]), an HPL Linpack substrate ([`hpl`]), a threaded BLAS
+//!   network service ([`coordinator`]), and workload drivers over both —
+//!   batched small gemm, mixed-precision iterative refinement, and im2col
+//!   convolution ([`workloads`]).
 //! * **L2 (python/compile/model.py)** — the sgemm inner micro-kernel compute
 //!   graph in JAX, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels/epiphany_gemm.py)** — the SUMMA-tiled
@@ -117,6 +119,7 @@ pub mod mem;
 pub mod platform;
 pub mod runtime;
 pub mod util;
+pub mod workloads;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {

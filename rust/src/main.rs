@@ -9,7 +9,16 @@
 //!         drive a serve instance with D-deep pipelined sgemms (wire v2)
 //!   client --watch [--addr HOST:PORT] [--frames N]
 //!         subscribe to the server's telemetry stream and print one JSON
-//!         frame per line (N = 0, the default, streams until killed)
+//!         frame per line (N = 0, the default, streams until the server
+//!         stops; a clean server stop exits 0)
+//!   client --batch [--addr HOST:PORT] [--reqs N] [--items I] [--m --n --k]
+//!         [--pin CHIP]
+//!         drive a serve instance with batched small-gemm requests (I tiny
+//!         matmuls per wire frame, fanned across the chip pool)
+//!   solve [--n N] [--nb NB] [--kind lu|chol] [--max-iters I] [--tol T]
+//!         [--addr HOST:PORT]
+//!         mixed-precision iterative refinement: f32-class factorization +
+//!         f64 residual loop, local by default, over the wire with --addr
 //!   sgemm [--m M] [--n N] [--k K] [--ta n|t] [--tb n|t] [--chips N]
 //!         one accelerated gemm with the wall/projected/paper report
 //!   hpl   [--n N] [--nb NB]
@@ -31,9 +40,12 @@ use parallella_blas::epiphany::timing::CalibratedModel;
 use parallella_blas::epiphany::Chip;
 use parallella_blas::experiments::{self, ExperimentScale};
 use parallella_blas::host::service::ServiceBackend;
+use parallella_blas::coordinator::protocol::GemmWire;
 use parallella_blas::hpl::driver::{run_hpl, HplConfig};
+use parallella_blas::hpl::residual::hpl_residual;
 use parallella_blas::linalg::Mat;
 use parallella_blas::platform::{BackendKind, Platform};
+use parallella_blas::workloads::{solve_refined, Factorization, RefinePolicy};
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -153,10 +165,22 @@ fn main() -> Result<()> {
                 let mut stream = cli.subscribe()?;
                 let mut seen = 0usize;
                 while frames == 0 || seen < frames {
-                    println!("{}", stream.next_frame()?);
+                    // A clean server stop (EOF at a frame boundary after
+                    // the stop-drain) ends the watch with exit 0; only a
+                    // real I/O or codec failure propagates as an error.
+                    match stream.try_next_frame()? {
+                        Some(frame) => println!("{frame}"),
+                        None => {
+                            eprintln!("server stopped; telemetry stream closed cleanly");
+                            return Ok(());
+                        }
+                    }
                     seen += 1;
                 }
                 return Ok(());
+            }
+            if args.has("batch") {
+                return client_batch(&args, &addr);
             }
             let reqs = args.usize("reqs", 64)?.max(1);
             let depth = args.usize("depth", 8)?.max(1);
@@ -237,6 +261,95 @@ fn main() -> Result<()> {
                 rep.projected_gflops(),
             );
         }
+        "solve" => {
+            let n = args.usize("n", 256)?;
+            let nb = args.usize("nb", 64)?;
+            let kind = match args.get("kind").unwrap_or("lu") {
+                "lu" | "LU" => Factorization::Lu,
+                "chol" | "cholesky" => Factorization::Cholesky,
+                other => bail!("bad --kind {other:?} (lu|chol)"),
+            };
+            let max_iters = args.usize("max-iters", 0)?;
+            let tol: f64 = match args.get("tol") {
+                Some(v) => v.parse().with_context(|| format!("--tol {v:?} is not a number"))?,
+                None => 0.0,
+            };
+            // A well-conditioned demo system of the right symmetry class.
+            let mut rng = parallella_blas::linalg::XorShiftRng::new(42);
+            let a = match kind {
+                Factorization::Lu => {
+                    let mut a = Mat::<f64>::from_fn(n, n, |_, _| rng.next_unit());
+                    for i in 0..n {
+                        a.set(i, i, a.get(i, i) + n as f64);
+                    }
+                    a
+                }
+                Factorization::Cholesky => {
+                    let m = Mat::<f64>::randn(n, n, 43);
+                    let mut a =
+                        Mat::<f64>::from_fn(n, n, |i, j| if i == j { n as f64 } else { 0.0 });
+                    parallella_blas::blis::level3::gemm_host(
+                        Trans::N,
+                        Trans::T,
+                        1.0,
+                        m.view(),
+                        m.view(),
+                        1.0,
+                        &mut a,
+                    );
+                    a
+                }
+            };
+            let b: Vec<f64> = (0..n).map(|_| rng.next_unit()).collect();
+            if let Some(addr) = args.get("addr") {
+                // Over the wire: the server factors, refines, and returns x.
+                let mut cli = BlasClient::connect_v2(addr)
+                    .with_context(|| format!("connecting to {addr}"))?;
+                let t0 = std::time::Instant::now();
+                let x = cli
+                    .call(&Request::solve(
+                        kind,
+                        n,
+                        nb,
+                        max_iters,
+                        tol,
+                        a.as_slice().to_vec(),
+                        b.clone(),
+                    ))?
+                    .into_f64()?;
+                let res = hpl_residual(&a, &x, &b);
+                println!(
+                    "solve {kind:?} n={n} nb={nb} over the wire: {:.3}s \
+                     residual(hpl)={:.3e} raw={:.3e}",
+                    t0.elapsed().as_secs_f64(),
+                    res.hpl_scaled,
+                    res.raw
+                );
+            } else {
+                let (bk, _) = backend_of(&args)?;
+                let plat = Platform::builder().backend(bk).build()?;
+                let mut policy = RefinePolicy { nb, ..Default::default() };
+                if max_iters > 0 {
+                    policy.max_iters = max_iters;
+                }
+                if tol > 0.0 {
+                    policy.tolerance = tol;
+                }
+                let t0 = std::time::Instant::now();
+                let (x, rep) = solve_refined(plat.blas(), &a, &b, kind, &policy)?;
+                let res = hpl_residual(&a, &x, &b);
+                println!(
+                    "solve {kind:?} n={n} nb={nb}: {} refinement step(s) in {:.3}s\n\
+                     residual trajectory (hpl-scaled): {:?}\n\
+                     final residual(hpl)={:.3e} raw={:.3e}  [pass criterion: <= 16]",
+                    rep.iters,
+                    t0.elapsed().as_secs_f64(),
+                    rep.residuals,
+                    res.hpl_scaled,
+                    res.raw
+                );
+            }
+        }
         "hpl" => {
             let n = args.usize("n", 768)?;
             let nb = args.usize("nb", 96)?;
@@ -281,6 +394,54 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// `client --batch`: drive a serve instance with batched small-gemm
+/// requests — `--items` tiny matmuls per wire frame, fanned across the
+/// pool by the server (`--pin` pins the whole batch to one chip).
+fn client_batch(args: &Args, addr: &str) -> Result<()> {
+    let reqs = args.usize("reqs", 8)?.max(1);
+    let items = args.usize("items", 64)?.max(1);
+    let m = args.usize("m", 32)?;
+    let n = args.usize("n", 32)?;
+    let k = args.usize("k", 32)?;
+    let pin = args.get("pin").map(|v| v.parse::<usize>()).transpose()?;
+    let mut cli =
+        BlasClient::connect_v2(addr).with_context(|| format!("connecting to {addr}"))?;
+    let wires: Vec<GemmWire> = (0..items)
+        .map(|i| {
+            let seed = 1 + 2 * i as u64;
+            GemmWire::f32(
+                Trans::N,
+                Trans::N,
+                m,
+                n,
+                k,
+                1.0,
+                0.0,
+                Mat::<f32>::randn(m, k, seed).as_slice().to_vec(),
+                Mat::<f32>::randn(k, n, seed + 1).as_slice().to_vec(),
+                vec![0.0; m * n],
+            )
+        })
+        .collect();
+    let mut req = Request::gemm_batch(wires);
+    if let Some(chip) = pin {
+        req = req.with_shard_hint(chip);
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..reqs {
+        let out = cli.call(&req)?.into_f32()?;
+        anyhow::ensure!(out.len() == items * m * n, "short batch response: {}", out.len());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let gflops = 2.0 * (m * n * k * items * reqs) as f64 / dt / 1e9;
+    println!(
+        "client --batch: {reqs} batches x {items} sgemm {m}x{n}x{k}: {dt:.3}s \
+         ({:.1} items/s, {gflops:.3} GF)",
+        (reqs * items) as f64 / dt
+    );
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "parallella-blas — Epiphany-accelerated BLAS (Tasende 2016) on a simulated Parallella\n\
@@ -295,6 +456,10 @@ fn print_help() {
          \u{20} client  [--addr H:P] [--reqs N] [--depth D] [--m --n --k]\n\
          \u{20}                                                     pipelined v2 load generator\n\
          \u{20} client  --watch [--addr H:P] [--frames N]           stream live telemetry JSON\n\
+         \u{20} client  --batch [--addr H:P] [--reqs N] [--items I]\n\
+         \u{20}         [--m --n --k] [--pin CHIP]                  batched small-gemm driver\n\
+         \u{20} solve   [--n --nb] [--kind lu|chol] [--max-iters I]\n\
+         \u{20}         [--tol T] [--addr H:P]                      mixed-precision refined solve\n\
          \u{20} sgemm   [--m --n --k --ta --tb --backend --chips]   one gemm + report\n\
          \u{20} hpl     [--n --nb --backend]                        HPL Linpack run\n\
          \u{20} table   <1..7> [--full]                             regenerate a paper table\n\

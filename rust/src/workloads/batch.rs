@@ -1,0 +1,174 @@
+//! Batched small gemm: one descriptor carrying hundreds of tiny matmuls.
+//!
+//! The OpenSHMEM Epiphany work (arXiv:1608.03545/.03549) argues this chip
+//! wins on *many small resident-operand kernels*, not one huge gemm — the
+//! per-crossing overhead amortizes over a batch and repeated operands stay
+//! resident. [`GemmBatchOp`] is that traffic shape in the descriptor
+//! core; `Opcode::GemmBatch` is its wire form, which the router fans out
+//! across the [`crate::host::pool::ChipPool`] item-by-item
+//! (least-loaded, health-aware, with shard-hint pins degrading to
+//! preferences exactly like single gemms).
+//!
+//! Semantics are strictly *a loop of single gemms*: executing the batch
+//! yields bit-identical results to calling [`Blas::gemm`] once per item,
+//! in item order — asserted by the conformance suite on pools of 1 and 4.
+
+use crate::blis::{Blas, BlasOp, Element, Route, Trans};
+use crate::linalg::Mat;
+use anyhow::Result;
+
+/// One item of a [`GemmBatchOp`]: an owned, independent
+/// `C ← α·op(A)·op(B) + β·C`.
+pub struct GemmBatchItem<T: Element> {
+    /// Transpose flag for A.
+    pub ta: Trans,
+    /// Transpose flag for B.
+    pub tb: Trans,
+    /// Scale on the product.
+    pub alpha: T,
+    /// Owned A operand.
+    pub a: Mat<T>,
+    /// Owned B operand.
+    pub b: Mat<T>,
+    /// Scale on the C input.
+    pub beta: T,
+    /// Owned C; handed back updated.
+    pub c: Mat<T>,
+}
+
+impl<T: Element> GemmBatchItem<T> {
+    /// Plain `C ← A·B + C` item (no transposes, α = β = 1).
+    pub fn plain(a: Mat<T>, b: Mat<T>, c: Mat<T>) -> Self {
+        GemmBatchItem { ta: Trans::N, tb: Trans::N, alpha: T::ONE, a, b, beta: T::ONE, c }
+    }
+
+    fn flops(&self) -> f64 {
+        let k = if self.ta.is_trans() { self.a.rows() } else { self.a.cols() };
+        2.0 * self.c.rows() as f64 * self.c.cols() as f64 * k as f64
+    }
+}
+
+/// Per-batch accounting returned next to the updated C matrices.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchReport {
+    /// Items executed.
+    pub items: usize,
+    /// Total logical flops across the batch.
+    pub flops: f64,
+    /// Summed projected seconds of the accelerated path.
+    pub projected_s: f64,
+    /// Summed µ-kernel calls.
+    pub calls: u64,
+}
+
+/// A batch of independent small gemms as one descriptor (uniform or
+/// per-item dims — each item carries its own shapes and flags).
+pub struct GemmBatchOp<T: Element> {
+    /// The batch, executed in order.
+    pub items: Vec<GemmBatchItem<T>>,
+}
+
+impl<T: Element> BlasOp for GemmBatchOp<T> {
+    type Output = (Vec<Mat<T>>, BatchReport);
+
+    fn route(&self) -> Route {
+        Route::Epiphany
+    }
+
+    fn flops(&self) -> f64 {
+        self.items.iter().map(GemmBatchItem::flops).sum()
+    }
+
+    fn run(self, blas: &Blas) -> Result<Self::Output> {
+        let mut out = Vec::with_capacity(self.items.len());
+        let mut report = BatchReport::default();
+        for mut item in self.items {
+            report.flops += item.flops();
+            let rep = blas.gemm(
+                item.ta,
+                item.tb,
+                item.alpha,
+                item.a.view(),
+                item.b.view(),
+                item.beta,
+                &mut item.c,
+            )?;
+            report.items += 1;
+            report.projected_s += rep.projected_s;
+            report.calls += rep.calls;
+            out.push(item.c);
+        }
+        Ok((out, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epiphany::kernel::KernelGeometry;
+    use crate::epiphany::timing::CalibratedModel;
+    use crate::host::service::{ServiceBackend, ServiceHandle};
+
+    fn blas() -> Blas {
+        let svc = ServiceHandle::spawn(
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        Blas::new(svc)
+    }
+
+    fn items(count: usize, m: usize, n: usize, k: usize) -> Vec<GemmBatchItem<f32>> {
+        (0..count)
+            .map(|i| {
+                let seed = (i as u64 + 1) * 3;
+                GemmBatchItem {
+                    ta: Trans::N,
+                    tb: Trans::N,
+                    alpha: 1.0,
+                    a: Mat::<f32>::randn(m, k, seed),
+                    b: Mat::<f32>::randn(k, n, seed + 1),
+                    beta: 0.5,
+                    c: Mat::<f32>::randn(m, n, seed + 2),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_matches_loop_of_single_gemms_bit_identical() {
+        let blas = blas();
+        let batch = items(6, 16, 12, 8);
+        // Reference: the same items through single Blas::gemm calls.
+        let mut want = Vec::new();
+        for it in items(6, 16, 12, 8) {
+            let mut c = it.c.clone();
+            blas.gemm(it.ta, it.tb, it.alpha, it.a.view(), it.b.view(), it.beta, &mut c).unwrap();
+            want.push(c);
+        }
+        let (got, rep) = blas.execute(GemmBatchOp { items: batch }).unwrap();
+        assert_eq!(rep.items, 6);
+        assert!(rep.calls >= 6);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.as_slice(), w.as_slice(), "batch must be bit-identical to the loop");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_clean_no_op() {
+        let blas = blas();
+        let (got, rep) = blas.execute(GemmBatchOp::<f32> { items: Vec::new() }).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(rep.items, 0);
+    }
+
+    #[test]
+    fn bad_item_dims_error_with_item_intact_semantics() {
+        let blas = blas();
+        let mut batch = items(2, 8, 8, 8);
+        // Break item 1: K mismatch between A and B.
+        batch[1].b = Mat::<f32>::randn(5, 8, 99);
+        assert!(blas.execute(GemmBatchOp { items: batch }).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! im2col convolution: lower a conv layer to batched small gemm.
+//!
+//! The classic lowering — each output pixel's receptive field becomes one
+//! row of a patch matrix, the filter bank becomes a `kh·kw·c_in × c_out`
+//! matrix, and the convolution is `patches @ filters` per image. A batch
+//! of images is then exactly the [`super::batch::GemmBatchOp`] traffic
+//! shape: many small gemms sharing one B operand, which the panel cache
+//! keeps resident across items. The Python twin
+//! (`python/compile/conv.py`) performs the same lowering on the JAX side
+//! of the stack; `examples/conv_im2col.rs` drives this one.
+//!
+//! Layout conventions: images are NHWC (`batch × h × w × c_in`, row-major
+//! in that index order), filters are HWIO (`kh × kw × c_in × c_out`).
+//! Padding is "valid", stride 1 — the demo shape, not a conv zoo.
+
+use super::batch::{BatchReport, GemmBatchItem, GemmBatchOp};
+use crate::blis::Blas;
+use crate::linalg::Mat;
+use anyhow::{ensure, Result};
+
+/// Shape of one conv layer (valid padding, stride 1).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvShape {
+    /// Images per batch.
+    pub batch: usize,
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Output channels (filter count).
+    pub c_out: usize,
+}
+
+impl ConvShape {
+    /// Output height (`h − kh + 1`).
+    pub fn out_h(&self) -> usize {
+        self.h + 1 - self.kh
+    }
+
+    /// Output width (`w − kw + 1`).
+    pub fn out_w(&self) -> usize {
+        self.w + 1 - self.kw
+    }
+
+    /// Flat NHWC input length this shape expects.
+    pub fn input_len(&self) -> usize {
+        self.batch * self.h * self.w * self.c_in
+    }
+
+    /// Flat HWIO filter length this shape expects.
+    pub fn filter_len(&self) -> usize {
+        self.kh * self.kw * self.c_in * self.c_out
+    }
+
+    fn check(&self) -> Result<()> {
+        ensure!(self.batch > 0 && self.c_in > 0 && self.c_out > 0, "conv: empty shape {self:?}");
+        ensure!(
+            self.kh >= 1 && self.kw >= 1 && self.kh <= self.h && self.kw <= self.w,
+            "conv: kernel {}x{} does not fit input {}x{}",
+            self.kh,
+            self.kw,
+            self.h,
+            self.w
+        );
+        Ok(())
+    }
+}
+
+/// The im2col patch matrix of image `img`: `out_h·out_w × kh·kw·c_in`,
+/// row `oy·out_w + ox`, column `(ky·kw + kx)·c_in + ci`.
+pub fn im2col(input: &[f32], shape: &ConvShape, img: usize) -> Mat<f32> {
+    let (wo, c_in, w) = (shape.out_w(), shape.c_in, shape.w);
+    let base = img * shape.h * w * c_in;
+    Mat::from_fn(shape.out_h() * wo, shape.kh * shape.kw * c_in, |p, q| {
+        let (oy, ox) = (p / wo, p % wo);
+        let ci = q % c_in;
+        let (ky, kx) = ((q / c_in) / shape.kw, (q / c_in) % shape.kw);
+        input[base + ((oy + ky) * w + (ox + kx)) * c_in + ci]
+    })
+}
+
+/// The filter bank as a `kh·kw·c_in × c_out` matrix (HWIO flattening).
+pub fn filter_matrix(filters: &[f32], shape: &ConvShape) -> Mat<f32> {
+    Mat::from_fn(shape.kh * shape.kw * shape.c_in, shape.c_out, |q, f| {
+        filters[q * shape.c_out + f]
+    })
+}
+
+/// Run the conv layer as an im2col-lowered gemm batch: one item per
+/// image, every item sharing the same filter matrix as B. Returns one
+/// `out_h·out_w × c_out` matrix per image plus the batch accounting.
+pub fn conv2d_via_batch(
+    blas: &Blas,
+    input: &[f32],
+    filters: &[f32],
+    shape: &ConvShape,
+) -> Result<(Vec<Mat<f32>>, BatchReport)> {
+    shape.check()?;
+    ensure!(
+        input.len() == shape.input_len(),
+        "conv: input length {} != expected {}",
+        input.len(),
+        shape.input_len()
+    );
+    ensure!(
+        filters.len() == shape.filter_len(),
+        "conv: filter length {} != expected {}",
+        filters.len(),
+        shape.filter_len()
+    );
+    let b = filter_matrix(filters, shape);
+    let items: Vec<GemmBatchItem<f32>> = (0..shape.batch)
+        .map(|img| {
+            GemmBatchItem::plain(
+                im2col(input, shape, img),
+                b.clone(),
+                Mat::<f32>::zeros(shape.out_h() * shape.out_w(), shape.c_out),
+            )
+        })
+        .collect();
+    blas.execute(GemmBatchOp { items })
+}
+
+/// Direct f64-accumulated reference convolution (NHWC in, one
+/// `out_h·out_w × c_out` matrix per image out) — the oracle the demo and
+/// tests compare the lowered path against.
+pub fn conv2d_naive(input: &[f32], filters: &[f32], shape: &ConvShape) -> Vec<Mat<f64>> {
+    let (ho, wo, c_in, w) = (shape.out_h(), shape.out_w(), shape.c_in, shape.w);
+    (0..shape.batch)
+        .map(|img| {
+            let base = img * shape.h * w * c_in;
+            Mat::from_fn(ho * wo, shape.c_out, |p, f| {
+                let (oy, ox) = (p / wo, p % wo);
+                let mut acc = 0.0f64;
+                for ky in 0..shape.kh {
+                    for kx in 0..shape.kw {
+                        for ci in 0..c_in {
+                            let x = input[base + ((oy + ky) * w + (ox + kx)) * c_in + ci] as f64;
+                            let wgt = filters
+                                [((ky * shape.kw + kx) * c_in + ci) * shape.c_out + f]
+                                as f64;
+                            acc += x * wgt;
+                        }
+                    }
+                }
+                acc
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epiphany::kernel::KernelGeometry;
+    use crate::epiphany::timing::CalibratedModel;
+    use crate::host::service::{ServiceBackend, ServiceHandle};
+    use crate::linalg::{max_scaled_err, XorShiftRng};
+
+    fn blas() -> Blas {
+        let svc = ServiceHandle::spawn(
+            ServiceBackend::Simulator,
+            CalibratedModel::default(),
+            KernelGeometry::paper(),
+        )
+        .unwrap();
+        Blas::new(svc)
+    }
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShiftRng::new(seed);
+        (0..len).map(|_| rng.next_unit() as f32).collect()
+    }
+
+    #[test]
+    fn lowered_conv_matches_naive_reference() {
+        let blas = blas();
+        let shape = ConvShape { batch: 3, h: 8, w: 8, c_in: 4, kh: 3, kw: 3, c_out: 5 };
+        let input = rand_vec(shape.input_len(), 31);
+        let filters = rand_vec(shape.filter_len(), 37);
+        let (got, rep) = conv2d_via_batch(&blas, &input, &filters, &shape).unwrap();
+        let want = conv2d_naive(&input, &filters, &shape);
+        assert_eq!(rep.items, 3);
+        assert_eq!(got.len(), 3);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!((g.rows(), g.cols()), (shape.out_h() * shape.out_w(), shape.c_out));
+            let e = max_scaled_err(g.view(), w.view());
+            assert!(e < 1e-4, "lowered conv err {e}");
+        }
+    }
+
+    #[test]
+    fn one_by_one_kernel_is_a_pointwise_matmul() {
+        let blas = blas();
+        let shape = ConvShape { batch: 1, h: 4, w: 5, c_in: 3, kh: 1, kw: 1, c_out: 2 };
+        let input = rand_vec(shape.input_len(), 41);
+        let filters = rand_vec(shape.filter_len(), 43);
+        let (got, _) = conv2d_via_batch(&blas, &input, &filters, &shape).unwrap();
+        let want = conv2d_naive(&input, &filters, &shape);
+        assert_eq!(got[0].rows(), 20);
+        assert!(max_scaled_err(got[0].view(), want[0].view()) < 1e-5);
+    }
+
+    #[test]
+    fn oversized_kernel_rejected() {
+        let blas = blas();
+        let shape = ConvShape { batch: 1, h: 2, w: 2, c_in: 1, kh: 3, kw: 3, c_out: 1 };
+        assert!(conv2d_via_batch(&blas, &[0.0; 4], &[0.0; 9], &shape).is_err());
+    }
+}

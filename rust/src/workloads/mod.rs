@@ -1,0 +1,24 @@
+//! Workload shapes beyond one-big-gemm: the serving surfaces the
+//! Epiphany architecture actually favors.
+//!
+//! The paper's benchmarks (§5–7) stop at single sgemm/false-dgemm calls
+//! and the HPL driver. This subsystem opens three further traffic
+//! shapes on the same descriptor core and wire:
+//!
+//! * [`batch`] — **batched small gemm** ([`GemmBatchOp`]): hundreds of
+//!   tiny matmuls per request, fanned across the chip pool item-by-item;
+//!   the shape the OpenSHMEM Epiphany literature argues this chip wins on.
+//! * [`refine`] — **mixed-precision iterative refinement**
+//!   ([`SolveOp`], [`solve_refined`]): f32-class factorization (false
+//!   dgemm where the flops are) + f64 residual + correction loop, turning
+//!   the paper's f32-scale HPL residual into an f64-quality solve.
+//! * [`conv`] — **im2col convolution**: a conv layer lowered to a gemm
+//!   batch ([`conv2d_via_batch`]), the ML-inference-shaped demo.
+
+pub mod batch;
+pub mod conv;
+pub mod refine;
+
+pub use batch::{BatchReport, GemmBatchItem, GemmBatchOp};
+pub use conv::{conv2d_naive, conv2d_via_batch, im2col, ConvShape};
+pub use refine::{solve_refined, Factorization, RefineError, RefinePolicy, RefineReport, SolveOp};

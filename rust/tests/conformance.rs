@@ -14,6 +14,10 @@ use parallella_blas::epiphany::kernel::KernelGeometry;
 use parallella_blas::epiphany::timing::CalibratedModel;
 use parallella_blas::host::service::{ServiceBackend, ServiceHandle};
 use parallella_blas::linalg::Mat;
+use parallella_blas::platform::Platform;
+use parallella_blas::workloads::{
+    solve_refined, Factorization, GemmBatchItem, GemmBatchOp, RefinePolicy,
+};
 use std::sync::Arc;
 
 fn lib(backend: ServiceBackend) -> BlasLibrary {
@@ -386,5 +390,114 @@ fn dtrsm_dsyrk_conformance() {
                 assert_close(c[i + j * nn], want, t, "dsyrk");
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// workloads: batched gemm + refined solve
+// ---------------------------------------------------------------------------
+
+/// Reference solve: Gaussian elimination with partial pivoting, every
+/// operation in true f64 (no accelerated path anywhere).
+fn naive_solve_f64(a0: &Mat<f64>, b0: &[f64]) -> Vec<f64> {
+    let n = a0.rows();
+    let mut a: Vec<f64> = a0.as_slice().to_vec();
+    let mut b = b0.to_vec();
+    for j in 0..n {
+        let p = (j..n).max_by(|&x, &y| {
+            a[x + j * n].abs().partial_cmp(&a[y + j * n].abs()).unwrap()
+        });
+        let p = p.unwrap();
+        if p != j {
+            for l in 0..n {
+                a.swap(j + l * n, p + l * n);
+            }
+            b.swap(j, p);
+        }
+        for i in j + 1..n {
+            let f = a[i + j * n] / a[j + j * n];
+            for l in j..n {
+                a[i + l * n] -= f * a[j + l * n];
+            }
+            b[i] -= f * b[j];
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut acc = b[i];
+        for l in i + 1..n {
+            acc -= a[i + l * n] * x[l];
+        }
+        x[i] = acc / a[i + i * n];
+    }
+    x
+}
+
+#[test]
+fn gemm_batch_conformance_pools_1_and_4() {
+    for chips in [1usize, 4] {
+        let plat = Platform::builder().chips(chips).build().unwrap();
+        let (m, n, k) = (32usize, 24usize, 16usize);
+        let items = || -> Vec<GemmBatchItem<f32>> {
+            (0..4)
+                .map(|i| {
+                    let seed = 80 + i as u64 * 5;
+                    GemmBatchItem {
+                        ta: Trans::N,
+                        tb: Trans::N,
+                        alpha: 1.5,
+                        a: Mat::<f32>::randn(m, k, seed),
+                        b: Mat::<f32>::randn(k, n, seed + 1),
+                        beta: -0.25,
+                        c: Mat::<f32>::randn(m, n, seed + 2),
+                    }
+                })
+                .collect()
+        };
+        let (got, rep) = plat.blas().execute(GemmBatchOp { items: items() }).unwrap();
+        assert_eq!(rep.items, 4);
+        let t = tol(f32::EPSILON as f64, k);
+        for (i, it) in items().into_iter().enumerate() {
+            // Bit-identical to a loop of single gemms on the same pool …
+            let mut c = it.c.clone();
+            plat.blas()
+                .gemm(it.ta, it.tb, it.alpha, it.a.view(), it.b.view(), it.beta, &mut c)
+                .unwrap();
+            assert_eq!(got[i].as_slice(), c.as_slice(), "item {i}, chips {chips}");
+            // … and within f32-scaled tolerance of the naive f64 oracle
+            // (alpha/beta composed by hand around the plain product).
+            let a64: Vec<f64> = it.a.as_slice().iter().map(|&v| v as f64).collect();
+            let b64: Vec<f64> = it.b.as_slice().iter().map(|&v| v as f64).collect();
+            let prod = naive_gemm_f64(it.ta, it.tb, m, n, k, &a64, &b64);
+            for j in 0..m * n {
+                let want = 1.5 * prod[j] - 0.25 * it.c.as_slice()[j] as f64;
+                assert_close(got[i].as_slice()[j] as f64, want, t, "gemm batch");
+            }
+        }
+    }
+}
+
+#[test]
+fn refined_solve_conformance_pools_1_and_4() {
+    let n = 48usize;
+    // Diagonally dominant (well-conditioned) system, fixed entries.
+    let mut a = Mat::<f64>::from_fn(n, n, |i, j| (((i * 7 + j * 3) % 13) as f64) / 13.0 - 0.4);
+    for i in 0..n {
+        let v = a.get(i, i) + n as f64;
+        a.set(i, i, v);
+    }
+    let b: Vec<f64> = (0..n).map(|i| ((i % 9) as f64) / 9.0 - 0.5).collect();
+    let want = naive_solve_f64(&a, &b);
+    for chips in [1usize, 4] {
+        let plat = Platform::builder().chips(chips).build().unwrap();
+        let (x, rep) =
+            solve_refined(plat.blas(), &a, &b, Factorization::Lu, &RefinePolicy::default())
+                .unwrap();
+        // The refined solution must agree with the all-f64 reference far
+        // beyond f32 accuracy — that is the whole point of refinement.
+        for i in 0..n {
+            assert_close(x[i], want[i], 1e-9, "refined solve");
+        }
+        assert!(rep.final_residual() <= 16.0, "chips {chips}: {:?}", rep.residuals);
     }
 }

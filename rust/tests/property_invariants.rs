@@ -11,14 +11,15 @@
 use parallella_blas::blis::packing::{pack_a, pack_b, pack_c, unpack_c};
 use parallella_blas::blis::Trans;
 use parallella_blas::coordinator::protocol::{
-    strided_len, FrameAccumulator, GemmWire, GemvWire, Opcode, Request, Response, Tensor,
-    PROTOCOL_V1, PROTOCOL_V2,
+    strided_len, FrameAccumulator, GemmBatchWire, GemmWire, GemvWire, Opcode, Request, Response,
+    SolveWire, Tensor, PROTOCOL_V1, PROTOCOL_V2,
 };
 use parallella_blas::epiphany::mesh::{ring_core, ring_pos};
 use parallella_blas::epiphany::CORES;
 use parallella_blas::linalg::{max_scaled_err, Mat, XorShiftRng};
 use parallella_blas::prelude::*;
 use parallella_blas::util::proptest::{forall, Config};
+use parallella_blas::workloads::Factorization;
 
 #[test]
 fn prop_packing_round_trips() {
@@ -133,19 +134,32 @@ fn rand_request(
             Request::Hello { version: PROTOCOL_V1 + rng.next_below(3) as u32 }
         }
         Opcode::Gemm => {
-            let (ta, tb) = (trans_of(rng), trans_of(rng));
-            let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
-            let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
-            let (a, b) = (rand_tensor(rng, dtype, am * an), rand_tensor(rng, dtype, bm * bn));
-            let c = rand_tensor(rng, dtype, m * n);
-            let (alpha, beta) = scalars(rng, dtype);
+            let mut g = rand_gemm_item(rng, dtype, m, n, k);
             // A random shard hint (including none, and including values
             // past the flag nibble's ceiling of 14) must round-trip too.
-            let shard_hint = match rng.next_below(20) {
-                0 => None,
-                h => Some(h - 1),
-            };
-            Request::Gemm(GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c, shard_hint })
+            g.shard_hint = rand_hint(rng);
+            Request::Gemm(g)
+        }
+        Opcode::GemmBatch => {
+            // 1–3 items, all at the frame dtype; per-item hints do not
+            // travel on a batch, so only the batch-level hint varies.
+            let items = (0..1 + rng.next_below(3))
+                .map(|_| rand_gemm_item(rng, dtype, m, n, k))
+                .collect();
+            Request::GemmBatch(GemmBatchWire { items, shard_hint: rand_hint(rng) })
+        }
+        Opcode::Solve => {
+            let factorization = [Factorization::Lu, Factorization::Cholesky][rng.next_below(2)];
+            let (tolerance, _) = scalars(rng, dtype);
+            Request::Solve(SolveWire {
+                factorization,
+                n,
+                nb: rng.next_below(64),
+                max_iters: rng.next_below(40),
+                tolerance,
+                a: rand_tensor(rng, dtype, n * n),
+                b: rand_tensor(rng, dtype, n),
+            })
         }
         Opcode::Gemv => {
             let ta = trans_of(rng);
@@ -160,12 +174,46 @@ fn rand_request(
     }
 }
 
+/// One random gemm descriptor (hintless) sized by `(m, n, k)` — the
+/// shared item shape for `Gemm` frames and `GemmBatch` entries.
+fn rand_gemm_item(rng: &mut XorShiftRng, dtype: Dtype, m: usize, n: usize, k: usize) -> GemmWire {
+    let trans_of = |r: &mut XorShiftRng| [Trans::N, Trans::T, Trans::C, Trans::H][r.next_below(4)];
+    let (ta, tb) = (trans_of(rng), trans_of(rng));
+    let (am, an) = if ta.is_trans() { (k, m) } else { (m, k) };
+    let (bm, bn) = if tb.is_trans() { (n, k) } else { (k, n) };
+    let (a, b) = (rand_tensor(rng, dtype, am * an), rand_tensor(rng, dtype, bm * bn));
+    let c = rand_tensor(rng, dtype, m * n);
+    let (alpha, beta) = scalars(rng, dtype);
+    GemmWire { ta, tb, m, n, k, alpha, beta, a, b, c, shard_hint: None }
+}
+
+/// A random chip-affinity hint: sometimes none, sometimes past the flag
+/// nibble's ceiling of 14 (the codec must saturate, not reject).
+fn rand_hint(rng: &mut XorShiftRng) -> Option<usize> {
+    match rng.next_below(20) {
+        0 => None,
+        h => Some(h - 1),
+    }
+}
+
 /// Random scalars exactly representable at the wire dtype's width.
 fn scalars(rng: &mut XorShiftRng, dtype: Dtype) -> (f64, f64) {
     match dtype {
         Dtype::F32 => (rng.next_unit() as f32 as f64, rng.next_unit() as f32 as f64),
         Dtype::F64 => (rng.next_unit(), rng.next_unit()),
     }
+}
+
+/// Field-wise equality of two gemm descriptors, hints excluded (batch
+/// items never carry one; single-gemm hints compare saturated).
+fn gemm_items_equal(x: &GemmWire, y: &GemmWire) -> bool {
+    x.ta == y.ta
+        && x.tb == y.tb
+        && (x.m, x.n, x.k) == (y.m, y.n, y.k)
+        && (x.alpha, x.beta) == (y.alpha, y.beta)
+        && x.a == y.a
+        && x.b == y.b
+        && x.c == y.c
 }
 
 fn requests_equal(a: &Request, b: &Request) -> bool {
@@ -176,16 +224,22 @@ fn requests_equal(a: &Request, b: &Request) -> bool {
         | (Request::Subscribe, Request::Subscribe) => true,
         (Request::Hello { version: a }, Request::Hello { version: b }) => a == b,
         (Request::Gemm(x), Request::Gemm(y)) => {
-            x.ta == y.ta
-                && x.tb == y.tb
-                && (x.m, x.n, x.k) == (y.m, y.n, y.k)
-                && (x.alpha, x.beta) == (y.alpha, y.beta)
-                // The flag nibble saturates hints at 14 by design, so the
-                // round-trip identity holds on the *encoded* hint.
+            // The flag nibble saturates hints at 14 by design, so the
+            // round-trip identity holds on the *encoded* hint.
+            gemm_items_equal(x, y)
                 && x.shard_hint.map(|h| h.min(14)) == y.shard_hint.map(|h| h.min(14))
+        }
+        (Request::GemmBatch(x), Request::GemmBatch(y)) => {
+            x.shard_hint.map(|h| h.min(14)) == y.shard_hint.map(|h| h.min(14))
+                && x.items.len() == y.items.len()
+                && x.items.iter().zip(&y.items).all(|(g, h)| gemm_items_equal(g, h))
+        }
+        (Request::Solve(x), Request::Solve(y)) => {
+            x.factorization == y.factorization
+                && (x.n, x.nb, x.max_iters) == (y.n, y.nb, y.max_iters)
+                && x.tolerance == y.tolerance
                 && x.a == y.a
                 && x.b == y.b
-                && x.c == y.c
         }
         (Request::Gemv(x), Request::Gemv(y)) => {
             x.ta == y.ta

@@ -1,0 +1,221 @@
+//! Acceptance suite for the workloads subsystem (batched small gemm +
+//! mixed-precision iterative refinement), exercised **over the wire**
+//! against live servers:
+//!
+//! * a `GemmBatch` frame answers bit-identically to the same items sent
+//!   as single `Gemm` frames — on chip pools of 1 and 4, with the
+//!   packed-A panel cache off and on, unhinted and pinned;
+//! * iterative refinement reaches a residual no worse than a direct
+//!   solve with the f32-contaminated false-dgemm factorization (which
+//!   fails the HPL criterion on its own — refinement is what buys the
+//!   pass), locally and through the `Solve` opcode;
+//! * divergence and iteration exhaustion surface as *typed* errors
+//!   in-process, and singular input comes back as a wire error naming
+//!   the cause.
+
+use parallella_blas::blis::Trans;
+use parallella_blas::coordinator::server::{BlasClient, BlasServer};
+use parallella_blas::coordinator::{GemmWire, Request, Response, ServerConfig};
+use parallella_blas::hpl::residual::hpl_residual;
+use parallella_blas::hpl::{lu_factor_blocked, lu_solve};
+use parallella_blas::linalg::{Mat, XorShiftRng};
+use parallella_blas::platform::Platform;
+use parallella_blas::workloads::{solve_refined, Factorization, RefineError, RefinePolicy};
+
+/// `count` f32 items with varied α/β; even items share one A operand so
+/// a panel-cache build gets real hits across the batch.
+fn batch_items(count: usize, m: usize, n: usize, k: usize) -> Vec<GemmWire> {
+    (0..count)
+        .map(|i| {
+            let seed = 700 + i as u64 * 3;
+            let a_seed = if i % 2 == 0 { 700 } else { seed };
+            GemmWire::f32(
+                Trans::N,
+                Trans::N,
+                m,
+                n,
+                k,
+                1.25,
+                -0.5,
+                Mat::<f32>::randn(m, k, a_seed).as_slice().to_vec(),
+                Mat::<f32>::randn(k, n, seed + 1).as_slice().to_vec(),
+                Mat::<f32>::randn(m, n, seed + 2).as_slice().to_vec(),
+            )
+        })
+        .collect()
+}
+
+/// A well-conditioned (diagonally dominant) f64 system of order `n`.
+fn dominant_system(n: usize, seed: u64) -> (Mat<f64>, Vec<f64>) {
+    let mut rng = XorShiftRng::new(seed);
+    let mut a = Mat::<f64>::from_fn(n, n, |_, _| rng.next_unit());
+    for i in 0..n {
+        let v = a.get(i, i) + n as f64;
+        a.set(i, i, v);
+    }
+    let b = (0..n).map(|_| rng.next_unit()).collect();
+    (a, b)
+}
+
+#[test]
+fn gemm_batch_over_wire_bit_identical_pools_1_and_4_cache_off_and_on() {
+    for chips in [1usize, 4] {
+        for cache_bytes in [0usize, 16 << 20] {
+            let srv = BlasServer::start(ServerConfig {
+                chips,
+                panel_cache_bytes: cache_bytes,
+                ..Default::default()
+            })
+            .unwrap();
+            let mut cli = BlasClient::connect(srv.addr()).unwrap();
+            let items = batch_items(5, 48, 36, 24);
+            // Reference: the identical items as five single Gemm frames.
+            let mut want = Vec::new();
+            for g in &items {
+                want.extend(cli.call(&Request::Gemm(g.clone())).unwrap().into_f32().unwrap());
+            }
+            // The batch must answer with the same bytes, fanned
+            // least-loaded and pinned alike.
+            for hint in [None, Some(chips - 1)] {
+                let mut req = Request::gemm_batch(items.clone());
+                if let Some(chip) = hint {
+                    req = req.with_shard_hint(chip);
+                }
+                let got = cli.call(&req).unwrap().into_f32().unwrap();
+                assert_eq!(
+                    got, want,
+                    "batch diverged from single gemms (chips={chips}, \
+                     cache={cache_bytes}, hint={hint:?})"
+                );
+            }
+            // Both batches landed in the per-opcode accounting bucket.
+            match cli.call(&Request::Stats).unwrap() {
+                Response::Stats(s) => {
+                    assert_eq!(s.batch_requests, 2, "chips={chips} cache={cache_bytes}");
+                    assert!(s.batch_p99_s > 0.0, "{s}");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn refined_solve_no_worse_than_direct_false_dgemm_solve() {
+    let plat = Platform::builder().build().unwrap();
+    let n = 96;
+    let (a, b) = dominant_system(n, 9);
+
+    // Direct: factor in the f32-class false-dgemm path, solve, stop.
+    let mut af = a.clone();
+    let (pivots, _) = lu_factor_blocked(plat.blas(), &mut af, 32).unwrap();
+    let x_direct = lu_solve(&af, &pivots, &b);
+    let direct = hpl_residual(&a, &x_direct, &b);
+
+    let policy = RefinePolicy::default();
+    let (x, rep) = solve_refined(plat.blas(), &a, &b, Factorization::Lu, &policy).unwrap();
+    let refined = hpl_residual(&a, &x, &b);
+
+    assert!(
+        refined.hpl_scaled <= direct.hpl_scaled,
+        "refined {} must be no worse than direct {}",
+        refined.hpl_scaled,
+        direct.hpl_scaled
+    );
+    assert!(refined.hpl_scaled <= policy.tolerance, "HPL pass: {}", refined.hpl_scaled);
+    // The comparison is only meaningful because the unrefined solve
+    // actually fails the criterion (the factorization is f32-class).
+    assert!(direct.hpl_scaled > policy.tolerance, "direct {} vacuous", direct.hpl_scaled);
+    assert!(rep.iters >= 1 && rep.final_residual() <= policy.tolerance);
+}
+
+#[test]
+fn cholesky_refinement_holds_on_a_4_chip_pool() {
+    let plat = Platform::builder().chips(4).build().unwrap();
+    let n = 80;
+    // SPD by construction: M·Mᵀ + n·I.
+    let m = Mat::<f64>::randn(n, n, 12);
+    let mut a = Mat::<f64>::zeros(n, n);
+    for j in 0..n {
+        for i in 0..n {
+            let mut acc = if i == j { n as f64 } else { 0.0 };
+            for p in 0..n {
+                acc += m.get(i, p) * m.get(j, p);
+            }
+            a.set(i, j, acc);
+        }
+    }
+    let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+    let policy = RefinePolicy::default();
+    let (x, _) = solve_refined(plat.blas(), &a, &b, Factorization::Cholesky, &policy).unwrap();
+    let r = hpl_residual(&a, &x, &b);
+    assert!(r.hpl_scaled <= policy.tolerance, "scaled residual {}", r.hpl_scaled);
+}
+
+#[test]
+fn solve_over_wire_reaches_hpl_pass_and_counts() {
+    let srv = BlasServer::start(ServerConfig { chips: 2, ..Default::default() }).unwrap();
+    let mut cli = BlasClient::connect_v2(srv.addr()).unwrap();
+    let n = 64;
+    let (a, b) = dominant_system(n, 21);
+    // Zero nb/max_iters and non-positive tolerance pick server defaults.
+    let req =
+        Request::solve(Factorization::Lu, n, 0, 0, 0.0, a.as_slice().to_vec(), b.clone());
+    let x = cli.call(&req).unwrap().into_f64().unwrap();
+    let r = hpl_residual(&a, &x, &b);
+    assert!(r.hpl_scaled <= 16.0, "wire solve residual {}", r.hpl_scaled);
+    match cli.call(&Request::Stats).unwrap() {
+        Response::Stats(s) => {
+            assert_eq!(s.solve_requests, 1, "{s}");
+            assert!(s.solve_p99_s > 0.0, "{s}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn refinement_failure_modes_are_typed_errors() {
+    let plat = Platform::builder().build().unwrap();
+    let (a, b) = dominant_system(24, 33);
+
+    // An unreachable tolerance with a zero divergence budget must trip
+    // the divergence bail-out on the very first refinement step.
+    let diverge = RefinePolicy { tolerance: 0.0, divergence_factor: 0.0, ..Default::default() };
+    let err = solve_refined(plat.blas(), &a, &b, Factorization::Lu, &diverge).unwrap_err();
+    match err.downcast_ref::<RefineError>() {
+        Some(RefineError::Diverged { iter, .. }) => assert_eq!(*iter, 1),
+        other => panic!("expected Diverged, got {other:?} ({err:#})"),
+    }
+
+    // The same tolerance with an infinite divergence budget runs the
+    // iteration allowance dry instead.
+    let exhaust = RefinePolicy {
+        tolerance: 0.0,
+        divergence_factor: f64::INFINITY,
+        max_iters: 2,
+        ..Default::default()
+    };
+    let err = solve_refined(plat.blas(), &a, &b, Factorization::Lu, &exhaust).unwrap_err();
+    match err.downcast_ref::<RefineError>() {
+        Some(RefineError::DidNotConverge { iters, .. }) => assert_eq!(*iters, 2),
+        other => panic!("expected DidNotConverge, got {other:?} ({err:#})"),
+    }
+}
+
+#[test]
+fn singular_input_reports_cause_over_the_wire() {
+    let srv = BlasServer::start(ServerConfig::default()).unwrap();
+    let mut cli = BlasClient::connect(srv.addr()).unwrap();
+    let n = 16;
+    // Rank-1 dyadic u·vᵀ: exactly singular, so the factorization (not
+    // the refinement loop) is what must report.
+    let u: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+    let v: Vec<f64> = (0..n).map(|i| 2.0 - i as f64 / 8.0).collect();
+    let a = Mat::<f64>::from_fn(n, n, |i, j| u[i] * v[j]);
+    let b = vec![1.0; n];
+    let req = Request::solve(Factorization::Lu, n, 0, 0, 0.0, a.as_slice().to_vec(), b);
+    match cli.call(&req).unwrap() {
+        Response::Err(e) => assert!(e.contains("singular"), "unhelpful error: {e}"),
+        other => panic!("singular solve must be a wire error, got {other:?}"),
+    }
+}
