@@ -1,0 +1,443 @@
+//! Blocking autotuner: a deterministic search over [`BlisContext`]
+//! blocking parameters (`mr`/`nr`/`kc`, i.e. the micro-tile geometry plus
+//! the K cap), driven by the calibrated timing model as cost function.
+//!
+//! Olofsson et al. (arXiv:1412.5538) and Ross/Richie (arXiv:1410.8772)
+//! both report that blocking/unrolling choices dominate the achievable
+//! fraction of peak on Epiphany-class chips — exactly the knob space
+//! [`BlisContext`] exposes but the paper fixes by hand (m=192, n=256,
+//! KSUB=64, NSUB=4). This module searches that space:
+//!
+//! * **Candidates** are every [`KernelGeometry`] from a fixed grid that
+//!   (a) passes [`KernelGeometry::validate`], (b) fits the per-core
+//!   32 KiB local memory exactly as [`crate::epiphany::chip::Chip`]
+//!   would allocate it, and (c) fits both double-buffered input panels
+//!   plus the output in HC-RAM — crossed with a small `kc` grid.
+//! * **Cost** is the projected seconds of the caller's target workload:
+//!   `⌈m/mr⌉·⌈n/nr⌉` µ-kernel calls, each priced by
+//!   [`project_ukr_call`] (the same calibrated model the paper tables
+//!   are reproduced from), with `kc > 0` splitting each call's K loop.
+//! * **Determinism**: same model + same [`AutotuneConfig`] always yields
+//!   the same [`TunedParams`] — candidates are enumerated in a fixed
+//!   order and ties keep the earliest candidate. An optional
+//!   *measured mode* re-ranks the model's top candidates by wall-clock
+//!   of the vectorized host micro-kernel and is deliberately outside
+//!   that guarantee.
+//!
+//! Entry points: [`autotune`] (pure function),
+//! `Platform::builder().autotune(..)` (boots the pool with the tuned
+//! geometry), and the CLI's `sgemm --autotune` (prints the
+//! [`TunedParams::report`] dump).
+
+use super::params::BlisContext;
+use crate::epiphany::kernel::KernelGeometry;
+use crate::epiphany::memory::{CODE_BYTES, STACK_CTRL_BYTES};
+use crate::epiphany::timing::{CalibratedModel, WalkClass};
+use crate::epiphany::{HCRAM_BYTES, LOCAL_MEM_BYTES};
+use crate::host::microkernel::{host_sgemm_variant, UkrVariant};
+use crate::host::projection::{project_ukr_call, ProjectionParams};
+use crate::util::tables::{gf, secs, Table};
+
+/// The fixed candidate grids. Kept small and explicit: the search must be
+/// reproducible from the source alone, and every value is bounds-checked
+/// against the memory model before it becomes a candidate.
+const M_GRID: [usize; 8] = [32, 64, 96, 128, 160, 192, 224, 256];
+const N_GRID: [usize; 6] = [64, 128, 192, 256, 384, 512];
+const KSUB_GRID: [usize; 4] = [16, 32, 64, 128];
+const NSUB_GRID: [usize; 4] = [1, 2, 4, 8];
+const KC_GRID: [usize; 3] = [0, 1024, 4096];
+
+/// How many model-ranked leaders the report keeps (and measured mode
+/// re-times).
+const LEADERBOARD: usize = 8;
+
+/// What to tune for.
+#[derive(Clone, Copy, Debug)]
+pub struct AutotuneConfig {
+    /// Target workload rows.
+    pub m: usize,
+    /// Target workload columns.
+    pub n: usize,
+    /// Target workload contraction depth.
+    pub k: usize,
+    /// Whether µ-kernel calls cross the HH-RAM service IPC (true for the
+    /// production resident-service path; false for same-process ablations).
+    pub ipc: bool,
+    /// Measured-mode refinement: re-rank the model's top candidates by
+    /// wall-clock of the vectorized host micro-kernel on real tiles.
+    /// Off by default — it trades the determinism guarantee for machine
+    /// feedback, which only matters when the host path does the compute.
+    pub measure: bool,
+}
+
+impl AutotuneConfig {
+    /// Tune for one `C = A·B` workload through the resident service
+    /// (model-only: deterministic).
+    pub fn for_workload(m: usize, n: usize, k: usize) -> Self {
+        AutotuneConfig { m, n, k: k.max(1), ipc: true, measure: false }
+    }
+
+    /// Enable measured-mode refinement (see [`AutotuneConfig::measure`]).
+    pub fn measured(mut self) -> Self {
+        self.measure = true;
+        self
+    }
+}
+
+/// One evaluated blocking candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    /// The micro-kernel geometry (defines `mr = m`, `nr = n`).
+    pub geom: KernelGeometry,
+    /// K cap per µ-kernel call (0 = unbounded).
+    pub kc: usize,
+    /// Projected seconds for the whole target workload.
+    pub projected_s: f64,
+    /// Workload flop rate against the projection (padding waste included,
+    /// so this is what the caller would actually observe).
+    pub projected_gflops: f64,
+    /// Measured wall-clock seconds of one vectorized host-kernel tile
+    /// call (measured mode only).
+    pub measured_s: Option<f64>,
+}
+
+impl Candidate {
+    /// The [`BlisContext`] this candidate tunes.
+    pub fn context(&self) -> BlisContext {
+        BlisContext { mr: self.geom.m, nr: self.geom.n, kc: self.kc }
+    }
+}
+
+/// The autotuner's dumpable result: the winning blocking plus the
+/// leaderboard it beat.
+#[derive(Clone, Debug)]
+pub struct TunedParams {
+    /// The workload this tuning targeted (m, n, k).
+    pub workload: (usize, usize, usize),
+    /// The winning candidate.
+    pub best: Candidate,
+    /// Model-ranked leaders (ascending projected seconds; the winner is
+    /// `leaders[0]` unless measured mode re-ranked).
+    pub leaders: Vec<Candidate>,
+    /// How many valid candidates the grid produced.
+    pub evaluated: usize,
+    /// Whether measured-mode refinement ran.
+    pub measured: bool,
+}
+
+impl TunedParams {
+    /// The tuned geometry to boot the chip pool with.
+    pub fn geometry(&self) -> KernelGeometry {
+        self.best.geom
+    }
+
+    /// The tuned blocking context for the BLIS driver.
+    pub fn context(&self) -> BlisContext {
+        self.best.context()
+    }
+
+    /// Human-readable report: the winner plus the leaderboard table.
+    pub fn report(&self) -> String {
+        let (m, n, k) = self.workload;
+        let g = self.best.geom;
+        let mode = if self.measured { "model + measured" } else { "model (deterministic)" };
+        let mut t = Table::new(
+            &format!("autotune {m}x{n}x{k} — {} candidates, {mode}", self.evaluated),
+            &["rank", "m", "n", "ksub", "nsub", "kc", "proj s", "proj GF", "meas s"],
+        );
+        for (rank, c) in self.leaders.iter().enumerate() {
+            t.row(&[
+                format!("{}", rank + 1),
+                format!("{}", c.geom.m),
+                format!("{}", c.geom.n),
+                format!("{}", c.geom.ksub),
+                format!("{}", c.geom.nsub),
+                format!("{}", c.kc),
+                secs(c.projected_s),
+                gf(c.projected_gflops),
+                c.measured_s.map(secs).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        format!(
+            "{}\nbest: m={} n={} ksub={} nsub={} kc={} — projected {} s ({} GFLOPS)\n",
+            t.render(),
+            g.m,
+            g.n,
+            g.ksub,
+            g.nsub,
+            self.best.kc,
+            secs(self.best.projected_s),
+            gf(self.best.projected_gflops)
+        )
+    }
+}
+
+/// Whether `geom` fits the per-core 32 KiB local memory, mirroring the
+/// exact allocation [`crate::epiphany::chip::Chip::new`] performs: the
+/// 8 KiB code bank, the A/B input slices, the RES1/RES2 accumulators, and
+/// the 2 KiB stack/control reserve.
+pub fn fits_local_memory(geom: &KernelGeometry) -> bool {
+    let elems = geom.m * geom.k_slice()
+        + geom.k_slice() * geom.n
+        + geom.m * geom.nsub
+        + geom.m * geom.cols_per_core();
+    CODE_BYTES + 4 * elems + STACK_CTRL_BYTES <= LOCAL_MEM_BYTES
+}
+
+/// Whether `geom`'s HC-RAM working set fits: both double-buffered input
+/// panels (selector 0/1) plus the output segment, as laid out by the
+/// chip's HC-RAM map.
+pub fn fits_hcram(geom: &KernelGeometry) -> bool {
+    let elems = 2 * geom.m * geom.ksub + 2 * geom.ksub * geom.n + geom.m * geom.n;
+    4 * elems <= HCRAM_BYTES
+}
+
+/// Every geometry from the fixed grid that validates and fits both
+/// memory budgets, in deterministic enumeration order.
+pub fn candidate_geometries() -> Vec<KernelGeometry> {
+    let mut out = Vec::new();
+    for &m in &M_GRID {
+        for &n in &N_GRID {
+            for &ksub in &KSUB_GRID {
+                for &nsub in &NSUB_GRID {
+                    let g = KernelGeometry { m, n, ksub, nsub };
+                    if g.validate().is_ok() && fits_local_memory(&g) && fits_hcram(&g) {
+                        out.push(g);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Projected seconds of one µ-kernel call of depth `k` at `geom` (the
+/// production service path's walk classes: contiguous A, strided B).
+fn call_s(model: &CalibratedModel, geom: KernelGeometry, k: usize, ipc: bool) -> f64 {
+    let p = ProjectionParams {
+        m: geom.m,
+        n: geom.n,
+        k,
+        ksub: geom.ksub,
+        nsub: geom.nsub,
+        class_a: WalkClass::Contig,
+        class_b: WalkClass::StridedB,
+        ipc,
+        dgemm: false,
+        blis: true,
+    };
+    project_ukr_call(model, &p).total_s
+}
+
+/// Projected seconds of the whole target workload under one candidate:
+/// the full tile cover (padded edge tiles are charged at full tile cost,
+/// matching what the packed driver really does), K split by `kc`.
+fn workload_s(
+    model: &CalibratedModel,
+    geom: KernelGeometry,
+    kc: usize,
+    cfg: &AutotuneConfig,
+) -> f64 {
+    let tiles = BlisContext::tiles(cfg.m, geom.m) * BlisContext::tiles(cfg.n, geom.n);
+    let per_tile = if kc == 0 || kc >= cfg.k {
+        call_s(model, geom, cfg.k, cfg.ipc)
+    } else {
+        let full = cfg.k / kc;
+        let rem = cfg.k % kc;
+        let mut s = full as f64 * call_s(model, geom, kc, cfg.ipc);
+        if rem > 0 {
+            s += call_s(model, geom, rem, cfg.ipc);
+        }
+        s
+    };
+    tiles as f64 * per_tile
+}
+
+/// Deterministic blocking search (see the module docs). Pure function of
+/// `(model, cfg)` when `cfg.measure` is off.
+pub fn autotune(model: &CalibratedModel, cfg: &AutotuneConfig) -> TunedParams {
+    let flops = 2.0 * cfg.m as f64 * cfg.n as f64 * cfg.k as f64;
+    let mut all: Vec<Candidate> = Vec::new();
+    for geom in candidate_geometries() {
+        for &kc in &KC_GRID {
+            let s = workload_s(model, geom, kc, cfg);
+            all.push(Candidate {
+                geom,
+                kc,
+                projected_s: s,
+                projected_gflops: flops / s / 1e9,
+                measured_s: None,
+            });
+        }
+    }
+    let evaluated = all.len();
+    // Total deterministic order: projected seconds, then the geometry
+    // tuple (enumeration order already groups equal-cost candidates, but
+    // an explicit key keeps the sort stable under any future change).
+    all.sort_by(|a, b| a.projected_s.total_cmp(&b.projected_s).then_with(|| key(a).cmp(&key(b))));
+    all.truncate(LEADERBOARD);
+    let mut leaders = all;
+    if cfg.measure {
+        measure_leaders(&mut leaders, cfg);
+    }
+    let best = pick_best(&leaders);
+    TunedParams {
+        workload: (cfg.m, cfg.n, cfg.k),
+        best,
+        leaders,
+        evaluated,
+        measured: cfg.measure,
+    }
+}
+
+fn key(c: &Candidate) -> (usize, usize, usize, usize, usize) {
+    (c.geom.m, c.geom.n, c.geom.ksub, c.geom.nsub, c.kc)
+}
+
+/// Measured-mode refinement: time one vectorized host-kernel tile call
+/// (m × n × ksub) per leader and store the wall seconds. Inputs are a
+/// fixed arithmetic pattern — no RNG, so only the machine varies.
+fn measure_leaders(leaders: &mut [Candidate], cfg: &AutotuneConfig) {
+    let variant = UkrVariant::fastest();
+    for c in leaders.iter_mut() {
+        let (m, n) = (c.geom.m, c.geom.n);
+        let k = c.geom.ksub.min(cfg.k.max(1));
+        let fill = |len: usize, scale: f32| -> Vec<f32> {
+            (0..len).map(|i| ((i % 13) as f32 - 6.0) * scale).collect()
+        };
+        let a = fill(m * k, 0.25);
+        let b = fill(k * n, 0.125);
+        let c_in = fill(m * n, 0.5);
+        // One warmup, then best-of-3: tiny tiles are noisy and this path
+        // is explicitly outside the determinism guarantee.
+        std::hint::black_box(host_sgemm_variant(variant, m, n, k, 1.0, &a, &b, 0.5, &c_in));
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let (_, s) = crate::util::timed(|| {
+                std::hint::black_box(host_sgemm_variant(variant, m, n, k, 1.0, &a, &b, 0.5, &c_in))
+            });
+            best = best.min(s);
+        }
+        c.measured_s = Some(best);
+    }
+}
+
+/// The winner: measured seconds when every leader carries one (ties and
+/// the model-only mode fall back to the model ranking, where index 0 is
+/// already the deterministic best).
+fn pick_best(leaders: &[Candidate]) -> Candidate {
+    let mut best = leaders[0];
+    for c in &leaders[1..] {
+        if let (Some(cm), Some(bm)) = (c.measured_s, best.measured_s) {
+            if cm < bm {
+                best = *c;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::epiphany::PEAK_GFLOPS;
+    use crate::util::proptest::{forall, Config};
+
+    #[test]
+    fn paper_geometry_is_a_candidate_and_exactly_fills_local_memory() {
+        let paper = KernelGeometry::paper();
+        assert!(candidate_geometries().contains(&paper));
+        assert!(fits_local_memory(&paper) && fits_hcram(&paper));
+        // The paper config saturates the 32 KiB core budget to the byte.
+        let elems = paper.m * paper.k_slice()
+            + paper.k_slice() * paper.n
+            + paper.m * paper.nsub
+            + paper.m * paper.cols_per_core();
+        assert_eq!(CODE_BYTES + 4 * elems + STACK_CTRL_BYTES, LOCAL_MEM_BYTES);
+    }
+
+    #[test]
+    fn every_candidate_respects_all_bounds() {
+        let geoms = candidate_geometries();
+        assert!(geoms.len() > 20, "grid produced only {} candidates", geoms.len());
+        for g in &geoms {
+            g.validate().unwrap();
+            assert!(fits_local_memory(g), "{g:?} exceeds local memory");
+            assert!(fits_hcram(g), "{g:?} exceeds HC-RAM");
+        }
+    }
+
+    #[test]
+    fn autotune_is_deterministic_and_candidates_respect_peak_cap() {
+        let model = CalibratedModel::default();
+        forall(
+            Config { cases: 24, seed: 0xA07 },
+            |rng| {
+                (
+                    64 + rng.next_below(2048),
+                    64 + rng.next_below(2048),
+                    1 + rng.next_below(4096),
+                )
+            },
+            |&(m, n, k)| {
+                let cfg = AutotuneConfig::for_workload(m, n, k);
+                let t1 = autotune(&model, &cfg);
+                let t2 = autotune(&model, &cfg);
+                // Determinism: same inputs → same TunedParams.
+                assert_eq!(t1.best.geom, t2.best.geom);
+                assert_eq!(t1.best.kc, t2.best.kc);
+                assert_eq!(t1.best.projected_s.to_bits(), t2.best.projected_s.to_bits());
+                assert_eq!(t1.leaders.len(), t2.leaders.len());
+                for (a, b) in t1.leaders.iter().zip(&t2.leaders) {
+                    assert_eq!(a.geom, b.geom);
+                    assert_eq!(a.projected_s.to_bits(), b.projected_s.to_bits());
+                }
+                // Every emitted candidate respects the memory bounds and
+                // the 19.2 GFLOPS chip peak.
+                for c in &t1.leaders {
+                    assert!(fits_local_memory(&c.geom) && fits_hcram(&c.geom));
+                    assert!(
+                        c.projected_gflops < PEAK_GFLOPS,
+                        "{:?} projects {} GF over peak",
+                        c.geom,
+                        c.projected_gflops
+                    );
+                }
+                t1.best.projected_s > 0.0 && t1.evaluated > 0
+            },
+        );
+    }
+
+    #[test]
+    fn tuned_context_matches_tuned_geometry() {
+        let model = CalibratedModel::default();
+        let t = autotune(&model, &AutotuneConfig::for_workload(4096, 4096, 4096));
+        let ctx = t.context();
+        assert_eq!((ctx.mr, ctx.nr), (t.geometry().m, t.geometry().n));
+        // The model has no per-call amortization to gain from capping K,
+        // so the deterministic winner keeps K unblocked.
+        assert_eq!(ctx.kc, 0);
+        // The winner can never lose to the paper's hand blocking under
+        // the same cost model.
+        let paper_s = workload_s(
+            &model,
+            KernelGeometry::paper(),
+            0,
+            &AutotuneConfig::for_workload(4096, 4096, 4096),
+        );
+        assert!(t.best.projected_s <= paper_s);
+        let report = t.report();
+        assert!(report.contains("autotune 4096x4096x4096"));
+        assert!(report.contains("best: m="));
+    }
+
+    #[test]
+    fn measured_mode_times_every_leader() {
+        let model = CalibratedModel::default();
+        let t = autotune(&model, &AutotuneConfig::for_workload(256, 256, 128).measured());
+        assert!(t.measured);
+        assert!(t.leaders.iter().all(|c| c.measured_s.is_some()));
+        assert!(t.best.measured_s.unwrap() > 0.0);
+        assert!(t.report().contains("model + measured"));
+    }
+}

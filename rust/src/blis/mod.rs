@@ -17,11 +17,14 @@
 //!   level-2 ops are unaccelerated, which §4.3 blames for the HPL number);
 //! * [`blas_api`] — the classic FORTRAN-style surface (`sgemm`, `saxpy`,
 //!   …), generated-style shims over the descriptor core;
-//! * [`testsuite`] — BLIS-testsuite-style residue rows (Tables 3–6).
+//! * [`testsuite`] — BLIS-testsuite-style residue rows (Tables 3–6);
+//! * [`autotune`] — deterministic blocking search over [`BlisContext`]
+//!   candidates, priced by the calibrated timing model.
 //!
 //! How a level-3 call flows from [`Blas::execute`] through the shard plan
 //! down to per-chip HH-RAM is drawn in `docs/ARCHITECTURE.md`.
 
+pub mod autotune;
 pub mod blas_api;
 pub mod gemm;
 pub mod level1;
@@ -32,6 +35,7 @@ pub mod packing;
 pub mod params;
 pub mod testsuite;
 
+pub use autotune::{autotune, AutotuneConfig, TunedParams};
 pub use blas_api::BlasLibrary;
 pub use gemm::Blas;
 pub use op::{BlasOp, Dtype, Element, GemmOp, GemmTask, GemvOp, Level1Op, Route, Ticket};

@@ -28,8 +28,35 @@ pub fn pack_a<T: Real>(
             out[l * m_tile..l * m_tile + rows].copy_from_slice(src);
         }
         (out, WalkClass::Contig)
+    } else if op_a.col_stride() == 1 {
+        // Transposed A (rows contiguous): loop-interchanged blocked
+        // transpose. Walk TP_LANES source rows contiguously at a time and
+        // store TP_LANES-wide into each output column — same bytes as the
+        // naive gather, but unit-stride reads and short vectorizable
+        // stores. Still the StridedA *cost* class: the projection models
+        // the Zynq's gather, not this host loop.
+        let rows_t = op_a.t(); // column i of rows_t = row i of op(A)
+        let mut i = 0;
+        while i + TP_LANES <= rows {
+            let s0 = rows_t.col_slice(i0 + i, 0, k);
+            let s1 = rows_t.col_slice(i0 + i + 1, 0, k);
+            let s2 = rows_t.col_slice(i0 + i + 2, 0, k);
+            let s3 = rows_t.col_slice(i0 + i + 3, 0, k);
+            for (l, col) in out.chunks_exact_mut(m_tile).enumerate() {
+                col[i..i + TP_LANES].copy_from_slice(&[s0[l], s1[l], s2[l], s3[l]]);
+            }
+            i += TP_LANES;
+        }
+        while i < rows {
+            let s = rows_t.col_slice(i0 + i, 0, k);
+            for (col, &v) in out.chunks_exact_mut(m_tile).zip(s) {
+                col[i] = v;
+            }
+            i += 1;
+        }
+        (out, WalkClass::StridedA)
     } else {
-        // Transposed A: gather walk (StridedA cost class).
+        // Exotic strides (neither dimension contiguous): element gather.
         for l in 0..k {
             for i in 0..rows {
                 out[l * m_tile + i] = op_a.get(i0 + i, l);
@@ -38,6 +65,10 @@ pub fn pack_a<T: Real>(
         (out, WalkClass::StridedA)
     }
 }
+
+/// Lanes per blocked-transpose step in the strided packing paths (one
+/// short contiguous store per source element group).
+const TP_LANES: usize = 4;
 
 /// Pack a `k × n_tile` *row-major* B panel from `op_b` (the logical op(B)
 /// view), columns `j0..j0+cols`, zero-padding to `n_tile`.
@@ -76,9 +107,34 @@ pub fn pack_b_into<T: Real>(
             out[l * n_tile..l * n_tile + cols].copy_from_slice(src);
         }
         WalkClass::Contig
+    } else if op_b.row_stride() == 1 {
+        // Plain B (columns contiguous): the row-major panel build is a
+        // transpose — loop-interchanged and blocked like the strided
+        // `pack_a` path, so the source walks at unit stride and each
+        // output row takes TP_LANES-wide stores. Bytes are identical to
+        // the naive gather; the StridedB *cost* class is unchanged (the
+        // projection prices the Zynq walk, not this host loop).
+        let mut j = 0;
+        while j + TP_LANES <= cols {
+            let s0 = op_b.col_slice(j0 + j, 0, k);
+            let s1 = op_b.col_slice(j0 + j + 1, 0, k);
+            let s2 = op_b.col_slice(j0 + j + 2, 0, k);
+            let s3 = op_b.col_slice(j0 + j + 3, 0, k);
+            for (l, row) in out.chunks_exact_mut(n_tile).enumerate() {
+                row[j..j + TP_LANES].copy_from_slice(&[s0[l], s1[l], s2[l], s3[l]]);
+            }
+            j += TP_LANES;
+        }
+        while j < cols {
+            let s = op_b.col_slice(j0 + j, 0, k);
+            for (row, &v) in out.chunks_exact_mut(n_tile).zip(s) {
+                row[j] = v;
+            }
+            j += 1;
+        }
+        WalkClass::StridedB
     } else {
-        // Plain B: building row-major panels walks across columns
-        // (StridedB cost class).
+        // Exotic strides: element gather.
         for l in 0..k {
             for j in 0..cols {
                 out[l * n_tile + j] = op_b.get(l, j0 + j);
@@ -211,6 +267,32 @@ mod tests {
         let mut cbuf = vec![9.0f64]; // dirty, undersized: must be re-zeroed
         pack_c_into(&mut cbuf, c0.view(), 1, 1, 2, 2, 3, 3);
         assert_eq!(cbuf, want_c);
+    }
+
+    #[test]
+    fn blocked_transpose_paths_match_naive_gather() {
+        // Ragged rows/cols (not multiples of TP_LANES) exercise both the
+        // 4-lane body and the single-lane tail of the interchanged loops.
+        let a = Mat::<f32>::from_fn(7, 9, |i, j| (100 * i + j) as f32);
+        let op_a = a.t(); // 9×7, rs = 7, cs = 1 → blocked StridedA path
+        let (panel, class) = pack_a(op_a, 1, 7, 10);
+        assert_eq!(class, WalkClass::StridedA);
+        for l in 0..op_a.cols() {
+            for i in 0..7 {
+                assert_eq!(panel[l * 10 + i], op_a.get(1 + i, l), "({i},{l})");
+            }
+            assert_eq!(&panel[l * 10 + 7..l * 10 + 10], &[0.0; 3], "pad l={l}");
+        }
+
+        let b = Mat::<f32>::from_fn(5, 11, |i, j| (100 * i + j) as f32);
+        let (panel, class) = pack_b(b.view(), 2, 7, 9); // blocked StridedB
+        assert_eq!(class, WalkClass::StridedB);
+        for l in 0..5 {
+            for j in 0..7 {
+                assert_eq!(panel[l * 9 + j], b.get(l, 2 + j), "({l},{j})");
+            }
+            assert_eq!(&panel[l * 9 + 7..l * 9 + 9], &[0.0; 2], "pad l={l}");
+        }
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! the exact format of the paper's Tables 3–6.
 
 use super::gemm::{Blas, GemmReport};
+use super::packing::{pack_a, pack_b};
 use super::params::Trans;
-use crate::linalg::{max_scaled_err, Mat, Real};
+use crate::host::microkernel::{host_sgemm_variant, UkrVariant};
+use crate::linalg::{max_scaled_err, Mat, Real, XorShiftRng};
 use anyhow::Result;
 
 /// One testsuite row.
@@ -138,6 +140,89 @@ pub fn sweep_all_variants(
     Ok(rows)
 }
 
+/// Host µ-kernel conformance sweep — the lock-down for the vectorized
+/// variants in [`crate::host::microkernel`]. Every compiled-in
+/// [`UkrVariant`] runs every transpose pair × α,β ∈ {0, 1, −1, 0.5} ×
+/// ragged shape (k = 0, 1, KSUB±1; m/n off the 8×4 register block) on
+/// panels packed by the production [`pack_a`]/[`pack_b`] paths, and must
+/// (a) match an f64 oracle within f32 accumulation error and (b) agree
+/// *bitwise* with the scalar oracle variant. Returns the number of cases
+/// checked; panics with the offending case label on the first divergence.
+pub fn ukr_conformance_sweep() -> usize {
+    // KSUB = 64 in the paper geometry: straddle it, the register block
+    // (8×4), and the degenerate k = 0 / rank-1 k = 1 edges.
+    let shapes: [(usize, usize, usize); 6] =
+        [(8, 4, 16), (9, 5, 63), (13, 7, 65), (32, 16, 1), (50, 50, 0), (24, 20, 64)];
+    let coeffs: [(f32, f32); 5] = [(1.0, 0.0), (1.0, 1.0), (-1.0, 0.5), (0.5, -1.0), (0.0, 1.0)];
+    let mut rng = XorShiftRng::new(0xC0F);
+    let mut fill = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.next_unit() as f32).collect() };
+    let mut cases = 0usize;
+    for &(m, n, k) in &shapes {
+        for ta in Trans::all() {
+            for tb in Trans::all() {
+                // Source matrices in the storage the op views expect.
+                let a_src = if ta.is_trans() {
+                    Mat::from_col_major(k, m, &fill(k * m))
+                } else {
+                    Mat::from_col_major(m, k, &fill(m * k))
+                };
+                let b_src = if tb.is_trans() {
+                    Mat::from_col_major(n, k, &fill(n * k))
+                } else {
+                    Mat::from_col_major(k, n, &fill(k * n))
+                };
+                let op_a = if ta.is_trans() { a_src.view().t() } else { a_src.view() };
+                let op_b = if tb.is_trans() { b_src.view().t() } else { b_src.view() };
+                let (a, _) = pack_a(op_a, 0, m, m);
+                let (b, _) = pack_b(op_b, 0, n, n);
+                for &(alpha, beta) in &coeffs {
+                    let c0 = fill(m * n);
+                    // f64 oracle over the packed panels (a col-major,
+                    // b row-major, c col-major).
+                    let mut want = vec![0.0f64; m * n];
+                    for j in 0..n {
+                        for i in 0..m {
+                            let mut acc = 0.0f64;
+                            for l in 0..k {
+                                acc += a[i + l * m] as f64 * b[l * n + j] as f64;
+                            }
+                            want[i + j * m] =
+                                alpha as f64 * acc + beta as f64 * c0[i + j * m] as f64;
+                        }
+                    }
+                    let scale =
+                        want.iter().fold(1.0f64, |s, v| s.max(v.abs())).max(f64::MIN_POSITIVE);
+                    let reference =
+                        host_sgemm_variant(UkrVariant::Scalar, m, n, k, alpha, &a, &b, beta, &c0);
+                    for v in UkrVariant::all() {
+                        if !v.available() {
+                            continue;
+                        }
+                        let label = format!(
+                            "{} {m}x{n}x{k} {}{} a={alpha} b={beta}",
+                            v.name(),
+                            ta.code(),
+                            tb.code()
+                        );
+                        let got = host_sgemm_variant(v, m, n, k, alpha, &a, &b, beta, &c0);
+                        for (g, w) in got.iter().zip(&want) {
+                            let err = (*g as f64 - w).abs() / scale;
+                            assert!(err < 1e-5, "{label}: err {err} vs f64 oracle");
+                        }
+                        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                        assert!(
+                            bits(&got) == bits(&reference),
+                            "{label}: diverged bitwise from the scalar oracle"
+                        );
+                        cases += 1;
+                    }
+                }
+            }
+        }
+    }
+    cases
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +269,14 @@ mod tests {
         // Transposed-A variants are slower (Table 4's ordering).
         assert!(find("tn") < find("nn"));
         assert!(find("nt") > find("nn"));
+    }
+
+    #[test]
+    fn ukr_conformance_sweep_is_exhaustive() {
+        // 6 shapes × 16 transpose pairs × 5 coefficient pairs × the
+        // compiled-in variants (panics inside the sweep on any mismatch).
+        let variants = UkrVariant::all().iter().filter(|v| v.available()).count();
+        assert_eq!(ukr_conformance_sweep(), 6 * 16 * 5 * variants);
     }
 
     #[test]

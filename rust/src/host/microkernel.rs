@@ -8,11 +8,16 @@
 //!   the eSDK driver (bit-level faithful to the on-chip dataflow);
 //! * [`UkrBackend::Pjrt`] — the AOT-compiled L2/L1 jax+pallas artifact via
 //!   the PJRT runtime (the production path: fast numerics, model timing);
-//! * [`UkrBackend::HostRef`] — the naive triple loop, i.e. the paper's
-//!   "Host reference code" baseline.
+//! * [`UkrBackend::HostRef`] — the host compute path, in one of several
+//!   [`UkrVariant`] implementations: the paper's naive triple loop (the
+//!   oracle), an unroll-and-jam register-blocked kernel that
+//!   autovectorizes, and an explicit SSE kernel behind the `simd` feature.
 //!
-//! All backends produce the same mathematical result; tests pin them
-//! against each other.
+//! All backends and variants produce the same mathematical result; tests
+//! pin them against each other. The host variants are in fact *bit*
+//! identical: every per-element multiply-add happens in the same order
+//! (k ascending, mul then add, no FMA contraction), only the grouping
+//! across independent output elements changes.
 
 use super::projection::{project_ukr_call, Projection, ProjectionParams};
 use crate::epiphany::kernel::{Command, KernelGeometry};
@@ -28,7 +33,7 @@ pub enum UkrBackend {
     Simulator(EHal),
     /// AOT jax+pallas artifacts through PJRT.
     Pjrt(GemmExecutor),
-    /// Naive host loop (baseline).
+    /// Host loop (baseline), computed with the kernel's [`UkrVariant`].
     HostRef,
 }
 
@@ -40,6 +45,89 @@ impl UkrBackend {
             UkrBackend::Pjrt(_) => "pjrt",
             UkrBackend::HostRef => "host-ref",
         }
+    }
+}
+
+/// Register blocking of the vectorized host kernels: rows per i-block.
+/// 8 f32 lanes = two SSE vectors (or one AVX vector if the compiler picks
+/// it during autovectorization of the blocked form).
+pub const UKR_MR: usize = 8;
+/// Register blocking of the vectorized host kernels: columns per j-block.
+/// 4 columns × 8 rows = 32 accumulators — the unroll-and-jam working set.
+pub const UKR_NR: usize = 4;
+
+/// How the host computes a gemm tile (the [`UkrBackend::HostRef`] path and
+/// the scalar-vs-vectorized trajectory recorded by the table benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UkrVariant {
+    /// The paper's naive triple loop — kept unchanged as the oracle.
+    Scalar,
+    /// [`UKR_MR`]`×`[`UKR_NR`] unroll-and-jam register blocking over
+    /// `chunks_exact` column panels; written so LLVM autovectorizes the
+    /// fixed-size accumulator loops.
+    Blocked,
+    /// Explicit `core::arch` SSE kernel. Only compiled with the `simd`
+    /// cargo feature on x86_64; [`UkrVariant::resolve`] falls back to
+    /// [`UkrVariant::Blocked`] everywhere else.
+    Simd,
+}
+
+impl UkrVariant {
+    /// Every variant, in conformance-sweep order.
+    pub fn all() -> [UkrVariant; 3] {
+        [UkrVariant::Scalar, UkrVariant::Blocked, UkrVariant::Simd]
+    }
+
+    /// Short label for reports (`scalar` / `blocked` / `simd`).
+    pub fn name(self) -> &'static str {
+        match self {
+            UkrVariant::Scalar => "scalar",
+            UkrVariant::Blocked => "blocked",
+            UkrVariant::Simd => "simd",
+        }
+    }
+
+    /// Whether this variant's code path is compiled into this build.
+    pub fn available(self) -> bool {
+        match self {
+            UkrVariant::Scalar | UkrVariant::Blocked => true,
+            UkrVariant::Simd => cfg!(all(feature = "simd", target_arch = "x86_64")),
+        }
+    }
+
+    /// The variant that actually runs: [`UkrVariant::Simd`] degrades to
+    /// [`UkrVariant::Blocked`] when the SSE path is not compiled in.
+    pub fn resolve(self) -> UkrVariant {
+        if self.available() {
+            self
+        } else {
+            UkrVariant::Blocked
+        }
+    }
+
+    /// The fastest variant compiled into this build.
+    pub fn fastest() -> UkrVariant {
+        UkrVariant::Simd.resolve()
+    }
+
+    /// Parse a variant name as used by the `PARALLELLA_UKR` env knob.
+    pub fn parse(s: &str) -> Option<UkrVariant> {
+        match s {
+            "scalar" => Some(UkrVariant::Scalar),
+            "blocked" => Some(UkrVariant::Blocked),
+            "simd" => Some(UkrVariant::Simd),
+            _ => None,
+        }
+    }
+
+    /// Runtime selection: `PARALLELLA_UKR=scalar|blocked|simd` when set
+    /// (unknown values are ignored), else [`UkrVariant::fastest`].
+    pub fn from_env() -> UkrVariant {
+        std::env::var("PARALLELLA_UKR")
+            .ok()
+            .and_then(|v| UkrVariant::parse(&v))
+            .unwrap_or_else(UkrVariant::fastest)
+            .resolve()
     }
 }
 
@@ -62,12 +150,41 @@ pub struct InnerMicroKernel {
     pub model: CalibratedModel,
     /// The fixed (m, n, KSUB, NSUB) tile geometry.
     pub geom: KernelGeometry,
+    /// Host compute variant used by [`UkrBackend::HostRef`]. The
+    /// Parallella *projection* for that backend is unaffected — it models
+    /// the paper's naive loop on the Zynq, not this machine.
+    pub variant: UkrVariant,
+    // Reusable β==0 substitute (read-only zeros; allocated once per size).
+    zeros: Vec<f32>,
+    // KSUB staging panels reused across simulator tasks and calls.
+    sim_a: Vec<f32>,
+    sim_b: Vec<f32>,
 }
 
 impl InnerMicroKernel {
-    /// Wrap a backend; boots the simulator's e-hal once if needed.
+    /// Wrap a backend; boots the simulator's e-hal once if needed. The
+    /// host variant comes from [`UkrVariant::from_env`].
     pub fn new(backend: UkrBackend, model: CalibratedModel, geom: KernelGeometry) -> Result<Self> {
-        let mut ukr = InnerMicroKernel { backend, model, geom };
+        Self::with_variant(backend, model, geom, UkrVariant::from_env())
+    }
+
+    /// [`InnerMicroKernel::new`] with an explicit host compute variant
+    /// (the conformance sweep pins each variant this way).
+    pub fn with_variant(
+        backend: UkrBackend,
+        model: CalibratedModel,
+        geom: KernelGeometry,
+        variant: UkrVariant,
+    ) -> Result<Self> {
+        let mut ukr = InnerMicroKernel {
+            backend,
+            model,
+            geom,
+            variant: variant.resolve(),
+            zeros: Vec::new(),
+            sim_a: Vec::new(),
+            sim_b: Vec::new(),
+        };
         if let UkrBackend::Simulator(hal) = &mut ukr.backend {
             if !hal.is_open() {
                 hal.e_init(geom)?;
@@ -105,24 +222,33 @@ impl InnerMicroKernel {
 
         // Reference-BLAS semantics: beta == 0 means C is *not read* (an
         // uninitialized or NaN C must not poison the result). Substitute
-        // zeros before any backend sees it.
-        let zeros;
-        let c_in = if beta == 0.0 {
-            zeros = vec![0.0f32; m * n];
-            &zeros[..]
-        } else {
-            c_in
-        };
+        // the persistent zeros buffer — it is only ever read, so one
+        // allocation serves every β==0 call at this geometry.
+        if beta == 0.0 && self.zeros.len() != m * n {
+            self.zeros = vec![0.0f32; m * n];
+        }
+        let c_in = if beta == 0.0 { self.zeros.as_slice() } else { c_in };
 
         let t0 = Instant::now();
         let c = match &mut self.backend {
-            UkrBackend::HostRef => host_ref_sgemm(m, n, k, alpha, a_panel, b_panel, beta, c_in),
+            UkrBackend::HostRef => {
+                host_sgemm_variant(self.variant, m, n, k, alpha, a_panel, b_panel, beta, c_in)
+            }
             UkrBackend::Pjrt(ex) => {
                 ex.sgemm_arbitrary_k(k, alpha, a_panel, b_panel, beta, c_in)?
             }
-            UkrBackend::Simulator(hal) => {
-                simulator_sgemm(hal, self.geom, alpha, a_panel, b_panel, beta, c_in, k)?
-            }
+            UkrBackend::Simulator(hal) => simulator_sgemm(
+                hal,
+                self.geom,
+                alpha,
+                a_panel,
+                b_panel,
+                beta,
+                c_in,
+                k,
+                &mut self.sim_a,
+                &mut self.sim_b,
+            )?,
         };
         let wall_s = t0.elapsed().as_secs_f64();
         let projection = match self.backend {
@@ -166,7 +292,8 @@ impl InnerMicroKernel {
     }
 }
 
-/// The naive triple loop — the paper's "Host reference code".
+/// The naive triple loop — the paper's "Host reference code", kept
+/// verbatim as the oracle every other variant is pinned against.
 pub fn host_ref_sgemm(
     m: usize,
     n: usize,
@@ -190,9 +317,211 @@ pub fn host_ref_sgemm(
     c
 }
 
+/// Dispatch one host gemm tile to the chosen [`UkrVariant`]
+/// (layouts as in [`host_ref_sgemm`]; arbitrary m/n/k, ragged included).
+pub fn host_sgemm_variant(
+    variant: UkrVariant,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c_in: &[f32],
+) -> Vec<f32> {
+    match variant.resolve() {
+        UkrVariant::Scalar => host_ref_sgemm(m, n, k, alpha, a, b, beta, c_in),
+        UkrVariant::Blocked => host_sgemm_blocked(m, n, k, alpha, a, b, beta, c_in),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        UkrVariant::Simd => sse::sgemm(m, n, k, alpha, a, b, beta, c_in),
+        // Unreachable through resolve(); kept so the match is total in
+        // builds without the SSE path.
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        UkrVariant::Simd => host_sgemm_blocked(m, n, k, alpha, a, b, beta, c_in),
+    }
+}
+
+/// Unroll-and-jam host kernel: [`UKR_MR`]`×`[`UKR_NR`] register blocks,
+/// column panels walked with `chunks_exact`, fixed-size accumulator
+/// arrays that LLVM autovectorizes. Bit-identical to [`host_ref_sgemm`]
+/// (same per-element operation order).
+pub fn host_sgemm_blocked(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c_in: &[f32],
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let m_main = m - m % UKR_MR;
+    let n_main = n - n % UKR_NR;
+    for j0 in (0..n_main).step_by(UKR_NR) {
+        for i0 in (0..m_main).step_by(UKR_MR) {
+            ukr_8x4(m, n, k, alpha, a, b, beta, c_in, &mut c, i0, j0);
+        }
+        ukr_edge(m, n, k, alpha, a, b, beta, c_in, &mut c, m_main, m, j0, j0 + UKR_NR);
+    }
+    ukr_edge(m, n, k, alpha, a, b, beta, c_in, &mut c, 0, m, n_main, n);
+    c
+}
+
+/// One full [`UKR_MR`]`×`[`UKR_NR`] register block at (i0, j0).
+#[inline]
+fn ukr_8x4(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c_in: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    j0: usize,
+) {
+    let mut acc = [[0.0f32; UKR_MR]; UKR_NR];
+    for (a_col, b_row) in a.chunks_exact(m).zip(b.chunks_exact(n)).take(k) {
+        let av: &[f32; UKR_MR] = a_col[i0..i0 + UKR_MR].try_into().unwrap();
+        let bv: &[f32; UKR_NR] = b_row[j0..j0 + UKR_NR].try_into().unwrap();
+        for (acc_j, &bj) in acc.iter_mut().zip(bv) {
+            for ii in 0..UKR_MR {
+                acc_j[ii] += av[ii] * bj;
+            }
+        }
+    }
+    for (jj, acc_j) in acc.iter().enumerate() {
+        let base = (j0 + jj) * m + i0;
+        let src = &c_in[base..base + UKR_MR];
+        let dst = &mut c[base..base + UKR_MR];
+        for ii in 0..UKR_MR {
+            dst[ii] = alpha * acc_j[ii] + beta * src[ii];
+        }
+    }
+}
+
+/// Ragged-edge fallback: the scalar loop over `i0..i1 × j0..j1` (same
+/// operation order as [`host_ref_sgemm`], so edges stay bit-identical).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn ukr_edge(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c_in: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    for j in j0..j1 {
+        for i in i0..i1 {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a[l * m + i] * b[l * n + j];
+            }
+            c[j * m + i] = alpha * acc + beta * c_in[j * m + i];
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod sse {
+    // Explicit SSE path (the `simd` feature). SSE is part of the x86_64
+    // baseline, so no runtime detection is needed. The per-lane operation
+    // order matches the scalar oracle (k ascending, mul then add, no FMA),
+    // so the result is bit-identical to host_ref_sgemm.
+    use super::{ukr_edge, UKR_MR, UKR_NR};
+    use core::arch::x86_64::{
+        _mm_add_ps, _mm_loadu_ps, _mm_mul_ps, _mm_set1_ps, _mm_setzero_ps, _mm_storeu_ps,
+    };
+
+    pub(super) fn sgemm(
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        a: &[f32],
+        b: &[f32],
+        beta: f32,
+        c_in: &[f32],
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        if m == 0 || n == 0 {
+            return c;
+        }
+        let m_main = m - m % UKR_MR;
+        let n_main = n - n % UKR_NR;
+        for j0 in (0..n_main).step_by(UKR_NR) {
+            for i0 in (0..m_main).step_by(UKR_MR) {
+                // SAFETY: every pointer below stays in bounds — i0+8 <= m,
+                // j0+4 <= n, l < k, with a.len() = m·k, b.len() = k·n and
+                // c/c_in of m·n (checked by the callers' ensure!s).
+                unsafe { ukr_8x4_sse(m, n, k, alpha, a, b, beta, c_in, &mut c, i0, j0) };
+            }
+            ukr_edge(m, n, k, alpha, a, b, beta, c_in, &mut c, m_main, m, j0, j0 + UKR_NR);
+        }
+        ukr_edge(m, n, k, alpha, a, b, beta, c_in, &mut c, 0, m, n_main, n);
+        c
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn ukr_8x4_sse(
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        a: &[f32],
+        b: &[f32],
+        beta: f32,
+        c_in: &[f32],
+        c: &mut [f32],
+        i0: usize,
+        j0: usize,
+    ) {
+        let mut acc = [[_mm_setzero_ps(); 2]; UKR_NR];
+        for l in 0..k {
+            let ap = a.as_ptr().add(l * m + i0);
+            let a0 = _mm_loadu_ps(ap);
+            let a1 = _mm_loadu_ps(ap.add(4));
+            let bp = b.as_ptr().add(l * n + j0);
+            for (jj, acc_j) in acc.iter_mut().enumerate() {
+                let bj = _mm_set1_ps(*bp.add(jj));
+                acc_j[0] = _mm_add_ps(acc_j[0], _mm_mul_ps(a0, bj));
+                acc_j[1] = _mm_add_ps(acc_j[1], _mm_mul_ps(a1, bj));
+            }
+        }
+        let va = _mm_set1_ps(alpha);
+        let vb = _mm_set1_ps(beta);
+        for (jj, acc_j) in acc.iter().enumerate() {
+            let base = (j0 + jj) * m + i0;
+            for (h, &acc_h) in acc_j.iter().enumerate() {
+                let cin = _mm_loadu_ps(c_in.as_ptr().add(base + 4 * h));
+                let v = _mm_add_ps(_mm_mul_ps(va, acc_h), _mm_mul_ps(vb, cin));
+                _mm_storeu_ps(c.as_mut_ptr().add(base + 4 * h), v);
+            }
+        }
+    }
+}
+
 /// Drive the functional simulator through the SUMMA loop with the command
 /// protocol (§3.3): clear on the first task, accumulate in between, send
-/// back on the last; α/β applied by the host afterwards.
+/// back on the last; α/β applied by the host afterwards. The KSUB staging
+/// panels (`a_t`/`b_t`) are caller-owned and reused across tasks *and*
+/// calls; ragged tails are re-zeroed explicitly so stale bytes from a
+/// deeper earlier call can never leak into the padding.
 #[allow(clippy::too_many_arguments)]
 fn simulator_sgemm(
     hal: &mut EHal,
@@ -203,20 +532,28 @@ fn simulator_sgemm(
     beta: f32,
     c_in: &[f32],
     k: usize,
+    a_t: &mut Vec<f32>,
+    b_t: &mut Vec<f32>,
 ) -> Result<Vec<f32>> {
     let (m, n, ksub) = (geom.m, geom.n, geom.ksub);
     let tasks = k.div_ceil(ksub).max(1);
+    a_t.resize(m * ksub, 0.0);
+    b_t.resize(ksub * n, 0.0);
     for t in 0..tasks {
         let selector = t & 1;
-        // Slice / zero-pad this KSUB panel pair.
+        // Slice / zero-pad this KSUB panel pair into the reused staging.
         let k0 = t * ksub;
         let k_real = ksub.min(k - k0.min(k));
-        let mut a_t = vec![0.0f32; m * ksub];
         a_t[..m * k_real].copy_from_slice(&a_panel[m * k0..m * (k0 + k_real)]);
-        let mut b_t = vec![0.0f32; ksub * n];
+        if k_real < ksub {
+            a_t[m * k_real..].fill(0.0);
+        }
         b_t[..k_real * n].copy_from_slice(&b_panel[n * k0..n * (k0 + k_real)]);
-        hal.e_write_a(selector, &a_t)?;
-        hal.e_write_b(selector, &b_t)?;
+        if k_real < ksub {
+            b_t[k_real * n..].fill(0.0);
+        }
+        hal.e_write_a(selector, a_t)?;
+        hal.e_write_b(selector, b_t)?;
         let command = match (t == 0, t == tasks - 1) {
             (true, true) => Command::ClearSend,
             (true, false) => Command::ClearAccumulate,
@@ -290,6 +627,54 @@ mod tests {
     }
 
     #[test]
+    fn every_host_variant_correct_through_backend() {
+        for variant in UkrVariant::all() {
+            let ukr = InnerMicroKernel::with_variant(
+                UkrBackend::HostRef,
+                CalibratedModel::default(),
+                KernelGeometry::paper(),
+                variant,
+            )
+            .unwrap();
+            check_backend(ukr, 150, 1e-5);
+        }
+    }
+
+    #[test]
+    fn vectorized_variants_bitwise_match_scalar() {
+        // Same per-element operation order ⇒ bit-identical results, even
+        // on ragged shapes that exercise the edge kernels.
+        for &(m, n, k) in
+            &[(8, 4, 16), (192, 256, 64), (7, 3, 5), (33, 17, 1), (50, 50, 0), (9, 5, 63)]
+        {
+            let a = Mat::<f32>::randn(m, k.max(1), 500).as_slice()[..m * k].to_vec();
+            let b = Mat::<f32>::randn(k.max(1), n, 501).as_slice()[..k * n].to_vec();
+            let c = Mat::<f32>::randn(m, n, 502);
+            let want = host_ref_sgemm(m, n, k, 1.25, &a, &b, -0.5, c.as_slice());
+            for variant in [UkrVariant::Blocked, UkrVariant::Simd] {
+                let got =
+                    host_sgemm_variant(variant, m, n, k, 1.25, &a, &b, -0.5, c.as_slice());
+                assert_eq!(got, want, "{} deviates at {m}x{n}x{k}", variant.name());
+            }
+        }
+    }
+
+    #[test]
+    fn variant_selection_resolves() {
+        assert_eq!(UkrVariant::Scalar.resolve(), UkrVariant::Scalar);
+        assert_eq!(UkrVariant::Blocked.resolve(), UkrVariant::Blocked);
+        let simd_on = cfg!(all(feature = "simd", target_arch = "x86_64"));
+        assert_eq!(UkrVariant::Simd.available(), simd_on);
+        assert_eq!(
+            UkrVariant::Simd.resolve(),
+            if simd_on { UkrVariant::Simd } else { UkrVariant::Blocked }
+        );
+        assert!(UkrVariant::fastest().available());
+        assert_eq!(UkrVariant::parse("blocked"), Some(UkrVariant::Blocked));
+        assert_eq!(UkrVariant::parse("avx512"), None);
+    }
+
+    #[test]
     fn simulator_backend_correct() {
         let hal = EHal::new(CalibratedModel::default());
         let ukr = InnerMicroKernel::new(
@@ -344,6 +729,41 @@ mod tests {
             let got = Mat::from_col_major(geom.m, geom.n, &got);
             let e = max_scaled_err(got.view(), href.view());
             assert!(e < 1e-5, "{name} vs host-ref err {e}");
+        }
+    }
+
+    #[test]
+    fn staging_reuse_survives_shrinking_ragged_k() {
+        // A deep call followed by a shallow ragged call on the same kernel
+        // instance: the reused a_t/b_t staging must not leak the deep
+        // call's bytes into the shallow call's zero padding.
+        let geom = KernelGeometry::paper();
+        let mut ukr = InnerMicroKernel::new(
+            UkrBackend::Simulator(EHal::new(CalibratedModel::default())),
+            CalibratedModel::default(),
+            geom,
+        )
+        .unwrap();
+        for &k in &[geom.ksub * 2, 30, geom.ksub + 1] {
+            let a = Mat::<f32>::randn(geom.m, k, 600 + k as u64);
+            let b = Mat::<f32>::randn(k, geom.n, 700 + k as u64);
+            let c = Mat::<f32>::randn(geom.m, geom.n, 800 + k as u64);
+            let b_rm = row_major(&b);
+            let got = ukr.sgemm(1.0, a.as_slice(), &b_rm, 1.0, c.as_slice(), params()).unwrap();
+            let want = host_ref_sgemm(
+                geom.m,
+                geom.n,
+                k,
+                1.0,
+                a.as_slice(),
+                &b_rm,
+                1.0,
+                c.as_slice(),
+            );
+            let got = Mat::from_col_major(geom.m, geom.n, &got.c);
+            let want = Mat::from_col_major(geom.m, geom.n, &want);
+            let e = max_scaled_err(got.view(), want.view());
+            assert!(e < 1e-5, "k={k} err {e} (stale staging bytes?)");
         }
     }
 

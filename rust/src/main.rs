@@ -20,7 +20,15 @@
 //!         mixed-precision iterative refinement: f32-class factorization +
 //!         f64 residual loop, local by default, over the wire with --addr
 //!   sgemm [--m M] [--n N] [--k K] [--ta n|t] [--tb n|t] [--chips N]
-//!         one accelerated gemm with the wall/projected/paper report
+//!         [--autotune [--measure]]
+//!         one accelerated gemm with the wall/projected/paper report;
+//!         --autotune searches blocking candidates for the problem size
+//!         first and boots the tuned geometry (--measure also times the
+//!         leaderboard on the host before picking)
+//!   bench-diff <committed.json> <fresh.json> [--threshold 0.30]
+//!         diff a fresh bench snapshot against a committed one; exits
+//!         nonzero when a deterministic `checks` metric drifts past the
+//!         threshold (wall-clock table cells only annotate)
 //!   hpl   [--n N] [--nb NB]
 //!         the HPL Linpack run (paper Table 7 shape)
 //!   table <1..7> [--full]
@@ -32,7 +40,7 @@
 //! (argument parsing is hand-rolled: no clap in the offline crate set.)
 
 use anyhow::{bail, Context, Result};
-use parallella_blas::blis::Trans;
+use parallella_blas::blis::{AutotuneConfig, Trans};
 use parallella_blas::coordinator::server::BlasServer;
 use parallella_blas::coordinator::{BlasClient, Request, ServerConfig, PROTOCOL_V2};
 use parallella_blas::epiphany::kernel::KernelGeometry;
@@ -240,7 +248,18 @@ fn main() -> Result<()> {
             let chips = args.usize("chips", 1)?;
             let ta = trans_of(args.get("ta"))?;
             let tb = trans_of(args.get("tb"))?;
-            let plat = Platform::builder().backend(bk).chips(chips).build()?;
+            let mut builder = Platform::builder().backend(bk).chips(chips);
+            if args.has("autotune") {
+                let mut cfg = AutotuneConfig::for_workload(m, n, k);
+                if args.has("measure") {
+                    cfg = cfg.measured();
+                }
+                builder = builder.autotune(cfg);
+            }
+            let plat = builder.build()?;
+            if let Some(t) = &plat.tuned {
+                println!("{}", t.report());
+            }
             let a =
                 if ta.is_trans() { Mat::<f32>::randn(k, m, 1) } else { Mat::<f32>::randn(m, k, 1) };
             let b =
@@ -381,6 +400,28 @@ fn main() -> Result<()> {
             };
             println!("{}", t.rendered);
         }
+        "bench-diff" => {
+            let (Some(committed), Some(fresh)) = (args.switches.first(), args.switches.get(1))
+            else {
+                bail!("usage: bench-diff <committed.json> <fresh.json> [--threshold 0.30]");
+            };
+            let threshold: f64 = match args.get("threshold") {
+                Some(v) => {
+                    v.parse().with_context(|| format!("--threshold {v:?} is not a number"))?
+                }
+                None => 0.30,
+            };
+            let old = std::fs::read_to_string(committed)
+                .with_context(|| format!("reading {committed}"))?;
+            let new =
+                std::fs::read_to_string(fresh).with_context(|| format!("reading {fresh}"))?;
+            let cmp = parallella_blas::util::bench::compare_bench_json(&old, &new)?;
+            print!("{}", cmp.render(threshold));
+            let regressions = cmp.regressions(threshold).len();
+            if regressions > 0 {
+                bail!("{regressions} gating metric(s) drifted past {:.0}%", 100.0 * threshold);
+            }
+        }
         "memmap" => {
             let chip = Chip::new(CalibratedModel::default(), KernelGeometry::paper())?;
             println!("per-core local memory map (paper Fig. 3):\n{}", chip.memory_map());
@@ -460,7 +501,11 @@ fn print_help() {
          \u{20}         [--m --n --k] [--pin CHIP]                  batched small-gemm driver\n\
          \u{20} solve   [--n --nb] [--kind lu|chol] [--max-iters I]\n\
          \u{20}         [--tol T] [--addr H:P]                      mixed-precision refined solve\n\
-         \u{20} sgemm   [--m --n --k --ta --tb --backend --chips]   one gemm + report\n\
+         \u{20} sgemm   [--m --n --k --ta --tb --backend --chips]\n\
+         \u{20}         [--autotune [--measure]]                    one gemm + report; --autotune\n\
+         \u{20}                                                     searches blocking params first\n\
+         \u{20} bench-diff <committed.json> <fresh.json>\n\
+         \u{20}         [--threshold 0.30]                          gate bench snapshot drift\n\
          \u{20} hpl     [--n --nb --backend]                        HPL Linpack run\n\
          \u{20} table   <1..7> [--full]                             regenerate a paper table\n\
          \u{20} memmap                                              print the Fig-3 memory map\n\

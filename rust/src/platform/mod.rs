@@ -1,7 +1,7 @@
 //! Top-level handle: boot a chip pool with a chosen backend and hand out
 //! the generated BLAS — the "library object" a downstream user holds.
 
-use crate::blis::{Blas, BlasLibrary};
+use crate::blis::{autotune, AutotuneConfig, Blas, BlasLibrary, TunedParams};
 use crate::epiphany::kernel::KernelGeometry;
 use crate::epiphany::timing::CalibratedModel;
 use crate::host::pool::{ChipPool, ShardPolicy};
@@ -40,6 +40,7 @@ pub struct PlatformBuilder {
     chips: usize,
     policy: ShardPolicy,
     panel_cache_bytes: usize,
+    autotune: Option<AutotuneConfig>,
 }
 
 impl PlatformBuilder {
@@ -86,16 +87,32 @@ impl PlatformBuilder {
         self
     }
 
+    /// Run the blocking autotuner (see [`crate::blis::autotune`]) before
+    /// boot: the pool comes up with the tuned [`KernelGeometry`] and the
+    /// BLAS with the tuned [`crate::blis::BlisContext`], overriding any
+    /// explicit [`PlatformBuilder::geometry`]. The search result is kept
+    /// on [`Platform::tuned`] for reporting.
+    pub fn autotune(mut self, cfg: AutotuneConfig) -> Self {
+        self.autotune = Some(cfg);
+        self
+    }
+
     /// Boot the pool and instantiate the BLAS over it.
     pub fn build(self) -> Result<Platform> {
+        let tuned = self.autotune.as_ref().map(|cfg| autotune(&self.model, cfg));
+        let geom = tuned.as_ref().map(TunedParams::geometry).unwrap_or(self.geom);
         let pool =
-            ChipPool::spawn(self.chips, self.backend.service(), self.model.clone(), self.geom)?;
+            ChipPool::spawn(self.chips, self.backend.service(), self.model.clone(), geom)?;
         let mut blas = Blas::with_pool(pool, self.policy);
         blas.set_panel_cache(self.panel_cache_bytes);
+        if let Some(t) = &tuned {
+            blas.ctx = t.context();
+        }
         Ok(Platform {
             blas: Arc::new(blas),
             model: self.model,
             backend: self.backend,
+            tuned,
         })
     }
 }
@@ -107,6 +124,9 @@ pub struct Platform {
     pub model: CalibratedModel,
     /// Which engine computes the heavy part.
     pub backend: BackendKind,
+    /// The autotuner's result when the builder ran with
+    /// [`PlatformBuilder::autotune`] (`None` otherwise).
+    pub tuned: Option<TunedParams>,
 }
 
 impl Platform {
@@ -120,6 +140,7 @@ impl Platform {
             chips: 1,
             policy: ShardPolicy::default(),
             panel_cache_bytes: 0,
+            autotune: None,
         }
     }
 
@@ -197,6 +218,26 @@ mod tests {
         }
         let s = cached.blas().panel_cache().unwrap().stats();
         assert!(s.hits >= 1, "second pass re-uses the packed panel: {s:?}");
+    }
+
+    #[test]
+    fn autotuned_platform_builds_and_multiplies() {
+        let plat = Platform::builder()
+            .autotune(AutotuneConfig::for_workload(256, 256, 256))
+            .build()
+            .unwrap();
+        let t = plat.tuned.as_ref().expect("builder ran the autotuner");
+        assert_eq!(plat.blas().ctx.mr, t.geometry().m, "tuned mr flows into the BLAS");
+        assert_eq!(plat.blas().ctx.nr, t.geometry().n, "tuned nr flows into the BLAS");
+        let a = Mat::<f32>::randn(100, 60, 1);
+        let b = Mat::<f32>::randn(60, 90, 2);
+        let mut c = Mat::<f32>::zeros(100, 90);
+        plat.blas().sgemm(Trans::N, Trans::N, 1.0, a.view(), b.view(), 0.0, &mut c).unwrap();
+        let mut want = Mat::<f64>::zeros(100, 90);
+        crate::blis::level3::gemm_host(
+            Trans::N, Trans::N, 1.0, a.cast::<f64>().view(), b.cast::<f64>().view(), 0.0, &mut want,
+        );
+        assert!(max_scaled_err(c.view(), want.view()) < 1e-5);
     }
 
     #[test]

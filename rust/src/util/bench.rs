@@ -6,6 +6,8 @@
 //! for the paper-table comparisons (the projected-Parallella numbers come
 //! from the calibrated model, not from wall-clock).
 
+use crate::util::json::Json;
+use anyhow::Result;
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -95,6 +97,194 @@ impl Default for BenchRun {
     }
 }
 
+/// One metric present in both the committed and the fresh snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricDelta {
+    /// Dotted metric path (e.g. `checks.t3.gflops`).
+    pub name: String,
+    /// Value in the committed snapshot.
+    pub committed: f64,
+    /// Value in the fresh run.
+    pub fresh: f64,
+    /// Whether this metric gates CI. `checks` metrics come from the
+    /// deterministic calibrated model / seeded runs, so any large drift
+    /// means the code changed behaviour; table-cell metrics are wall
+    /// clock on whatever machine ran the bench and only annotate.
+    pub gate: bool,
+}
+
+impl MetricDelta {
+    /// Signed relative change `(fresh - committed) / |committed|`.
+    pub fn rel_change(&self) -> f64 {
+        if self.committed == 0.0 {
+            if self.fresh == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            (self.fresh - self.committed) / self.committed.abs()
+        }
+    }
+}
+
+/// The result of diffing one fresh bench JSON against its committed
+/// snapshot (see [`compare_bench_json`]).
+#[derive(Clone, Debug, Default)]
+pub struct BenchComparison {
+    /// Metrics present on both sides.
+    pub deltas: Vec<MetricDelta>,
+    /// Metric names only in the committed snapshot (removed by the run).
+    pub only_committed: Vec<String>,
+    /// Metric names only in the fresh run (new; never gate).
+    pub only_fresh: Vec<String>,
+}
+
+impl BenchComparison {
+    /// Gating metrics whose |relative change| exceeds `threshold`
+    /// (0.30 = the CI bench-regression bar).
+    pub fn regressions(&self, threshold: f64) -> Vec<&MetricDelta> {
+        self.deltas
+            .iter()
+            .filter(|d| d.gate && d.rel_change().abs() > threshold)
+            .collect()
+    }
+
+    /// Human-readable diff report: regressions first, then report-only
+    /// drift beyond the threshold, then added/removed metrics.
+    pub fn render(&self, threshold: f64) -> String {
+        let mut out = String::new();
+        let pct = |d: &MetricDelta| format!("{:+.1}%", 100.0 * d.rel_change());
+        for d in self.regressions(threshold) {
+            out.push_str(&format!(
+                "REGRESSION {}: {} -> {} ({})\n",
+                d.name,
+                d.committed,
+                d.fresh,
+                pct(d)
+            ));
+        }
+        let gates = self.deltas.iter().filter(|d| d.gate).count();
+        out.push_str(&format!(
+            "{} gating metric(s) compared, {} over the {:.0}% bar\n",
+            gates,
+            self.regressions(threshold).len(),
+            100.0 * threshold
+        ));
+        for d in &self.deltas {
+            if !d.gate && d.rel_change().abs() > threshold {
+                out.push_str(&format!(
+                    "note (wall-clock, report-only) {}: {} -> {} ({})\n",
+                    d.name,
+                    d.committed,
+                    d.fresh,
+                    pct(d)
+                ));
+            }
+        }
+        for n in &self.only_fresh {
+            out.push_str(&format!("new metric (fresh only): {n}\n"));
+        }
+        for n in &self.only_committed {
+            out.push_str(&format!("metric removed (committed only): {n}\n"));
+        }
+        out
+    }
+}
+
+/// Extract `(name, value, gate)` metrics from a bench JSON document.
+///
+/// Two shapes are understood, matching everything this repo writes:
+/// objects carrying a `checks` array (`{"name","paper","ours","ratio"}`
+/// rows — the deterministic table benches; `ours` gates) and
+/// [`super::tables::Table::to_json`] objects (`{"title","headers","rows"}`
+/// — wall-clock cells; report-only). Both are found at any nesting depth.
+pub fn bench_metrics(doc: &Json) -> Vec<(String, f64, bool)> {
+    let mut out = Vec::new();
+    walk_metrics("", doc, &mut out);
+    out
+}
+
+fn walk_metrics(path: &str, v: &Json, out: &mut Vec<(String, f64, bool)>) {
+    let join = |suffix: &str| {
+        if path.is_empty() {
+            suffix.to_string()
+        } else {
+            format!("{path}.{suffix}")
+        }
+    };
+    if let Some(checks) = v.get("checks").and_then(Json::as_arr) {
+        for c in checks {
+            let (Some(name), Some(ours)) = (
+                c.get("name").and_then(Json::as_str),
+                c.get("ours").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            out.push((join(&format!("checks.{name}")), ours, true));
+        }
+    }
+    if let (Some(headers), Some(rows)) = (
+        v.get("headers").and_then(Json::as_arr),
+        v.get("rows").and_then(Json::as_arr),
+    ) {
+        for (ri, row) in rows.iter().enumerate() {
+            let Some(cells) = row.as_arr() else { continue };
+            let label = cells.first().and_then(Json::as_str).unwrap_or("");
+            for (ci, cell) in cells.iter().enumerate().skip(1) {
+                let header = headers.get(ci).and_then(Json::as_str).unwrap_or("?");
+                if let Some(num) = cell.as_str().and_then(cell_num) {
+                    out.push((join(&format!("{label}[{ri}].{header}")), num, false));
+                }
+            }
+        }
+    }
+    if let Some(fields) = v.as_obj() {
+        for (key, child) in fields {
+            if matches!(key.as_str(), "checks" | "headers" | "rows" | "rendered") {
+                continue;
+            }
+            if matches!(child, Json::Obj(_) | Json::Arr(_)) {
+                walk_metrics(&join(key), child, out);
+            }
+        }
+    }
+}
+
+/// Parse a table cell as a number: plain floats, plus `1.85x`-style
+/// speedup cells. Labels like `16x16x16` or `-` yield `None`.
+fn cell_num(s: &str) -> Option<f64> {
+    let t = s.trim();
+    t.parse::<f64>().ok().or_else(|| t.strip_suffix('x').and_then(|p| p.parse::<f64>().ok()))
+}
+
+/// Diff a fresh bench JSON against its committed snapshot: per-metric
+/// deltas for shared metrics, added/removed listed separately (new
+/// metrics never gate, so snapshots can grow columns without breaking
+/// older CI refs). See [`BenchComparison::regressions`] for the gate.
+pub fn compare_bench_json(committed: &str, fresh: &str) -> Result<BenchComparison> {
+    let old = bench_metrics(&Json::parse(committed)?);
+    let new = bench_metrics(&Json::parse(fresh)?);
+    let mut cmp = BenchComparison::default();
+    for (name, committed_v, gate) in &old {
+        match new.iter().find(|(n, _, _)| n == name) {
+            Some(&(_, fresh_v, _)) => cmp.deltas.push(MetricDelta {
+                name: name.clone(),
+                committed: *committed_v,
+                fresh: fresh_v,
+                gate: *gate,
+            }),
+            None => cmp.only_committed.push(name.clone()),
+        }
+    }
+    for (name, _, _) in &new {
+        if !old.iter().any(|(n, _, _)| n == name) {
+            cmp.only_fresh.push(name.clone());
+        }
+    }
+    Ok(cmp)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +301,76 @@ mod tests {
         });
         assert_eq!(m.iters, 3);
         assert!(m.min_s <= m.median_s && m.median_s <= m.mean_s * 3.0);
+    }
+
+    const COMMITTED: &str = r#"{
+        "table": "t3", "rendered": "...",
+        "checks": [
+            {"name": "t3.gflops", "paper": 2.1, "ours": 2.0, "ratio": 0.95},
+            {"name": "t3.err", "paper": 1.0e-6, "ours": 1.1e-6, "ratio": 1.1}
+        ],
+        "wall": {"title": "w", "headers": ["size", "s", "speedup"],
+                 "rows": [["192x256", "0.5", "1.8x"], ["tiny", "-", "2.0x"]]}
+    }"#;
+
+    #[test]
+    fn comparator_gates_checks_and_reports_tables() {
+        // Fresh run: one gate metric regressed 50%, wall clock halved
+        // (report-only), one new check appeared.
+        let fresh = r#"{
+            "table": "t3", "rendered": "...",
+            "checks": [
+                {"name": "t3.gflops", "paper": 2.1, "ours": 1.0, "ratio": 0.48},
+                {"name": "t3.err", "paper": 1.0e-6, "ours": 1.1e-6, "ratio": 1.1},
+                {"name": "t3.speedup", "paper": 2.0, "ours": 2.2, "ratio": 1.1}
+            ],
+            "wall": {"title": "w", "headers": ["size", "s", "speedup"],
+                     "rows": [["192x256", "0.25", "1.9x"], ["tiny", "-", "2.0x"]]}
+        }"#;
+        let cmp = compare_bench_json(COMMITTED, fresh).unwrap();
+        let regs = cmp.regressions(0.30);
+        assert_eq!(regs.len(), 1, "only the drifted check gates: {regs:?}");
+        assert_eq!(regs[0].name, "checks.t3.gflops");
+        assert!((regs[0].rel_change() + 0.5).abs() < 1e-12);
+        assert_eq!(cmp.only_fresh, vec!["checks.t3.speedup".to_string()]);
+        assert!(cmp.only_committed.is_empty());
+        // The halved wall-clock cell is present but never gates.
+        let wall = cmp.deltas.iter().find(|d| d.name == "wall.192x256[0].s").unwrap();
+        assert!(!wall.gate && wall.rel_change() < -0.45);
+        // Speedup cells parse through the trailing 'x'; "-" cells drop out.
+        assert!(cmp.deltas.iter().any(|d| d.name == "wall.192x256[0].speedup"));
+        assert!(cmp.deltas.iter().any(|d| d.name == "wall.tiny[1].speedup"));
+        assert!(!cmp.deltas.iter().any(|d| d.name.contains("tiny[1].s")));
+        let report = cmp.render(0.30);
+        assert!(report.contains("REGRESSION checks.t3.gflops"));
+        assert!(report.contains("new metric (fresh only): checks.t3.speedup"));
+    }
+
+    #[test]
+    fn comparator_is_clean_on_identical_snapshots() {
+        let cmp = compare_bench_json(COMMITTED, COMMITTED).unwrap();
+        assert!(cmp.regressions(0.30).is_empty());
+        assert!(cmp.only_committed.is_empty() && cmp.only_fresh.is_empty());
+        assert!(cmp.deltas.iter().all(|d| d.rel_change() == 0.0));
+    }
+
+    #[test]
+    fn comparator_reads_committed_table_snapshots() {
+        // Every committed BENCH_table*.json must diff cleanly against
+        // itself and expose its checks as gating metrics.
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let mut seen = 0;
+        for i in 1..=7 {
+            let path = root.join(format!("BENCH_table{i}.json"));
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            let cmp = compare_bench_json(&text, &text).unwrap();
+            assert!(
+                cmp.deltas.iter().any(|d| d.gate),
+                "table{i} snapshot exposes no gating metrics"
+            );
+            assert!(cmp.regressions(0.30).is_empty());
+            seen += 1;
+        }
+        assert!(seen >= 5, "expected committed table snapshots, saw {seen}");
     }
 }

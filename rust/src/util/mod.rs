@@ -3,6 +3,7 @@
 //! available in this environment, so `proptest`-style checks are built here).
 
 pub mod bench;
+pub mod json;
 pub mod proptest;
 pub mod tables;
 

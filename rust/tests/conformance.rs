@@ -501,3 +501,17 @@ fn refined_solve_conformance_pools_1_and_4() {
         assert!(rep.final_residual() <= 16.0, "chips {chips}: {:?}", rep.residuals);
     }
 }
+
+// ---------------------------------------------------------------------------
+// host µ-kernel variants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ukr_variant_conformance_sweep() {
+    // Every compiled-in host µ-kernel variant (scalar / blocked / SSE
+    // under `--features simd`) over ragged shapes, all transpose pairs
+    // and α,β combinations: f64-oracle accuracy plus bitwise agreement
+    // with the scalar oracle. The sweep panics on the first divergence.
+    let cases = parallella_blas::blis::testsuite::ukr_conformance_sweep();
+    assert!(cases >= 6 * 16 * 5 * 2, "sweep ran {cases} cases");
+}
